@@ -1,0 +1,24 @@
+//! Bench: regenerate **Figure 5** (% criterion drop over 240 search
+//! generations). Full fidelity by default; AUTORAC_BENCH_FAST=1 runs a
+//! 40-generation smoke version.
+//!
+//! Run: `cargo bench --bench fig5`
+
+use autorac::nas::SearchConfig;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("AUTORAC_BENCH_FAST").ok().as_deref() == Some("1");
+    let cfg = SearchConfig {
+        generations: if fast { 40 } else { 240 },
+        ..SearchConfig::default()
+    };
+    let (drop, best) = autorac::report::fig5(cfg)?;
+    // Paper shape: >10% drop within the first 50 generations, then a
+    // plateau with late incremental gains.
+    let at50 = drop.get(50.min(drop.len() - 1)).copied().unwrap_or(0.0);
+    let fin = *drop.last().unwrap();
+    println!("\nshape check: drop@50 {at50:.1}% (paper: >10%), final {fin:.1}%");
+    autorac::report::fig6(&best);
+    best.save(std::path::Path::new("artifacts/searched_best.json"))?;
+    Ok(())
+}

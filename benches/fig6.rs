@@ -1,0 +1,48 @@
+//! Bench: regenerate **Figure 6** (best model discovered). Prints the
+//! genome saved by the fig5/search run when present (the actual search
+//! output), falling back to the checked-in reference winner, and
+//! verifies the paper's qualitative precision trends.
+//!
+//! Run: `cargo bench --bench fig6`
+
+use autorac::nas::{autorac_best, DenseOp, Genome, SparseOp};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let searched = Path::new("artifacts/searched_best.json");
+    let (g, source) = if searched.exists() {
+        (Genome::load(searched)?, "artifacts/searched_best.json (search output)")
+    } else {
+        (autorac_best("criteo"), "built-in reference winner (run fig5 to search)")
+    };
+    println!("source: {source}");
+    autorac::report::fig6(&g);
+
+    // Figure 6 trends reported by the paper:
+    let efc8 = g
+        .blocks
+        .iter()
+        .filter(|b| b.sparse_op == SparseOp::Efc)
+        .all(|b| b.sparse_wbits == 8);
+    let first_fc8 = g
+        .blocks
+        .iter()
+        .find(|b| b.dense_op == DenseOp::Fc)
+        .map(|b| b.dense_wbits == 8)
+        .unwrap_or(false);
+    let mid_has_4bit = g.blocks[1..g.blocks.len() - 1]
+        .iter()
+        .any(|b| b.dense_wbits == 4);
+    println!("trend: EFC layers predominantly 8-bit ............ {}", yn(efc8));
+    println!("trend: first FC retains 8-bit precision .......... {}", yn(first_fc8));
+    println!("trend: mid-network FCs use 4-bit precision ....... {}", yn(mid_has_4bit));
+    Ok(())
+}
+
+fn yn(b: bool) -> &'static str {
+    if b {
+        "yes"
+    } else {
+        "no (see EXPERIMENTS.md §F6)"
+    }
+}

@@ -1,0 +1,138 @@
+//! Micro-benchmarks of the L3 hot paths — the §Perf workload.
+//!
+//! Covers: the behavioral simulator (inside the search loop), genome
+//! mapping, the functional crossbar MVM, the evolution step, synthetic
+//! record generation, embedding gather, JSON parsing, and the
+//! coordinator's batching overhead with a mock engine.
+//!
+//! Run: `cargo bench --bench micro` (results appended to
+//! artifacts/bench_log.json for before/after diffs; tag via
+//! AUTORAC_BENCH_TAG)
+
+use autorac::coordinator::{Coordinator, CoordinatorConfig, MockEngine, Request};
+use autorac::data::{profile, Generator, DEFAULT_SEED};
+use autorac::embeddings::EmbeddingStore;
+use autorac::mapping::{map_genome, MapStyle};
+use autorac::nas::{autorac_best, mutate, Search, SearchConfig, Surrogate};
+use autorac::pim::{MatI32, PimConfig, ProgrammedXbar, TechParams, XbarActivity};
+use autorac::sim::{simulate, Workload};
+use autorac::util::bench::Bencher;
+use autorac::util::rng::Rng;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+    let tech = TechParams::default();
+    let genome = autorac_best("criteo");
+
+    // -- mapping + simulation (the search-loop inner cost) --------------
+    b.bench("map_genome(smart)", || {
+        std::hint::black_box(map_genome(&genome, &tech, MapStyle::Smart).unwrap());
+    });
+    let mapped = map_genome(&genome, &tech, MapStyle::Smart)?;
+    let wl = Workload {
+        n_requests: 48,
+        ..Workload::default()
+    };
+    b.bench("simulate(48 req)", || {
+        std::hint::black_box(simulate(&mapped, None, &wl));
+    });
+    b.bench("search_candidate_eval (map+sim+surrogate)", || {
+        let m = map_genome(&genome, &tech, MapStyle::Smart).unwrap();
+        let r = simulate(&m, None, &wl);
+        std::hint::black_box(r.throughput_rps);
+    });
+
+    // -- evolution ------------------------------------------------------
+    let mut rng = Rng::new(1);
+    b.bench("mutate", || {
+        std::hint::black_box(mutate(&genome, &mut rng));
+    });
+    {
+        let cfg = SearchConfig {
+            generations: 1,
+            population: 16,
+            children_per_gen: 8,
+            sim_requests: 48,
+            ..SearchConfig::default()
+        };
+        let mut search = Search::new(cfg, Surrogate::prior())?;
+        search.init_population()?;
+        b.bench("evolution_generation (8 children)", || {
+            search.step().unwrap();
+        });
+    }
+
+    // -- functional crossbar ---------------------------------------------
+    let cfg = PimConfig::default();
+    let mut rng2 = Rng::new(2);
+    let mut w = MatI32::zeros(128, 64);
+    for r in 0..128 {
+        for c in 0..64 {
+            w.set(r, c, rng2.below(255) as i32 - 127);
+        }
+    }
+    let xbar = ProgrammedXbar::program(&w, cfg);
+    let x: Vec<i32> = (0..128).map(|_| rng2.below(256) as i32).collect();
+    b.bench("crossbar_mvm 128x64 (bit-serial)", || {
+        let mut act = XbarActivity::default();
+        std::hint::black_box(xbar.mvm_raw(&x, &mut act));
+    });
+
+    // -- data + embeddings ------------------------------------------------
+    let prof = profile("criteo")?;
+    let mut gen = Generator::new(prof.clone(), DEFAULT_SEED);
+    let mut idx = 0usize;
+    b.bench("record_generation", || {
+        idx += 1;
+        std::hint::black_box(gen.record(idx));
+    });
+    let store = EmbeddingStore::random(&prof, 32, 1);
+    let ids: Vec<i32> = (0..26).map(|j| (j * 3) as i32).collect();
+    let mut out = Vec::new();
+    b.bench("embedding_gather (26 fields)", || {
+        out.clear();
+        store.gather(&ids, 1, &mut out);
+        std::hint::black_box(out.len());
+    });
+
+    // -- util -------------------------------------------------------------
+    let gj = genome.to_json().to_string_pretty();
+    b.bench("genome_json_parse", || {
+        std::hint::black_box(autorac::util::json::Json::parse(&gj).unwrap());
+    });
+
+    // -- coordinator overhead (mock engine: measures pure L3 path) --------
+    {
+        let store = Arc::new(EmbeddingStore::random(&prof, 32, 2));
+        let coord = Coordinator::start(
+            CoordinatorConfig::default(),
+            store,
+            |_| Ok(Box::new(MockEngine::new(32, 13, 26, 32))),
+        )?;
+        let mut gen2 = Generator::new(prof.clone(), DEFAULT_SEED);
+        let mut id = 0u64;
+        b.bench("coordinator_roundtrip (mock engine)", || {
+            let (tx, rx) = mpsc::channel();
+            let (dense, ids) = gen2.features(id as usize);
+            id += 1;
+            coord
+                .submit(Request {
+                    id,
+                    dense,
+                    ids: ids.iter().map(|&x| x as i32).collect(),
+                    enqueued: Instant::now(),
+                    reply: tx,
+                })
+                .unwrap();
+            std::hint::black_box(rx.recv().unwrap());
+        });
+        coord.shutdown();
+    }
+
+    let tag = std::env::var("AUTORAC_BENCH_TAG").unwrap_or_else(|_| "run".into());
+    b.write_log(&tag)?;
+    println!("\n(logged to artifacts/bench_log.json, tag `{tag}`)");
+    Ok(())
+}

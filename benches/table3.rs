@@ -1,0 +1,17 @@
+//! Bench: regenerate **Table 3** (hardware metrics of AutoRAC against
+//! CPU / RecNMP / naively-mapped NASRec / ReREC) on the behavioral
+//! simulator with real-scale memory tiles and pooled gathers.
+//!
+//! Run: `cargo bench --bench table3`
+
+fn main() -> anyhow::Result<()> {
+    for ds in ["criteo", "avazu", "kdd"] {
+        autorac::report::table3(ds)?;
+    }
+    println!(
+        "\nShape targets (paper, Criteo): CPU 22.83×/66.87×, RecNMP \
+         3.36×/12.48×, NASRec 3.17×/2.39×/1.68× area, ReREC 1.28×/1.57×.\n\
+         See EXPERIMENTS.md §T3 for the measured-vs-paper discussion."
+    );
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Co-design search scenario: run a (reduced) Algorithm-1 evolutionary
+//! search and compare the discovered design against the hand-crafted
+//! NASRec reference on the behavioral simulator — the paper's core loop.
+//!
+//! Run: `cargo run --release --example codesign_search -- [generations]`
+//! (240 generations ≈ the paper's full run; default 60 keeps this quick)
+
+use autorac::mapping::{map_genome, MapStyle};
+use autorac::nas::{nasrec_like, Search, SearchConfig, Surrogate};
+use autorac::pim::TechParams;
+use autorac::sim::{simulate, Workload};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let generations: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+
+    let cfg = SearchConfig {
+        dataset: "criteo".to_string(),
+        generations,
+        ..SearchConfig::default()
+    };
+    println!(
+        "co-search: {} generations × {} children (population {})",
+        cfg.generations, cfg.children_per_gen, cfg.population
+    );
+    let t0 = Instant::now();
+    let mut search = Search::new(cfg, Surrogate::load_default())?;
+    let best = search.run()?;
+    println!(
+        "search finished in {:.1}s ({} candidate evaluations)",
+        t0.elapsed().as_secs_f64(),
+        search.trace.evaluations
+    );
+
+    // Figure-5-style trajectory (compressed).
+    let drop = search.trace.pct_drop();
+    for (g, d) in drop.iter().enumerate().step_by((drop.len() / 12).max(1)) {
+        println!("  gen {g:>4}: criterion drop {d:>7.2}%");
+    }
+
+    autorac::report::fig6(&best.genome);
+
+    // Head-to-head against the hand-crafted reference.
+    let tech = TechParams::default();
+    let wl = Workload::default();
+    let ours = simulate(&map_genome(&best.genome, &tech, MapStyle::Smart)?, None, &wl);
+    let manual = simulate(
+        &map_genome(&nasrec_like("criteo"), &tech, MapStyle::Smart)?,
+        None,
+        &wl,
+    );
+    println!("\nsearched vs hand-crafted (same smart mapping):");
+    println!(
+        "  throughput  {:.0} vs {:.0} inf/s ({:+.1}%)",
+        ours.throughput_rps,
+        manual.throughput_rps,
+        100.0 * (ours.throughput_rps / manual.throughput_rps - 1.0)
+    );
+    println!(
+        "  area        {:.2} vs {:.2} mm² ({:+.1}%)",
+        ours.area_mm2,
+        manual.area_mm2,
+        100.0 * (ours.area_mm2 / manual.area_mm2 - 1.0)
+    );
+    println!(
+        "  power       {:.2} vs {:.2} W ({:+.1}%)",
+        ours.power_mw / 1e3,
+        manual.power_mw / 1e3,
+        100.0 * (ours.power_mw / manual.power_mw - 1.0)
+    );
+    println!(
+        "  surrogate LogLoss {:.4} (criterion {:.4})",
+        best.test_loss, best.criterion
+    );
+    best.genome
+        .save(std::path::Path::new("artifacts/searched_best.json"))?;
+    println!("saved artifacts/searched_best.json");
+    Ok(())
+}

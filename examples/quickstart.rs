@@ -1,0 +1,60 @@
+//! Quickstart: the whole stack in ~40 lines.
+//!
+//! 1. open the AOT artifact registry (HLO text lowered by `make
+//!    artifacts` — JAX/Pallas at build time, never at run time);
+//! 2. load the trained embedding tables into the memory-tile store;
+//! 3. generate a few synthetic Criteo-like requests;
+//! 4. gather embeddings (rust side = the paper's memory tiles) and score
+//!    the batch on the PJRT CPU client through the searched AutoRAC model.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use autorac::data::{profile, Generator, DEFAULT_SEED};
+use autorac::embeddings::EmbeddingStore;
+use autorac::runtime::atns::TensorFile;
+use autorac::runtime::client::Runtime;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    anyhow::ensure!(
+        dir.join("meta.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    let prof = profile("criteo")?;
+    let store = EmbeddingStore::from_atns(&TensorFile::read(
+        &dir.join("embeddings_criteo.bin"),
+    )?)?;
+    let mut runtime = Runtime::open(dir)?;
+    println!("PJRT platform: {}", runtime.platform());
+
+    // Build a batch of 8 requests, padded to the batch-32 artifact.
+    let b = 32usize;
+    let nd = prof.n_dense.max(1);
+    let mut gen = Generator::new(prof.clone(), DEFAULT_SEED);
+    let mut dense = vec![0f32; b * nd];
+    let mut sparse = vec![0f32; b * prof.n_sparse() * store.d_emb];
+    for i in 0..8 {
+        let (d, ids) = gen.features(i);
+        dense[i * nd..i * nd + d.len()].copy_from_slice(&d);
+        let ids: Vec<i32> = ids.iter().map(|&x| x as i32).collect();
+        let mut row = Vec::new();
+        store.gather(&ids, 1, &mut row);
+        let stride = prof.n_sparse() * store.d_emb;
+        sparse[i * stride..(i + 1) * stride].copy_from_slice(&row);
+    }
+
+    let probs = runtime.infer(
+        "model_criteo_b32",
+        &dense,
+        [b, nd],
+        &sparse,
+        [b, prof.n_sparse(), store.d_emb],
+    )?;
+    for (i, p) in probs.iter().take(8).enumerate() {
+        println!("request {i}: p(click) = {p:.4}");
+    }
+    println!("quickstart OK");
+    Ok(())
+}

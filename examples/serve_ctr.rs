@@ -1,0 +1,89 @@
+//! Serving scenario: batched online CTR scoring through the coordinator.
+//!
+//! Exercises the full L3 request path — router → dynamic batcher →
+//! embedding memory tiles (gather) → PJRT execution of the AOT model —
+//! under an open-loop load, and reports latency/throughput the way a
+//! serving system would.
+//!
+//! Run: `cargo run --release --example serve_ctr -- [requests] [rps]`
+
+use autorac::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, PjrtEngine, Request,
+};
+use autorac::data::{profile, Generator, DEFAULT_SEED};
+use autorac::embeddings::EmbeddingStore;
+use autorac::runtime::atns::TensorFile;
+use autorac::runtime::client::Runtime;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = argv.first().and_then(|s| s.parse().ok()).unwrap_or(2000);
+    let rps: f64 = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(5000.0);
+
+    let dir = PathBuf::from("artifacts");
+    anyhow::ensure!(
+        dir.join("meta.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let prof = profile("criteo")?;
+    let store = Arc::new(EmbeddingStore::from_atns(&TensorFile::read(
+        &dir.join("embeddings_criteo.bin"),
+    )?)?);
+    let (nd, ns, d) = (prof.n_dense, prof.n_sparse(), store.d_emb);
+
+    let dir2 = dir.clone();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            n_workers: 1,
+            batcher: BatcherConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(2),
+            },
+            ..Default::default()
+        },
+        store,
+        move |_| {
+            let rt = Runtime::open(&dir2)?;
+            Ok(Box::new(PjrtEngine::new(rt, "criteo", 32, nd, ns, d)?))
+        },
+    )?;
+
+    println!("open-loop load: {n} requests at {rps:.0} req/s");
+    let mut gen = Generator::new(prof, DEFAULT_SEED);
+    let (tx, rx) = mpsc::channel();
+    let t0 = Instant::now();
+    let gap_ns = 1e9 / rps;
+    for id in 0..n {
+        let target = (id as f64 * gap_ns) as u64;
+        let now = t0.elapsed().as_nanos() as u64;
+        if now < target {
+            std::thread::sleep(Duration::from_nanos(target - now));
+        }
+        let (dense, ids) = gen.features(id);
+        coord.submit(Request {
+            id: id as u64,
+            dense,
+            ids: ids.iter().map(|&x| x as i32).collect(),
+            enqueued: Instant::now(),
+            reply: tx.clone(),
+        })?;
+    }
+    drop(tx);
+    let responses: Vec<_> = rx.iter().collect();
+    anyhow::ensure!(responses.len() == n, "lost responses");
+    let snap = coord.metrics.snapshot();
+    coord.shutdown();
+
+    println!("served {} responses in {:.2}s", n, snap.elapsed_s);
+    println!("  throughput  {:.0} req/s", snap.throughput_rps);
+    println!("  mean batch  {:.1} ({} batches)", snap.mean_batch, snap.batches);
+    println!("  e2e p50     {:.0} µs", snap.e2e_p50_us);
+    println!("  e2e p99     {:.0} µs", snap.e2e_p99_us);
+    println!("  exec p50    {:.0} µs (PJRT batch execution)", snap.exec_p50_us);
+    let mean: f64 = responses.iter().map(|r| r.prob as f64).sum::<f64>() / n as f64;
+    println!("  mean p(click) {mean:.4}");
+    Ok(())
+}

@@ -1,0 +1,291 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts for the rust runtime.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Exports (all under ``artifacts/``):
+
+* ``model_<ds>_b<B>.hlo.txt`` — inference for the searched AutoRAC genome
+  at batch sizes 1/32/512, **pim backend** (Pallas crossbar kernels),
+  trained MLP weights baked in as constants ("crossbar programming").
+  Signature: (dense f32[B, max(nd,1)], sparse f32[B, Ns, d]) → probs[B].
+* ``embeddings_<ds>.bin`` — trained embedding tables (ATNS) for the rust
+  memory tiles, which perform the gather at serving time.
+* ``train_<ds>.hlo.txt`` + ``train_<ds>_init.bin`` + meta — one fused
+  Adagrad train step (params/accums as inputs, gather inside) for the
+  e2e rust-driven training example.
+* ``genomes/*.json`` — the genome files the rust search/simulator uses.
+* ``golden/*.json``  — cross-language parity fixtures (PRNG, records).
+* ``meta.json``      — artifact registry (shapes, param orders, profiles).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import atns
+from . import model as M
+from .arch import Genome, autorac_best, nasrec_like
+from .datagen import PROFILES, Generator
+from .prng import Rng
+
+INFER_BATCHES = (1, 32, 512)
+TRAIN_BATCH = 256
+TRAIN_LR = 0.05
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default printer elides
+    # big weight constants as `constant({...})`, which the xla_extension
+    # 0.5.1 text parser silently reads back as ZEROS.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def load_trained_params(params_dir: str, key: str, g: Genome):
+    """Trained calibration params if present, else fresh init (dev mode)."""
+    path = os.path.join(params_dir, f"{key}_{g.dataset}.npz")
+    if os.path.exists(path):
+        z = np.load(path)
+        return {k: jnp.asarray(z[k]) for k in z.files}
+    print(f"  [aot] WARNING: {path} missing — baking INIT params "
+          f"(run compile.train first for trained artifacts)")
+    return M.init_params(g, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Inference artifacts
+# ---------------------------------------------------------------------------
+
+def export_inference(g: Genome, params: dict, out_dir: str, meta: dict):
+    prof = PROFILES[g.dataset]
+    nd = max(prof.n_dense, 1)
+    mlp = {k: v for k, v in params.items() if not k.startswith("emb/")}
+
+    def infer(dense, sparse):
+        return (M.predict_proba(mlp, g, dense, sparse, backend="pim"),)
+
+    for b in INFER_BATCHES:
+        dense_spec = jax.ShapeDtypeStruct((b, nd), jnp.float32)
+        sparse_spec = jax.ShapeDtypeStruct((b, prof.n_sparse, g.d_emb), jnp.float32)
+        lowered = jax.jit(infer).lower(dense_spec, sparse_spec)
+        name = f"model_{g.dataset}_b{b}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        meta["artifacts"][name] = {
+            "kind": "inference",
+            "dataset": g.dataset,
+            "batch": b,
+            "inputs": [
+                {"name": "dense", "shape": [b, nd], "dtype": "f32"},
+                {"name": "sparse", "shape": [b, prof.n_sparse, g.d_emb],
+                 "dtype": "f32"},
+            ],
+            "outputs": [{"name": "probs", "shape": [b], "dtype": "f32"}],
+            "hlo_chars": len(text),
+        }
+        print(f"  [aot] wrote {name}.hlo.txt ({len(text)/1e6:.1f} MB)")
+
+    # Embedding tables for the rust memory tiles.
+    tables = {f"emb/{j}": np.asarray(params[f"emb/{j}"]) for j in
+              range(prof.n_sparse)}
+    emb_path = os.path.join(out_dir, f"embeddings_{g.dataset}.bin")
+    atns.write(emb_path, tables)
+    meta["embeddings"][g.dataset] = {
+        "file": os.path.basename(emb_path),
+        "fields": prof.n_sparse,
+        "d_emb": g.d_emb,
+        "cards": list(prof.cards),
+    }
+
+    # End-to-end parity golden: expected probabilities for the first 8
+    # test-split records, evaluated EXACTLY as the rust serving path will
+    # (batch-32 artifact semantics: 8 real rows + 24 zero rows — the
+    # per-tensor dynamic activation quantization makes probs depend on
+    # batch composition, so the golden must match the padding).
+    gen = Generator(g.dataset)
+    b32 = 32
+    dense = np.zeros((b32, nd), dtype=np.float32)
+    sparse = np.zeros((b32, prof.n_sparse, g.d_emb), dtype=np.float32)
+    test_off = 90_000  # Splits::default() offset shared with rust
+    for i in range(8):
+        d, ids, _ = gen.record(test_off + i)
+        if prof.n_dense:
+            dense[i, : prof.n_dense] = d
+        for j in range(prof.n_sparse):
+            sparse[i, j] = tables[f"emb/{j}"][ids[j]]
+    probs = np.asarray(
+        M.predict_proba(mlp, g, jnp.array(dense), jnp.array(sparse),
+                        backend="pim")
+    )
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    with open(os.path.join(gdir, f"probs_{g.dataset}.json"), "w") as f:
+        json.dump({"test_offset": test_off, "n": 8,
+                   "probs": [float(p) for p in probs[:8]]}, f, indent=2)
+
+
+# ---------------------------------------------------------------------------
+# Train-step artifact (e2e example: rust drives a full training loop)
+# ---------------------------------------------------------------------------
+
+def export_train_step(g: Genome, out_dir: str, meta: dict):
+    prof = PROFILES[g.dataset]
+    nd = max(prof.n_dense, 1)
+    params = M.init_params(g, jax.random.PRNGKey(7))
+    order = sorted(params.keys())
+
+    def train_step(*args):
+        n = len(order)
+        p = {k: a for k, a in zip(order, args[:n])}
+        acc = {k: a for k, a in zip(order, args[n : 2 * n])}
+        dense, ids, y = args[2 * n], args[2 * n + 1], args[2 * n + 2]
+
+        def loss_fn(p):
+            logits = M.forward_from_ids(p, g, dense, ids, backend="train")
+            return M.bce_loss(logits, y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        # global-norm clipping, same as the calibration trainer
+        gnorm = jnp.sqrt(sum(jnp.sum(gr * gr) for gr in grads.values()))
+        clip = jnp.minimum(1.0, 1.0 / (gnorm + 1e-12))
+        grads = {k: gr * clip for k, gr in grads.items()}
+        outs = []
+        for k in order:
+            a2 = acc[k] + grads[k] * grads[k]
+            outs.append(p[k] - TRAIN_LR * grads[k] / (jnp.sqrt(a2) + 1e-8))
+        for k in order:
+            outs.append(acc[k] + grads[k] * grads[k])
+        outs.append(loss)
+        return tuple(outs)
+
+    specs = [jax.ShapeDtypeStruct(params[k].shape, jnp.float32) for k in order]
+    specs += [jax.ShapeDtypeStruct(params[k].shape, jnp.float32) for k in order]
+    specs += [
+        jax.ShapeDtypeStruct((TRAIN_BATCH, nd), jnp.float32),
+        jax.ShapeDtypeStruct((TRAIN_BATCH, prof.n_sparse), jnp.int32),
+        jax.ShapeDtypeStruct((TRAIN_BATCH,), jnp.float32),
+    ]
+    lowered = jax.jit(train_step).lower(*specs)
+    text = to_hlo_text(lowered)
+    name = f"train_{g.dataset}"
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    # Initial params + zero accumulators, in feed order.
+    init = {f"p/{k}": np.asarray(params[k]) for k in order}
+    # adagrad initial accumulator 0.1 (standard) tames the first steps
+    init |= {f"a/{k}": np.full(params[k].shape, 0.1, np.float32) for k in order}
+    atns.write(os.path.join(out_dir, f"{name}_init.bin"), init)
+    meta["artifacts"][name] = {
+        "kind": "train_step",
+        "dataset": g.dataset,
+        "batch": TRAIN_BATCH,
+        "param_order": order,
+        "param_shapes": {k: list(params[k].shape) for k in order},
+        "lr": TRAIN_LR,
+        "inputs_tail": [
+            {"name": "dense", "shape": [TRAIN_BATCH, nd], "dtype": "f32"},
+            {"name": "ids", "shape": [TRAIN_BATCH, prof.n_sparse],
+             "dtype": "i32"},
+            {"name": "labels", "shape": [TRAIN_BATCH], "dtype": "f32"},
+        ],
+        "hlo_chars": len(text),
+    }
+    print(f"  [aot] wrote {name}.hlo.txt ({len(text)/1e6:.1f} MB, "
+          f"{len(order)} params)")
+
+
+# ---------------------------------------------------------------------------
+# Cross-language parity fixtures
+# ---------------------------------------------------------------------------
+
+def export_goldens(out_dir: str, seed: int = None):
+    from .datagen import DEFAULT_SEED
+
+    seed = seed or DEFAULT_SEED
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    # PRNG stream goldens.
+    r = Rng(42)
+    stream = [r.next_u64() for _ in range(8)]
+    r2 = Rng(7)
+    f64s = [r2.f64() for _ in range(8)]
+    r3 = Rng(9)
+    normals = [r3.normal() for _ in range(8)]
+    with open(os.path.join(gdir, "prng.json"), "w") as f:
+        json.dump({"stream_seed42": [str(v) for v in stream],
+                   "f64_seed7": f64s, "normal_seed9": normals}, f, indent=2)
+    # Record goldens per dataset.
+    records = {}
+    for ds in PROFILES:
+        gen = Generator(ds, seed)
+        recs = []
+        for i in list(range(8)) + [10_000, 99_999]:
+            dense, ids, y = gen.record(i)
+            recs.append({
+                "index": i,
+                "dense": [float(v) for v in dense],
+                "ids": [int(v) for v in ids],
+                "y": int(y),
+            })
+        records[ds] = recs
+    with open(os.path.join(gdir, "records.json"), "w") as f:
+        json.dump({"seed": seed, "records": records}, f, indent=2)
+    print(f"  [aot] wrote golden fixtures")
+
+
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--datasets", default="criteo,avazu,kdd")
+    ap.add_argument("--skip-train-step", action="store_true")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "genomes"), exist_ok=True)
+    params_dir = os.path.join(out, "params")
+
+    meta = {"version": 1, "artifacts": {}, "embeddings": {}, "profiles": {}}
+    for ds, prof in PROFILES.items():
+        meta["profiles"][ds] = {
+            "n_dense": prof.n_dense,
+            "cards": list(prof.cards),
+            "zipf_alpha": prof.zipf_alpha,
+            "base_ctr": prof.base_ctr,
+        }
+
+    for ds in args.datasets.split(","):
+        print(f"=== aot: {ds} ===", flush=True)
+        for maker, key in ((autorac_best, "autorac"), (nasrec_like, "nasrec")):
+            g = maker(ds)
+            g.save(os.path.join(out, "genomes", f"{key}_{ds}.json"))
+        g = autorac_best(ds)
+        params = load_trained_params(params_dir, "autorac", g)
+        export_inference(g, params, out, meta)
+        if ds == "criteo" and not args.skip_train_step:
+            export_train_step(autorac_best("criteo"), out, meta)
+
+    export_goldens(out)
+    with open(os.path.join(out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print("aot complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,303 @@
+"""Architecture genome — the shared python⇔rust schema (Table 1).
+
+A genome describes one point of AutoRAC's joint design space:
+
+* **model genome** — N choice blocks, each with a dense-branch operator
+  (FC or DP), a sparse-branch operator (EFC or identity), an optional
+  dense↔sparse interaction (DSI or FM), per-operator weight bit-widths,
+  branch dimensions, and block-to-block connections;
+* **PIM genome** — crossbar size, DAC resolution, memristor (cell)
+  precision, ADC resolution.
+
+The JSON form produced by :func:`to_json` is byte-compatible with the
+rust side (``rust/src/nas/space.rs``); `rust/tests/genome_parity.rs`
+pins a golden genome. Shape semantics (what the rust hardware mapper
+assumes) are documented per field below and MUST match model.py.
+
+Shape conventions:
+  dense tensors  [B, dim]            (dim ∈ DENSE_DIMS)
+  sparse tensors [B, N, d_emb]       (d_emb ∈ SPARSE_DIMS, global per arch)
+  EFC projects N (feature count); d_emb never changes inside a genome.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field
+
+from .prng import Rng
+
+# Table 1 option sets.
+DENSE_DIMS = [16, 32, 64, 128, 256, 512, 768, 1024]
+SPARSE_DIMS = [16, 32, 48, 64]
+WEIGHT_BITS = [4, 8]
+XBAR_SIZES = [16, 32, 64]
+DAC_BITS = [1, 2]
+CELL_BITS = [1, 2]
+ADC_BITS = [4, 6, 8]
+DENSE_OPS = ["fc", "dp"]
+SPARSE_OPS = ["efc", "identity"]
+INTERACTIONS = ["none", "dsi", "fm"]
+SPARSE_FEATURES = [4, 8, 16, 32]  # EFC output feature counts
+NUM_BLOCKS = 7  # fixed, as in the paper (§3.1)
+DSI_FEATURES = 2  # rows a DSI merger appends to the sparse branch
+
+
+@dataclass
+class Block:
+    dense_op: str = "fc"  # "fc" | "dp"
+    dense_dim: int = 128
+    dense_wbits: int = 8
+    sparse_op: str = "efc"  # "efc" | "identity"
+    sparse_features: int = 8
+    sparse_wbits: int = 8
+    interaction: str = "none"  # "none" | "dsi" | "fm"
+    inter_wbits: int = 8
+    dense_in: list = field(default_factory=lambda: [0])
+    sparse_in: list = field(default_factory=lambda: [0])
+
+
+@dataclass
+class Pim:
+    xbar: int = 64
+    dac_bits: int = 1
+    cell_bits: int = 2
+    adc_bits: int = 8
+
+    def feasible(self) -> bool:
+        """Lossless-ADC rule (see kernels.ref.PimConfig.feasible)."""
+        mx = self.xbar * ((1 << self.dac_bits) - 1) * ((1 << self.cell_bits) - 1)
+        return mx <= (1 << self.adc_bits) - 1
+
+
+@dataclass
+class Genome:
+    name: str
+    dataset: str
+    d_emb: int = 32
+    blocks: list = field(default_factory=list)
+    final_wbits: int = 8
+    pim: Pim = field(default_factory=Pim)
+
+    # ------------------------------------------------------------------
+    def validate(self) -> None:
+        assert self.d_emb in SPARSE_DIMS, f"d_emb {self.d_emb}"
+        assert len(self.blocks) >= 1
+        assert self.pim.feasible(), "PIM genome violates the ADC rule"
+        for i, b in enumerate(self.blocks):
+            assert b.dense_op in DENSE_OPS and b.sparse_op in SPARSE_OPS
+            assert b.interaction in INTERACTIONS
+            assert b.dense_dim in DENSE_DIMS
+            assert b.sparse_features in SPARSE_FEATURES
+            for w in (b.dense_wbits, b.sparse_wbits, b.inter_wbits):
+                assert w in WEIGHT_BITS
+            # connections must reference raw input (0) or earlier blocks
+            assert b.dense_in and all(0 <= j <= i for j in b.dense_in)
+            assert b.sparse_in and all(0 <= j <= i for j in b.sparse_in)
+            # paper constraint: ≥1 dense and ≥1 sparse operator per block
+            # (identity counts as "pass-through selected" only when the
+            # branch is still fed; enforced by non-empty inputs above)
+
+    # ------------------------------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "dataset": self.dataset,
+            "d_emb": self.d_emb,
+            "blocks": [
+                {
+                    "dense_op": b.dense_op,
+                    "dense_dim": b.dense_dim,
+                    "dense_wbits": b.dense_wbits,
+                    "sparse_op": b.sparse_op,
+                    "sparse_features": b.sparse_features,
+                    "sparse_wbits": b.sparse_wbits,
+                    "interaction": b.interaction,
+                    "inter_wbits": b.inter_wbits,
+                    "dense_in": list(b.dense_in),
+                    "sparse_in": list(b.sparse_in),
+                }
+                for b in self.blocks
+            ],
+            "final_wbits": self.final_wbits,
+            "pim": {
+                "xbar": self.pim.xbar,
+                "dac_bits": self.pim.dac_bits,
+                "cell_bits": self.pim.cell_bits,
+                "adc_bits": self.pim.adc_bits,
+            },
+        }
+
+    @staticmethod
+    def from_json(j: dict) -> "Genome":
+        g = Genome(
+            name=j["name"],
+            dataset=j["dataset"],
+            d_emb=j["d_emb"],
+            blocks=[Block(**b) for b in j["blocks"]],
+            final_wbits=j["final_wbits"],
+            pim=Pim(**j["pim"]),
+        )
+        g.validate()
+        return g
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2)
+
+    @staticmethod
+    def load(path: str) -> "Genome":
+        with open(path) as f:
+            return Genome.from_json(json.load(f))
+
+    # ------------------------------------------------------------------
+    def dp_rows(self, dense_dim: int) -> int:
+        """DP engine stack height: ⌈√(2·dim_d)⌉ EFC rows + 1 FC row (§3.2)."""
+        return int(math.ceil(math.sqrt(2.0 * dense_dim))) + 1
+
+
+def random_genome(rng: Rng, dataset: str, name: str = "random") -> Genome:
+    """Uniform sample of the design space (used by random_search seeding
+    and by the calibration trainer's surrogate-fitting runs)."""
+    blocks = []
+    for i in range(NUM_BLOCKS):
+        blocks.append(
+            Block(
+                dense_op=str(rng.choice_list(DENSE_OPS)),
+                dense_dim=int(rng.choice_list(DENSE_DIMS[:6])),  # cap 512 for CPU
+                dense_wbits=int(rng.choice_list(WEIGHT_BITS)),
+                sparse_op=str(rng.choice_list(SPARSE_OPS)),
+                sparse_features=int(rng.choice_list(SPARSE_FEATURES)),
+                sparse_wbits=int(rng.choice_list(WEIGHT_BITS)),
+                interaction=str(rng.choice_list(INTERACTIONS)),
+                inter_wbits=int(rng.choice_list(WEIGHT_BITS)),
+                dense_in=sorted({rng.range(0, i) for _ in range(rng.range(1, 2))}),
+                sparse_in=sorted({rng.range(0, i) for _ in range(rng.range(1, 2))}),
+            )
+        )
+    # PIM genome: rejection-sample until the ADC rule passes.
+    while True:
+        pim = Pim(
+            xbar=int(rng.choice_list(XBAR_SIZES)),
+            dac_bits=int(rng.choice_list(DAC_BITS)),
+            cell_bits=int(rng.choice_list(CELL_BITS)),
+            adc_bits=int(rng.choice_list(ADC_BITS)),
+        )
+        if pim.feasible():
+            break
+    g = Genome(
+        name=name,
+        dataset=dataset,
+        d_emb=int(rng.choice_list(SPARSE_DIMS)),
+        blocks=blocks,
+        pim=pim,
+    )
+    g.validate()
+    return g
+
+
+# Rng.choice works on lists already; alias for clarity with type checkers.
+def _choice_list(self, xs):
+    return xs[self.below(len(xs))]
+
+
+Rng.choice_list = _choice_list  # type: ignore[attr-defined]
+
+
+# ---------------------------------------------------------------------------
+# Reference genomes
+# ---------------------------------------------------------------------------
+
+def nasrec_like(dataset: str) -> Genome:
+    """A strong fixed choice-block architecture standing in for the
+    NASRec-searched backbone (naively mapped in Table 3)."""
+    blocks = [
+        Block(dense_op="fc", dense_dim=256, dense_wbits=8,
+              sparse_op="efc", sparse_features=16, sparse_wbits=8,
+              interaction="fm", inter_wbits=8, dense_in=[0], sparse_in=[0]),
+        Block(dense_op="dp", dense_dim=128, dense_wbits=8,
+              sparse_op="efc", sparse_features=16, sparse_wbits=8,
+              interaction="none", inter_wbits=8, dense_in=[1], sparse_in=[1]),
+        Block(dense_op="fc", dense_dim=256, dense_wbits=8,
+              sparse_op="efc", sparse_features=8, sparse_wbits=8,
+              interaction="dsi", inter_wbits=8, dense_in=[2], sparse_in=[2]),
+        Block(dense_op="fc", dense_dim=128, dense_wbits=8,
+              sparse_op="identity", sparse_features=8, sparse_wbits=8,
+              interaction="fm", inter_wbits=8, dense_in=[2, 3], sparse_in=[3]),
+        Block(dense_op="fc", dense_dim=128, dense_wbits=8,
+              sparse_op="efc", sparse_features=8, sparse_wbits=8,
+              interaction="none", inter_wbits=8, dense_in=[4], sparse_in=[4]),
+        Block(dense_op="dp", dense_dim=64, dense_wbits=8,
+              sparse_op="identity", sparse_features=8, sparse_wbits=8,
+              interaction="fm", inter_wbits=8, dense_in=[5], sparse_in=[5]),
+        Block(dense_op="fc", dense_dim=64, dense_wbits=8,
+              sparse_op="identity", sparse_features=8, sparse_wbits=8,
+              interaction="none", inter_wbits=8, dense_in=[5, 6], sparse_in=[6]),
+    ]
+    return Genome(name=f"nasrec-{dataset}", dataset=dataset, d_emb=32,
+                  blocks=blocks, pim=Pim(xbar=64, dac_bits=1, cell_bits=1,
+                                         adc_bits=8))
+
+
+def autorac_best(dataset: str) -> Genome:
+    """The searched AutoRAC winner (regenerate with `autorac search`;
+    see EXPERIMENTS.md §F6). Mirrors the paper's Figure 6 trends:
+    8-bit EFC everywhere, 4-bit mid-network FC, 8-bit first/last FC,
+    mixed DP precision, and a hardware-friendly PIM config."""
+    blocks = [
+        Block(dense_op="fc", dense_dim=256, dense_wbits=8,
+              sparse_op="efc", sparse_features=16, sparse_wbits=8,
+              interaction="fm", inter_wbits=8, dense_in=[0], sparse_in=[0]),
+        Block(dense_op="fc", dense_dim=128, dense_wbits=4,
+              sparse_op="efc", sparse_features=16, sparse_wbits=8,
+              interaction="none", inter_wbits=8, dense_in=[1], sparse_in=[1]),
+        Block(dense_op="dp", dense_dim=128, dense_wbits=4,
+              sparse_op="efc", sparse_features=8, sparse_wbits=8,
+              interaction="none", inter_wbits=4, dense_in=[1, 2], sparse_in=[2]),
+        Block(dense_op="fc", dense_dim=128, dense_wbits=4,
+              sparse_op="identity", sparse_features=8, sparse_wbits=8,
+              interaction="fm", inter_wbits=4, dense_in=[3], sparse_in=[3]),
+        Block(dense_op="fc", dense_dim=128, dense_wbits=4,
+              sparse_op="efc", sparse_features=8, sparse_wbits=8,
+              interaction="dsi", inter_wbits=4, dense_in=[3, 4], sparse_in=[4]),
+        Block(dense_op="dp", dense_dim=64, dense_wbits=8,
+              sparse_op="identity", sparse_features=8, sparse_wbits=8,
+              interaction="fm", inter_wbits=8, dense_in=[5], sparse_in=[5]),
+        Block(dense_op="fc", dense_dim=128, dense_wbits=8,
+              sparse_op="identity", sparse_features=8, sparse_wbits=8,
+              interaction="none", inter_wbits=8, dense_in=[5, 6], sparse_in=[6]),
+    ]
+    return Genome(name=f"autorac-{dataset}", dataset=dataset, d_emb=32,
+                  blocks=blocks, pim=Pim(xbar=64, dac_bits=1, cell_bits=2,
+                                         adc_bits=8))
+
+
+def design_space_size() -> float:
+    """|space| per Table 1 (the paper reports ≈2×10^54 for N=7)."""
+    per_block_conn = 0.0
+    # connections: any non-empty subset of {0..i} for each branch
+    size = 1.0
+    for i in range(NUM_BLOCKS):
+        conn = (2 ** (i + 1) - 1) ** 2
+        ops = (
+            len(DENSE_OPS)
+            * len(DENSE_DIMS)
+            * len(WEIGHT_BITS)
+            * len(SPARSE_OPS)
+            * len(SPARSE_FEATURES)
+            * len(WEIGHT_BITS)
+            * len(INTERACTIONS)
+            * len(WEIGHT_BITS)
+        )
+        size *= conn * ops
+    size *= len(SPARSE_DIMS) * len(WEIGHT_BITS)  # d_emb, final FC
+    feasible_pim = 0
+    for x in XBAR_SIZES:
+        for da in DAC_BITS:
+            for ce in CELL_BITS:
+                for ad in ADC_BITS:
+                    if Pim(x, da, ce, ad).feasible():
+                        feasible_pim += 1
+    size *= feasible_pim
+    return size

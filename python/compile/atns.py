@@ -1,0 +1,70 @@
+"""ATNS — a tiny binary tensor container for the python→rust boundary.
+
+Used for the trained embedding tables (loaded by the rust memory tiles)
+and the train-step initial parameters (fed to the train-step HLO by the
+e2e example). MLP weights of inference models are NOT shipped this way —
+they are baked into the HLO as constants ("programming the crossbars").
+
+Layout (little-endian):
+    magic   b"ATNS"
+    u32     version (1)
+    u32     tensor count
+    per tensor:
+        u32   name length, then UTF-8 name bytes
+        u8    dtype (0 = f32, 1 = i32, 2 = i64)
+        u8    ndim
+        u32×ndim  shape
+        u64   payload bytes
+        raw   payload (row-major)
+
+Rust reader: ``rust/src/runtime/atns.rs``.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"ATNS"
+VERSION = 1
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.int64}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.int64): 2}
+
+
+def write(path: str, tensors: dict) -> None:
+    """tensors: ordered {name: np.ndarray} (f32 / i32 / i64 only)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = _CODES.get(arr.dtype)
+            if code is None:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            payload = arr.tobytes()
+            f.write(struct.pack("<Q", len(payload)))
+            f.write(payload)
+
+
+def read(path: str) -> dict:
+    """Inverse of :func:`write` (used by tests; rust has its own reader)."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            shape = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            data = f.read(nbytes)
+            out[name] = np.frombuffer(data, dtype=_DTYPES[code]).reshape(shape).copy()
+    return out

@@ -1,0 +1,211 @@
+"""Hand-crafted CTR baselines for Table 2 (train-path only).
+
+Each baseline implements the uniform interface
+``init(key, dataset, d_emb) -> params`` and
+``forward(params, dense, ids) -> logits`` so the calibration trainer
+(:mod:`compile.train`) treats all rows of Table 2 identically.
+
+Implementations are faithful, compact versions of the cited designs:
+
+* **DLRM** (Naumov'19) — bottom MLP on dense, pairwise-dot feature
+  interaction over field embeddings, top MLP.
+* **DeepFM** (Guo'17) — first+second-order FM plus a deep MLP sharing
+  the same embeddings.
+* **xDeepFM** (Lian'18) — Compressed Interaction Network (CIN) + DNN.
+* **AutoInt+** (Song'19) — multi-head self-attention over field
+  embeddings, plus a parallel DNN.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .datagen import PROFILES
+from .kernels.ref import fm_ref
+
+
+def _glorot(key, shape):
+    lim = math.sqrt(6.0 / (shape[0] + shape[-1]))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+def _embeddings(keys, prof, d_emb):
+    return {
+        f"emb/{j}": jax.random.normal(next(keys), (c, d_emb), jnp.float32) * 0.05
+        for j, c in enumerate(prof.cards)
+    }
+
+
+def _embed(params, prof, ids):
+    return jnp.stack(
+        [params[f"emb/{j}"][ids[:, j]] for j in range(prof.n_sparse)], axis=1
+    )
+
+
+def _mlp_init(keys, dims, prefix):
+    return {
+        f"{prefix}/w{i}": _glorot(next(keys), (dims[i], dims[i + 1]))
+        for i in range(len(dims) - 1)
+    } | {
+        f"{prefix}/b{i}": jnp.zeros((dims[i + 1],), jnp.float32)
+        for i in range(len(dims) - 1)
+    }
+
+
+def _mlp(params, x, n_layers, prefix, final_relu=False):
+    for i in range(n_layers):
+        x = x @ params[f"{prefix}/w{i}"] + params[f"{prefix}/b{i}"]
+        if i < n_layers - 1 or final_relu:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+
+def dlrm_init(key, dataset, d_emb=32):
+    prof = PROFILES[dataset]
+    keys = iter(jax.random.split(key, 64 + prof.n_sparse))
+    nd = max(prof.n_dense, 1)
+    params = _embeddings(keys, prof, d_emb)
+    params |= _mlp_init(keys, [nd, 128, d_emb], "bot")
+    m = prof.n_sparse + 1
+    n_int = m * (m - 1) // 2
+    params |= _mlp_init(keys, [n_int + d_emb, 256, 128, 1], "top")
+    return params
+
+
+def dlrm_forward(params, dataset, dense, ids):
+    prof = PROFILES[dataset]
+    e = _embed(params, prof, ids)  # [B, N, d]
+    z = _mlp(params, dense, 2, "bot", final_relu=True)  # [B, d]
+    x = jnp.concatenate([z[:, None, :], e], axis=1)  # [B, N+1, d]
+    g = jnp.einsum("bmd,bnd->bmn", x, x)
+    m = x.shape[1]
+    iu = jnp.triu_indices(m, k=1)
+    inter = g[:, iu[0], iu[1]]
+    top_in = jnp.concatenate([inter, z], axis=-1)
+    return _mlp(params, top_in, 3, "top")[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DeepFM
+# ---------------------------------------------------------------------------
+
+def deepfm_init(key, dataset, d_emb=32):
+    prof = PROFILES[dataset]
+    keys = iter(jax.random.split(key, 64 + 2 * prof.n_sparse))
+    nd = max(prof.n_dense, 1)
+    params = _embeddings(keys, prof, d_emb)
+    for j, c in enumerate(prof.cards):  # first-order weights
+        params[f"w1/{j}"] = jax.random.normal(next(keys), (c,), jnp.float32) * 0.01
+    params["w_dense"] = _glorot(next(keys), (nd, 1))
+    params |= _mlp_init(keys, [prof.n_sparse * d_emb + nd, 256, 128, 1], "dnn")
+    return params
+
+
+def deepfm_forward(params, dataset, dense, ids):
+    prof = PROFILES[dataset]
+    e = _embed(params, prof, ids)
+    first = sum(params[f"w1/{j}"][ids[:, j]] for j in range(prof.n_sparse))
+    first = first + (dense @ params["w_dense"])[:, 0]
+    second = jnp.sum(fm_ref(e), axis=-1)  # scalar FM interaction
+    dnn_in = jnp.concatenate([e.reshape(e.shape[0], -1), dense], axis=-1)
+    deep = _mlp(params, dnn_in, 3, "dnn")[:, 0]
+    return first + second + deep
+
+
+# ---------------------------------------------------------------------------
+# xDeepFM (CIN + DNN)
+# ---------------------------------------------------------------------------
+
+CIN_LAYERS = [16, 16]
+
+
+def xdeepfm_init(key, dataset, d_emb=32):
+    prof = PROFILES[dataset]
+    keys = iter(jax.random.split(key, 64 + prof.n_sparse))
+    nd = max(prof.n_dense, 1)
+    params = _embeddings(keys, prof, d_emb)
+    h_prev = prof.n_sparse
+    for li, h in enumerate(CIN_LAYERS):
+        params[f"cin/w{li}"] = _glorot(next(keys), (h_prev * prof.n_sparse, h))
+        h_prev = h
+    params["cin/out"] = _glorot(next(keys), (sum(CIN_LAYERS), 1))
+    params |= _mlp_init(keys, [prof.n_sparse * d_emb + nd, 256, 128, 1], "dnn")
+    return params
+
+
+def xdeepfm_forward(params, dataset, dense, ids):
+    prof = PROFILES[dataset]
+    e = _embed(params, prof, ids)  # [B, m, d]
+    x0 = e
+    xk = e
+    pooled = []
+    for li, h in enumerate(CIN_LAYERS):
+        # outer product along fields, compressed: z [B, Hk*m, d]
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)
+        z = z.reshape(z.shape[0], -1, z.shape[-1])
+        xk = jnp.einsum("bnd,nh->bhd", z, params[f"cin/w{li}"])
+        xk = jax.nn.relu(xk)
+        pooled.append(jnp.sum(xk, axis=-1))  # [B, h]
+    cin = jnp.concatenate(pooled, axis=-1) @ params["cin/out"]
+    dnn_in = jnp.concatenate([e.reshape(e.shape[0], -1), dense], axis=-1)
+    deep = _mlp(params, dnn_in, 3, "dnn")[:, 0]
+    return cin[:, 0] + deep
+
+
+# ---------------------------------------------------------------------------
+# AutoInt+
+# ---------------------------------------------------------------------------
+
+N_HEADS = 2
+ATT_DIM = 32
+
+
+def autoint_init(key, dataset, d_emb=32):
+    prof = PROFILES[dataset]
+    keys = iter(jax.random.split(key, 64 + prof.n_sparse))
+    nd = max(prof.n_dense, 1)
+    params = _embeddings(keys, prof, d_emb)
+    for h in range(N_HEADS):
+        for nm in ("q", "k", "v"):
+            params[f"att/{nm}{h}"] = _glorot(next(keys), (d_emb, ATT_DIM))
+    params["att/res"] = _glorot(next(keys), (d_emb, N_HEADS * ATT_DIM))
+    params["att/out"] = _glorot(next(keys), (prof.n_sparse * N_HEADS * ATT_DIM, 1))
+    params |= _mlp_init(keys, [prof.n_sparse * d_emb + nd, 256, 128, 1], "dnn")
+    return params
+
+
+def autoint_forward(params, dataset, dense, ids):
+    prof = PROFILES[dataset]
+    e = _embed(params, prof, ids)  # [B, m, d]
+    heads = []
+    for h in range(N_HEADS):
+        q = e @ params[f"att/q{h}"]
+        k = e @ params[f"att/k{h}"]
+        v = e @ params[f"att/v{h}"]
+        att = jax.nn.softmax(q @ jnp.swapaxes(k, -1, -2) / math.sqrt(ATT_DIM), axis=-1)
+        heads.append(att @ v)  # [B, m, ATT_DIM]
+    multi = jnp.concatenate(heads, axis=-1)  # [B, m, H*A]
+    multi = jax.nn.relu(multi + e @ params["att/res"])
+    att_logit = multi.reshape(multi.shape[0], -1) @ params["att/out"]
+    dnn_in = jnp.concatenate([e.reshape(e.shape[0], -1), dense], axis=-1)
+    deep = _mlp(params, dnn_in, 3, "dnn")[:, 0]
+    return att_logit[:, 0] + deep
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+BASELINES = {
+    "dlrm": (dlrm_init, dlrm_forward),
+    "deepfm": (deepfm_init, deepfm_forward),
+    "xdeepfm": (xdeepfm_init, xdeepfm_forward),
+    "autoint+": (autoint_init, autoint_forward),
+}

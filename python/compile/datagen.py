@@ -1,0 +1,281 @@
+"""Synthetic CTR dataset system — python half.
+
+The real Criteo / Avazu / KDD Cup 2012 dumps are not available in this
+offline environment (DESIGN.md §1), so we model each benchmark with a
+*procedural* dataset: every record is a pure function of
+``(profile, seed, index)`` computed with the shared PRNG
+(:mod:`compile.prng` ⇔ ``rust/src/util/rng.rs``). The rust coordinator
+regenerates identical records at serving/eval time without any files
+crossing the build boundary; ``rust/tests/data_parity.rs`` pins the
+cross-language contract against golden records exported by
+``compile.aot``.
+
+Ground-truth click model (what makes Table 2 meaningful): a logistic
+model over latent field embeddings with *pairwise interaction terms*, so
+models that capture feature interactions (FM / DP / deep crossing) beat
+models that cannot — the effect Table 2 measures.
+
+    logit(i) = b + γ_d · Σ_t w_t x_t
+                 + γ_f · Σ_j  u_j · e_j[c_ij]
+                 + γ_p · Σ_{(j,l) ∈ S} e_j[c_ij] · e_l[c_il]
+                 + σ · ε_i,         y_i ~ Bernoulli(σ(logit))
+
+Field pair set S is the deterministic rule ``(31*j + l) % 7 == 0`` over
+j < l — dense enough that interactions matter, sparse enough that
+first-order models retain signal.
+
+Draw order per record (MUST match rust/src/data/gen.rs):
+  1. n_dense normals (dense features, stored as f32)
+  2. one zipf sample per sparse field (feature ids)
+  3. one normal (label noise ε)
+  4. one f64 (label bernoulli draw)
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .prng import Rng, Zipf, seed_from_name
+
+LATENT_K = 8
+DEFAULT_SEED = 20250630  # GLSVLSI'25 opening day
+
+
+@dataclass(frozen=True)
+class Profile:
+    """Shape/statistics profile mirroring one public CTR benchmark."""
+
+    name: str
+    n_dense: int
+    cards: tuple  # cardinality per sparse field
+    zipf_alpha: float
+    base_ctr: float
+    gamma_dense: float
+    gamma_field: float
+    gamma_pair: float
+    noise: float
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.cards)
+
+    def pairs(self) -> list:
+        """Interacting field pairs — deterministic rule shared with rust."""
+        return [
+            (j, l)
+            for j in range(self.n_sparse)
+            for l in range(j + 1, self.n_sparse)
+            if (31 * j + l) % 7 == 0
+        ]
+
+
+def _cards(rule: str, n: int) -> tuple:
+    """Deterministic per-field cardinalities (log-spread, field-indexed)."""
+    out = []
+    for j in range(n):
+        # spread roughly 150..2000, deterministic in j
+        c = int(150 * (1.45 ** (j % 8)))
+        out.append(min(c, 2000))
+    return tuple(out)
+
+
+#: The three benchmark stand-ins. Field counts mirror the real datasets
+#: (Criteo: 13 dense + 26 categorical; Avazu: 22 categorical, no dense;
+#: KDD Cup 2012 track 2: 3 numeric + 10 categorical).
+PROFILES = {
+    "criteo": Profile(
+        name="criteo",
+        n_dense=13,
+        cards=_cards("criteo", 26),
+        zipf_alpha=1.25,
+        base_ctr=0.256,
+        gamma_dense=0.3,
+        gamma_field=0.45,
+        gamma_pair=0.55,
+        noise=0.6,
+    ),
+    "avazu": Profile(
+        name="avazu",
+        n_dense=0,
+        cards=_cards("avazu", 22),
+        zipf_alpha=1.30,
+        base_ctr=0.17,
+        gamma_dense=0.0,
+        gamma_field=0.5,
+        gamma_pair=0.55,
+        noise=0.6,
+    ),
+    "kdd": Profile(
+        name="kdd",
+        n_dense=3,
+        cards=_cards("kdd", 10),
+        zipf_alpha=1.35,
+        base_ctr=0.045,
+        gamma_dense=0.25,
+        gamma_field=0.5,
+        gamma_pair=0.6,
+        noise=0.5,
+    ),
+}
+
+
+def dataset_key(seed: int, name: str) -> int:
+    """Root key for one dataset = substream state of the global seed."""
+    root = Rng(seed)
+    ds = root.substream("data/" + name)
+    return ds.s[0] ^ ds.s[2]
+
+
+class TruthModel:
+    """Latent ground-truth parameters (lazily materialized, cached)."""
+
+    def __init__(self, profile: Profile, seed: int = DEFAULT_SEED):
+        self.profile = profile
+        self.key = dataset_key(seed, profile.name)
+        p = profile
+        # Dense weights.
+        r = Rng(seed_from_name(self.key, "densew"))
+        self.w_dense = np.array(
+            [r.normal() for _ in range(p.n_dense)], dtype=np.float64
+        )
+        # Per-field readout vectors u_j.
+        self.u = []
+        for j in range(p.n_sparse):
+            r = Rng(seed_from_name(self.key, f"fieldw/{j}"))
+            self.u.append(
+                np.array([r.normal() for _ in range(LATENT_K)], dtype=np.float64)
+                / math.sqrt(LATENT_K)
+            )
+        # Truth embedding tables (random-access generation, then cached).
+        self._emb_cache: dict = {}
+        self.pair_list = p.pairs()
+        # Bias calibrated so that E[sigmoid(logit)] ≈ base_ctr: with
+        # logit = b + s·N(0,1), E[sigmoid] ≈ sigmoid(b / √(1 + πs²/8))
+        # (probit approximation), so scale the target logit by that factor.
+        # Variance terms use the *actual* generated truth parameters, so
+        # the rust mirror (data/gen.rs) reproduces b bit-identically.
+        var = p.noise * p.noise
+        var += p.gamma_dense ** 2 * float(self.w_dense @ self.w_dense)
+        for j in range(p.n_sparse):
+            var += p.gamma_field ** 2 * float(self.u[j] @ self.u[j]) / LATENT_K
+        var += p.gamma_pair ** 2 * len(self.pair_list) / LATENT_K
+        self.bias = math.log(p.base_ctr / (1.0 - p.base_ctr)) * math.sqrt(
+            1.0 + math.pi * var / 8.0
+        )
+
+    def emb(self, j: int, c: int) -> np.ndarray:
+        key = (j, c)
+        e = self._emb_cache.get(key)
+        if e is None:
+            r = Rng(seed_from_name(self.key, f"emb/{j}/{c}"))
+            e = np.array(
+                [r.normal() for _ in range(LATENT_K)], dtype=np.float64
+            ) / math.sqrt(LATENT_K)
+            self._emb_cache[key] = e
+        return e
+
+    def logit(self, dense: np.ndarray, sparse_ids: np.ndarray, eps: float) -> float:
+        p = self.profile
+        z = self.bias
+        if p.n_dense:
+            z += p.gamma_dense * float(self.w_dense @ dense)
+        embs = [self.emb(j, int(sparse_ids[j])) for j in range(p.n_sparse)]
+        for j in range(p.n_sparse):
+            z += p.gamma_field * float(self.u[j] @ embs[j])
+        for (j, l) in self.pair_list:
+            z += p.gamma_pair * float(embs[j] @ embs[l])
+        z += p.noise * eps
+        return z
+
+
+class Generator:
+    """Procedural record generator — python mirror of rust data::gen."""
+
+    def __init__(self, name: str, seed: int = DEFAULT_SEED):
+        self.profile = PROFILES[name]
+        self.seed = seed
+        self.key = dataset_key(seed, name)
+        self.truth = TruthModel(self.profile, seed)
+        self.zipfs = [Zipf(c, self.profile.zipf_alpha) for c in self.profile.cards]
+
+    def record(self, index: int):
+        """Generate record `index`: (dense f32[n_dense], ids i64[n_sparse], y)."""
+        p = self.profile
+        r = Rng(seed_from_name(self.key, f"rec/{index}"))
+        dense = np.array([r.normal() for _ in range(p.n_dense)], dtype=np.float32)
+        ids = np.array(
+            [self.zipfs[j].sample(r) for j in range(p.n_sparse)], dtype=np.int64
+        )
+        eps = r.normal()
+        z = self.truth.logit(dense.astype(np.float64), ids, eps)
+        y = 1 if r.f64() < 1.0 / (1.0 + math.exp(-z)) else 0
+        return dense, ids, y
+
+    def block(self, start: int, count: int):
+        """Vectorized-ish block generation (dense[count,nd], ids, y)."""
+        p = self.profile
+        dense = np.zeros((count, max(p.n_dense, 1)), dtype=np.float32)
+        ids = np.zeros((count, p.n_sparse), dtype=np.int64)
+        ys = np.zeros((count,), dtype=np.float32)
+        for i in range(count):
+            d, s, y = self.record(start + i)
+            if p.n_dense:
+                dense[i, : p.n_dense] = d
+            ids[i] = s
+            ys[i] = y
+        return dense[:, : max(p.n_dense, 1)], ids, ys
+
+
+# ---------------------------------------------------------------------------
+# Cached materialization: generating records in pure python is ~50 µs each;
+# the calibration trainer touches each record many times, so we materialize
+# once per (profile, seed, split) and cache under artifacts/data_cache/.
+# ---------------------------------------------------------------------------
+
+SPLIT_SIZES = {
+    # 80/10/10 like the paper's protocol, scaled to CPU-feasible sizes.
+    "train": int(os.environ.get("AUTORAC_TRAIN_N", 80_000)),
+    "val": int(os.environ.get("AUTORAC_VAL_N", 10_000)),
+    "test": int(os.environ.get("AUTORAC_TEST_N", 10_000)),
+}
+
+# Split layout over the index space (contiguous, in this order).
+SPLIT_OFFSETS = {
+    "train": 0,
+    "val": SPLIT_SIZES["train"],
+    "test": SPLIT_SIZES["train"] + SPLIT_SIZES["val"],
+}
+
+
+def load_split(name: str, split: str, seed: int = DEFAULT_SEED, cache_dir=None):
+    """Materialize (dense, ids, y) for a split, with .npz caching."""
+    n = SPLIT_SIZES[split]
+    off = SPLIT_OFFSETS[split]
+    if cache_dir is None:
+        cache_dir = os.path.join(
+            os.path.dirname(__file__), "..", "..", "artifacts", "data_cache"
+        )
+    os.makedirs(cache_dir, exist_ok=True)
+    path = os.path.join(cache_dir, f"{name}_{seed}_{split}_{n}_v2.npz")
+    if os.path.exists(path):
+        z = np.load(path)
+        return z["dense"], z["ids"], z["y"]
+    gen = Generator(name, seed)
+    dense, ids, y = gen.block(off, n)
+    np.savez_compressed(path, dense=dense, ids=ids, y=y)
+    return dense, ids, y
+
+
+def batches(dense, ids, y, batch_size: int, seed: int, epochs: int = 1):
+    """Shuffled minibatch iterator (numpy-side; not parity-critical)."""
+    n = len(y)
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            sel = perm[i : i + batch_size]
+            yield dense[sel], ids[sel], y[sel]

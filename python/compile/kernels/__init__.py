@@ -1,0 +1,25 @@
+"""L1 Pallas kernels (build-time only; lowered into the model HLO).
+
+Three kernels cover the paper's PIM engines (Fig. 4f):
+
+* :mod:`crossbar_mvm` — the MVM engine (FC / EFC / DSI / DP sub-layers)
+* :mod:`fm_kernel` — the FM engine (transposed array + MBSA)
+* :mod:`dp_kernel` — the DP engine (Gram stage)
+
+All run under ``interpret=True`` so the lowered HLO executes on the CPU
+PJRT client the rust runtime uses. :mod:`ref` holds the pure-jnp oracles.
+"""
+
+from .crossbar_mvm import pim_linear, pim_mvm_int
+from .dp_kernel import dp_gram, dp_triu
+from .fm_kernel import fm_interaction
+from .ref import PimConfig
+
+__all__ = [
+    "PimConfig",
+    "pim_linear",
+    "pim_mvm_int",
+    "dp_gram",
+    "dp_triu",
+    "fm_interaction",
+]

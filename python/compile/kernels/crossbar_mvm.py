@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: bit-serial ReRAM crossbar MVM (paper Fig. 3a / §3.2).
+
+This is the compute hot-spot of every FC / EFC / DSI / DP sub-layer in
+the AutoRAC model, expressed as the analog array actually computes it:
+
+  * the weight matrix is bit-sliced into ``cell_bits`` planes across a
+    positive and a negative array (signed weights ⇒ differential pair);
+  * the activation vector is fed ``dac_bits`` bits per step
+    (offset-binary unsigned, offset corrected digitally);
+  * each row-tile of ``xbar`` word lines produces analog column sums
+    that pass through the ADC transfer function (quantize + clip);
+  * the digital periphery shift-adds the partial codes.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the grid dimension
+over row-tiles is the HBM→VMEM schedule; one (xbar × N) weight tile and a
+(B × xbar) activation tile live in VMEM per step, mirroring the paper's
+wordline-register / crossbar residency. ``interpret=True`` everywhere —
+real-TPU lowering would emit a Mosaic custom-call the CPU PJRT client
+cannot execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PimConfig, quant_act_u8, quant_sym
+
+
+def _mvm_kernel(x_ref, wp_ref, wn_ref, o_ref, *, cfg: PimConfig):
+    """One row-tile step: accumulate ADC-quantized bit-serial partials.
+
+    Refs (per grid step t over K // cfg.xbar row tiles):
+        x_ref:  int32 [B, xbar]   — activation slice for this tile
+        wp_ref: int32 [xbar, N]   — positive weight slice
+        wn_ref: int32 [xbar, N]   — negative weight slice
+        o_ref:  int32 [B, N]      — running accumulator (whole output)
+    """
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    wp = wp_ref[...]
+    wn = wn_ref[...]
+
+    dac_mask = (1 << cfg.dac_bits) - 1
+    cell_mask = (1 << cfg.cell_bits) - 1
+    levels = (1 << cfg.adc_bits) - 1
+    step = cfg.adc_step
+
+    acc = jnp.zeros_like(o_ref)
+    # Static unrolled loops — chunk/plane counts are compile-time consts,
+    # exactly like the fixed cycle schedule of the analog array.
+    for c in range(cfg.n_chunks):
+        chunk = (x >> (c * cfg.dac_bits)) & dac_mask
+        for p in range(cfg.n_planes):
+            shift = c * cfg.dac_bits + p * cfg.cell_bits
+            for wmat, sign in ((wp, 1), (wn, -1)):
+                plane = (wmat >> (p * cfg.cell_bits)) & cell_mask
+                # f32 dot, rounded back to int — bit-exact at crossbar
+                # operand ranges and avoids the s32 dot_general miscompile
+                # in the rust runtime's xla_extension 0.5.1 (see ref.py).
+                partial = jax.lax.dot_general(
+                    chunk.astype(jnp.float32),
+                    plane.astype(jnp.float32),
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                ).astype(jnp.int32)
+                # ADC transfer: mid-tread quantize + full-scale clip.
+                code = jnp.clip((partial + step // 2) // step, 0, levels)
+                acc = acc + sign * (code * step << shift)
+    o_ref[...] += acc
+
+
+def pim_mvm_int(x_u, w_pos, w_neg, cfg: PimConfig):
+    """Integer crossbar MVM via Pallas. Shapes as in ref.pim_mvm_int_ref."""
+    B, K = x_u.shape
+    N = w_pos.shape[1]
+    assert K % cfg.xbar == 0, "pad K to the crossbar size"
+    n_tiles = K // cfg.xbar
+    kernel = functools.partial(_mvm_kernel, cfg=cfg)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((B, cfg.xbar), lambda t: (0, t)),
+            pl.BlockSpec((cfg.xbar, N), lambda t: (t, 0)),
+            pl.BlockSpec((cfg.xbar, N), lambda t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, N), lambda t: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.int32),
+        interpret=True,
+    )(x_u, w_pos, w_neg)
+
+
+def pim_linear(x, w, cfg: PimConfig):
+    """Float-in/float-out PIM linear layer using the Pallas core.
+
+    Same contract as ref.pim_linear_ref: quantize (digital) → bit-serial
+    crossbar MVM (analog, Pallas) → offset-correct + dequantize (digital).
+    """
+    K = x.shape[-1]
+    pad = (-K) % cfg.xbar
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    wq, w_scale = quant_sym(w, cfg.w_bits)
+    w_pos = jnp.maximum(wq, 0)
+    w_neg = jnp.maximum(-wq, 0)
+    x_u, x_scale, offset = quant_act_u8(x, cfg.x_bits)
+    acc = pim_mvm_int(x_u, w_pos, w_neg, cfg)
+    ones = jnp.full((1, x_u.shape[1]), offset, dtype=jnp.int32)
+    corr = pim_mvm_int(ones, w_pos, w_neg, cfg)
+    return (acc - corr).astype(jnp.float32) * x_scale * w_scale

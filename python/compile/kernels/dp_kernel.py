@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: DP engine Gram stage (paper Fig. 4c).
+
+The DP layer's inner-product core computes all pairwise dot products of
+the stacked feature matrix X ∈ R^{m×d}: G = XXᵀ. In hardware, each EFC
+output vector is *programmed* into the DP-engine crossbar while the next
+one is produced (double-buffered, overlap-friendly — the EFC output is
+already transposed so Xᵀ programs directly); each stored vector then
+feeds the word lines to produce one row of G per read.
+
+The kernel emits the full Gram matrix; strict-upper-triangle selection
+(`Triu`, k=1) is output addressing in the digital periphery and lives in
+the `dp_triu` wrapper, mirroring where the work happens on chip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _dp_kernel(x_ref, o_ref):
+    """x_ref: f32 [1, m, d]; o_ref: f32 [1, m, m] = X Xᵀ."""
+    x = x_ref[0]  # [m, d]
+    o_ref[0] = jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def dp_gram(x):
+    """x: f32 [B, m, d] → f32 [B, m, m] via Pallas (interpret mode)."""
+    B, m, d = x.shape
+    return pl.pallas_call(
+        _dp_kernel,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, m, d), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, m, m), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, m, m), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def dp_triu(x):
+    """x: f32 [B, m, d] → f32 [B, m(m-1)/2] (strict upper triangle)."""
+    g = dp_gram(x)
+    m = x.shape[-2]
+    iu = np.triu_indices(m, k=1)
+    return g[:, iu[0], iu[1]]

@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: FM interaction engine (paper Fig. 3b / Fig. 4d–e).
+
+Computes the sparse-to-dense factorization-machine merger
+``0.5·((Σ_n x_n)² − Σ_n x_n²)`` per batch element.
+
+Hardware story (what the single fused pass models): the EFC layer's
+output vectors are written *column-wise* into a transposed ReRAM array
+(Wan ISSCC'20-style), so
+
+  * a ones-vector read along word lines yields Σ_n x_n per column
+    (square-of-sum input, squared in the MBSA bit-serial AND array);
+  * reading the array with each stored vector itself yields x_n², and
+    the bit-line sum gives Σ_n x_n² — concurrently with the first read.
+
+Both reductions stream through the same array once, which is why the
+kernel is a single pass over N — the paper's "full data pipelining".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fm_kernel(x_ref, o_ref):
+    """x_ref: f32 [1, N, d] (one batch element); o_ref: f32 [1, d]."""
+    x = x_ref[0]                      # [N, d]
+    s = jnp.sum(x, axis=0)            # Σ x      (ones-vector wordline read)
+    ss = jnp.sum(x * x, axis=0)       # Σ x²     (self-vector read, concurrent)
+    o_ref[0, :] = 0.5 * (s * s - ss)  # MBSA square + digital subtract
+
+
+def fm_interaction(x):
+    """x: f32 [B, N, d] → f32 [B, d] via Pallas (interpret mode)."""
+    B, N, d = x.shape
+    return pl.pallas_call(
+        _fm_kernel,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, N, d), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, d), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, d), jnp.float32),
+        interpret=True,
+    )(x)

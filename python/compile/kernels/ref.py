@@ -1,0 +1,215 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the *correctness contracts*: every Pallas kernel in this
+package must agree with its oracle exactly (integer paths) or to
+float tolerance (float paths). pytest + hypothesis enforce this
+(`python/tests/test_kernels.py`).
+
+The quantization/crossbar model implemented here is the same one the
+rust functional simulator implements (`rust/src/pim/crossbar.rs`); the
+integration test `rust/tests/kernel_parity.rs` closes the triangle
+(pallas kernel ≡ jnp oracle ≡ rust crossbar).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PimConfig:
+    """Static crossbar configuration (one point of Table 1's ReRAM space).
+
+    Attributes:
+        xbar: crossbar rows per tile (16/32/64). Row tiling happens at
+            this granularity; each row-tile's column sums pass through
+            the ADC separately (that is what makes the config matter).
+        dac_bits: DAC resolution (1/2) — input bits fed per cycle.
+        cell_bits: memristor precision (1/2) — weight bits per cell.
+        adc_bits: ADC resolution (4/6/8) — output levels per column read.
+        x_bits: activation quantization (fixed 8 in AutoRAC's space).
+        w_bits: weight quantization (4/8, searched per operator).
+    """
+
+    xbar: int = 64
+    dac_bits: int = 1
+    cell_bits: int = 2
+    adc_bits: int = 8
+    x_bits: int = 8
+    w_bits: int = 8
+
+    @property
+    def n_chunks(self) -> int:
+        return -(-self.x_bits // self.dac_bits)
+
+    @property
+    def n_planes(self) -> int:
+        # magnitude bits only; sign handled by pos/neg crossbar pair
+        return -(-(self.w_bits - 1) // self.cell_bits)
+
+    @property
+    def adc_max_in(self) -> int:
+        """Largest analog column sum a row-tile can produce."""
+        return self.xbar * ((1 << self.dac_bits) - 1) * ((1 << self.cell_bits) - 1)
+
+    @property
+    def adc_step(self) -> int:
+        """Integer LSB of the ADC transfer function (≥1)."""
+        levels = (1 << self.adc_bits) - 1
+        return max(1, -(-self.adc_max_in // levels))
+
+    def feasible(self) -> bool:
+        """The paper's feasibility rule ("we only consider combinations of
+        DAC and memristor precision that fall within the maximum ADC
+        resolution range to avoid any loss during the analog-to-digital
+        conversion process"): the largest analog column sum must be
+        representable exactly, i.e. the ADC step is 1."""
+        return self.adc_max_in <= (1 << self.adc_bits) - 1
+
+
+# ---------------------------------------------------------------------------
+# Quantization helpers (digital periphery)
+# ---------------------------------------------------------------------------
+
+def quant_sym(w, bits: int):
+    """Symmetric per-tensor weight quantization → (int values, scale)."""
+    qmax = (1 << (bits - 1)) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / qmax
+    wq = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int32)
+    return wq, scale
+
+
+def quant_act_u8(x, bits: int = 8):
+    """Activation quantization to *offset-binary* unsigned ints.
+
+    Crossbars compute with non-negative line voltages, so signed
+    activations are shifted by 2^(bits-1); the offset contribution
+    (offset · column-sum) is subtracted digitally afterwards.
+    Returns (x_u int32 in [0, 2^bits-1], scale, offset).
+    """
+    qmax = (1 << (bits - 1)) - 1
+    offset = 1 << (bits - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    xq = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    return xq + offset, scale, offset
+
+
+def adc_transfer(v, cfg: PimConfig):
+    """Mid-tread integer ADC: round to the step grid, clip to full scale."""
+    levels = (1 << cfg.adc_bits) - 1
+    step = cfg.adc_step
+    code = jnp.clip((v + step // 2) // step, 0, levels)
+    return code * step
+
+
+# ---------------------------------------------------------------------------
+# Oracle 1: bit-serial crossbar MVM (integer core)
+# ---------------------------------------------------------------------------
+
+def pim_mvm_int_ref(x_u, w_pos, w_neg, cfg: PimConfig):
+    """Reference for the crossbar MVM integer core.
+
+    Args:
+        x_u: int32 [B, K] unsigned offset-binary activations.
+        w_pos/w_neg: int32 [K, N] magnitude parts of the quantized weight
+            (w_q = w_pos - w_neg, both in [0, 2^(w_bits-1)-1]).
+    Returns:
+        int32 [B, N]: Σ over row-tiles/chunks/planes of ADC-quantized
+        partial sums, shift-add recombined. K must be a multiple of
+        cfg.xbar (the mapping layer pads).
+    """
+    B, K = x_u.shape
+    N = w_pos.shape[1]
+    assert K % cfg.xbar == 0, "pad K to the crossbar size"
+    dac_mask = (1 << cfg.dac_bits) - 1
+    cell_mask = (1 << cfg.cell_bits) - 1
+    acc = jnp.zeros((B, N), dtype=jnp.int32)
+    for t in range(K // cfg.xbar):
+        rows = slice(t * cfg.xbar, (t + 1) * cfg.xbar)
+        xt = x_u[:, rows]
+        for c in range(cfg.n_chunks):
+            chunk = (xt >> (c * cfg.dac_bits)) & dac_mask
+            for p in range(cfg.n_planes):
+                shift = c * cfg.dac_bits + p * cfg.cell_bits
+                for wmat, sign in ((w_pos, 1), (w_neg, -1)):
+                    plane = (wmat[rows, :] >> (p * cfg.cell_bits)) & cell_mask
+                    # Analog column sums. The dot is computed in f32 and
+                    # rounded back: bit-exact because operands are tiny
+                    # (≤ 2^dac·2^cell · xbar ≪ 2^24), and it sidesteps a
+                    # miscompiled s32 dot_general in the xla_extension
+                    # 0.5.1 CPU backend the rust runtime links against.
+                    partial = (
+                        chunk.astype(jnp.float32) @ plane.astype(jnp.float32)
+                    ).astype(jnp.int32)
+                    acc = acc + sign * (adc_transfer(partial, cfg) << shift)
+    return acc
+
+
+def pim_linear_ref(x, w, cfg: PimConfig):
+    """Full PIM linear layer: quantize → crossbar MVM → dequantize.
+
+    The float-in/float-out contract used by the L2 model's inference
+    path. x: [B, K] float, w: [K, N] float → [B, N] float.
+    """
+    K = x.shape[-1]
+    pad = (-K) % cfg.xbar
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    wq, w_scale = quant_sym(w, cfg.w_bits)
+    w_pos = jnp.maximum(wq, 0)
+    w_neg = jnp.maximum(-wq, 0)
+    x_u, x_scale, offset = quant_act_u8(x, cfg.x_bits)
+    acc = pim_mvm_int_ref(x_u, w_pos, w_neg, cfg)
+    # Digital periphery: offset correction uses the same ADC path the
+    # hardware's dummy row sees — modeled exactly (ones-vector MVM).
+    ones = jnp.full((1, x_u.shape[1]), offset, dtype=jnp.int32)
+    corr = pim_mvm_int_ref(ones, w_pos, w_neg, cfg)
+    return (acc - corr).astype(jnp.float32) * x_scale * w_scale
+
+
+# ---------------------------------------------------------------------------
+# Oracle 2: FM interaction (square-of-sum minus sum-of-squares)
+# ---------------------------------------------------------------------------
+
+def fm_ref(x):
+    """x: [B, N, d] → [B, d]; 0.5 · ((Σ_n x)² − Σ_n x²) as in Rendle'10.
+
+    The 0.5 makes each pair count once (the transposed-array engine
+    produces the same result by construction).
+    """
+    s = jnp.sum(x, axis=-2)
+    ss = jnp.sum(x * x, axis=-2)
+    return 0.5 * (s * s - ss)
+
+
+# ---------------------------------------------------------------------------
+# Oracle 3: DP engine (pairwise inner products, Gram matrix)
+# ---------------------------------------------------------------------------
+
+def dp_gram_ref(x):
+    """x: [B, m, d] → [B, m, m] Gram matrix XXᵀ (full; triu selection is
+    digital addressing and happens in the wrapper)."""
+    return jnp.einsum("bmd,bnd->bmn", x, x)
+
+
+def dp_triu_ref(x):
+    """x: [B, m, d] → [B, m(m-1)/2] — strict upper triangle, row-major."""
+    g = dp_gram_ref(x)
+    m = x.shape[-2]
+    iu = np.triu_indices(m, k=1)
+    return g[:, iu[0], iu[1]]
+
+
+# ---------------------------------------------------------------------------
+# Fake-quant (training-time) reference — straight-through estimator
+# ---------------------------------------------------------------------------
+
+def fake_quant_ref(w, bits: int):
+    """Round-to-grid weight fake-quantization (forward value only)."""
+    qmax = (1 << (bits - 1)) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / qmax
+    return jnp.clip(jnp.round(w / scale), -qmax, qmax) * scale

@@ -1,0 +1,226 @@
+"""L2 model: the AutoRAC choice-block network, built from a Genome.
+
+The model is the paper's §3.1 composition: N choice blocks + final FC.
+Each block ingests any subset of earlier dense/sparse outputs (0 = raw
+inputs), applies its dense operator (FC or DP), sparse operator (EFC or
+identity), and optional interaction (DSI or FM), and emits one dense and
+one sparse tensor. See arch.py for the genome schema and shape rules.
+
+``init_params`` / ``forward`` are pure functions over a params dict so
+the same code path serves training (backend="train", differentiable)
+and AOT lowering (backend="pim", Pallas kernels, weights baked).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ops
+from .arch import DSI_FEATURES, Genome
+from .datagen import PROFILES
+from .kernels import PimConfig
+
+
+def pim_config(g: Genome) -> PimConfig:
+    return PimConfig(
+        xbar=g.pim.xbar,
+        dac_bits=g.pim.dac_bits,
+        cell_bits=g.pim.cell_bits,
+        adc_bits=g.pim.adc_bits,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Static shape inference (mirrored in rust/src/nas/space.rs::shapes)
+# ---------------------------------------------------------------------------
+
+def infer_shapes(g: Genome):
+    """Walk the block graph and return per-block IO shapes.
+
+    Returns a list of dicts with keys din, dout (dense dims) and
+    nin, nout (sparse feature counts); index 0 is the raw input.
+    """
+    prof = PROFILES[g.dataset]
+    dense_dims = [max(prof.n_dense, 1)]  # raw dense (≥1: zero pad when absent)
+    sparse_ns = [prof.n_sparse]
+    shapes = []
+    for b in g.blocks:
+        din = sum(dense_dims[j] for j in b.dense_in)
+        nin = sum(sparse_ns[j] for j in b.sparse_in)
+        nout = b.sparse_features if b.sparse_op == "efc" else nin
+        if b.interaction == "dsi":
+            nout += DSI_FEATURES
+        shapes.append({"din": din, "dout": b.dense_dim, "nin": nin, "nout": nout})
+        dense_dims.append(b.dense_dim)
+        sparse_ns.append(nout)
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+def init_params(g: Genome, key, with_embeddings: bool = True) -> dict:
+    """Initialize all trainable parameters for a genome."""
+    prof = PROFILES[g.dataset]
+    shapes = infer_shapes(g)
+    params = {}
+    keys = iter(jax.random.split(key, 16 * len(g.blocks) + len(prof.cards) + 4))
+    if with_embeddings:
+        for j, c in enumerate(prof.cards):
+            params[f"emb/{j}"] = (
+                jax.random.normal(next(keys), (c, g.d_emb), jnp.float32) * 0.05
+            )
+    for i, (b, sh) in enumerate(zip(g.blocks, shapes)):
+        p = f"block{i}"
+        if b.dense_op == "fc":
+            params[f"{p}/fc"] = _glorot(next(keys), (sh["din"], b.dense_dim))
+        else:  # dp
+            k = ops.dp_stack_rows(b.dense_dim)
+            npairs = (k + 1) * k // 2
+            params[f"{p}/dp/w_in"] = _glorot(next(keys), (sh["din"], g.d_emb))
+            params[f"{p}/dp/w_efc"] = _glorot(next(keys), (sh["nin"], k))
+            params[f"{p}/dp/w_out"] = _glorot(next(keys), (npairs, b.dense_dim))
+        if b.sparse_op == "efc":
+            params[f"{p}/efc"] = _glorot(next(keys), (sh["nin"], b.sparse_features))
+        if b.interaction == "fm":
+            params[f"{p}/fm"] = _glorot(next(keys), (g.d_emb, b.dense_dim))
+        elif b.interaction == "dsi":
+            params[f"{p}/dsi"] = _glorot(
+                next(keys), (b.dense_dim, DSI_FEATURES * g.d_emb)
+            )
+    params["final"] = _glorot(next(keys), (g.blocks[-1].dense_dim, 1))
+    return params
+
+
+def param_count(params: dict) -> int:
+    return int(sum(np.prod(v.shape) for v in params.values()))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def embed(params: dict, g: Genome, ids):
+    """Gather embeddings: ids int32 [B, N_s] → [B, N_s, d_emb].
+
+    The Figure-2 bit-width sweep quantizes the embedding tables too
+    (set a python-side ``g.emb_bits`` attribute; weights-as-stored in the
+    sweep's sense include the tables). Normal genomes leave tables at
+    full precision — they live in the memory tiles, not the crossbars.
+    """
+    from .ops import fake_quant
+
+    prof = PROFILES[g.dataset]
+    emb_bits = getattr(g, "emb_bits", 32)
+    cols = []
+    for j in range(prof.n_sparse):
+        table = params[f"emb/{j}"]
+        if emb_bits < 32:
+            table = fake_quant(table, emb_bits)
+        cols.append(table[ids[:, j]])
+    return jnp.stack(cols, axis=1)
+
+
+def forward(params: dict, g: Genome, dense, sparse, backend: str = "train"):
+    """Model logits.
+
+    Args:
+        dense: f32 [B, max(n_dense,1)] — raw dense features (zeros when
+            the profile has none, e.g. avazu).
+        sparse: f32 [B, N_s, d_emb] — already-gathered embeddings (the
+            rust memory tiles do the gather at serving time).
+    Returns: f32 [B] logits.
+    """
+    cfg = pim_config(g)
+    dense_outs = [dense]
+    sparse_outs = [sparse]
+    for i, b in enumerate(g.blocks):
+        p = f"block{i}"
+        xd = jnp.concatenate([dense_outs[j] for j in b.dense_in], axis=-1)
+        xs = ops.concat_sparse([sparse_outs[j] for j in b.sparse_in], g.d_emb)
+        # dense branch
+        if b.dense_op == "fc":
+            yd = ops.fc(params[f"{p}/fc"], xd, b.dense_wbits, backend, cfg)
+        else:
+            dpp = {
+                "w_in": params[f"{p}/dp/w_in"],
+                "w_efc": params[f"{p}/dp/w_efc"],
+                "w_out": params[f"{p}/dp/w_out"],
+            }
+            yd = ops.dp(dpp, xd, xs, b.dense_dim, b.dense_wbits, backend, cfg)
+        # sparse branch
+        if b.sparse_op == "efc":
+            ys = ops.efc(params[f"{p}/efc"], xs, b.sparse_wbits, backend, cfg)
+        else:
+            ys = xs
+        # interaction
+        if b.interaction == "fm":
+            yd = yd + ops.fm(params[f"{p}/fm"], ys, b.inter_wbits, backend, cfg)
+        elif b.interaction == "dsi":
+            extra = ops.dsi(
+                params[f"{p}/dsi"], yd, DSI_FEATURES, g.d_emb,
+                b.inter_wbits, backend, cfg,
+            )
+            ys = jnp.concatenate([ys, extra], axis=1)
+        dense_outs.append(yd)
+        sparse_outs.append(ys)
+    logit = ops.linear(params["final"], dense_outs[-1], g.final_wbits, backend, cfg)
+    return logit[:, 0]
+
+
+def forward_from_ids(params: dict, g: Genome, dense, ids, backend: str = "train"):
+    """Training-path forward that includes the embedding gather."""
+    return forward(params, g, dense, embed(params, g, ids), backend)
+
+
+def predict_proba(params: dict, g: Genome, dense, sparse, backend: str = "pim"):
+    return jax.nn.sigmoid(forward(params, g, dense, sparse, backend))
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics
+# ---------------------------------------------------------------------------
+
+def bce_loss(logits, y):
+    """Numerically-stable binary cross entropy with logits."""
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def logloss(probs, y, eps: float = 1e-7):
+    p = np.clip(np.asarray(probs, dtype=np.float64), eps, 1 - eps)
+    y = np.asarray(y, dtype=np.float64)
+    return float(-np.mean(y * np.log(p) + (1 - y) * np.log(1 - p)))
+
+
+def auc(probs, y) -> float:
+    """Rank-based AUC (Mann–Whitney)."""
+    p = np.asarray(probs, dtype=np.float64)
+    y = np.asarray(y)
+    order = np.argsort(p, kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    # average ranks for ties
+    sorted_p = p[order]
+    i = 0
+    n = len(p)
+    while i < n:
+        j = i
+        while j + 1 < n and sorted_p[j + 1] == sorted_p[i]:
+            j += 1
+        ranks[order[i : j + 1]] = 0.5 * (i + j) + 1.0
+        i = j + 1
+    n_pos = float(y.sum())
+    n_neg = float(len(y) - n_pos)
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[y == 1].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))

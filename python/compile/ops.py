@@ -1,0 +1,157 @@
+"""L2 operator library: FC / EFC / DP / DSI / FM with mixed precision.
+
+Each operator has two execution backends:
+
+* ``train`` — pure jnp with straight-through-estimator fake
+  quantization. Differentiable; used by the build-time calibration
+  trainer (the paper's supernet/subnet training runs).
+* ``pim`` — the Pallas crossbar kernels from :mod:`compile.kernels`,
+  bit-exact with the hardware model. Not differentiable; used by
+  ``aot.py`` to lower the inference artifacts the rust runtime serves.
+
+Both backends share parameter shapes, so weights trained on the
+``train`` path drop straight into the ``pim`` path (that is the
+"program the searched weights into the crossbars" step).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import PimConfig, dp_triu, fm_interaction, pim_linear
+from .kernels.ref import fake_quant_ref, fm_ref, dp_triu_ref
+
+
+# ---------------------------------------------------------------------------
+# Fake quantization with straight-through gradients
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fake_quant(w, bits: int):
+    return fake_quant_ref(w, bits)
+
+
+def _fq_fwd(w, bits):
+    return fake_quant_ref(w, bits), None
+
+
+def _fq_bwd(_, g):
+    return (g, None)  # straight-through: d(quant)/dw ≈ 1
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def quantized(w, bits: int, backend: str):
+    """Weight view for the current backend. On the pim path the Pallas
+    kernel quantizes internally, so weights pass through unchanged."""
+    if backend == "train" and bits < 32:
+        return fake_quant(w, bits)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Operators. All take (params, inputs, wbits, backend, pim_cfg).
+# ---------------------------------------------------------------------------
+
+def linear(w, x, wbits: int, backend: str, cfg: PimConfig):
+    """x: [B, K] @ w: [K, N] → [B, N] (no activation)."""
+    if backend == "pim":
+        return pim_linear(x, w, cfg_with_bits(cfg, wbits))
+    return x @ quantized(w, wbits, backend)
+
+
+def fc(w, x, wbits: int, backend: str, cfg: PimConfig):
+    """FC layer: linear + ReLU (dense operator)."""
+    return jax.nn.relu(linear(w, x, wbits, backend, cfg))
+
+
+def efc(w, xs, wbits: int, backend: str, cfg: PimConfig):
+    """Embedded FC (sparse operator): project the feature-count axis.
+
+    xs: [B, N_in, d]; w: [N_in, N_out] → [B, N_out, d].
+    Mapped on crossbars as a matmul with the d axis batched (the sparse
+    output arrives naturally transposed — which the FM/DP engines exploit).
+    """
+    B, n_in, d = xs.shape
+    n_out = w.shape[1]
+    if backend == "pim":
+        flat = jnp.transpose(xs, (0, 2, 1)).reshape(B * d, n_in)
+        out = pim_linear(flat, w, cfg_with_bits(cfg, wbits))
+        out = out.reshape(B, d, n_out).transpose(0, 2, 1)
+    else:
+        out = jnp.einsum("bnd,nm->bmd", xs, quantized(w, wbits, backend))
+    return jax.nn.relu(out)
+
+
+def dp(params, xd, xs, dense_dim: int, wbits: int, backend: str, cfg: PimConfig):
+    """Dot-Product dense operator (paper §3.2, Fig. 4c).
+
+    Four sub-components: FC dim_d→d; EFC N→⌈√(2·dim_d)⌉; pairwise
+    inner products Triu(XXᵀ); FC to dense_dim.
+    params: dict with keys w_in [Din, d], w_efc [N, k], w_out [npairs, dense_dim].
+    """
+    B, n, d = xs.shape
+    a = linear(params["w_in"], xd, wbits, backend, cfg)  # [B, d]
+    bmat = efc(params["w_efc"], xs, wbits, backend, cfg)  # [B, k, d]
+    x = jnp.concatenate([a[:, None, :], bmat], axis=1)  # [B, k+1, d]
+    if backend == "pim":
+        t = dp_triu(x)
+    else:
+        t = dp_triu_ref(x)
+    return fc(params["w_out"], t, wbits, backend, cfg)
+
+
+def fm(w, xs, wbits: int, backend: str, cfg: PimConfig):
+    """Sparse-to-dense FM merger: interaction engine + FC projection.
+
+    xs: [B, N, d] → interaction [B, d] → FC → [B, out_dim].
+    """
+    if backend == "pim":
+        v = fm_interaction(xs)
+    else:
+        v = fm_ref(xs)
+    return fc(w, v, wbits, backend, cfg)
+
+
+def dsi(w, xd, n_feat: int, d: int, wbits: int, backend: str, cfg: PimConfig):
+    """Dense-to-Sparse merger: FC + reshape into `n_feat` sparse rows.
+
+    xd: [B, dim] → [B, n_feat, d].
+    """
+    u = linear(w, xd, wbits, backend, cfg)  # [B, n_feat*d]
+    return u.reshape(xd.shape[0], n_feat, d)
+
+
+def cfg_with_bits(cfg: PimConfig, wbits: int) -> PimConfig:
+    """PIM config specialized to one operator's searched weight bits."""
+    if cfg.w_bits == wbits:
+        return cfg
+    return PimConfig(
+        xbar=cfg.xbar,
+        dac_bits=cfg.dac_bits,
+        cell_bits=cfg.cell_bits,
+        adc_bits=cfg.adc_bits,
+        x_bits=cfg.x_bits,
+        w_bits=wbits,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sparse-tensor plumbing shared by the block graph
+# ---------------------------------------------------------------------------
+
+def concat_sparse(tensors, d: int):
+    """Concatenate sparse tensors along the feature-count axis; embedding
+    dims are equal by construction (d_emb is global per genome)."""
+    for t in tensors:
+        assert t.shape[-1] == d, f"sparse dim mismatch: {t.shape} vs d={d}"
+    return jnp.concatenate(tensors, axis=1)
+
+
+def dp_stack_rows(dense_dim: int) -> int:
+    """⌈√(2·dim_d)⌉ — the EFC projection height inside a DP operator."""
+    return int(math.ceil(math.sqrt(2.0 * dense_dim)))

@@ -1,0 +1,145 @@
+"""Deterministic PRNG mirroring ``rust/src/util/rng.rs`` bit-for-bit.
+
+The synthetic CTR datasets are a *pure function* of (profile, seed, index)
+so that the build-time python trainer and the run-time rust coordinator
+see identical data without shipping dataset files across the boundary.
+That only works if both sides run the same generator: splitmix64-seeded
+xoshiro256** with identical f64 / range / normal / zipf derivations.
+
+Any change here MUST be mirrored in rng.rs (and vice versa); the golden
+vectors in ``python/tests/test_prng.py`` and ``rng.rs::tests`` pin the
+contract.
+"""
+
+from __future__ import annotations
+
+import math
+
+_M64 = (1 << 64) - 1
+
+
+def splitmix64(state: int) -> tuple[int, int]:
+    """One splitmix64 step: returns (new_state, output)."""
+    state = (state + 0x9E3779B97F4A7C15) & _M64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+    return state, (z ^ (z >> 31)) & _M64
+
+
+def seed_from_name(root: int, name: str) -> int:
+    """FNV-1a of the name folded through splitmix64 (mirrors rng.rs)."""
+    h = 0xCBF29CE484222325
+    for b in name.encode("utf-8"):
+        h ^= b
+        h = (h * 0x100000001B3) & _M64
+    _, out = splitmix64(root ^ h)
+    return out
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & _M64
+
+
+class Rng:
+    """xoshiro256** (Blackman & Vigna), seeded through splitmix64."""
+
+    __slots__ = ("s",)
+
+    def __init__(self, seed: int):
+        s = []
+        st = seed & _M64
+        for _ in range(4):
+            st, v = splitmix64(st)
+            s.append(v)
+        self.s = s
+
+    def substream(self, name: str) -> "Rng":
+        return Rng(seed_from_name(self.s[0] ^ self.s[2], name))
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[1] * 5) & _M64, 7) * 9) & _M64
+        t = (s[1] << 17) & _M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def f32(self) -> float:
+        # Mirrors rng.rs: (u >> 40) as f32 / 2^24, computed in f32.
+        import struct
+
+        v = (self.next_u64() >> 40) * (1.0 / (1 << 24))
+        # round-trip through f32 to match rust's f32 arithmetic
+        return struct.unpack("f", struct.pack("f", v))[0]
+
+    def below(self, n: int) -> int:
+        """Lemire's unbiased bounded integer (mirrors rng.rs exactly)."""
+        assert n > 0
+        x = self.next_u64()
+        m = x * n
+        l = m & _M64
+        if l < n:
+            t = (-n) % n
+            while l < t:
+                x = self.next_u64()
+                m = x * n
+                l = m & _M64
+        return (m >> 64) & _M64
+
+    def range(self, lo: int, hi: int) -> int:
+        return lo + self.below(hi - lo + 1)
+
+    def chance(self, p: float) -> bool:
+        return self.f64() < p
+
+    def normal(self) -> float:
+        """Box–Muller, cos branch only (mirrors rng.rs)."""
+        while True:
+            u1 = self.f64()
+            if u1 > 1e-300:
+                break
+        u2 = self.f64()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+    def shuffle(self, xs: list) -> None:
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+
+class Zipf:
+    """Zipf(alpha) over [0, n) via CDF inversion (mirrors rng.rs)."""
+
+    __slots__ = ("cdf",)
+
+    def __init__(self, n: int, alpha: float):
+        assert n > 0
+        cdf = []
+        acc = 0.0
+        for k in range(1, n + 1):
+            acc += 1.0 / (k ** alpha)
+            cdf.append(acc)
+        total = cdf[-1]
+        self.cdf = [v / total for v in cdf]
+
+    def sample(self, rng: Rng) -> int:
+        u = rng.f64()
+        # binary search: first index with cdf[i] >= u (rust uses
+        # binary_search_by on partial_cmp; Err(i) is the insertion point,
+        # equality is practically unreachable for random u)
+        lo, hi = 0, len(self.cdf)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.cdf[mid] < u:
+                lo = mid + 1
+            else:
+                hi = mid
+        return min(lo, len(self.cdf) - 1)

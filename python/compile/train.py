@@ -1,0 +1,335 @@
+"""Build-time calibration trainer (the paper's supernet/search-phase
+training, adapted per DESIGN.md §1).
+
+Runs ONCE from `make artifacts`, never at serving time. Produces, under
+``artifacts/calibration/``:
+
+* ``accuracy.json`` — Table 2: LogLoss/AUC for every baseline and the
+  nasrec/autorac genomes on all three dataset profiles.
+* ``fig2.json``    — Figure 2: Criteo test LogLoss vs weight bit-width.
+* ``surrogate.json`` — ridge-fit coefficients mapping genome features →
+  test LogLoss; consumed by the rust search (`nas/accuracy.rs`).
+* ``runs.json``    — raw per-run records (the fit's training data).
+
+and, under ``artifacts/params/``, trained parameter .npz snapshots that
+``aot.py`` bakes into the inference HLO ("crossbar programming").
+
+Env knobs: AUTORAC_CALIB_STEPS (default 1000), AUTORAC_SURR_GENOMES (6),
+AUTORAC_SURR_STEPS (300), AUTORAC_CALIB_FAST=1 (CI preset).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import baselines as bl
+from . import model as M
+from .arch import Genome, autorac_best, nasrec_like, random_genome
+from .datagen import PROFILES, load_split
+from .prng import Rng
+
+FAST = os.environ.get("AUTORAC_CALIB_FAST") == "1"
+STEPS = int(os.environ.get("AUTORAC_CALIB_STEPS", 60 if FAST else 600))
+#: choice-block genomes are deeper than the flat baselines and converge
+#: slower; the paper retrains subnets from scratch to convergence, so
+#: genome runs get a doubled step budget.
+GENOME_STEPS = int(os.environ.get("AUTORAC_GENOME_STEPS", 2 * STEPS))
+SURR_GENOMES = int(os.environ.get("AUTORAC_SURR_GENOMES", 2 if FAST else 6))
+SURR_STEPS = int(os.environ.get("AUTORAC_SURR_STEPS", 40 if FAST else 300))
+BATCH = 256
+LR = 0.02
+
+
+# ---------------------------------------------------------------------------
+# Adagrad training loop (shared by genomes and baselines)
+# ---------------------------------------------------------------------------
+
+def _adagrad_update(params, accum, grads, lr):
+    new_p, new_a = {}, {}
+    for k in params:
+        g = grads[k]
+        a = accum[k] + g * g
+        new_p[k] = params[k] - lr * g / (jnp.sqrt(a) + 1e-8)
+        new_a[k] = a
+    return new_p, new_a
+
+
+def train_model(loss_fn, params, dense, ids, y, steps, batch, seed, lr=LR):
+    """Generic Adagrad trainer with global-norm gradient clipping.
+
+    CTR practice: roughly single-pass training (the paper's protocol
+    trains subnets briefly too); callers size `steps` to ~1–2 epochs.
+    """
+    accum = {k: jnp.full_like(v, 0.1) for k, v in params.items()}
+
+    @jax.jit
+    def step(params, accum, d, i, yy):
+        loss, grads = jax.value_and_grad(loss_fn)(params, d, i, yy)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+        clip = jnp.minimum(1.0, 1.0 / (gnorm + 1e-12))
+        grads = {k: g * clip for k, g in grads.items()}
+        params, accum = _adagrad_update(params, accum, grads, lr)
+        return params, accum, loss
+
+    n = len(y)
+    rng = np.random.default_rng(seed)
+    losses = []
+    idx = rng.permutation(n)
+    pos = 0
+    for s in range(steps):
+        if pos + batch > n:
+            idx = rng.permutation(n)
+            pos = 0
+        sel = idx[pos : pos + batch]
+        pos += batch
+        params, accum, loss = step(
+            params, accum, jnp.array(dense[sel]), jnp.array(ids[sel]), jnp.array(y[sel])
+        )
+        losses.append(float(loss))
+    return params, losses
+
+
+def evaluate(forward, params, dense, ids, y, batch=2048):
+    """Test-set LogLoss + AUC."""
+    probs = []
+    for i in range(0, len(y), batch):
+        logits = forward(params, jnp.array(dense[i : i + batch]), jnp.array(ids[i : i + batch]))
+        probs.append(np.asarray(jax.nn.sigmoid(logits)))
+    probs = np.concatenate(probs)
+    return M.logloss(probs, y), M.auc(probs, y)
+
+
+# ---------------------------------------------------------------------------
+# Run wrappers
+# ---------------------------------------------------------------------------
+
+def run_genome(g: Genome, data, steps=GENOME_STEPS, seed=0, wbits_override=None):
+    """Train + eval one genome; returns (record dict, trained params).
+
+    wbits_override drives the Figure-2 sweep: EVERY weight tensor —
+    operator weights AND embedding tables — is fake-quantized to the
+    given bit-width ("test LogLoss versus weight bit-width").
+    """
+    if wbits_override is not None:
+        for b in g.blocks:
+            b.dense_wbits = b.sparse_wbits = b.inter_wbits = wbits_override
+        g.final_wbits = wbits_override if wbits_override in (4, 8) else 8
+        if wbits_override not in (4, 8):
+            # out-of-space sweep point (Figure 2): bypass validate()
+            g.final_wbits = 8
+        g.emb_bits = wbits_override  # python-side attr read by model.embed
+    dense_tr, ids_tr, y_tr = data["train"]
+    dense_te, ids_te, y_te = data["test"]
+
+    def loss_fn(params, d, i, yy):
+        logits = M.forward_from_ids(params, g, d, i, backend="train")
+        return M.bce_loss(logits, yy)
+
+    params = M.init_params(g, jax.random.PRNGKey(seed))
+    t0 = time.time()
+    params, losses = train_model(loss_fn, params, dense_tr, ids_tr, y_tr, steps, BATCH, seed)
+
+    fw = jax.jit(lambda p, d, i: M.forward_from_ids(p, g, d, i, backend="train"))
+    ll, auc_ = evaluate(fw, params, dense_te, ids_te, y_te)
+    rec = {
+        "kind": "genome",
+        "name": g.name,
+        "dataset": g.dataset,
+        "genome": g.to_json(),
+        "features": genome_features(g),
+        "logloss": ll,
+        "auc": auc_,
+        "params": M.param_count(params),
+        "steps": steps,
+        "train_seconds": time.time() - t0,
+        "final_train_loss": float(np.mean(losses[-20:])),
+    }
+    return rec, params
+
+
+def run_baseline(name: str, dataset: str, data, steps=STEPS, seed=0):
+    init, forward = bl.BASELINES[name]
+    dense_tr, ids_tr, y_tr = data["train"]
+    dense_te, ids_te, y_te = data["test"]
+
+    def loss_fn(params, d, i, yy):
+        return M.bce_loss(forward(params, dataset, d, i), yy)
+
+    params = init(jax.random.PRNGKey(seed), dataset)
+    t0 = time.time()
+    params, _ = train_model(loss_fn, params, dense_tr, ids_tr, y_tr, steps, BATCH, seed)
+    fw = jax.jit(lambda p, d, i: forward(p, dataset, d, i))
+    ll, auc_ = evaluate(fw, params, dense_te, ids_te, y_te)
+    return {
+        "kind": "baseline",
+        "name": name,
+        "dataset": dataset,
+        "logloss": ll,
+        "auc": auc_,
+        "steps": steps,
+        "train_seconds": time.time() - t0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Surrogate featurization (MUST mirror rust/src/nas/accuracy.rs)
+# ---------------------------------------------------------------------------
+
+def genome_features(g: Genome) -> list:
+    """Fixed-order feature vector for the accuracy surrogate."""
+    n = len(g.blocks)
+    n_dp = sum(b.dense_op == "dp" for b in g.blocks)
+    n_fm = sum(b.interaction == "fm" for b in g.blocks)
+    n_dsi = sum(b.interaction == "dsi" for b in g.blocks)
+    n_efc = sum(b.sparse_op == "efc" for b in g.blocks)
+    fc4 = sum(b.dense_wbits == 4 for b in g.blocks) / n
+    efc4 = sum(b.sparse_wbits == 4 for b in g.blocks) / n
+    int4 = sum(b.inter_wbits == 4 for b in g.blocks) / n
+    mean_dim = sum(b.dense_dim for b in g.blocks) / n
+    shapes = M.infer_shapes(g)
+    log_params = float(np.log10(1 + sum(s["din"] * s["dout"] for s in shapes)))
+    return [
+        1.0,
+        log_params,
+        n_dp / n,
+        n_fm / n,
+        n_dsi / n,
+        n_efc / n,
+        fc4,
+        efc4,
+        int4,
+        g.d_emb / 64.0,
+        mean_dim / 512.0,
+    ]
+
+
+FEATURE_NAMES = [
+    "bias", "log10_params", "frac_dp", "frac_fm", "frac_dsi", "frac_efc",
+    "frac_fc_4bit", "frac_efc_4bit", "frac_inter_4bit", "d_emb_64",
+    "mean_dense_dim_512",
+]
+
+
+def fit_surrogate(runs: list) -> dict:
+    """Ridge regression (shared slopes, per-dataset intercept shift)."""
+    datasets = sorted({r["dataset"] for r in runs})
+    rows, ys = [], []
+    for r in runs:
+        f = list(r["features"])
+        for ds in datasets:  # one-hot dataset intercepts (replace bias)
+            f.append(1.0 if r["dataset"] == ds else 0.0)
+        rows.append(f)
+        ys.append(r["logloss"])
+    x = np.array(rows)
+    y = np.array(ys)
+    lam = 1e-2
+    a = x.T @ x + lam * np.eye(x.shape[1])
+    w = np.linalg.solve(a, x.T @ y)
+    pred = x @ w
+    # Trust region: the search must not extrapolate the linear fit
+    # outside the cloud of measured runs (features AND predictions are
+    # clipped to these boxes on the rust side — nas/accuracy.rs).
+    n_feat = len(FEATURE_NAMES)
+    return {
+        "feature_names": FEATURE_NAMES + [f"ds_{d}" for d in datasets],
+        "weights": w.tolist(),
+        "datasets": datasets,
+        "rmse": float(np.sqrt(np.mean((pred - y) ** 2))),
+        "n_runs": len(runs),
+        "feature_min": x[:, :n_feat].min(axis=0).tolist(),
+        "feature_max": x[:, :n_feat].max(axis=0).tolist(),
+        "logloss_min": {
+            d: float(min(r["logloss"] for r in runs if r["dataset"] == d))
+            for d in datasets
+        },
+        "logloss_max": {
+            d: float(max(r["logloss"] for r in runs if r["dataset"] == d))
+            for d in datasets
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Main calibration pass
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts/calibration")
+    ap.add_argument("--datasets", default="criteo,avazu,kdd")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    params_dir = os.path.join(args.out_dir, "..", "params")
+    os.makedirs(params_dir, exist_ok=True)
+
+    datasets = args.datasets.split(",")
+    accuracy = {}
+    genome_runs = []
+
+    for ds in datasets:
+        print(f"=== {ds}: loading splits ===", flush=True)
+        data = {split: load_split(ds, split) for split in ("train", "test")}
+        accuracy[ds] = {}
+
+        for name in bl.BASELINES:
+            rec = run_baseline(name, ds, data)
+            accuracy[ds][name] = {"logloss": rec["logloss"], "auc": rec["auc"]}
+            print(f"  {name:10s} logloss={rec['logloss']:.4f} auc={rec['auc']:.4f} "
+                  f"({rec['train_seconds']:.0f}s)", flush=True)
+
+        for maker in (nasrec_like, autorac_best):
+            g = maker(ds)
+            rec, params = run_genome(g, data)
+            genome_runs.append(rec)
+            key = "nasrec" if "nasrec" in g.name else "autorac"
+            accuracy[ds][key] = {"logloss": rec["logloss"], "auc": rec["auc"]}
+            print(f"  {key:10s} logloss={rec['logloss']:.4f} auc={rec['auc']:.4f}",
+                  flush=True)
+            np.savez(
+                os.path.join(params_dir, f"{key}_{ds}.npz"),
+                **{k: np.asarray(v) for k, v in params.items()},
+            )
+
+        # Random genomes → surrogate training data.
+        rng = Rng(1234)
+        for gi in range(SURR_GENOMES):
+            g = random_genome(rng.substream(f"surr/{ds}/{gi}"), ds, f"rand{gi}-{ds}")
+            rec, _ = run_genome(g, data, steps=SURR_STEPS, seed=gi + 1)
+            genome_runs.append(rec)
+            print(f"  rand{gi:02d}     logloss={rec['logloss']:.4f}", flush=True)
+
+    # Figure 2: Criteo LogLoss vs weight bit-width.
+    fig2 = {}
+    if "criteo" in datasets:
+        data = {split: load_split("criteo", split) for split in ("train", "test")}
+        for bits in (32, 16, 8, 6, 4, 3, 2):
+            g = autorac_best("criteo")
+            g.name = f"fig2-b{bits}"
+            rec, _ = run_genome(g, data, wbits_override=bits if bits < 32 else None)
+            fig2[str(bits)] = rec["logloss"]
+            print(f"  fig2 bits={bits:2d} logloss={rec['logloss']:.4f}", flush=True)
+
+    surrogate = fit_surrogate(genome_runs)
+
+    def dump(name, obj):
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            json.dump(obj, f, indent=2)
+
+    dump("accuracy.json", accuracy)
+    dump("fig2.json", fig2)
+    dump("surrogate.json", surrogate)
+    dump("runs.json", genome_runs)
+    print(f"calibration complete → {args.out_dir} "
+          f"(surrogate rmse {surrogate['rmse']:.4f} over {surrogate['n_runs']} runs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""ATNS container round-trip (writer here, rust reader in runtime/atns.rs)."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import atns
+
+
+def test_roundtrip_mixed_dtypes():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.bin")
+        tensors = {
+            "emb/0": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "ids": np.array([[1, 2], [3, 4]], dtype=np.int32),
+            "big": np.arange(10, dtype=np.int64),
+        }
+        atns.write(path, tensors)
+        out = atns.read(path)
+        assert list(out.keys()) == list(tensors.keys())
+        for k in tensors:
+            np.testing.assert_array_equal(out[k], tensors[k])
+            assert out[k].dtype == tensors[k].dtype
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    shape=st.lists(st.integers(1, 8), min_size=1, max_size=4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_roundtrip_random_f32(shape, seed):
+    arr = np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.bin")
+        atns.write(path, {"t": arr})
+        np.testing.assert_array_equal(atns.read(path)["t"], arr)
+
+
+def test_unsupported_dtype_raises():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(TypeError):
+            atns.write(os.path.join(d, "x.bin"), {"b": np.zeros(2, np.float64)})

@@ -1,0 +1,213 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Integer crossbar paths must match EXACTLY; float engines (FM/DP) to
+tolerance. hypothesis sweeps shapes and the full ReRAM design space of
+Table 1 (crossbar 16/32/64 × DAC 1/2 × cell 1/2 × ADC 4/6/8 × W 4/8).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    PimConfig,
+    dp_gram,
+    dp_triu,
+    fm_interaction,
+    pim_linear,
+    pim_mvm_int,
+)
+from compile.kernels.ref import (
+    adc_transfer,
+    dp_gram_ref,
+    dp_triu_ref,
+    fake_quant_ref,
+    fm_ref,
+    pim_linear_ref,
+    pim_mvm_int_ref,
+    quant_act_u8,
+    quant_sym,
+)
+
+# Keep hypothesis example counts modest: each example compiles a Pallas
+# interpreter invocation (~100 ms).
+FAST = settings(max_examples=12, deadline=None)
+
+cfg_strategy = st.builds(
+    PimConfig,
+    xbar=st.sampled_from([16, 32, 64]),
+    dac_bits=st.sampled_from([1, 2]),
+    cell_bits=st.sampled_from([1, 2]),
+    adc_bits=st.sampled_from([4, 6, 8]),
+    x_bits=st.just(8),
+    w_bits=st.sampled_from([4, 8]),
+)
+
+
+@FAST
+@given(
+    cfg=cfg_strategy,
+    b=st.integers(1, 5),
+    k=st.integers(1, 96),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pim_mvm_int_matches_ref_exactly(cfg, b, k, n, seed):
+    rng = np.random.default_rng(seed)
+    k_pad = -(-k // cfg.xbar) * cfg.xbar
+    x_u = rng.integers(0, 1 << cfg.x_bits, size=(b, k_pad)).astype(np.int32)
+    wmax = (1 << (cfg.w_bits - 1)) - 1
+    wq = rng.integers(-wmax, wmax + 1, size=(k_pad, n)).astype(np.int32)
+    wp, wn = np.maximum(wq, 0), np.maximum(-wq, 0)
+    got = pim_mvm_int(jnp.array(x_u), jnp.array(wp), jnp.array(wn), cfg)
+    want = pim_mvm_int_ref(jnp.array(x_u), jnp.array(wp), jnp.array(wn), cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@FAST
+@given(
+    cfg=cfg_strategy,
+    b=st.integers(1, 4),
+    k=st.integers(2, 70),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pim_linear_matches_ref(cfg, b, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    got = pim_linear(jnp.array(x), jnp.array(w), cfg)
+    want = pim_linear_ref(jnp.array(x), jnp.array(w), cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("xbar", [16, 32, 64])
+@pytest.mark.parametrize("dac,cell", [(1, 1), (1, 2), (2, 1), (2, 2)])
+def test_feasible_configs_are_lossless_vs_int_matmul(xbar, dac, cell):
+    """The paper's ADC feasibility rule: feasible ⇒ bit-exact integer MVM."""
+    cfg = PimConfig(xbar=xbar, dac_bits=dac, cell_bits=cell, adc_bits=8, w_bits=8)
+    if not cfg.feasible():
+        pytest.skip("infeasible combo (excluded by the paper's rule)")
+    rng = np.random.default_rng(xbar * 10 + dac * 2 + cell)
+    x_u = rng.integers(0, 256, size=(3, 2 * xbar)).astype(np.int32)
+    wq = rng.integers(-127, 128, size=(2 * xbar, 8)).astype(np.int32)
+    wp, wn = np.maximum(wq, 0), np.maximum(-wq, 0)
+    got = np.asarray(pim_mvm_int(jnp.array(x_u), jnp.array(wp), jnp.array(wn), cfg))
+    np.testing.assert_array_equal(got, x_u @ wq)
+
+
+def test_infeasible_config_is_lossy():
+    """Sanity check of the exclusion rule: step>1 ADC loses information."""
+    cfg = PimConfig(xbar=64, dac_bits=2, cell_bits=2, adc_bits=8, w_bits=8)
+    assert not cfg.feasible()
+    rng = np.random.default_rng(0)
+    x_u = rng.integers(0, 256, size=(4, 64)).astype(np.int32)
+    wq = rng.integers(-127, 128, size=(64, 8)).astype(np.int32)
+    wp, wn = np.maximum(wq, 0), np.maximum(-wq, 0)
+    got = np.asarray(pim_mvm_int(jnp.array(x_u), jnp.array(wp), jnp.array(wn), cfg))
+    assert np.any(got != x_u @ wq)
+
+
+def test_pim_linear_close_to_fp_matmul_for_8bit():
+    """8-bit feasible config ≈ fp32 matmul within quantization error."""
+    cfg = PimConfig(xbar=64, dac_bits=1, cell_bits=2, adc_bits=8, w_bits=8)
+    assert cfg.feasible()
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(8, 128)).astype(np.float32)
+    w = rng.normal(size=(128, 32)).astype(np.float32)
+    got = np.asarray(pim_linear(jnp.array(x), jnp.array(w), cfg))
+    ref = x @ w
+    rel = np.abs(got - ref).max() / np.abs(ref).max()
+    assert rel < 0.02, f"relative error {rel}"
+
+
+@FAST
+@given(
+    b=st.integers(1, 4),
+    n=st.integers(1, 12),
+    d=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fm_matches_ref(b, n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, n, d)).astype(np.float32)
+    got = fm_interaction(jnp.array(x))
+    want = fm_ref(jnp.array(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_fm_counts_each_pair_once():
+    """FM output equals the explicit Σ_{i<j} x_i ⊙ x_j."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(2, 5, 7)).astype(np.float32)
+    explicit = np.zeros((2, 7), dtype=np.float64)
+    for i in range(5):
+        for j in range(i + 1, 5):
+            explicit += x[:, i, :] * x[:, j, :]
+    got = np.asarray(fm_interaction(jnp.array(x)))
+    np.testing.assert_allclose(got, explicit, rtol=1e-4, atol=1e-4)
+
+
+@FAST
+@given(
+    b=st.integers(1, 3),
+    m=st.integers(2, 10),
+    d=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dp_matches_ref(b, m, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, m, d)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(dp_gram(jnp.array(x))),
+        np.asarray(dp_gram_ref(jnp.array(x))),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+    got = np.asarray(dp_triu(jnp.array(x)))
+    want = np.asarray(dp_triu_ref(jnp.array(x)))
+    assert got.shape == (b, m * (m - 1) // 2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_dp_triu_is_strict_upper_triangle_row_major():
+    x = np.eye(3, dtype=np.float32)[None]  # [1, 3, 3]; rows orthonormal
+    got = np.asarray(dp_triu(jnp.array(x)))
+    np.testing.assert_allclose(got, np.zeros((1, 3)), atol=1e-6)
+    x2 = np.ones((1, 3, 2), dtype=np.float32)
+    got2 = np.asarray(dp_triu(jnp.array(x2)))
+    np.testing.assert_allclose(got2, np.full((1, 3), 2.0), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Quantization periphery unit tests
+# ---------------------------------------------------------------------------
+
+def test_quant_sym_range_and_roundtrip():
+    w = jnp.array([[-1.0, 0.5, 1.0]])
+    wq, s = quant_sym(w, 8)
+    assert int(jnp.max(jnp.abs(wq))) <= 127
+    np.testing.assert_allclose(np.asarray(wq) * float(s), np.asarray(w), atol=float(s))
+
+
+def test_quant_act_offset_binary():
+    x = jnp.array([[-2.0, 0.0, 2.0]])
+    xu, s, off = quant_act_u8(x, 8)
+    assert off == 128
+    got = np.asarray(xu)
+    assert got.min() >= 0 and got.max() <= 255
+    assert got[0, 1] == 128  # zero maps to the offset
+
+
+def test_adc_transfer_identity_when_step_is_one():
+    cfg = PimConfig(xbar=16, dac_bits=1, cell_bits=1, adc_bits=8)
+    v = jnp.arange(0, 17)
+    np.testing.assert_array_equal(np.asarray(adc_transfer(v, cfg)), np.arange(0, 17))
+
+
+def test_fake_quant_grid():
+    w = jnp.array([0.0, 0.1, -1.0, 1.0])
+    q4 = np.asarray(fake_quant_ref(w, 4))
+    grid = 1.0 / 7
+    np.testing.assert_allclose(q4 / grid, np.round(q4 / grid), atol=1e-6)

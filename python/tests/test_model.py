@@ -1,0 +1,118 @@
+"""L2 model tests: shapes, both backends, genomes, baselines, metrics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.arch import (
+    Genome,
+    autorac_best,
+    design_space_size,
+    nasrec_like,
+    random_genome,
+)
+from compile.baselines import BASELINES
+from compile.prng import Rng
+
+
+def _inputs(g, batch=3, seed=0):
+    from compile.datagen import PROFILES
+
+    prof = PROFILES[g.dataset]
+    rng = np.random.default_rng(seed)
+    dense = rng.normal(size=(batch, max(prof.n_dense, 1))).astype(np.float32)
+    ids = np.stack(
+        [rng.integers(0, c, size=batch) for c in prof.cards], axis=1
+    ).astype(np.int32)
+    return jnp.array(dense), jnp.array(ids)
+
+
+def test_reference_genomes_validate_and_roundtrip():
+    for ds in ("criteo", "avazu", "kdd"):
+        for maker in (autorac_best, nasrec_like):
+            g = maker(ds)
+            g.validate()
+            g2 = Genome.from_json(g.to_json())
+            assert g2.to_json() == g.to_json()
+
+
+def test_forward_shapes_all_datasets():
+    for ds in ("criteo", "avazu", "kdd"):
+        g = autorac_best(ds)
+        params = M.init_params(g, jax.random.PRNGKey(0))
+        dense, ids = _inputs(g)
+        logits = M.forward_from_ids(params, g, dense, ids)
+        assert logits.shape == (3,)
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_train_and_pim_backends_agree_within_quantization():
+    g = autorac_best("criteo")
+    params = M.init_params(g, jax.random.PRNGKey(1))
+    dense, ids = _inputs(g, batch=4, seed=1)
+    sparse = M.embed(params, g, ids)
+    mlp = {k: v for k, v in params.items() if not k.startswith("emb/")}
+    lt = np.asarray(M.forward(mlp, g, dense, sparse, backend="train"))
+    lp = np.asarray(M.forward(mlp, g, dense, sparse, backend="pim"))
+    # 8/4-bit quantization noise at init scale stays small
+    assert np.max(np.abs(lt - lp)) < 0.05, f"{lt} vs {lp}"
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_genomes_forward(seed):
+    rng = Rng(seed)
+    g = random_genome(rng, "kdd", f"r{seed}")
+    params = M.init_params(g, jax.random.PRNGKey(0))
+    dense, ids = _inputs(g, batch=2, seed=seed % 100)
+    logits = M.forward_from_ids(params, g, dense, ids)
+    assert logits.shape == (2,)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_gradients_flow_through_every_operator_kind():
+    g = autorac_best("criteo")  # contains FC, DP, EFC, FM, DSI
+    params = M.init_params(g, jax.random.PRNGKey(2))
+    dense, ids = _inputs(g, batch=4, seed=2)
+    y = jnp.array([1.0, 0.0, 1.0, 0.0])
+
+    def loss(p):
+        return M.bce_loss(M.forward_from_ids(p, g, dense, ids), y)
+
+    grads = jax.grad(loss)(params)
+    nonzero = sum(
+        1 for v in grads.values() if float(jnp.max(jnp.abs(v))) > 0
+    )
+    assert nonzero > len(grads) * 0.7, f"only {nonzero}/{len(grads)} grads flow"
+
+
+def test_baselines_forward_all_datasets():
+    for name, (init, forward) in BASELINES.items():
+        for ds in ("criteo", "avazu"):
+            params = init(jax.random.PRNGKey(0), ds)
+            g = autorac_best(ds)  # reuse input builder
+            dense, ids = _inputs(g, batch=2)
+            logits = forward(params, ds, dense, ids)
+            assert logits.shape == (2,), f"{name}/{ds}"
+            assert np.all(np.isfinite(np.asarray(logits))), f"{name}/{ds}"
+
+
+def test_auc_and_logloss():
+    assert abs(M.auc(np.array([0.1, 0.9]), np.array([0, 1])) - 1.0) < 1e-12
+    assert abs(M.auc(np.array([0.5, 0.5]), np.array([0, 1])) - 0.5) < 1e-12
+    ll = M.logloss(np.array([0.8, 0.2]), np.array([1, 0]))
+    assert abs(ll + np.log(0.8)) < 1e-9
+
+
+def test_design_space_is_astronomical():
+    assert design_space_size() > 1e40
+
+
+def test_infer_shapes_tracks_dsi_extension():
+    g = autorac_best("criteo")
+    sh = M.infer_shapes(g)
+    # block 4 has DSI → +2 sparse features
+    assert sh[4]["nout"] == g.blocks[4].sparse_features + 2

@@ -1,0 +1,93 @@
+"""Cross-language PRNG contract tests.
+
+The golden vectors here are the SAME values pinned in
+``rust/src/util/rng.rs::tests::golden_xoshiro_stream`` — if either side
+drifts, dataset parity between the build-time trainer and the run-time
+coordinator is broken.
+"""
+
+import math
+
+from compile.prng import Rng, Zipf, seed_from_name, splitmix64
+
+
+def test_golden_xoshiro_stream_matches_rust():
+    r = Rng(42)
+    got = [r.next_u64() for _ in range(4)]
+    assert got == [
+        1546998764402558742,
+        6990951692964543102,
+        12544586762248559009,
+        17057574109182124193,
+    ]
+
+
+def test_splitmix_step():
+    st, v = splitmix64(0)
+    assert st == 0x9E3779B97F4A7C15
+    assert v < (1 << 64)
+
+
+def test_f64_unit_interval():
+    r = Rng(7)
+    for _ in range(2000):
+        x = r.f64()
+        assert 0.0 <= x < 1.0
+
+
+def test_below_range_and_rough_uniformity():
+    r = Rng(123)
+    counts = [0] * 10
+    for _ in range(20000):
+        counts[r.below(10)] += 1
+    for c in counts:
+        assert 1700 < c < 2300
+
+
+def test_normal_moments():
+    r = Rng(99)
+    n = 20000
+    xs = [r.normal() for _ in range(n)]
+    mean = sum(xs) / n
+    var = sum(x * x for x in xs) / n - mean * mean
+    assert abs(mean) < 0.05
+    assert abs(var - 1.0) < 0.1
+
+
+def test_substream_stability_and_independence():
+    root = Rng(5)
+    a1 = root.substream("alpha")
+    a2 = root.substream("alpha")
+    b = root.substream("beta")
+    va1 = [a1.next_u64() for _ in range(8)]
+    va2 = [a2.next_u64() for _ in range(8)]
+    vb = [b.next_u64() for _ in range(8)]
+    assert va1 == va2
+    assert va1 != vb
+
+
+def test_seed_from_name_is_stable():
+    assert seed_from_name(1, "x") == seed_from_name(1, "x")
+    assert seed_from_name(1, "x") != seed_from_name(2, "x")
+    assert seed_from_name(1, "x") != seed_from_name(1, "y")
+
+
+def test_zipf_skew():
+    z = Zipf(1000, 1.1)
+    r = Rng(1)
+    head = sum(1 for _ in range(10000) if z.sample(r) < 10)
+    assert head / 10000 > 0.3
+
+
+def test_zipf_matches_manual_cdf_inversion():
+    z = Zipf(50, 1.0)
+    r1 = Rng(77)
+    r2 = Rng(77)
+    for _ in range(500):
+        u = r1.f64()
+        k = z.sample(r2)
+        # k is the first index with cdf[k] >= u
+        assert z.cdf[k] >= u
+        if k > 0:
+            assert z.cdf[k - 1] < u
+        assert not math.isnan(z.cdf[k])

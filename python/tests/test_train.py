@@ -1,0 +1,72 @@
+"""Calibration-trainer machinery tests (fast: tiny data, few steps)."""
+
+import numpy as np
+import jax
+
+from compile import model as M
+from compile.arch import autorac_best
+from compile.train import (
+    FEATURE_NAMES,
+    fit_surrogate,
+    genome_features,
+    train_model,
+)
+
+
+def _tiny_data(n=600, seed=0):
+    from compile.datagen import Generator
+
+    gen = Generator("kdd")
+    dense, ids, y = gen.block(0, n)
+    return dense, ids, y
+
+
+def test_training_reduces_loss():
+    g = autorac_best("kdd")
+    dense, ids, y = _tiny_data()
+
+    def loss_fn(p, d, i, yy):
+        return M.bce_loss(M.forward_from_ids(p, g, d, i), yy)
+
+    params = M.init_params(g, jax.random.PRNGKey(0))
+    _, losses = train_model(loss_fn, params, dense, ids, y, steps=30, batch=128, seed=0)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) + 1e-6
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_gradient_clipping_prevents_blowup():
+    g = autorac_best("kdd")
+    dense, ids, y = _tiny_data()
+
+    def loss_fn(p, d, i, yy):
+        return M.bce_loss(M.forward_from_ids(p, g, d, i), yy)
+
+    params = M.init_params(g, jax.random.PRNGKey(1))
+    _, losses = train_model(
+        loss_fn, params, dense, ids, y, steps=20, batch=128, seed=1, lr=0.1
+    )
+    assert max(losses) < 5.0, f"loss spiked: {max(losses)}"
+
+
+def test_genome_features_are_fixed_length_and_match_rust_names():
+    f = genome_features(autorac_best("criteo"))
+    assert len(f) == len(FEATURE_NAMES) == 11
+    assert f[0] == 1.0
+    assert all(np.isfinite(v) for v in f)
+
+
+def test_fit_surrogate_recovers_planted_linear_model():
+    rng = np.random.default_rng(0)
+    runs = []
+    true_w = rng.normal(size=11) * 0.01
+    for i in range(60):
+        feats = [1.0] + list(rng.uniform(0, 1, size=10))
+        ll = float(np.dot(true_w, feats)) + 0.45
+        runs.append({
+            "dataset": "criteo",
+            "features": feats,
+            "logloss": ll,
+        })
+    fit = fit_surrogate(runs)
+    assert fit["rmse"] < 0.01, fit["rmse"]
+    assert len(fit["weights"]) == 11 + 1  # features + one dataset intercept

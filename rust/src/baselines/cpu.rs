@@ -1,0 +1,124 @@
+//! CPU baseline — roofline cost model of recommender inference on a
+//! Xeon-class server (the paper's reference is an Intel Xeon Gold 6254:
+//! 18 cores, 3.1 GHz, AVX-512, 6-channel DDR4-2933).
+//!
+//! Recommender inference at small batch is memory-bound twice over:
+//! embedding gathers are random DRAM reads (no locality by design —
+//! that's what zipf-striped tables look like after hashing), and GEMV
+//! weights stream from DRAM with no reuse. The roofline therefore takes
+//! `max(compute, weight-stream, gather)` per inference plus a fixed
+//! software overhead — the structure that produces the paper's ~20×
+//! PIM-vs-CPU gap.
+
+use super::workload::WorkloadStats;
+use crate::sim::SimReport;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CpuModel {
+    /// peak fused MAC throughput (GMAC/s) across cores
+    pub peak_gmacs: f64,
+    /// streaming DRAM bandwidth (GB/s)
+    pub stream_gbs: f64,
+    /// effective random-access bandwidth for gathers (GB/s)
+    pub random_gbs: f64,
+    /// per-gather latency when latency-bound (ns)
+    pub gather_ns: f64,
+    /// gathers the memory system keeps in flight
+    pub gather_mlp: f64,
+    /// software + framework overhead per inference (ns)
+    pub sw_overhead_ns: f64,
+    /// active package power (W)
+    pub power_w: f64,
+    /// die area (mm²) — informational (Table 3 has no CPU area row)
+    pub area_mm2: f64,
+}
+
+impl Default for CpuModel {
+    fn default() -> Self {
+        CpuModel {
+            peak_gmacs: 900.0,   // 18c × 3.1GHz × 16 f32 MAC/clk ≈ 893
+            stream_gbs: 110.0,   // 6 × DDR4-2933
+            random_gbs: 10.0,    // ~64B lines at random-access efficiency
+            gather_ns: 75.0,
+            gather_mlp: 10.0,
+            // framework/dispatch overhead of batch-1 online inference
+            // (PyTorch-style serving stacks measure in the µs–ms range)
+            sw_overhead_ns: 8000.0,
+            power_w: 105.0,      // sustained package power under load
+            area_mm2: 485.0,
+        }
+    }
+}
+
+impl CpuModel {
+    /// Per-inference latency (ns) for batch size 1.
+    pub fn latency_ns(&self, w: &WorkloadStats) -> f64 {
+        let compute = w.macs / self.peak_gmacs; // GMAC/s ⇒ ns
+        let weights = w.weight_bytes / self.stream_gbs;
+        let gather_bw = (w.gathers * w.row_bytes) as f64 / self.random_gbs;
+        let gather_lat = w.gathers as f64 * self.gather_ns / self.gather_mlp;
+        compute.max(weights) + gather_bw.max(gather_lat) + self.sw_overhead_ns
+    }
+
+    /// Batched throughput: weights amortize across the batch, gathers do
+    /// not. Returns inferences / second at the given batch size.
+    pub fn throughput_rps(&self, w: &WorkloadStats, batch: usize) -> f64 {
+        let b = batch as f64;
+        let compute = w.macs * b / self.peak_gmacs;
+        let weights = w.weight_bytes / self.stream_gbs; // one stream per batch
+        let gathers = (w.gathers * w.row_bytes) as f64 * b / self.random_gbs;
+        let total_ns = compute.max(weights) + gathers + self.sw_overhead_ns;
+        b / (total_ns / 1e9)
+    }
+
+    pub fn report(&self, w: &WorkloadStats, batch: usize) -> SimReport {
+        let throughput = self.throughput_rps(w, batch);
+        let latency = self.latency_ns(w);
+        SimReport {
+            design: "cpu-xeon6254".to_string(),
+            n_requests: batch,
+            latency_ns_mean: latency,
+            latency_ns_p99: latency * 1.4,
+            throughput_rps: throughput,
+            energy_pj_per_inf: self.power_w * 1e12 / throughput.max(1e-9),
+            power_mw: self.power_w * 1e3,
+            area_mm2: self.area_mm2,
+            mem_area_mm2: 0.0,
+            inf_per_s_per_w: throughput / self.power_w,
+            makespan_ns: batch as f64 / throughput * 1e9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::workload::genome_stats;
+    use crate::nas::genome::autorac_best;
+
+    #[test]
+    fn cpu_is_memory_bound_at_batch_one() {
+        let cpu = CpuModel::default();
+        let w = genome_stats(&autorac_best("criteo")).unwrap();
+        let compute_ns = w.macs / cpu.peak_gmacs;
+        assert!(cpu.latency_ns(&w) > 2.0 * compute_ns);
+    }
+
+    #[test]
+    fn batching_amortizes_weight_streams() {
+        let cpu = CpuModel::default();
+        let w = genome_stats(&autorac_best("criteo")).unwrap();
+        let t1 = cpu.throughput_rps(&w, 1);
+        let t64 = cpu.throughput_rps(&w, 64);
+        assert!(t64 > 3.0 * t1, "t1={t1} t64={t64}");
+    }
+
+    #[test]
+    fn report_is_consistent() {
+        let cpu = CpuModel::default();
+        let w = genome_stats(&autorac_best("criteo")).unwrap();
+        let r = cpu.report(&w, 32);
+        assert!(r.throughput_rps > 0.0);
+        assert!((r.inf_per_s_per_w - r.throughput_rps / cpu.power_w).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,12 @@
+//! Baseline accelerator models (S13) for Table 3: CPU roofline, RecNMP
+//! near-memory processing, and the hand-crafted ReREC PIM design.
+
+pub mod cpu;
+pub mod recnmp;
+pub mod rerec;
+pub mod workload;
+
+pub use cpu::CpuModel;
+pub use recnmp::RecNmpModel;
+pub use rerec::{rerec_genome, rerec_model};
+pub use workload::{genome_stats, genome_stats_pooled, WorkloadStats, TABLE3_POOLING};

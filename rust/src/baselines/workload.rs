@@ -1,0 +1,116 @@
+//! Per-inference workload statistics of a genome — the quantities the
+//! CPU / near-memory baselines price (they do not see crossbars).
+
+use crate::data::profile;
+use crate::nas::genome::{DenseOp, Genome, Interaction, SparseOp, DSI_FEATURES};
+
+/// Arithmetic/memory footprint of one inference (batch = 1).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkloadStats {
+    /// multiply-accumulate count
+    pub macs: f64,
+    /// weight bytes touched (fp32 on CPU baselines)
+    pub weight_bytes: f64,
+    /// embedding rows gathered
+    pub gathers: usize,
+    /// bytes per gathered row
+    pub row_bytes: usize,
+    /// activation bytes moved between operators
+    pub act_bytes: f64,
+}
+
+/// Production recommender embeddings are *pooled multi-hot* lookups
+/// (RecNMP evaluates pooling factors 10–80); our synthetic datasets are
+/// single-hot, so Table 3's workload applies this factor to the gather
+/// counts on BOTH the baseline and the PIM side to restore the gather
+/// pressure the comparison is about.
+pub const TABLE3_POOLING: usize = 64;
+
+/// `genome_stats` with a pooling factor applied to the gather count.
+pub fn genome_stats_pooled(g: &Genome, pooling: usize) -> anyhow::Result<WorkloadStats> {
+    let mut s = genome_stats(g)?;
+    s.gathers *= pooling.max(1);
+    // pooled rows are reduced (summed) as they stream: pooling adds
+    // d_emb MACs per extra row
+    s.macs += ((pooling.max(1) - 1) * s.row_bytes / 4) as f64;
+    Ok(s)
+}
+
+/// Walk the genome graph and accumulate MACs / bytes (mirrors the shape
+/// semantics of `Genome::shapes`).
+pub fn genome_stats(g: &Genome) -> anyhow::Result<WorkloadStats> {
+    let prof = profile(&g.dataset)?;
+    let shapes = g.shapes()?;
+    let d = g.d_emb as f64;
+    let mut s = WorkloadStats {
+        gathers: prof.n_sparse(),
+        row_bytes: g.d_emb * 4,
+        ..Default::default()
+    };
+    fn add_mm(s: &mut WorkloadStats, k: f64, n: f64, vecs: f64) {
+        s.macs += k * n * vecs;
+        s.weight_bytes += k * n * 4.0;
+        s.act_bytes += (k + n) * vecs * 4.0;
+    }
+    for (blk, sh) in g.blocks.iter().zip(&shapes) {
+        match blk.dense_op {
+            DenseOp::Fc => add_mm(&mut s, sh.din as f64, sh.dout as f64, 1.0),
+            DenseOp::Dp => {
+                let k = Genome::dp_rows(sh.dout) as f64;
+                add_mm(&mut s, sh.din as f64, d, 1.0);
+                add_mm(&mut s, sh.nin as f64, k, d);
+                // Gram: (k+1)² × d MACs (upper triangle read out)
+                s.macs += (k + 1.0) * (k + 1.0) * d;
+                s.act_bytes += (k + 1.0) * d * 4.0;
+                let npairs = (k + 1.0) * k / 2.0;
+                add_mm(&mut s, npairs, sh.dout as f64, 1.0);
+            }
+        }
+        if blk.sparse_op == SparseOp::Efc {
+            add_mm(&mut s, sh.nin as f64, blk.sparse_features as f64, d);
+        }
+        match blk.interaction {
+            Interaction::Fm => {
+                let n = match blk.sparse_op {
+                    SparseOp::Efc => blk.sparse_features,
+                    SparseOp::Identity => sh.nin,
+                } as f64;
+                s.macs += 2.0 * n * d; // Σx and Σx² passes
+                add_mm(&mut s, d, sh.dout as f64, 1.0);
+            }
+            Interaction::Dsi => {
+                add_mm(&mut s, sh.dout as f64, DSI_FEATURES as f64 * d, 1.0)
+            }
+            Interaction::None => {}
+        }
+    }
+    add_mm(&mut s, shapes.last().unwrap().dout as f64, 1.0, 1.0);
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nas::genome::autorac_best;
+
+    #[test]
+    fn stats_are_positive_and_plausible() {
+        let s = genome_stats(&autorac_best("criteo")).unwrap();
+        assert!(s.macs > 1e4 && s.macs < 1e9, "{}", s.macs);
+        assert!(s.weight_bytes > 1e4);
+        assert_eq!(s.gathers, 26);
+        assert_eq!(s.row_bytes, 128);
+    }
+
+    #[test]
+    fn bigger_dims_mean_more_macs() {
+        let g = autorac_best("criteo");
+        let mut big = g.clone();
+        for b in &mut big.blocks {
+            b.dense_dim = (b.dense_dim * 2).min(1024);
+        }
+        assert!(
+            genome_stats(&big).unwrap().macs > genome_stats(&g).unwrap().macs
+        );
+    }
+}

@@ -1,0 +1,308 @@
+//! Experiment configuration system: JSON config files for the search,
+//! simulation, and serving flows, with CLI overrides layered on top.
+//!
+//! A config file holds exactly the knobs the CLI exposes, so a run is
+//! fully described by `autorac <cmd> --config runs/foo.json` and
+//! reproducible from the file (the effective config is echoed into the
+//! output). Unknown keys are rejected — config typos fail loudly.
+
+use crate::coordinator::BatcherConfig;
+use crate::nas::SearchConfig;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use std::path::Path;
+use std::time::Duration;
+
+/// Top-level experiment config (all sections optional).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub search: Option<SearchConfig>,
+    pub serve: Option<ServeConfig>,
+    pub workload: Option<WorkloadConfig>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub dataset: String,
+    pub workers: usize,
+    pub batch: usize,
+    pub max_wait_us: u64,
+    pub requests: usize,
+    pub rps: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            dataset: "criteo".into(),
+            workers: 1,
+            batch: 32,
+            max_wait_us: 200,
+            requests: 2000,
+            rps: f64::INFINITY,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn batcher(&self) -> BatcherConfig {
+        BatcherConfig {
+            max_batch: self.batch,
+            max_wait: Duration::from_micros(self.max_wait_us),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    pub n_requests: usize,
+    pub arrival_rps: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            n_requests: 256,
+            arrival_rps: f64::INFINITY,
+            seed: 7,
+        }
+    }
+}
+
+const SEARCH_KEYS: [&str; 9] = [
+    "dataset", "population", "generations", "children_per_gen",
+    "mutations_per_child", "sample_size", "lambdas", "seed", "sim_requests",
+];
+const SERVE_KEYS: [&str; 6] =
+    ["dataset", "workers", "batch", "max_wait_us", "requests", "rps"];
+const WORKLOAD_KEYS: [&str; 3] = ["n_requests", "arrival_rps", "seed"];
+
+fn check_keys(j: &Json, allowed: &[&str], section: &str) -> anyhow::Result<()> {
+    if let Some(pairs) = j.as_obj() {
+        for (k, _) in pairs {
+            anyhow::ensure!(
+                allowed.contains(&k.as_str()),
+                "unknown key `{k}` in [{section}] (allowed: {allowed:?})"
+            );
+        }
+    }
+    Ok(())
+}
+
+impl Config {
+    pub fn load(path: &Path) -> anyhow::Result<Config> {
+        let j = Json::read_file(path)?;
+        check_keys(&j, &["search", "serve", "workload"], "root")?;
+        let mut cfg = Config::default();
+        if let Some(s) = j.get("search") {
+            check_keys(s, &SEARCH_KEYS, "search")?;
+            let d = SearchConfig::default();
+            let lambdas = match s.get("lambdas") {
+                Some(l) => {
+                    let v = l
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("lambdas must be an array"))?;
+                    anyhow::ensure!(v.len() == 3, "lambdas needs 3 entries");
+                    [
+                        v[0].as_f64().unwrap_or(0.05),
+                        v[1].as_f64().unwrap_or(0.05),
+                        v[2].as_f64().unwrap_or(0.05),
+                    ]
+                }
+                None => d.lambdas,
+            };
+            cfg.search = Some(SearchConfig {
+                dataset: s
+                    .get("dataset")
+                    .and_then(Json::as_str)
+                    .unwrap_or(&d.dataset)
+                    .to_string(),
+                population: s.get("population").and_then(Json::as_usize).unwrap_or(d.population),
+                generations: s
+                    .get("generations")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.generations),
+                children_per_gen: s
+                    .get("children_per_gen")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.children_per_gen),
+                mutations_per_child: s
+                    .get("mutations_per_child")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.mutations_per_child),
+                sample_size: s
+                    .get("sample_size")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.sample_size),
+                lambdas,
+                seed: s
+                    .get("seed")
+                    .and_then(Json::as_i64)
+                    .map(|v| v as u64)
+                    .unwrap_or(d.seed),
+                sim_requests: s
+                    .get("sim_requests")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.sim_requests),
+            });
+        }
+        if let Some(s) = j.get("serve") {
+            check_keys(s, &SERVE_KEYS, "serve")?;
+            let d = ServeConfig::default();
+            cfg.serve = Some(ServeConfig {
+                dataset: s
+                    .get("dataset")
+                    .and_then(Json::as_str)
+                    .unwrap_or(&d.dataset)
+                    .to_string(),
+                workers: s.get("workers").and_then(Json::as_usize).unwrap_or(d.workers),
+                batch: s.get("batch").and_then(Json::as_usize).unwrap_or(d.batch),
+                max_wait_us: s
+                    .get("max_wait_us")
+                    .and_then(Json::as_i64)
+                    .map(|v| v as u64)
+                    .unwrap_or(d.max_wait_us),
+                requests: s.get("requests").and_then(Json::as_usize).unwrap_or(d.requests),
+                rps: s.get("rps").and_then(Json::as_f64).unwrap_or(d.rps),
+            });
+        }
+        if let Some(w) = j.get("workload") {
+            check_keys(w, &WORKLOAD_KEYS, "workload")?;
+            let d = WorkloadConfig::default();
+            cfg.workload = Some(WorkloadConfig {
+                n_requests: w
+                    .get("n_requests")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.n_requests),
+                arrival_rps: w
+                    .get("arrival_rps")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(d.arrival_rps),
+                seed: w
+                    .get("seed")
+                    .and_then(Json::as_i64)
+                    .map(|v| v as u64)
+                    .unwrap_or(d.seed),
+            });
+        }
+        Ok(cfg)
+    }
+
+    /// Optional `--config <path>` from the CLI; empty config otherwise.
+    pub fn from_args(args: &Args) -> anyhow::Result<Config> {
+        match args.get("config") {
+            Some(p) => Config::load(Path::new(&p.to_string())),
+            None => Ok(Config::default()),
+        }
+    }
+
+    /// Echo the effective config (reproducibility record).
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        if let Some(s) = &self.search {
+            root.set(
+                "search",
+                Json::from_pairs(vec![
+                    ("dataset", Json::Str(s.dataset.clone())),
+                    ("population", Json::Num(s.population as f64)),
+                    ("generations", Json::Num(s.generations as f64)),
+                    ("children_per_gen", Json::Num(s.children_per_gen as f64)),
+                    ("mutations_per_child", Json::Num(s.mutations_per_child as f64)),
+                    ("sample_size", Json::Num(s.sample_size as f64)),
+                    ("lambdas", Json::arr_f64(&s.lambdas)),
+                    ("seed", Json::Num(s.seed as f64)),
+                    ("sim_requests", Json::Num(s.sim_requests as f64)),
+                ]),
+            );
+        }
+        if let Some(s) = &self.serve {
+            root.set(
+                "serve",
+                Json::from_pairs(vec![
+                    ("dataset", Json::Str(s.dataset.clone())),
+                    ("workers", Json::Num(s.workers as f64)),
+                    ("batch", Json::Num(s.batch as f64)),
+                    ("max_wait_us", Json::Num(s.max_wait_us as f64)),
+                    ("requests", Json::Num(s.requests as f64)),
+                    ("rps", Json::Num(s.rps)),
+                ]),
+            );
+        }
+        root
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(text: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "autorac_cfg_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("{}.json", text.len()));
+        std::fs::write(&p, text).unwrap();
+        p
+    }
+
+    #[test]
+    fn loads_full_config() {
+        let p = write_tmp(
+            r#"{"search": {"dataset": "avazu", "generations": 10,
+                 "lambdas": [0.1, 0.2, 0.3]},
+                "serve": {"workers": 4, "batch": 16},
+                "workload": {"n_requests": 99}}"#,
+        );
+        let c = Config::load(&p).unwrap();
+        let s = c.search.unwrap();
+        assert_eq!(s.dataset, "avazu");
+        assert_eq!(s.generations, 10);
+        assert_eq!(s.lambdas, [0.1, 0.2, 0.3]);
+        assert_eq!(s.population, SearchConfig::default().population);
+        let sv = c.serve.unwrap();
+        assert_eq!(sv.workers, 4);
+        assert_eq!(sv.batch, 16);
+        assert_eq!(c.workload.unwrap().n_requests, 99);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let p = write_tmp(r#"{"search": {"generaitons": 10}}"#);
+        let err = Config::load(&p).unwrap_err().to_string();
+        assert!(err.contains("generaitons"), "{err}");
+        let p2 = write_tmp(r#"{"srch": {}}"#);
+        assert!(Config::load(&p2).is_err());
+    }
+
+    #[test]
+    fn empty_config_is_all_none() {
+        let p = write_tmp("{}");
+        let c = Config::load(&p).unwrap();
+        assert!(c.search.is_none() && c.serve.is_none());
+    }
+
+    #[test]
+    fn roundtrips_through_echo() {
+        let p = write_tmp(r#"{"search": {"generations": 7}, "serve": {}}"#);
+        let c = Config::load(&p).unwrap();
+        let echoed = c.to_json().to_string_pretty();
+        let p2 = write_tmp(&echoed);
+        let c2 = Config::load(&p2).unwrap();
+        assert_eq!(c2.search.unwrap().generations, 7);
+    }
+
+    #[test]
+    fn batcher_conversion() {
+        let s = ServeConfig {
+            batch: 8,
+            max_wait_us: 50,
+            ..Default::default()
+        };
+        let b = s.batcher();
+        assert_eq!(b.max_batch, 8);
+        assert_eq!(b.max_wait, Duration::from_micros(50));
+    }
+}

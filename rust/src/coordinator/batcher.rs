@@ -1,0 +1,140 @@
+//! Dynamic batcher: collect requests until `max_batch` or `max_wait`,
+//! whichever first — the classic latency/throughput knob of serving
+//! systems. FIFO within a worker queue.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 32,
+            // §Perf: immediate dispatch by default — batches form from
+            // backlog while the engine is busy (vLLM-style continuous
+            // batching), so an idle system pays zero batching latency.
+            // Set max_wait > 0 to trade latency for fuller batches under
+            // moderate open-loop load.
+            max_wait: Duration::ZERO,
+        }
+    }
+}
+
+/// Block for the first request, greedily drain whatever is already
+/// queued, and only then (optionally) wait out `max_wait` for stragglers.
+/// Returns None when the channel closed and is empty (shutdown).
+pub fn collect_batch<T>(rx: &Receiver<T>, cfg: &BatcherConfig) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    // free items: whatever the backlog already holds
+    while batch.len() < cfg.max_batch {
+        match rx.try_recv() {
+            Ok(item) => batch.push(item),
+            Err(_) => break,
+        }
+    }
+    if cfg.max_wait.is_zero() || batch.len() >= cfg.max_batch {
+        return Some(batch);
+    }
+    let deadline = Instant::now() + cfg.max_wait;
+    while batch.len() < cfg.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn batches_up_to_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let cfg = BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+        };
+        let b = collect_batch(&rx, &cfg).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b2 = collect_batch(&rx, &cfg).unwrap();
+        assert_eq!(b2, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn respects_deadline_with_sparse_arrivals() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let cfg = BatcherConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(5),
+        };
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, &cfg).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn returns_none_on_closed_empty_channel() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        assert!(collect_batch(&rx, &BatcherConfig::default()).is_none());
+    }
+
+    #[test]
+    fn drains_remaining_after_disconnect() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        drop(tx);
+        let cfg = BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        };
+        let b = collect_batch(&rx, &cfg).unwrap();
+        assert_eq!(b, vec![7, 8]);
+        assert!(collect_batch(&rx, &cfg).is_none());
+    }
+
+    #[test]
+    fn property_never_exceeds_max_batch_and_preserves_order() {
+        use crate::util::qcheck::qcheck;
+        qcheck(50, |g| {
+            let n = g.usize(1, 100);
+            let max_batch = g.usize(1, 16);
+            let (tx, rx) = mpsc::channel();
+            for i in 0..n {
+                tx.send(i).unwrap();
+            }
+            drop(tx);
+            let cfg = BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(1),
+            };
+            let mut seen = Vec::new();
+            while let Some(b) = collect_batch(&rx, &cfg) {
+                crate::prop_assert!(b.len() <= max_batch, "batch too big");
+                seen.extend(b);
+            }
+            crate::prop_assert_eq!(seen, (0..n).collect::<Vec<_>>());
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,181 @@
+//! Inference-engine abstraction: the worker's compute backend.
+//!
+//! `PjrtEngine` executes the AOT model artifact; `MockEngine` lets the
+//! coordinator's scheduling/batching logic be tested hermetically (and
+//! is also used to measure pure coordinator overhead in §Perf).
+
+use crate::runtime::client::Runtime;
+
+/// A batched CTR scorer: dense [B×nd] + gathered sparse [B×Ns×d] → [B].
+///
+/// NOT `Send`: the PJRT client is `Rc`-internal, so each engine is
+/// constructed inside its worker thread (see `Coordinator::start`).
+pub trait InferenceEngine {
+    fn infer_batch(
+        &mut self,
+        dense: &[f32],
+        sparse: &[f32],
+        batch: usize,
+    ) -> anyhow::Result<Vec<f32>>;
+
+    /// The artifact's compiled batch size (inputs are padded to this).
+    fn compiled_batch(&self) -> usize;
+    fn n_dense(&self) -> usize;
+    fn n_sparse(&self) -> usize;
+    fn d_emb(&self) -> usize;
+}
+
+/// PJRT-backed engine for one (dataset, batch) model artifact.
+pub struct PjrtEngine {
+    runtime: Runtime,
+    artifact: String,
+    batch: usize,
+    n_dense: usize,
+    n_sparse: usize,
+    d_emb: usize,
+}
+
+impl PjrtEngine {
+    pub fn new(
+        mut runtime: Runtime,
+        dataset: &str,
+        batch: usize,
+        n_dense: usize,
+        n_sparse: usize,
+        d_emb: usize,
+    ) -> anyhow::Result<PjrtEngine> {
+        let artifact = Runtime::model_name(dataset, batch);
+        runtime.ensure_compiled(&artifact)?;
+        Ok(PjrtEngine {
+            runtime,
+            artifact,
+            batch,
+            n_dense: n_dense.max(1),
+            n_sparse,
+            d_emb,
+        })
+    }
+}
+
+impl InferenceEngine for PjrtEngine {
+    fn infer_batch(
+        &mut self,
+        dense: &[f32],
+        sparse: &[f32],
+        batch: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(batch <= self.batch, "batch {batch} > compiled {}", self.batch);
+        // pad to the compiled batch
+        let mut d = dense.to_vec();
+        d.resize(self.batch * self.n_dense, 0.0);
+        let mut s = sparse.to_vec();
+        s.resize(self.batch * self.n_sparse * self.d_emb, 0.0);
+        let probs = self.runtime.infer(
+            &self.artifact,
+            &d,
+            [self.batch, self.n_dense],
+            &s,
+            [self.batch, self.n_sparse, self.d_emb],
+        )?;
+        Ok(probs[..batch].to_vec())
+    }
+
+    fn compiled_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn n_dense(&self) -> usize {
+        self.n_dense
+    }
+
+    fn n_sparse(&self) -> usize {
+        self.n_sparse
+    }
+
+    fn d_emb(&self) -> usize {
+        self.d_emb
+    }
+}
+
+/// Deterministic stand-in engine: prob = sigmoid(mean(dense) + mean(sparse)).
+pub struct MockEngine {
+    pub batch: usize,
+    pub n_dense: usize,
+    pub n_sparse: usize,
+    pub d_emb: usize,
+    /// simulated per-batch compute time
+    pub delay: std::time::Duration,
+    pub calls: usize,
+}
+
+impl MockEngine {
+    pub fn new(batch: usize, n_dense: usize, n_sparse: usize, d_emb: usize) -> Self {
+        MockEngine {
+            batch,
+            n_dense: n_dense.max(1),
+            n_sparse,
+            d_emb,
+            delay: std::time::Duration::ZERO,
+            calls: 0,
+        }
+    }
+}
+
+impl InferenceEngine for MockEngine {
+    fn infer_batch(
+        &mut self,
+        dense: &[f32],
+        sparse: &[f32],
+        batch: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        self.calls += 1;
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let mut out = Vec::with_capacity(batch);
+        for b in 0..batch {
+            let dm: f32 = dense[b * self.n_dense..(b + 1) * self.n_dense]
+                .iter()
+                .sum::<f32>()
+                / self.n_dense as f32;
+            let stride = self.n_sparse * self.d_emb;
+            let sm: f32 = sparse[b * stride..(b + 1) * stride].iter().sum::<f32>()
+                / stride.max(1) as f32;
+            out.push(1.0 / (1.0 + (-(dm + sm)).exp()));
+        }
+        Ok(out)
+    }
+
+    fn compiled_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn n_dense(&self) -> usize {
+        self.n_dense
+    }
+
+    fn n_sparse(&self) -> usize {
+        self.n_sparse
+    }
+
+    fn d_emb(&self) -> usize {
+        self.d_emb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_engine_is_deterministic_and_bounded() {
+        let mut e = MockEngine::new(8, 2, 3, 4);
+        let dense = vec![0.5f32; 2 * 2];
+        let sparse = vec![0.1f32; 2 * 3 * 4];
+        let a = e.infer_batch(&dense, &sparse, 2).unwrap();
+        let b = e.infer_batch(&dense, &sparse, 2).unwrap();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|p| (0.0..=1.0).contains(p)));
+        assert_eq!(e.calls, 2);
+    }
+}

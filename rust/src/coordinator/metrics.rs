@@ -1,0 +1,123 @@
+//! Serving metrics: counters + constant-memory latency histograms,
+//! shared across workers behind a light mutex (snapshots are cheap; the
+//! hot path records two integers).
+
+use crate::util::stats::LogHistogram;
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Default)]
+struct Inner {
+    requests: u64,
+    responses: u64,
+    batches: u64,
+    batched_requests: u64,
+    e2e: LogHistogram,
+    queue: LogHistogram,
+    exec: LogHistogram,
+}
+
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Mutex<Instant>,
+}
+
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub throughput_rps: f64,
+    pub e2e_p50_us: f64,
+    pub e2e_p99_us: f64,
+    pub queue_p99_us: f64,
+    pub exec_p50_us: f64,
+    pub elapsed_s: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner::default()),
+            started: Mutex::new(Instant::now()),
+        }
+    }
+
+    /// Restart the throughput clock — called by the coordinator once all
+    /// workers are ready, so executable-compile time (tens of seconds
+    /// for the crossbar-emulation HLO) does not dilute the rates.
+    pub fn reset_clock(&self) {
+        *self.started.lock().unwrap() = Instant::now();
+    }
+
+    pub fn on_request(&self) {
+        self.inner.lock().unwrap().requests += 1;
+    }
+
+    pub fn on_batch(&self, size: usize, queue_ns: u64, exec_ns: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.batched_requests += size as u64;
+        m.queue.record_ns(queue_ns);
+        m.exec.record_ns(exec_ns);
+    }
+
+    pub fn on_response(&self, e2e_ns: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.responses += 1;
+        m.e2e.record_ns(e2e_ns);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let elapsed = self.started.lock().unwrap().elapsed().as_secs_f64();
+        MetricsSnapshot {
+            requests: m.requests,
+            responses: m.responses,
+            batches: m.batches,
+            mean_batch: if m.batches == 0 {
+                0.0
+            } else {
+                m.batched_requests as f64 / m.batches as f64
+            },
+            throughput_rps: m.responses as f64 / elapsed.max(1e-9),
+            e2e_p50_us: m.e2e.quantile_ns(0.5) as f64 / 1e3,
+            e2e_p99_us: m.e2e.quantile_ns(0.99) as f64 / 1e3,
+            queue_p99_us: m.queue.quantile_ns(0.99) as f64 / 1e3,
+            exec_p50_us: m.exec.quantile_ns(0.5) as f64 / 1e3,
+            elapsed_s: elapsed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.on_request();
+        }
+        m.on_batch(8, 1_000, 50_000);
+        m.on_batch(2, 2_000, 30_000);
+        for _ in 0..10 {
+            m.on_response(100_000);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.responses, 10);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch - 5.0).abs() < 1e-9);
+        assert!(s.e2e_p50_us >= 100.0);
+        assert!(s.throughput_rps > 0.0);
+    }
+}

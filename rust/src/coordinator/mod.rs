@@ -1,0 +1,26 @@
+//! Serving coordinator (S15) — the L3 request path.
+//!
+//! Architecture (vLLM-router-like, scaled to this paper's serving job):
+//!
+//! ```text
+//!  load gen ──► router ──► worker queue ──► dynamic batcher
+//!                 │                              │
+//!                 ▼                              ▼
+//!              metrics ◄── responses ◄── embedding gather ─► PJRT exec
+//! ```
+//!
+//! Workers are std threads (tokio is unavailable offline — DESIGN.md §8);
+//! each worker owns a PJRT `Runtime` (or any `InferenceEngine` in tests)
+//! and an `EmbeddingStore` handle, so Python is never on this path.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatcherConfig, collect_batch};
+pub use engine::{InferenceEngine, MockEngine, PjrtEngine};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::Router;
+pub use server::{Coordinator, CoordinatorConfig, Request, Response};

@@ -1,0 +1,131 @@
+//! Request router: spread incoming requests across worker queues.
+//!
+//! Policies: round-robin (default; uniform work) and least-queued
+//! (counter-based, for heterogeneous workers). Conservation — every
+//! accepted request lands on exactly one queue — is property-tested.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LeastQueued,
+}
+
+pub struct Router<T> {
+    queues: Vec<Sender<T>>,
+    depths: Vec<Arc<AtomicUsize>>,
+    policy: Policy,
+    next: AtomicUsize,
+}
+
+impl<T> Router<T> {
+    pub fn new(queues: Vec<Sender<T>>, policy: Policy) -> Router<T> {
+        let depths = (0..queues.len())
+            .map(|_| Arc::new(AtomicUsize::new(0)))
+            .collect();
+        Router {
+            queues,
+            depths,
+            policy,
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Depth handle for worker `i` — the worker decrements it when it
+    /// takes a request off its queue.
+    pub fn depth_handle(&self, i: usize) -> Arc<AtomicUsize> {
+        self.depths[i].clone()
+    }
+
+    /// Route one request; returns the chosen worker or Err(req) if every
+    /// queue is closed.
+    pub fn route(&self, req: T) -> Result<usize, T> {
+        let w = match self.policy {
+            Policy::RoundRobin => {
+                self.next.fetch_add(1, Ordering::Relaxed) % self.queues.len()
+            }
+            Policy::LeastQueued => self
+                .depths
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, d)| d.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        };
+        match self.queues[w].send(req) {
+            Ok(()) => {
+                self.depths[w].fetch_add(1, Ordering::Relaxed);
+                Ok(w)
+            }
+            Err(e) => Err(e.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let (txs, rxs): (Vec<_>, Vec<_>) = (0..4).map(|_| mpsc::channel()).unzip();
+        let r = Router::new(txs, Policy::RoundRobin);
+        for i in 0..20 {
+            r.route(i).unwrap();
+        }
+        for rx in &rxs {
+            assert_eq!(rx.try_iter().count(), 5);
+        }
+    }
+
+    #[test]
+    fn least_queued_prefers_empty_worker() {
+        let (txs, rxs): (Vec<_>, Vec<_>) = (0..2).map(|_| mpsc::channel()).unzip();
+        let r = Router::new(txs, Policy::LeastQueued);
+        // fill worker queues unevenly by routing, then drain worker 1
+        for i in 0..6 {
+            r.route(i).unwrap();
+        }
+        // drain worker 1's queue and decrement its depth handle
+        let d1 = r.depth_handle(1);
+        while rxs[1].try_recv().is_ok() {
+            d1.fetch_sub(1, Ordering::Relaxed);
+        }
+        let w = r.route(99).unwrap();
+        assert_eq!(w, 1);
+    }
+
+    #[test]
+    fn property_conservation() {
+        use crate::util::qcheck::qcheck;
+        qcheck(30, |g| {
+            let workers = g.usize(1, 6);
+            let n = g.usize(0, 80);
+            let (txs, rxs): (Vec<_>, Vec<_>) =
+                (0..workers).map(|_| mpsc::channel()).unzip();
+            let r = Router::new(txs, Policy::RoundRobin);
+            for i in 0..n {
+                crate::prop_assert!(r.route(i).is_ok());
+            }
+            let total: usize = rxs.iter().map(|rx| rx.try_iter().count()).sum();
+            crate::prop_assert_eq!(total, n);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn closed_queues_return_request() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(rx);
+        let r = Router::new(vec![tx], Policy::RoundRobin);
+        assert_eq!(r.route(5).unwrap_err(), 5);
+    }
+}

@@ -1,0 +1,380 @@
+//! The coordinator: leader that wires router → workers → batcher →
+//! embedding gather → inference engine → responses, on std threads.
+
+use super::batcher::{collect_batch, BatcherConfig};
+use super::engine::InferenceEngine;
+use super::metrics::Metrics;
+use super::router::{Policy, Router};
+use crate::embeddings::EmbeddingStore;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One scoring request (features only; embedding gather happens on the
+/// worker, next to the memory tiles).
+pub struct Request {
+    pub id: u64,
+    pub dense: Vec<f32>,
+    pub ids: Vec<i32>,
+    pub enqueued: Instant,
+    pub reply: Sender<Response>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub prob: f32,
+    pub e2e_ns: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub n_workers: usize,
+    pub batcher: BatcherConfig,
+    pub policy: Policy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            n_workers: 1,
+            batcher: BatcherConfig::default(),
+            policy: Policy::RoundRobin,
+        }
+    }
+}
+
+pub struct Coordinator {
+    router: Router<Request>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Start workers; `make_engine(i)` runs INSIDE worker thread i to
+    /// build its backend (the PJRT client is thread-local by design),
+    /// `store` is the shared embedding memory tile.
+    pub fn start<F>(
+        cfg: CoordinatorConfig,
+        store: Arc<EmbeddingStore>,
+        make_engine: F,
+    ) -> anyhow::Result<Coordinator>
+    where
+        F: Fn(usize) -> anyhow::Result<Box<dyn InferenceEngine>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        let metrics = Arc::new(Metrics::new());
+        let mut txs = Vec::new();
+        let mut rxs: Vec<Receiver<Request>> = Vec::new();
+        for _ in 0..cfg.n_workers {
+            let (tx, rx) = mpsc::channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let router = Router::new(txs, cfg.policy);
+        let make_engine = Arc::new(make_engine);
+        let mut workers = Vec::new();
+        let (ready_tx, ready_rx) = mpsc::channel();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let store = store.clone();
+            let metrics = metrics.clone();
+            let bcfg = cfg.batcher;
+            let depth = router.depth_handle(i);
+            let make_engine = make_engine.clone();
+            let ready = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                match make_engine(i) {
+                    Ok(engine) => {
+                        let _ = ready.send(Ok(()));
+                        worker_loop(rx, engine, store, metrics, bcfg, depth);
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                    }
+                }
+            }));
+        }
+        drop(ready_tx);
+        for r in ready_rx.iter().take(cfg.n_workers) {
+            r.map_err(|e| anyhow::anyhow!("worker engine init failed: {e:#}"))?;
+        }
+        metrics.reset_clock(); // engine compile time is not serving time
+        Ok(Coordinator {
+            router,
+            workers,
+            metrics,
+        })
+    }
+
+    /// Submit one request; the reply arrives on `reply`.
+    pub fn submit(&self, req: Request) -> anyhow::Result<()> {
+        self.metrics.on_request();
+        self.router
+            .route(req)
+            .map(|_| ())
+            .map_err(|_| anyhow::anyhow!("all worker queues closed"))
+    }
+
+    /// Close intake and join workers (drains in-flight batches).
+    pub fn shutdown(self) {
+        drop(self.router);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<Request>,
+    mut engine: Box<dyn InferenceEngine>,
+    store: Arc<EmbeddingStore>,
+    metrics: Arc<Metrics>,
+    bcfg: BatcherConfig,
+    depth: Arc<std::sync::atomic::AtomicUsize>,
+) {
+    let nd = engine.n_dense();
+    let cap = engine.compiled_batch().min(bcfg.max_batch);
+    let bcfg = BatcherConfig {
+        max_batch: cap,
+        ..bcfg
+    };
+    let mut dense = Vec::new();
+    let mut sparse = Vec::new();
+    while let Some(batch) = collect_batch(&rx, &bcfg) {
+        depth.fetch_sub(batch.len().min(depth.load(Ordering::Relaxed)), Ordering::Relaxed);
+        let t_exec = Instant::now();
+        let queue_ns = batch
+            .iter()
+            .map(|r| r.enqueued.elapsed().as_nanos() as u64)
+            .max()
+            .unwrap_or(0);
+        // assemble inputs: dense [B×nd], gather sparse [B×Ns×d]
+        dense.clear();
+        sparse.clear();
+        for r in &batch {
+            let mut row = r.dense.clone();
+            row.resize(nd, 0.0);
+            dense.extend_from_slice(&row);
+            store.gather(&r.ids, 1, &mut sparse);
+        }
+        match engine.infer_batch(&dense, &sparse, batch.len()) {
+            Ok(probs) => {
+                let exec_ns = t_exec.elapsed().as_nanos() as u64;
+                metrics.on_batch(batch.len(), queue_ns, exec_ns);
+                for (r, p) in batch.into_iter().zip(probs) {
+                    let e2e = r.enqueued.elapsed().as_nanos() as u64;
+                    metrics.on_response(e2e);
+                    let _ = r.reply.send(Response {
+                        id: r.id,
+                        prob: p,
+                        e2e_ns: e2e,
+                    });
+                }
+            }
+            Err(e) => {
+                crate::error!("worker inference failed: {e:#}");
+                // drop the batch; senders observe a closed reply channel
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::MockEngine;
+    use crate::data::profile;
+
+    fn store() -> Arc<EmbeddingStore> {
+        Arc::new(EmbeddingStore::random(
+            &profile("criteo").unwrap(),
+            16,
+            3,
+        ))
+    }
+
+    fn start(workers: usize) -> Coordinator {
+        Coordinator::start(
+            CoordinatorConfig {
+                n_workers: workers,
+                ..Default::default()
+            },
+            store(),
+            |_| Ok(Box::new(MockEngine::new(32, 13, 26, 16))),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn serves_all_requests_exactly_once() {
+        let c = start(2);
+        let (tx, rx) = mpsc::channel();
+        let n = 200;
+        for id in 0..n {
+            c.submit(Request {
+                id,
+                dense: vec![0.1; 13],
+                ids: vec![1; 26],
+                enqueued: Instant::now(),
+                reply: tx.clone(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        let mut got: Vec<u64> = rx.iter().take(n as usize).map(|r| r.id).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..n).collect::<Vec<_>>());
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.responses, n);
+        assert!(snap.mean_batch >= 1.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn probabilities_are_valid() {
+        let c = start(1);
+        let (tx, rx) = mpsc::channel();
+        c.submit(Request {
+            id: 1,
+            dense: vec![0.5; 13],
+            ids: (0..26).collect(),
+            enqueued: Instant::now(),
+            reply: tx,
+        })
+        .unwrap();
+        let resp = rx.recv().unwrap();
+        assert!((0.0..=1.0).contains(&resp.prob));
+        assert!(resp.e2e_ns > 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_cleanly() {
+        let c = start(3);
+        let (tx, rx) = mpsc::channel();
+        for id in 0..50 {
+            c.submit(Request {
+                id,
+                dense: vec![0.0; 13],
+                ids: vec![0; 26],
+                enqueued: Instant::now(),
+                reply: tx.clone(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        c.shutdown();
+        assert_eq!(rx.iter().count(), 50);
+    }
+
+    /// Engine that fails every other batch — exercises the error path.
+    struct FlakyEngine {
+        inner: MockEngine,
+        calls: usize,
+    }
+
+    impl crate::coordinator::engine::InferenceEngine for FlakyEngine {
+        fn infer_batch(
+            &mut self,
+            dense: &[f32],
+            sparse: &[f32],
+            batch: usize,
+        ) -> anyhow::Result<Vec<f32>> {
+            self.calls += 1;
+            if self.calls % 2 == 0 {
+                anyhow::bail!("injected engine failure");
+            }
+            self.inner.infer_batch(dense, sparse, batch)
+        }
+
+        fn compiled_batch(&self) -> usize {
+            self.inner.compiled_batch()
+        }
+        fn n_dense(&self) -> usize {
+            self.inner.n_dense()
+        }
+        fn n_sparse(&self) -> usize {
+            self.inner.n_sparse()
+        }
+        fn d_emb(&self) -> usize {
+            self.inner.d_emb()
+        }
+    }
+
+    #[test]
+    fn failure_injection_drops_batches_but_never_wedges() {
+        crate::util::logger::set_level(crate::util::logger::Level::Error);
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                n_workers: 1,
+                batcher: BatcherConfig {
+                    max_batch: 1, // one request per batch → every 2nd fails
+                    max_wait: Duration::from_micros(10),
+                },
+                ..Default::default()
+            },
+            store(),
+            |_| {
+                Ok(Box::new(FlakyEngine {
+                    inner: MockEngine::new(1, 13, 26, 16),
+                    calls: 0,
+                }))
+            },
+        )
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let n = 40;
+        for id in 0..n {
+            c.submit(Request {
+                id,
+                dense: vec![0.0; 13],
+                ids: vec![0; 26],
+                enqueued: Instant::now(),
+                reply: tx.clone(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        let ok: Vec<_> = rx.iter().collect();
+        // exactly the odd-numbered calls succeed; the failed batches are
+        // dropped (senders see a closed reply), and the worker survives
+        assert_eq!(ok.len() as u64, n / 2, "{} responses", ok.len());
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.requests, n);
+        assert_eq!(snap.responses, n / 2);
+        c.shutdown();
+        crate::util::logger::set_level(crate::util::logger::Level::Info);
+    }
+
+    use crate::coordinator::batcher::BatcherConfig;
+    use std::time::Duration;
+
+    #[test]
+    fn batching_engages_under_burst() {
+        let c = start(1);
+        let (tx, rx) = mpsc::channel();
+        for id in 0..64 {
+            c.submit(Request {
+                id,
+                dense: vec![0.0; 13],
+                ids: vec![0; 26],
+                enqueued: Instant::now(),
+                reply: tx.clone(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        let _: Vec<_> = rx.iter().collect();
+        let snap = c.metrics.snapshot();
+        assert!(
+            snap.mean_batch > 1.5,
+            "burst should batch: mean {}",
+            snap.mean_batch
+        );
+        c.shutdown();
+    }
+}

@@ -1,0 +1,181 @@
+//! Batched feature matrices for the serving / eval / training paths.
+//!
+//! The coordinator and benches consume contiguous row-major buffers that
+//! can be handed to PJRT literals without copying per element.
+
+use super::gen::Generator;
+
+/// A dense batch of records, row-major, ready for the runtime.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub batch: usize,
+    /// [batch × max(n_dense,1)] — zero padded when the profile has no
+    /// dense features (matches the model artifact's input contract).
+    pub dense: Vec<f32>,
+    pub n_dense: usize,
+    /// [batch × n_sparse] feature ids.
+    pub ids: Vec<i32>,
+    pub n_sparse: usize,
+    /// labels (present for eval/training batches)
+    pub labels: Vec<f32>,
+    /// original record indices
+    pub indices: Vec<usize>,
+}
+
+impl Batch {
+    pub fn dense_stride(&self) -> usize {
+        self.n_dense.max(1)
+    }
+
+    pub fn dense_row(&self, i: usize) -> &[f32] {
+        let s = self.dense_stride();
+        &self.dense[i * s..(i + 1) * s]
+    }
+
+    pub fn ids_row(&self, i: usize) -> &[i32] {
+        &self.ids[i * self.n_sparse..(i + 1) * self.n_sparse]
+    }
+}
+
+/// Materialize records [start, start+count) as a batch (with labels).
+pub fn make_batch(gen: &mut Generator, start: usize, count: usize) -> Batch {
+    let n_dense = gen.profile().n_dense;
+    let n_sparse = gen.profile().n_sparse();
+    let stride = n_dense.max(1);
+    let mut dense = vec![0f32; count * stride];
+    let mut ids = Vec::with_capacity(count * n_sparse);
+    let mut labels = Vec::with_capacity(count);
+    let mut indices = Vec::with_capacity(count);
+    for i in 0..count {
+        let rec = gen.record(start + i);
+        dense[i * stride..i * stride + n_dense].copy_from_slice(&rec.dense);
+        ids.extend(rec.ids.iter().map(|&x| x as i32));
+        labels.push(if rec.label { 1.0 } else { 0.0 });
+        indices.push(start + i);
+    }
+    Batch {
+        batch: count,
+        dense,
+        n_dense,
+        ids,
+        n_sparse,
+        labels,
+        indices,
+    }
+}
+
+/// Features-only batch (serving path: labels are unknown at request time).
+pub fn make_request_batch(gen: &mut Generator, start: usize, count: usize) -> Batch {
+    let n_dense = gen.profile().n_dense;
+    let n_sparse = gen.profile().n_sparse();
+    let stride = n_dense.max(1);
+    let mut dense = vec![0f32; count * stride];
+    let mut ids = Vec::with_capacity(count * n_sparse);
+    let mut indices = Vec::with_capacity(count);
+    for i in 0..count {
+        let (d, s) = gen.features(start + i);
+        dense[i * stride..i * stride + n_dense].copy_from_slice(&d);
+        ids.extend(s.iter().map(|&x| x as i32));
+        indices.push(start + i);
+    }
+    Batch {
+        batch: count,
+        dense,
+        n_dense,
+        ids,
+        n_sparse,
+        labels: Vec::new(),
+        indices,
+    }
+}
+
+/// Split layout shared with python (train 80k / val 10k / test 10k by
+/// default; python env AUTORAC_*_N overrides only affect the build-time
+/// calibration, not the serving-side contract).
+#[derive(Clone, Copy, Debug)]
+pub struct Splits {
+    pub train: usize,
+    pub val: usize,
+    pub test: usize,
+}
+
+impl Default for Splits {
+    fn default() -> Self {
+        Splits {
+            train: 80_000,
+            val: 10_000,
+            test: 10_000,
+        }
+    }
+}
+
+impl Splits {
+    pub fn offset(&self, split: &str) -> usize {
+        match split {
+            "train" => 0,
+            "val" => self.train,
+            "test" => self.train + self.val,
+            _ => panic!("unknown split {split}"),
+        }
+    }
+
+    pub fn len(&self, split: &str) -> usize {
+        match split {
+            "train" => self.train,
+            "val" => self.val,
+            "test" => self.test,
+            _ => panic!("unknown split {split}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::profile::profile;
+
+    #[test]
+    fn batch_layout_is_row_major() {
+        let p = profile("criteo").unwrap();
+        let mut g = Generator::with_default_seed(p);
+        let b = make_batch(&mut g, 0, 4);
+        assert_eq!(b.batch, 4);
+        assert_eq!(b.dense.len(), 4 * 13);
+        assert_eq!(b.ids.len(), 4 * 26);
+        assert_eq!(b.labels.len(), 4);
+        let rec = g.record(2);
+        assert_eq!(b.dense_row(2), rec.dense.as_slice());
+        assert_eq!(
+            b.ids_row(2),
+            rec.ids.iter().map(|&x| x as i32).collect::<Vec<_>>().as_slice()
+        );
+    }
+
+    #[test]
+    fn avazu_dense_is_padded_to_one() {
+        let p = profile("avazu").unwrap();
+        let mut g = Generator::with_default_seed(p);
+        let b = make_batch(&mut g, 0, 3);
+        assert_eq!(b.n_dense, 0);
+        assert_eq!(b.dense_stride(), 1);
+        assert!(b.dense.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn request_batch_matches_labeled_batch_features() {
+        let p = profile("kdd").unwrap();
+        let mut g = Generator::with_default_seed(p);
+        let a = make_batch(&mut g, 10, 5);
+        let b = make_request_batch(&mut g, 10, 5);
+        assert_eq!(a.dense, b.dense);
+        assert_eq!(a.ids, b.ids);
+        assert!(b.labels.is_empty());
+    }
+
+    #[test]
+    fn splits_layout() {
+        let s = Splits::default();
+        assert_eq!(s.offset("test"), 90_000);
+        assert_eq!(s.len("val"), 10_000);
+    }
+}

@@ -1,0 +1,261 @@
+//! Procedural CTR record generator — rust mirror of datagen.py.
+//!
+//! Every record is a pure function of `(profile, seed, index)`; see the
+//! draw-order contract in datagen.py's module docstring:
+//!   1. `n_dense` normals (dense features, stored as f32)
+//!   2. one zipf sample per sparse field
+//!   3. one normal (label noise ε)
+//!   4. one f64 (label bernoulli draw)
+
+use super::profile::{Profile, DEFAULT_SEED, LATENT_K};
+use crate::util::rng::{seed_from_indexed, seed_from_name, Rng, Zipf};
+use std::collections::HashMap;
+
+/// Root key for one dataset = substream state of the global seed
+/// (mirrors datagen.dataset_key).
+pub fn dataset_key(seed: u64, name: &str) -> u64 {
+    let root = Rng::new(seed);
+    let ds = root.substream(&format!("data/{name}"));
+    // python reads s[0]^s[2] of the substream
+    ds.state_key()
+}
+
+/// Ground-truth click-model parameters (lazily materialized embeddings).
+pub struct TruthModel {
+    pub profile: Profile,
+    key: u64,
+    w_dense: Vec<f64>,
+    u: Vec<Vec<f64>>,
+    pairs: Vec<(usize, usize)>,
+    pub bias: f64,
+    emb_cache: HashMap<(usize, usize), Vec<f64>>,
+}
+
+impl TruthModel {
+    pub fn new(profile: Profile, seed: u64) -> TruthModel {
+        let key = dataset_key(seed, profile.name);
+        let mut r = Rng::new(seed_from_name(key, "densew"));
+        let w_dense: Vec<f64> = (0..profile.n_dense).map(|_| r.normal()).collect();
+        let mut u: Vec<Vec<f64>> = Vec::with_capacity(profile.n_sparse());
+        let root_k = (LATENT_K as f64).sqrt();
+        for j in 0..profile.n_sparse() {
+            let mut rj = Rng::new(seed_from_name(key, &format!("fieldw/{j}")));
+            u.push((0..LATENT_K).map(|_| rj.normal() / root_k).collect());
+        }
+        let pairs = profile.pairs();
+        // Bias with probit-style variance correction (mirrors datagen.py).
+        let mut var = profile.noise * profile.noise;
+        var += profile.gamma_dense.powi(2)
+            * w_dense.iter().map(|w| w * w).sum::<f64>();
+        for uj in &u {
+            var += profile.gamma_field.powi(2)
+                * uj.iter().map(|x| x * x).sum::<f64>()
+                / LATENT_K as f64;
+        }
+        var += profile.gamma_pair.powi(2) * pairs.len() as f64 / LATENT_K as f64;
+        let target = (profile.base_ctr / (1.0 - profile.base_ctr)).ln();
+        let bias = target * (1.0 + std::f64::consts::PI * var / 8.0).sqrt();
+        TruthModel {
+            profile,
+            key,
+            w_dense,
+            u,
+            pairs,
+            bias,
+            emb_cache: HashMap::new(),
+        }
+    }
+
+    /// Truth embedding for (field j, category c) — random access, cached.
+    pub fn emb(&mut self, j: usize, c: usize) -> &[f64] {
+        let key = self.key;
+        self.emb_cache.entry((j, c)).or_insert_with(|| {
+            let mut r = Rng::new(seed_from_name(key, &format!("emb/{j}/{c}")));
+            let root_k = (LATENT_K as f64).sqrt();
+            (0..LATENT_K).map(|_| r.normal() / root_k).collect()
+        })
+    }
+
+    /// True logit for one record's features.
+    ///
+    /// §Perf: two-phase — fill the embedding cache first (mutable), then
+    /// compute dots from immutable borrows. The original one-pass version
+    /// cloned every embedding to satisfy the borrow checker (~2 allocs
+    /// per field per record on the serving-eval path).
+    pub fn logit(&mut self, dense: &[f32], ids: &[usize], eps: f64) -> f64 {
+        for j in 0..self.profile.n_sparse() {
+            self.emb(j, ids[j]);
+        }
+        let p = &self.profile;
+        let mut z = self.bias;
+        for t in 0..p.n_dense {
+            z += p.gamma_dense * self.w_dense[t] * dense[t] as f64;
+        }
+        for (j, uj) in self.u.iter().enumerate() {
+            let e = &self.emb_cache[&(j, ids[j])];
+            let dot: f64 = uj.iter().zip(e).map(|(a, b)| a * b).sum();
+            z += p.gamma_field * dot;
+        }
+        for &(j, l) in &self.pairs {
+            let ej = &self.emb_cache[&(j, ids[j])];
+            let el = &self.emb_cache[&(l, ids[l])];
+            let dot: f64 = ej.iter().zip(el).map(|(a, b)| a * b).sum();
+            z += p.gamma_pair * dot;
+        }
+        z + p.noise * eps
+    }
+}
+
+/// One generated record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Record {
+    pub index: usize,
+    pub dense: Vec<f32>,
+    pub ids: Vec<usize>,
+    pub label: bool,
+}
+
+/// Procedural generator (random access by index).
+pub struct Generator {
+    pub truth: TruthModel,
+    key: u64,
+    zipfs: Vec<Zipf>,
+}
+
+impl Generator {
+    pub fn new(profile: Profile, seed: u64) -> Generator {
+        let key = dataset_key(seed, profile.name);
+        let zipfs = profile
+            .cards
+            .iter()
+            .map(|&c| Zipf::new(c, profile.zipf_alpha))
+            .collect();
+        Generator {
+            truth: TruthModel::new(profile, seed),
+            key,
+            zipfs,
+        }
+    }
+
+    pub fn with_default_seed(profile: Profile) -> Generator {
+        Generator::new(profile, DEFAULT_SEED)
+    }
+
+    pub fn profile(&self) -> &Profile {
+        &self.truth.profile
+    }
+
+    /// Generate record `index` (bit-identical with datagen.Generator.record).
+    pub fn record(&mut self, index: usize) -> Record {
+        let (n_dense, n_sparse) =
+            (self.truth.profile.n_dense, self.truth.profile.n_sparse());
+        let mut r = Rng::new(seed_from_indexed(self.key, "rec/", index));
+        let dense: Vec<f32> = (0..n_dense).map(|_| r.normal() as f32).collect();
+        let ids: Vec<usize> = (0..n_sparse)
+            .map(|j| self.zipfs[j].sample(&mut r))
+            .collect();
+        let eps = r.normal();
+        let z = self.truth.logit(&dense, &ids, eps);
+        let label = r.f64() < 1.0 / (1.0 + (-z).exp());
+        Record {
+            index,
+            dense,
+            ids,
+            label,
+        }
+    }
+
+    /// Features only (serving path — skips the label computation's truth
+    /// embedding lookups for speed). Draw order is identical; the label
+    /// draws are simply not consumed, which is safe because each record
+    /// has its own substream.
+    pub fn features(&mut self, index: usize) -> (Vec<f32>, Vec<usize>) {
+        let (n_dense, n_sparse) =
+            (self.truth.profile.n_dense, self.truth.profile.n_sparse());
+        let mut r = Rng::new(seed_from_indexed(self.key, "rec/", index));
+        let dense: Vec<f32> = (0..n_dense).map(|_| r.normal() as f32).collect();
+        let ids: Vec<usize> = (0..n_sparse)
+            .map(|j| self.zipfs[j].sample(&mut r))
+            .collect();
+        (dense, ids)
+    }
+
+    /// Generate a contiguous block of records.
+    pub fn block(&mut self, start: usize, count: usize) -> Vec<Record> {
+        (start..start + count).map(|i| self.record(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::profile::profile;
+
+    #[test]
+    fn records_are_deterministic_and_random_access() {
+        let p = profile("criteo").unwrap();
+        let mut g1 = Generator::with_default_seed(p.clone());
+        let mut g2 = Generator::with_default_seed(p);
+        let a = g1.record(12345);
+        // access out of order on the second generator
+        let _ = g2.record(7);
+        let b = g2.record(12345);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn features_match_record_features() {
+        let p = profile("avazu").unwrap();
+        let mut g = Generator::with_default_seed(p);
+        let rec = g.record(99);
+        let (dense, ids) = g.features(99);
+        assert_eq!(rec.dense, dense);
+        assert_eq!(rec.ids, ids);
+    }
+
+    #[test]
+    fn ids_respect_cardinalities() {
+        let p = profile("kdd").unwrap();
+        let cards = p.cards.clone();
+        let mut g = Generator::with_default_seed(p);
+        for rec in g.block(0, 500) {
+            for (j, &id) in rec.ids.iter().enumerate() {
+                assert!(id < cards[j], "field {j} id {id} >= {}", cards[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn ctr_is_near_profile_target() {
+        for name in ["criteo", "avazu", "kdd"] {
+            let p = profile(name).unwrap();
+            let target = p.base_ctr;
+            let mut g = Generator::with_default_seed(p);
+            let n = 3000;
+            let clicks = g.block(0, n).iter().filter(|r| r.label).count();
+            let ctr = clicks as f64 / n as f64;
+            // probit correction is approximate; allow a generous band
+            assert!(
+                ctr > target * 0.5 && ctr < target * 2.2,
+                "{name}: ctr {ctr} vs target {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let p = profile("criteo").unwrap();
+        let mut g1 = Generator::new(p.clone(), 1);
+        let mut g2 = Generator::new(p, 2);
+        assert_ne!(g1.record(0), g2.record(0));
+    }
+
+    #[test]
+    fn zipf_head_is_hot() {
+        let p = profile("criteo").unwrap();
+        let mut g = Generator::with_default_seed(p);
+        let recs = g.block(0, 2000);
+        let head = recs.iter().filter(|r| r.ids[0] < 5).count();
+        assert!(head as f64 / 2000.0 > 0.4, "head share {head}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Synthetic CTR data system (S6): procedural datasets shared
+//! bit-for-bit with the python build path. See profile.rs for the
+//! substitution rationale (real Criteo/Avazu/KDD are offline-unavailable).
+
+pub mod batch;
+pub mod gen;
+pub mod profile;
+
+pub use batch::{make_batch, make_request_batch, Batch, Splits};
+pub use gen::{dataset_key, Generator, Record, TruthModel};
+pub use profile::{profile, Profile, ALL_PROFILES, DEFAULT_SEED, LATENT_K};

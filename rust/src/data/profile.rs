@@ -1,0 +1,141 @@
+//! Dataset profiles — rust mirror of `python/compile/datagen.py::PROFILES`.
+//!
+//! Each profile models one public CTR benchmark (Criteo / Avazu / KDD Cup
+//! 2012) that is unavailable offline: field counts and statistics mirror
+//! the real dataset, and records are a pure function of
+//! `(profile, seed, index)` via the shared PRNG. ANY change here must be
+//! mirrored in datagen.py; `rust/tests/data_parity.rs` pins the contract
+//! against golden records exported at build time.
+
+/// Latent dimensionality of the ground-truth click model.
+pub const LATENT_K: usize = 8;
+
+/// Default dataset seed (GLSVLSI'25 opening day; same as python).
+pub const DEFAULT_SEED: u64 = 20_250_630;
+
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub name: &'static str,
+    pub n_dense: usize,
+    pub cards: Vec<usize>,
+    pub zipf_alpha: f64,
+    pub base_ctr: f64,
+    pub gamma_dense: f64,
+    pub gamma_field: f64,
+    pub gamma_pair: f64,
+    pub noise: f64,
+}
+
+impl Profile {
+    pub fn n_sparse(&self) -> usize {
+        self.cards.len()
+    }
+
+    /// Interacting field pairs — deterministic rule `(31j + l) % 7 == 0`
+    /// over j < l (shared with python).
+    pub fn pairs(&self) -> Vec<(usize, usize)> {
+        let n = self.n_sparse();
+        let mut out = Vec::new();
+        for j in 0..n {
+            for l in (j + 1)..n {
+                if (31 * j + l) % 7 == 0 {
+                    out.push((j, l));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Per-field cardinalities: `min(150 · 1.45^(j%8), 2000)` (shared rule).
+fn cards(n: usize) -> Vec<usize> {
+    (0..n)
+        .map(|j| {
+            let c = (150.0 * 1.45f64.powi((j % 8) as i32)) as usize;
+            c.min(2000)
+        })
+        .collect()
+}
+
+/// Look up a profile by name ("criteo" | "avazu" | "kdd").
+pub fn profile(name: &str) -> anyhow::Result<Profile> {
+    Ok(match name {
+        "criteo" => Profile {
+            name: "criteo",
+            n_dense: 13,
+            cards: cards(26),
+            zipf_alpha: 1.25,
+            base_ctr: 0.256,
+            gamma_dense: 0.3,
+            gamma_field: 0.45,
+            gamma_pair: 0.55,
+            noise: 0.6,
+        },
+        "avazu" => Profile {
+            name: "avazu",
+            n_dense: 0,
+            cards: cards(22),
+            zipf_alpha: 1.30,
+            base_ctr: 0.17,
+            gamma_dense: 0.0,
+            gamma_field: 0.5,
+            gamma_pair: 0.55,
+            noise: 0.6,
+        },
+        "kdd" => Profile {
+            name: "kdd",
+            n_dense: 3,
+            cards: cards(10),
+            zipf_alpha: 1.35,
+            base_ctr: 0.045,
+            gamma_dense: 0.25,
+            gamma_field: 0.5,
+            gamma_pair: 0.6,
+            noise: 0.5,
+        },
+        other => anyhow::bail!("unknown dataset profile `{other}`"),
+    })
+}
+
+pub const ALL_PROFILES: [&str; 3] = ["criteo", "avazu", "kdd"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_counts_mirror_real_benchmarks() {
+        let c = profile("criteo").unwrap();
+        assert_eq!((c.n_dense, c.n_sparse()), (13, 26));
+        let a = profile("avazu").unwrap();
+        assert_eq!((a.n_dense, a.n_sparse()), (0, 22));
+        let k = profile("kdd").unwrap();
+        assert_eq!((k.n_dense, k.n_sparse()), (3, 10));
+    }
+
+    #[test]
+    fn cards_match_python_rule() {
+        let c = profile("criteo").unwrap();
+        assert_eq!(c.cards[0], 150);
+        assert_eq!(c.cards[1], (150.0 * 1.45f64) as usize);
+        assert!(c.cards.iter().all(|&x| x <= 2000));
+        // rule repeats every 8 fields
+        assert_eq!(c.cards[8], c.cards[0]);
+    }
+
+    #[test]
+    fn pair_rule_is_stable() {
+        let c = profile("criteo").unwrap();
+        let pairs = c.pairs();
+        assert!(!pairs.is_empty());
+        for &(j, l) in &pairs {
+            assert!(j < l);
+            assert_eq!((31 * j + l) % 7, 0);
+        }
+    }
+
+    #[test]
+    fn unknown_profile_errors() {
+        assert!(profile("movielens").is_err());
+    }
+}

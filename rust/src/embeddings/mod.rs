@@ -1,0 +1,15 @@
+//! Embedding memory-tile subsystem (paper §3.3, S10).
+//!
+//! Memory tiles hold the embedding tables in a static, read-only state.
+//! An offline access-aware mechanism reorders rows by access frequency
+//! and stripes them round-robin across banks so concurrent lookups in a
+//! batch land on different banks (conflict-free for the hot head of the
+//! zipf distribution).
+
+pub mod placement;
+pub mod store;
+pub mod tilecost;
+
+pub use placement::{Placement, Strategy};
+pub use store::EmbeddingStore;
+pub use tilecost::{GatherCost, MemoryTileModel};

@@ -1,0 +1,138 @@
+//! Embedding table storage + gather (the functional half of the memory
+//! tiles; the cost half is `tilecost`).
+
+use crate::data::Profile;
+use crate::runtime::atns::TensorFile;
+use crate::util::rng::{seed_from_name, Rng};
+
+/// All embedding tables for one dataset, flattened per field.
+pub struct EmbeddingStore {
+    pub d_emb: usize,
+    /// per-field tables, row-major [cards[j] × d_emb]
+    tables: Vec<Vec<f32>>,
+    pub cards: Vec<usize>,
+}
+
+impl EmbeddingStore {
+    /// Load trained tables from an `embeddings_<ds>.bin` artifact.
+    pub fn from_atns(tf: &TensorFile) -> anyhow::Result<EmbeddingStore> {
+        let mut tables = Vec::new();
+        let mut cards = Vec::new();
+        let mut d_emb = 0usize;
+        for j in 0.. {
+            let Some(t) = tf.get(&format!("emb/{j}")) else {
+                break;
+            };
+            anyhow::ensure!(t.shape.len() == 2, "emb/{j}: expected 2-D");
+            let (c, d) = (t.shape[0], t.shape[1]);
+            anyhow::ensure!(d_emb == 0 || d == d_emb, "emb/{j}: dim mismatch");
+            d_emb = d;
+            cards.push(c);
+            tables.push(t.as_f32()?);
+        }
+        anyhow::ensure!(!tables.is_empty(), "no emb/<j> tensors found");
+        Ok(EmbeddingStore {
+            d_emb,
+            tables,
+            cards,
+        })
+    }
+
+    /// Random tables (tests / serving without trained artifacts).
+    pub fn random(profile: &Profile, d_emb: usize, seed: u64) -> EmbeddingStore {
+        let mut tables = Vec::new();
+        for (j, &c) in profile.cards.iter().enumerate() {
+            let mut r = Rng::new(seed_from_name(seed, &format!("servemb/{j}")));
+            tables.push((0..c * d_emb).map(|_| (r.normal() * 0.05) as f32).collect());
+        }
+        EmbeddingStore {
+            d_emb,
+            tables,
+            cards: profile.cards.clone(),
+        }
+    }
+
+    pub fn n_fields(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Total rows across all fields.
+    pub fn total_rows(&self) -> usize {
+        self.cards.iter().sum()
+    }
+
+    /// One embedding row.
+    pub fn row(&self, field: usize, id: usize) -> &[f32] {
+        let d = self.d_emb;
+        &self.tables[field][id * d..(id + 1) * d]
+    }
+
+    /// Gather a batch: ids is row-major [batch × n_fields]; output is
+    /// [batch × n_fields × d_emb] appended to `out`.
+    pub fn gather(&self, ids: &[i32], batch: usize, out: &mut Vec<f32>) {
+        let nf = self.n_fields();
+        debug_assert_eq!(ids.len(), batch * nf);
+        out.reserve(batch * nf * self.d_emb);
+        for b in 0..batch {
+            for j in 0..nf {
+                let id = ids[b * nf + j] as usize;
+                out.extend_from_slice(self.row(j, id.min(self.cards[j] - 1)));
+            }
+        }
+    }
+
+    /// Global row index of (field, id) — the unit the placement stripes.
+    pub fn global_row(&self, field: usize, id: usize) -> usize {
+        self.cards[..field].iter().sum::<usize>() + id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::profile;
+
+    #[test]
+    fn random_store_has_profile_shape() {
+        let p = profile("criteo").unwrap();
+        let s = EmbeddingStore::random(&p, 32, 1);
+        assert_eq!(s.n_fields(), 26);
+        assert_eq!(s.d_emb, 32);
+        assert_eq!(s.row(0, 0).len(), 32);
+        assert_eq!(s.total_rows(), p.cards.iter().sum::<usize>());
+    }
+
+    #[test]
+    fn gather_layout_is_row_major() {
+        let p = profile("kdd").unwrap();
+        let s = EmbeddingStore::random(&p, 16, 2);
+        let ids: Vec<i32> = (0..2 * s.n_fields()).map(|i| (i % 3) as i32).collect();
+        let mut out = Vec::new();
+        s.gather(&ids, 2, &mut out);
+        assert_eq!(out.len(), 2 * s.n_fields() * 16);
+        // spot-check element (batch 1, field 2)
+        let nf = s.n_fields();
+        let want = s.row(2, ids[nf + 2] as usize);
+        let got = &out[(nf + 2) * 16..(nf + 3) * 16];
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn global_row_offsets_accumulate() {
+        let p = profile("criteo").unwrap();
+        let s = EmbeddingStore::random(&p, 16, 3);
+        assert_eq!(s.global_row(0, 5), 5);
+        assert_eq!(s.global_row(1, 0), p.cards[0]);
+        assert_eq!(s.global_row(2, 1), p.cards[0] + p.cards[1] + 1);
+    }
+
+    #[test]
+    fn out_of_range_ids_clamp() {
+        let p = profile("kdd").unwrap();
+        let s = EmbeddingStore::random(&p, 8, 4);
+        let ids = vec![i32::MAX; s.n_fields()];
+        let mut out = Vec::new();
+        s.gather(&ids, 1, &mut out); // must not panic
+        assert_eq!(out.len(), s.n_fields() * 8);
+    }
+}

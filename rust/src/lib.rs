@@ -1,0 +1,30 @@
+//! # AutoRAC
+//!
+//! A from-scratch reproduction of *AutoRAC: Automated Processing-in-Memory
+//! Accelerator Design for Recommender Systems* (GLSVLSI '25) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the co-design framework: ReRAM PIM behavioral
+//!   simulator, operator→crossbar mapping engine, regularized-evolution
+//!   search (Algorithm 1), embedding memory tiles, baseline accelerator
+//!   models, and a CTR serving coordinator executing AOT-compiled model
+//!   artifacts via PJRT.
+//! * **L2/L1 (python/, build-time only)** — JAX recommender models and
+//!   Pallas PIM kernels, lowered once to HLO text in `artifacts/`.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod mapping;
+pub mod metrics;
+pub mod nas;
+pub mod embeddings;
+pub mod pim;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,307 @@
+//! `autorac` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   search    run the evolutionary co-search (Algorithm 1)
+//!   simulate  behavioral simulation of a genome on the PIM design
+//!   serve     serve CTR requests from the AOT model artifact via PJRT
+//!   eval      rust-side accuracy eval of the served model (Table 2 check)
+//!   datagen   inspect the synthetic dataset generator
+//!   table2 | table3 | fig2 | fig5 | fig6   regenerate paper artifacts
+//!   artifacts list artifact registry
+
+use autorac::coordinator::{
+    Coordinator, CoordinatorConfig, PjrtEngine, Request,
+};
+use autorac::data::{make_batch, profile, Generator, Splits, DEFAULT_SEED};
+use autorac::embeddings::EmbeddingStore;
+use autorac::mapping::{map_genome, MapStyle};
+use autorac::nas::{autorac_best, Genome, SearchConfig};
+use autorac::pim::TechParams;
+use autorac::runtime::atns::TensorFile;
+use autorac::runtime::client::Runtime;
+use autorac::sim::{simulate, Workload};
+use autorac::util::cli::Args;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    match args.subcommand.as_deref() {
+        Some("search") => cmd_search(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("datagen") => cmd_datagen(&args),
+        Some("table2") => {
+            autorac::report::table2(&artifacts_dir(&args))?;
+            args.finish()
+        }
+        Some("table3") => {
+            autorac::report::table3(&args.str_or("dataset", "criteo"))?;
+            args.finish()
+        }
+        Some("fig2") => {
+            autorac::report::fig2(&artifacts_dir(&args))?;
+            args.finish()
+        }
+        Some("fig5") => {
+            let cfg = search_cfg(&args)?;
+            let (_, best) = autorac::report::fig5(cfg)?;
+            autorac::report::fig6(&best);
+            args.finish()
+        }
+        Some("fig6") => {
+            let g = match args.get("genome") {
+                Some(p) => Genome::load(std::path::Path::new(&p.to_string()))?,
+                None => autorac_best(&args.str_or("dataset", "criteo")),
+            };
+            autorac::report::fig6(&g);
+            args.finish()
+        }
+        Some("artifacts") => {
+            let rt = Runtime::open(&artifacts_dir(&args))?;
+            println!("platform: {}", rt.platform());
+            for name in rt.artifact_names() {
+                let m = rt.meta(name).unwrap();
+                println!("  {:<22} kind={:<10} batch={}", name, m.kind, m.batch);
+            }
+            args.finish()
+        }
+        Some(other) => anyhow::bail!("unknown subcommand `{other}` (try --help)"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "autorac — automated PIM accelerator design for recommender systems\n\
+         usage: autorac <search|simulate|serve|eval|datagen|table2|table3|fig2|fig5|fig6|artifacts> [--opts]\n\
+         common: --dataset criteo|avazu|kdd   --artifacts <dir>   --seed N\n\
+         search: --generations N --population N --children N --out best.json\n\
+         serve:  --requests N --workers N --batch N --rps N\n\
+         eval:   --n N (test records)"
+    );
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn search_cfg(args: &Args) -> anyhow::Result<SearchConfig> {
+    // config file first, CLI overrides on top
+    let base = autorac::config::Config::from_args(args)?
+        .search
+        .unwrap_or_default();
+    Ok(SearchConfig {
+        dataset: args.str_or("dataset", &base.dataset),
+        generations: args.usize_or("generations", base.generations)?,
+        population: args.usize_or("population", base.population)?,
+        children_per_gen: args.usize_or("children", base.children_per_gen)?,
+        mutations_per_child: args.usize_or("mutations", base.mutations_per_child)?,
+        sample_size: args.usize_or("sample", base.sample_size)?,
+        seed: args.u64_or("seed", base.seed)?,
+        sim_requests: args.usize_or("sim-requests", base.sim_requests)?,
+        lambdas: base.lambdas,
+        ..SearchConfig::default()
+    })
+}
+
+fn cmd_search(args: &Args) -> anyhow::Result<()> {
+    let cfg = search_cfg(args)?;
+    let out = args.str_or("out", "artifacts/searched_best.json");
+    args.finish()?;
+    let t0 = Instant::now();
+    let mut search = autorac::nas::Search::new(cfg, autorac::nas::Surrogate::load_default())?;
+    let best = search.run()?;
+    println!(
+        "search done in {:.1}s: {} evaluations, best criterion {:.4}",
+        t0.elapsed().as_secs_f64(),
+        search.trace.evaluations,
+        best.criterion
+    );
+    autorac::report::fig6(&best.genome);
+    best.genome.save(std::path::Path::new(&out))?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let dataset = args.str_or("dataset", "criteo");
+    let genome = match args.get("genome") {
+        Some(p) => Genome::load(std::path::Path::new(&p.to_string()))?,
+        None => autorac_best(&dataset),
+    };
+    let style = if args.flag("naive") {
+        MapStyle::Naive
+    } else {
+        MapStyle::Smart
+    };
+    let n = args.usize_or("requests", 256)?;
+    args.finish()?;
+    let tech = TechParams::default();
+    let mapped = map_genome(&genome, &tech, style)?;
+    let report = simulate(
+        &mapped,
+        None,
+        &Workload {
+            n_requests: n,
+            ..Workload::default()
+        },
+    );
+    println!("design {}", report.design);
+    println!("  latency    {:.2} µs (p99 {:.2} µs)", report.latency_ns_mean / 1e3, report.latency_ns_p99 / 1e3);
+    println!("  throughput {:.0} inf/s", report.throughput_rps);
+    println!("  energy     {:.1} nJ/inf", report.energy_pj_per_inf / 1e3);
+    println!("  power      {:.2} W", report.power_mw / 1e3);
+    println!("  area       {:.2} mm² ({} arrays, {} ops)", report.area_mm2, mapped.total_arrays, mapped.ops.len());
+    println!("  setup      {:.1} µs / {:.1} µJ (crossbar programming)", mapped.setup_ns / 1e3, mapped.setup_pj / 1e6);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let dataset = args.str_or("dataset", "criteo");
+    let dir = artifacts_dir(args);
+    let n = args.usize_or("requests", 2000)?;
+    let workers = args.usize_or("workers", 1)?;
+    let batch = args.usize_or("batch", 32)?;
+    let rps = args.f64_or("rps", f64::INFINITY)?;
+    args.finish()?;
+
+    let prof = profile(&dataset)?;
+    let tf = TensorFile::read(&dir.join(format!("embeddings_{dataset}.bin")))?;
+    let store = Arc::new(EmbeddingStore::from_atns(&tf)?);
+    let (n_dense, n_sparse, d_emb) = (prof.n_dense, prof.n_sparse(), store.d_emb);
+    let dir2 = dir.clone();
+    let dataset2 = dataset.clone();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            n_workers: workers,
+            ..Default::default()
+        },
+        store,
+        move |_| {
+            let rt = Runtime::open(&dir2)?;
+            Ok(Box::new(PjrtEngine::new(
+                rt, &dataset2, batch, n_dense, n_sparse, d_emb,
+            )?))
+        },
+    )?;
+
+    let mut gen = Generator::new(prof, DEFAULT_SEED);
+    let (tx, rx) = mpsc::channel();
+    let t0 = Instant::now();
+    let gap = if rps.is_finite() { 1e9 / rps } else { 0.0 };
+    let mut next_ns = 0f64;
+    for id in 0..n {
+        if gap > 0.0 {
+            next_ns += gap;
+            let now = t0.elapsed().as_nanos() as f64;
+            if now < next_ns {
+                std::thread::sleep(std::time::Duration::from_nanos(
+                    (next_ns - now) as u64,
+                ));
+            }
+        }
+        let (dense, ids) = gen.features(id);
+        coord.submit(Request {
+            id: id as u64,
+            dense,
+            ids: ids.iter().map(|&x| x as i32).collect(),
+            enqueued: Instant::now(),
+            reply: tx.clone(),
+        })?;
+    }
+    drop(tx);
+    let responses: Vec<_> = rx.iter().collect();
+    let snap = coord.metrics.snapshot();
+    coord.shutdown();
+    anyhow::ensure!(responses.len() == n, "lost responses: {}", responses.len());
+    println!("served {n} requests on {workers} worker(s), artifact batch {batch}");
+    println!(
+        "  throughput {:.0} req/s | mean batch {:.1} | e2e p50 {:.0} µs p99 {:.0} µs | exec p50 {:.0} µs",
+        snap.throughput_rps, snap.mean_batch, snap.e2e_p50_us, snap.e2e_p99_us, snap.exec_p50_us
+    );
+    let mean_prob: f64 =
+        responses.iter().map(|r| r.prob as f64).sum::<f64>() / n as f64;
+    println!("  mean p(click) {:.4}", mean_prob);
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let dataset = args.str_or("dataset", "criteo");
+    let dir = artifacts_dir(args);
+    let n = args.usize_or("n", 4096)?;
+    args.finish()?;
+    let prof = profile(&dataset)?;
+    let tf = TensorFile::read(&dir.join(format!("embeddings_{dataset}.bin")))?;
+    let store = EmbeddingStore::from_atns(&tf)?;
+    let mut rt = Runtime::open(&dir)?;
+    let artifact = Runtime::model_name(&dataset, 512);
+    let mut gen = Generator::new(prof.clone(), DEFAULT_SEED);
+    let splits = Splits::default();
+    let off = splits.offset("test");
+    let nd = prof.n_dense.max(1);
+    let mut probs = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    let t0 = Instant::now();
+    for start in (0..n).step_by(512) {
+        let count = 512.min(n - start);
+        let b = make_batch(&mut gen, off + start, count);
+        let mut dense = b.dense.clone();
+        dense.resize(512 * nd, 0.0);
+        let mut sparse = Vec::new();
+        store.gather(&b.ids, count, &mut sparse);
+        sparse.resize(512 * prof.n_sparse() * store.d_emb, 0.0);
+        let p = rt.infer(
+            &artifact,
+            &dense,
+            [512, nd],
+            &sparse,
+            [512, prof.n_sparse(), store.d_emb],
+        )?;
+        probs.extend_from_slice(&p[..count]);
+        labels.extend_from_slice(&b.labels);
+    }
+    let ll = autorac::metrics::logloss(&probs, &labels);
+    let auc = autorac::metrics::auc(&probs, &labels);
+    println!(
+        "eval {dataset} (PIM artifact, {n} test records, {:.1}s): LogLoss {ll:.4}  AUC {auc:.4}",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> anyhow::Result<()> {
+    let dataset = args.str_or("dataset", "criteo");
+    let n = args.usize_or("n", 5)?;
+    args.finish()?;
+    let prof = profile(&dataset)?;
+    println!(
+        "{dataset}: {} dense + {} sparse fields, cards {:?}…, zipf α {}",
+        prof.n_dense,
+        prof.n_sparse(),
+        &prof.cards[..4.min(prof.cards.len())],
+        prof.zipf_alpha
+    );
+    let mut gen = Generator::new(prof, DEFAULT_SEED);
+    let mut clicks = 0usize;
+    for rec in gen.block(0, n.max(1000)) {
+        clicks += rec.label as usize;
+    }
+    println!("empirical CTR over {} records: {:.3}", n.max(1000), clicks as f64 / n.max(1000) as f64);
+    for rec in gen.block(0, n) {
+        println!(
+            "  #{}: y={} ids[..6]={:?} dense[..4]={:?}",
+            rec.index,
+            rec.label as u8,
+            &rec.ids[..6.min(rec.ids.len())],
+            &rec.dense[..4.min(rec.dense.len())]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! Operator→PIM mapping engine (S8). `cost` holds the closed-form
+//! bit-serial dataflow math; `mapper` builds the execution DAG and the
+//! tile inventory for a genome under Smart (paper §3.2) or Naive
+//! (Table 3 comparison) mapping.
+
+pub mod cost;
+pub mod mapper;
+
+pub use cost::{cycle_time_ns, matmul_cost, OpCost};
+pub use mapper::{map_genome, MapStyle, MappedModel, MappedOp, OpKind};

@@ -1,0 +1,112 @@
+//! Model-quality metrics (S16): LogLoss and AUC, used by the rust-side
+//! evaluation of the served model (Table 2 verification) — mirrors
+//! `python/compile/model.py::{logloss, auc}`.
+
+/// Binary cross-entropy of probabilities against {0,1} labels.
+pub fn logloss(probs: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    assert!(!probs.is_empty());
+    let eps = 1e-7f64;
+    let mut acc = 0f64;
+    for (&p, &y) in probs.iter().zip(labels) {
+        let p = (p as f64).clamp(eps, 1.0 - eps);
+        let y = y as f64;
+        acc -= y * p.ln() + (1.0 - y) * (1.0 - p).ln();
+    }
+    acc / probs.len() as f64
+}
+
+/// Rank-based AUC (Mann–Whitney), with midrank tie handling.
+pub fn auc(probs: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    let n = probs.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| probs[a].partial_cmp(&probs[b]).unwrap());
+    let mut ranks = vec![0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && probs[order[j + 1]] == probs[order[i]] {
+            j += 1;
+        }
+        let midrank = 0.5 * (i + j) as f64 + 1.0;
+        for &k in &order[i..=j] {
+            ranks[k] = midrank;
+        }
+        i = j + 1;
+    }
+    let n_pos: f64 = labels.iter().map(|&y| y as f64).sum();
+    let n_neg = n as f64 - n_pos;
+    if n_pos == 0.0 || n_neg == 0.0 {
+        return 0.5;
+    }
+    let rank_sum: f64 = ranks
+        .iter()
+        .zip(labels)
+        .filter(|(_, &y)| y > 0.5)
+        .map(|(r, _)| r)
+        .sum();
+    (rank_sum - n_pos * (n_pos + 1.0) / 2.0) / (n_pos * n_neg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_ranking_has_auc_one() {
+        let probs = [0.1, 0.2, 0.8, 0.9];
+        let labels = [0.0, 0.0, 1.0, 1.0];
+        assert!((auc(&probs, &labels) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_ties_have_auc_half() {
+        let probs = [0.5; 6];
+        let labels = [1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        assert!((auc(&probs, &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reversed_ranking_has_auc_zero() {
+        let probs = [0.9, 0.8, 0.1];
+        let labels = [0.0, 0.0, 1.0];
+        assert!(auc(&probs, &labels) < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_labels_return_half() {
+        assert_eq!(auc(&[0.1, 0.9], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn logloss_matches_closed_form() {
+        let probs = [0.8f32, 0.2];
+        let labels = [1.0f32, 0.0];
+        let want = -((0.8f64).ln() + (0.8f64).ln()) / 2.0;
+        // f32 literals carry ~1e-8 representation error into the f64 math
+        assert!((logloss(&probs, &labels) - want).abs() < 1e-7);
+    }
+
+    #[test]
+    fn logloss_clamps_extremes() {
+        let l = logloss(&[0.0, 1.0], &[1.0, 0.0]);
+        assert!(l.is_finite() && l > 10.0);
+    }
+
+    #[test]
+    fn property_auc_is_order_invariant_under_monotone_transform() {
+        use crate::util::qcheck::qcheck;
+        qcheck(50, |g| {
+            let n = g.usize(4, 64);
+            let probs = g.vec_f32(n, 0.01, 0.99);
+            let labels: Vec<f32> =
+                (0..n).map(|_| if g.bool() { 1.0 } else { 0.0 }).collect();
+            let a1 = auc(&probs, &labels);
+            let squashed: Vec<f32> = probs.iter().map(|p| p * p).collect();
+            let a2 = auc(&squashed, &labels);
+            crate::prop_assert!((a1 - a2).abs() < 1e-9, "{a1} vs {a2}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,238 @@
+//! Calibrated accuracy surrogate (S12).
+//!
+//! The paper's search fine-tunes each child on GPU and reads off its
+//! test loss (Algorithm 1, line 9). Offline we substitute the ridge
+//! model fitted by the build-time calibration pass
+//! (`python/compile/train.py::fit_surrogate` → `surrogate.json`): the
+//! same genome featurization (MUST mirror `genome_features`) with
+//! per-dataset intercepts, plus the ReRAM non-ideality penalty from
+//! `pim::noise` for the chosen hardware genome. DESIGN.md §1 documents
+//! the substitution.
+
+use super::genome::{DenseOp, Genome, Interaction, SparseOp};
+use crate::pim::NoiseModel;
+use crate::util::json::Json;
+
+pub struct Surrogate {
+    /// slope weights in FEATURE_NAMES order, then per-dataset intercepts
+    weights: Vec<f64>,
+    datasets: Vec<String>,
+    noise: NoiseModel,
+    pub rmse: f64,
+    /// trust region: feature box + per-dataset prediction bounds from
+    /// the calibration runs (linear fits must not extrapolate — without
+    /// this the search exploits the surrogate's unbounded slopes)
+    feature_min: Vec<f64>,
+    feature_max: Vec<f64>,
+    logloss_bounds: Vec<(f64, f64)>,
+}
+
+pub const FEATURE_NAMES: [&str; 11] = [
+    "bias",
+    "log10_params",
+    "frac_dp",
+    "frac_fm",
+    "frac_dsi",
+    "frac_efc",
+    "frac_fc_4bit",
+    "frac_efc_4bit",
+    "frac_inter_4bit",
+    "d_emb_64",
+    "mean_dense_dim_512",
+];
+
+/// Genome featurization — mirror of train.py::genome_features.
+pub fn genome_features(g: &Genome) -> Vec<f64> {
+    let n = g.blocks.len() as f64;
+    let count = |f: &dyn Fn(&super::genome::Block) -> bool| {
+        g.blocks.iter().filter(|b| f(b)).count() as f64
+    };
+    let n_dp = count(&|b| b.dense_op == DenseOp::Dp);
+    let n_fm = count(&|b| b.interaction == Interaction::Fm);
+    let n_dsi = count(&|b| b.interaction == Interaction::Dsi);
+    let n_efc = count(&|b| b.sparse_op == SparseOp::Efc);
+    let fc4 = count(&|b| b.dense_wbits == 4) / n;
+    let efc4 = count(&|b| b.sparse_wbits == 4) / n;
+    let int4 = count(&|b| b.inter_wbits == 4) / n;
+    let mean_dim =
+        g.blocks.iter().map(|b| b.dense_dim).sum::<usize>() as f64 / n;
+    let shapes = g.shapes().expect("valid genome");
+    let params: usize = shapes.iter().map(|s| s.din * s.dout).sum();
+    vec![
+        1.0,
+        (1.0 + params as f64).log10(),
+        n_dp / n,
+        n_fm / n,
+        n_dsi / n,
+        n_efc / n,
+        fc4,
+        efc4,
+        int4,
+        g.d_emb as f64 / 64.0,
+        mean_dim / 512.0,
+    ]
+}
+
+impl Surrogate {
+    /// Load from `artifacts/calibration/surrogate.json`.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Surrogate> {
+        let j = Json::read_file(path)?;
+        let weights = j.req_f64s("weights")?;
+        let datasets = j
+            .req_arr("datasets")?
+            .iter()
+            .map(|d| d.as_str().unwrap_or_default().to_string())
+            .collect::<Vec<_>>();
+        anyhow::ensure!(
+            weights.len() == FEATURE_NAMES.len() + datasets.len(),
+            "weight vector length {} != {} features + {} datasets",
+            weights.len(),
+            FEATURE_NAMES.len(),
+            datasets.len()
+        );
+        let n_feat = FEATURE_NAMES.len();
+        let feature_min = j
+            .req_f64s("feature_min")
+            .unwrap_or_else(|_| vec![f64::NEG_INFINITY; n_feat]);
+        let feature_max = j
+            .req_f64s("feature_max")
+            .unwrap_or_else(|_| vec![f64::INFINITY; n_feat]);
+        let logloss_bounds = datasets
+            .iter()
+            .map(|d| {
+                let lo = j
+                    .at(&["logloss_min", d])
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.02);
+                let hi = j
+                    .at(&["logloss_max", d])
+                    .and_then(Json::as_f64)
+                    .unwrap_or(1.0);
+                // allow modest improvement past the best observed run —
+                // the search is supposed to find better models, just not
+                // impossibly better ones
+                (lo * 0.95, hi * 1.05)
+            })
+            .collect();
+        Ok(Surrogate {
+            weights,
+            datasets,
+            noise: NoiseModel::default(),
+            rmse: j.req_f64("rmse").unwrap_or(0.0),
+            feature_min,
+            feature_max,
+            logloss_bounds,
+        })
+    }
+
+    /// Load the default artifact location, falling back to the built-in
+    /// prior when artifacts have not been built (tests / cold checkouts).
+    pub fn load_default() -> Surrogate {
+        let path = std::path::Path::new("artifacts/calibration/surrogate.json");
+        Surrogate::load(path).unwrap_or_else(|_| Surrogate::prior())
+    }
+
+    /// A physically-sensible prior (used when no calibration exists):
+    /// more capacity and interactions help slightly; 4-bit weights hurt
+    /// (Figure 2's knee); values are in the range the calibration fits.
+    pub fn prior() -> Surrogate {
+        let mut weights = vec![
+            0.0,    // bias (folded into dataset intercepts)
+            -0.004, // log10_params
+            -0.006, // frac_dp
+            -0.010, // frac_fm
+            -0.003, // frac_dsi
+            -0.006, // frac_efc
+            0.012,  // frac_fc_4bit
+            0.008,  // frac_efc_4bit
+            0.005,  // frac_inter_4bit
+            -0.004, // d_emb_64
+            -0.003, // mean_dense_dim_512
+        ];
+        weights.extend([0.60, 0.42, 0.20]); // avazu, criteo, kdd intercepts
+        Surrogate {
+            weights,
+            datasets: vec![
+                "avazu".to_string(),
+                "criteo".to_string(),
+                "kdd".to_string(),
+            ],
+            noise: NoiseModel::default(),
+            rmse: f64::NAN,
+            feature_min: vec![f64::NEG_INFINITY; FEATURE_NAMES.len()],
+            feature_max: vec![f64::INFINITY; FEATURE_NAMES.len()],
+            logloss_bounds: vec![(0.30, 0.75), (0.30, 0.75), (0.08, 0.40)],
+        }
+    }
+
+    /// Predicted test LogLoss for a genome (model surrogate + ReRAM
+    /// non-ideality penalty for the hardware genome), trust-region
+    /// clipped to the calibration cloud.
+    pub fn logloss(&self, g: &Genome) -> f64 {
+        let mut x = genome_features(g);
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = v.clamp(self.feature_min[i], self.feature_max[i]);
+        }
+        let mut bounds = (0.02, 1.5);
+        for (ds, b) in self.datasets.iter().zip(&self.logloss_bounds) {
+            let hot = *ds == g.dataset;
+            x.push(if hot { 1.0 } else { 0.0 });
+            if hot {
+                bounds = *b;
+            }
+        }
+        let model: f64 = x.iter().zip(&self.weights).map(|(a, b)| a * b).sum();
+        model.clamp(bounds.0, bounds.1) + self.noise.logloss_penalty(&g.pim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nas::genome::autorac_best;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prior_predicts_plausible_loglosses() {
+        let s = Surrogate::prior();
+        for ds in ["criteo", "avazu", "kdd"] {
+            let ll = s.logloss(&autorac_best(ds));
+            assert!(ll > 0.05 && ll < 1.0, "{ds}: {ll}");
+        }
+    }
+
+    #[test]
+    fn four_bit_everywhere_predicts_worse_loss() {
+        let s = Surrogate::prior();
+        let g8 = autorac_best("criteo");
+        let mut g4 = g8.clone();
+        for b in &mut g4.blocks {
+            b.dense_wbits = 4;
+            b.sparse_wbits = 4;
+            b.inter_wbits = 4;
+        }
+        assert!(s.logloss(&g4) > s.logloss(&g8));
+    }
+
+    #[test]
+    fn features_have_fixed_length_and_range() {
+        let mut rng = Rng::new(1);
+        for i in 0..20 {
+            let g = crate::nas::space::random_genome(&mut rng, "kdd", &format!("r{i}"));
+            let f = genome_features(&g);
+            assert_eq!(f.len(), FEATURE_NAMES.len());
+            assert!(f.iter().all(|v| v.is_finite()));
+            assert_eq!(f[0], 1.0);
+        }
+    }
+
+    #[test]
+    fn loads_calibration_artifact_when_present() {
+        let path = std::path::Path::new("artifacts/calibration/surrogate.json");
+        if path.exists() {
+            let s = Surrogate::load(path).unwrap();
+            let ll = s.logloss(&autorac_best("criteo"));
+            assert!(ll > 0.1 && ll < 1.5, "{ll}");
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Regularized-evolution co-search — Algorithm 1, line for line.
+//!
+//! criterion = test_loss + Σᵢ λᵢ · metricᵢ / targetᵢ over
+//! metrics = [1/throughput, area, power] from the behavioral simulator
+//! (smart mapping), with test_loss from the calibrated surrogate.
+
+use super::accuracy::Surrogate;
+use super::genome::Genome;
+use super::space::{mutate, random_genome};
+use crate::mapping::{map_genome, MapStyle};
+use crate::pim::TechParams;
+use crate::sim::{simulate, SimReport, Workload};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    pub dataset: String,
+    pub population: usize,
+    pub generations: usize,
+    pub children_per_gen: usize,
+    pub mutations_per_child: usize,
+    /// tournament size for Sample_and_select
+    pub sample_size: usize,
+    /// λ weights for [1/throughput, area, power]
+    pub lambdas: [f64; 3],
+    pub seed: u64,
+    /// requests per candidate simulation
+    pub sim_requests: usize,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            dataset: "criteo".to_string(),
+            population: 32,
+            generations: 240,
+            children_per_gen: 8,
+            mutations_per_child: 2,
+            sample_size: 8,
+            lambdas: [0.05, 0.05, 0.05],
+            seed: 20_250_630,
+            sim_requests: 48,
+        }
+    }
+}
+
+/// One evaluated candidate.
+#[derive(Clone, Debug)]
+pub struct Individual {
+    pub genome: Genome,
+    pub test_loss: f64,
+    pub metrics: [f64; 3],
+    pub criterion: f64,
+    pub generation: usize,
+}
+
+/// Search trace (drives Figure 5).
+#[derive(Clone, Debug, Default)]
+pub struct SearchTrace {
+    /// best criterion after each generation
+    pub best_criterion: Vec<f64>,
+    /// population-mean criterion after each generation
+    pub mean_criterion: Vec<f64>,
+    pub evaluations: usize,
+}
+
+impl SearchTrace {
+    /// Figure 5's y-axis: percentage drop of the best criterion relative
+    /// to generation 0 (lower is better).
+    pub fn pct_drop(&self) -> Vec<f64> {
+        let base = self.best_criterion.first().copied().unwrap_or(1.0);
+        self.best_criterion
+            .iter()
+            .map(|c| 100.0 * (c - base) / base)
+            .collect()
+    }
+}
+
+pub struct Search {
+    pub cfg: SearchConfig,
+    tech: TechParams,
+    surrogate: Surrogate,
+    /// design targets [1/throughput, area, power] (Algorithm 1 inputs)
+    pub targets: [f64; 3],
+    rng: Rng,
+    pub population: Vec<Individual>,
+    pub trace: SearchTrace,
+    generation: usize,
+}
+
+impl Search {
+    /// Targets default to the metrics of the hand-crafted NASRec design
+    /// — "reach or beat the manual design on every axis".
+    pub fn new(cfg: SearchConfig, surrogate: Surrogate) -> anyhow::Result<Search> {
+        let tech = TechParams::default();
+        let reference = super::genome::nasrec_like(&cfg.dataset);
+        let r = Self::sim_genome(&reference, &tech, cfg.sim_requests)?;
+        let targets = [1.0 / r.throughput_rps, r.area_mm2, r.power_mw];
+        Ok(Search {
+            rng: Rng::new(cfg.seed),
+            cfg,
+            tech,
+            surrogate,
+            targets,
+            population: Vec::new(),
+            trace: SearchTrace::default(),
+            generation: 0,
+        })
+    }
+
+    fn sim_genome(
+        g: &Genome,
+        tech: &TechParams,
+        requests: usize,
+    ) -> anyhow::Result<SimReport> {
+        let mapped = map_genome(g, tech, MapStyle::Smart)?;
+        Ok(simulate(
+            &mapped,
+            None,
+            &Workload {
+                n_requests: requests,
+                ..Workload::default()
+            },
+        ))
+    }
+
+    /// Evaluate a genome → Individual (Algorithm 1 lines 9–11).
+    pub fn evaluate(&mut self, genome: Genome) -> anyhow::Result<Individual> {
+        let test_loss = self.surrogate.logloss(&genome);
+        let r = Self::sim_genome(&genome, &self.tech, self.cfg.sim_requests)?;
+        let metrics = [1.0 / r.throughput_rps, r.area_mm2, r.power_mw];
+        let hw_term: f64 = (0..3)
+            .map(|i| self.cfg.lambdas[i] * metrics[i] / self.targets[i])
+            .sum();
+        self.trace.evaluations += 1;
+        Ok(Individual {
+            genome,
+            test_loss,
+            metrics,
+            criterion: test_loss + hw_term,
+            generation: self.generation,
+        })
+    }
+
+    /// Line 1: all_populations ← random_search(supernet).
+    pub fn init_population(&mut self) -> anyhow::Result<()> {
+        let mut rng = self.rng.substream("init");
+        for i in 0..self.cfg.population {
+            let g = random_genome(&mut rng, &self.cfg.dataset.clone(), &format!("init{i}"));
+            let ind = self.evaluate(g)?;
+            self.population.push(ind);
+        }
+        self.record_generation();
+        Ok(())
+    }
+
+    fn record_generation(&mut self) {
+        let best = self
+            .population
+            .iter()
+            .map(|i| i.criterion)
+            .fold(f64::INFINITY, f64::min);
+        let mean = self.population.iter().map(|i| i.criterion).sum::<f64>()
+            / self.population.len().max(1) as f64;
+        self.trace.best_criterion.push(best);
+        self.trace.mean_criterion.push(mean);
+    }
+
+    /// Lines 3–15: one generation.
+    pub fn step(&mut self) -> anyhow::Result<()> {
+        self.generation += 1;
+        // Sample_and_select: tournament of `sample_size`, best criterion.
+        let mut rng = self.rng.substream(&format!("gen/{}", self.generation));
+        let parent_idx = (0..self.cfg.sample_size)
+            .map(|_| rng.below(self.population.len() as u64) as usize)
+            .min_by(|&a, &b| {
+                self.population[a]
+                    .criterion
+                    .partial_cmp(&self.population[b].criterion)
+                    .unwrap()
+            })
+            .unwrap();
+        let parent = self.population[parent_idx].genome.clone();
+        for c in 0..self.cfg.children_per_gen {
+            let mut choice = parent.clone();
+            for _ in 0..self.cfg.mutations_per_child {
+                choice = mutate(&choice, &mut rng);
+            }
+            choice.name = format!("g{}c{}", self.generation, c);
+            let ind = self.evaluate(choice)?;
+            self.population.push(ind);
+        }
+        // sort by criterion; remove last num_children entries (line 14–15)
+        self.population
+            .sort_by(|a, b| a.criterion.partial_cmp(&b.criterion).unwrap());
+        self.population.truncate(self.cfg.population);
+        self.record_generation();
+        Ok(())
+    }
+
+    /// Run the full search; returns the best individual.
+    pub fn run(&mut self) -> anyhow::Result<Individual> {
+        if self.population.is_empty() {
+            self.init_population()?;
+        }
+        for _ in 0..self.cfg.generations {
+            self.step()?;
+        }
+        Ok(self.best().clone())
+    }
+
+    pub fn best(&self) -> &Individual {
+        self.population
+            .iter()
+            .min_by(|a, b| a.criterion.partial_cmp(&b.criterion).unwrap())
+            .expect("non-empty population")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> SearchConfig {
+        SearchConfig {
+            generations: 12,
+            population: 12,
+            children_per_gen: 4,
+            sample_size: 4,
+            sim_requests: 16,
+            ..SearchConfig::default()
+        }
+    }
+
+    #[test]
+    fn search_improves_criterion() {
+        let mut s = Search::new(quick_cfg(), Surrogate::prior()).unwrap();
+        let best = s.run().unwrap();
+        let first = s.trace.best_criterion[0];
+        assert!(
+            best.criterion < first,
+            "no improvement: {} -> {}",
+            first,
+            best.criterion
+        );
+        // population invariant (Algorithm 1 line 15)
+        assert_eq!(s.population.len(), s.cfg.population);
+    }
+
+    #[test]
+    fn best_criterion_is_monotone_nonincreasing() {
+        let mut s = Search::new(quick_cfg(), Surrogate::prior()).unwrap();
+        s.run().unwrap();
+        for w in s.trace.best_criterion.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "best went up: {:?}", w);
+        }
+    }
+
+    #[test]
+    fn search_is_deterministic_per_seed() {
+        let run = |seed| {
+            let mut cfg = quick_cfg();
+            cfg.seed = seed;
+            let mut s = Search::new(cfg, Surrogate::prior()).unwrap();
+            s.run().unwrap().genome.hash()
+        };
+        assert_eq!(run(1), run(1));
+        assert_ne!(run(1), run(2));
+    }
+
+    #[test]
+    fn pct_drop_starts_at_zero_and_decreases() {
+        let mut s = Search::new(quick_cfg(), Surrogate::prior()).unwrap();
+        s.run().unwrap();
+        let drop = s.trace.pct_drop();
+        assert_eq!(drop[0], 0.0);
+        assert!(*drop.last().unwrap() <= 0.0);
+    }
+
+    #[test]
+    fn all_evaluated_genomes_are_feasible() {
+        let mut s = Search::new(quick_cfg(), Surrogate::prior()).unwrap();
+        s.run().unwrap();
+        for ind in &s.population {
+            ind.genome.validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,398 @@
+//! Architecture genome — rust mirror of `python/compile/arch.py`.
+//!
+//! JSON-compatible with the python side (the build path emits
+//! `artifacts/genomes/*.json`, the search emits new ones that python can
+//! retrain). `rust/tests/genome_parity.rs` pins the golden files.
+
+use crate::data::profile;
+use crate::pim::PimConfig;
+use crate::util::json::Json;
+
+pub const DENSE_DIMS: [usize; 8] = [16, 32, 64, 128, 256, 512, 768, 1024];
+pub const SPARSE_DIMS: [usize; 4] = [16, 32, 48, 64];
+pub const WEIGHT_BITS: [usize; 2] = [4, 8];
+pub const SPARSE_FEATURES: [usize; 4] = [4, 8, 16, 32];
+pub const NUM_BLOCKS: usize = 7;
+pub const DSI_FEATURES: usize = 2;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DenseOp {
+    Fc,
+    Dp,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SparseOp {
+    Efc,
+    Identity,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Interaction {
+    None,
+    Dsi,
+    Fm,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Block {
+    pub dense_op: DenseOp,
+    pub dense_dim: usize,
+    pub dense_wbits: usize,
+    pub sparse_op: SparseOp,
+    pub sparse_features: usize,
+    pub sparse_wbits: usize,
+    pub interaction: Interaction,
+    pub inter_wbits: usize,
+    /// input sources: 0 = raw inputs, j≥1 = block j's output
+    pub dense_in: Vec<usize>,
+    pub sparse_in: Vec<usize>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Genome {
+    pub name: String,
+    pub dataset: String,
+    pub d_emb: usize,
+    pub blocks: Vec<Block>,
+    pub final_wbits: usize,
+    pub pim: PimConfig,
+}
+
+/// Per-block inferred IO shapes (mirror of arch/model.py::infer_shapes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockShape {
+    /// dense input dim (after concat)
+    pub din: usize,
+    /// dense output dim
+    pub dout: usize,
+    /// sparse input feature count (after concat)
+    pub nin: usize,
+    /// sparse output feature count (incl. DSI extension)
+    pub nout: usize,
+}
+
+impl Genome {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(SPARSE_DIMS.contains(&self.d_emb), "d_emb {}", self.d_emb);
+        anyhow::ensure!(!self.blocks.is_empty(), "no blocks");
+        anyhow::ensure!(self.pim.feasible(), "PIM genome violates the ADC rule");
+        anyhow::ensure!(WEIGHT_BITS.contains(&self.final_wbits), "final_wbits");
+        for (i, b) in self.blocks.iter().enumerate() {
+            anyhow::ensure!(DENSE_DIMS.contains(&b.dense_dim), "block {i} dense_dim");
+            anyhow::ensure!(
+                SPARSE_FEATURES.contains(&b.sparse_features),
+                "block {i} sparse_features"
+            );
+            for w in [b.dense_wbits, b.sparse_wbits, b.inter_wbits] {
+                anyhow::ensure!(WEIGHT_BITS.contains(&w), "block {i} wbits {w}");
+            }
+            anyhow::ensure!(
+                !b.dense_in.is_empty() && b.dense_in.iter().all(|&j| j <= i),
+                "block {i} dense_in"
+            );
+            anyhow::ensure!(
+                !b.sparse_in.is_empty() && b.sparse_in.iter().all(|&j| j <= i),
+                "block {i} sparse_in"
+            );
+        }
+        Ok(())
+    }
+
+    /// DP engine stack height: ⌈√(2·dim_d)⌉ (paper §3.2).
+    pub fn dp_rows(dense_dim: usize) -> usize {
+        (2.0 * dense_dim as f64).sqrt().ceil() as usize
+    }
+
+    /// Mirror of python infer_shapes (shape semantics contract).
+    pub fn shapes(&self) -> anyhow::Result<Vec<BlockShape>> {
+        let prof = profile(&self.dataset)?;
+        let mut dense_dims = vec![prof.n_dense.max(1)];
+        let mut sparse_ns = vec![prof.n_sparse()];
+        let mut out = Vec::with_capacity(self.blocks.len());
+        for b in &self.blocks {
+            let din = b.dense_in.iter().map(|&j| dense_dims[j]).sum();
+            let nin: usize = b.sparse_in.iter().map(|&j| sparse_ns[j]).sum();
+            let mut nout = match b.sparse_op {
+                SparseOp::Efc => b.sparse_features,
+                SparseOp::Identity => nin,
+            };
+            if b.interaction == Interaction::Dsi {
+                nout += DSI_FEATURES;
+            }
+            out.push(BlockShape {
+                din,
+                dout: b.dense_dim,
+                nin,
+                nout,
+            });
+            dense_dims.push(b.dense_dim);
+            sparse_ns.push(nout);
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // JSON (byte-compatible with arch.py)
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|b| {
+                Json::from_pairs(vec![
+                    ("dense_op", Json::Str(match b.dense_op {
+                        DenseOp::Fc => "fc".into(),
+                        DenseOp::Dp => "dp".into(),
+                    })),
+                    ("dense_dim", Json::Num(b.dense_dim as f64)),
+                    ("dense_wbits", Json::Num(b.dense_wbits as f64)),
+                    ("sparse_op", Json::Str(match b.sparse_op {
+                        SparseOp::Efc => "efc".into(),
+                        SparseOp::Identity => "identity".into(),
+                    })),
+                    ("sparse_features", Json::Num(b.sparse_features as f64)),
+                    ("sparse_wbits", Json::Num(b.sparse_wbits as f64)),
+                    ("interaction", Json::Str(match b.interaction {
+                        Interaction::None => "none".into(),
+                        Interaction::Dsi => "dsi".into(),
+                        Interaction::Fm => "fm".into(),
+                    })),
+                    ("inter_wbits", Json::Num(b.inter_wbits as f64)),
+                    ("dense_in", Json::arr_usize(&b.dense_in)),
+                    ("sparse_in", Json::arr_usize(&b.sparse_in)),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("d_emb", Json::Num(self.d_emb as f64)),
+            ("blocks", Json::Arr(blocks)),
+            ("final_wbits", Json::Num(self.final_wbits as f64)),
+            ("pim", self.pim.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Genome> {
+        let blocks = j
+            .req_arr("blocks")?
+            .iter()
+            .map(|b| -> anyhow::Result<Block> {
+                Ok(Block {
+                    dense_op: match b.req_str("dense_op")? {
+                        "fc" => DenseOp::Fc,
+                        "dp" => DenseOp::Dp,
+                        o => anyhow::bail!("dense_op {o}"),
+                    },
+                    dense_dim: b.req_usize("dense_dim")?,
+                    dense_wbits: b.req_usize("dense_wbits")?,
+                    sparse_op: match b.req_str("sparse_op")? {
+                        "efc" => SparseOp::Efc,
+                        "identity" => SparseOp::Identity,
+                        o => anyhow::bail!("sparse_op {o}"),
+                    },
+                    sparse_features: b.req_usize("sparse_features")?,
+                    sparse_wbits: b.req_usize("sparse_wbits")?,
+                    interaction: match b.req_str("interaction")? {
+                        "none" => Interaction::None,
+                        "dsi" => Interaction::Dsi,
+                        "fm" => Interaction::Fm,
+                        o => anyhow::bail!("interaction {o}"),
+                    },
+                    inter_wbits: b.req_usize("inter_wbits")?,
+                    dense_in: b
+                        .req_arr("dense_in")?
+                        .iter()
+                        .map(|v| v.as_usize().unwrap())
+                        .collect(),
+                    sparse_in: b
+                        .req_arr("sparse_in")?
+                        .iter()
+                        .map(|v| v.as_usize().unwrap())
+                        .collect(),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let g = Genome {
+            name: j.req_str("name")?.to_string(),
+            dataset: j.req_str("dataset")?.to_string(),
+            d_emb: j.req_usize("d_emb")?,
+            blocks,
+            final_wbits: j.req_usize("final_wbits")?,
+            pim: PimConfig::from_json(
+                j.get("pim").ok_or_else(|| anyhow::anyhow!("missing pim"))?,
+            )?,
+        };
+        g.validate()?;
+        Ok(g)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Genome> {
+        Genome::from_json(&Json::read_file(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        self.to_json().write_file(path)
+    }
+
+    /// Stable content hash (population dedup).
+    pub fn hash(&self) -> u64 {
+        let s = self.to_json().to_string_compact();
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in s.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+}
+
+/// Built-in reference genome mirroring arch.py::autorac_best (used by
+/// tests and as the search's warm-start).
+pub fn autorac_best(dataset: &str) -> Genome {
+    let b = |dense_op, dense_dim, dense_wbits, sparse_op, sparse_features,
+             sparse_wbits, interaction, inter_wbits, dense_in: &[usize],
+             sparse_in: &[usize]| Block {
+        dense_op,
+        dense_dim,
+        dense_wbits,
+        sparse_op,
+        sparse_features,
+        sparse_wbits,
+        interaction,
+        inter_wbits,
+        dense_in: dense_in.to_vec(),
+        sparse_in: sparse_in.to_vec(),
+    };
+    use DenseOp::*;
+    use Interaction::*;
+    use SparseOp::*;
+    Genome {
+        name: format!("autorac-{dataset}"),
+        dataset: dataset.to_string(),
+        d_emb: 32,
+        blocks: vec![
+            b(Fc, 256, 8, Efc, 16, 8, Fm, 8, &[0], &[0]),
+            b(Fc, 128, 4, Efc, 16, 8, None, 8, &[1], &[1]),
+            b(Dp, 128, 4, Efc, 8, 8, None, 4, &[1, 2], &[2]),
+            b(Fc, 128, 4, Identity, 8, 8, Fm, 4, &[3], &[3]),
+            b(Fc, 128, 4, Efc, 8, 8, Dsi, 4, &[3, 4], &[4]),
+            b(Dp, 64, 8, Identity, 8, 8, Fm, 8, &[5], &[5]),
+            b(Fc, 128, 8, Identity, 8, 8, None, 8, &[5, 6], &[6]),
+        ],
+        final_wbits: 8,
+        pim: PimConfig {
+            xbar: 64,
+            dac_bits: 1,
+            cell_bits: 2,
+            adc_bits: 8,
+            ..PimConfig::default()
+        },
+    }
+}
+
+/// Mirror of arch.py::nasrec_like.
+pub fn nasrec_like(dataset: &str) -> Genome {
+    use DenseOp::*;
+    use Interaction::*;
+    use SparseOp::*;
+    let b = |dense_op, dense_dim, sparse_op, sparse_features, interaction,
+             dense_in: &[usize], sparse_in: &[usize]| Block {
+        dense_op,
+        dense_dim,
+        dense_wbits: 8,
+        sparse_op,
+        sparse_features,
+        sparse_wbits: 8,
+        interaction,
+        inter_wbits: 8,
+        dense_in: dense_in.to_vec(),
+        sparse_in: sparse_in.to_vec(),
+    };
+    Genome {
+        name: format!("nasrec-{dataset}"),
+        dataset: dataset.to_string(),
+        d_emb: 32,
+        blocks: vec![
+            b(Fc, 256, Efc, 16, Fm, &[0], &[0]),
+            b(Dp, 128, Efc, 16, None, &[1], &[1]),
+            b(Fc, 256, Efc, 8, Dsi, &[2], &[2]),
+            b(Fc, 128, Identity, 8, Fm, &[2, 3], &[3]),
+            b(Fc, 128, Efc, 8, None, &[4], &[4]),
+            b(Dp, 64, Identity, 8, Fm, &[5], &[5]),
+            b(Fc, 64, Identity, 8, None, &[5, 6], &[6]),
+        ],
+        final_wbits: 8,
+        pim: PimConfig {
+            xbar: 64,
+            dac_bits: 1,
+            cell_bits: 1,
+            adc_bits: 8,
+            ..PimConfig::default()
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_genomes_validate() {
+        for ds in ["criteo", "avazu", "kdd"] {
+            autorac_best(ds).validate().unwrap();
+            nasrec_like(ds).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn shapes_mirror_python_semantics() {
+        let g = autorac_best("criteo");
+        let sh = g.shapes().unwrap();
+        // block0: raw dense 13 → 256; raw sparse 26 → efc 16
+        assert_eq!(sh[0], BlockShape { din: 13, dout: 256, nin: 26, nout: 16 });
+        // block4 has DSI: nout = sparse_features + DSI_FEATURES
+        assert_eq!(sh[4].nout, 8 + DSI_FEATURES);
+        // block6 concatenates blocks 5 and 6 dense outputs (64 + 128)
+        assert_eq!(sh[6].din, 64 + 128);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_genome() {
+        let g = autorac_best("avazu");
+        let j = g.to_json();
+        let g2 = Genome::from_json(&j).unwrap();
+        assert_eq!(g, g2);
+        assert_eq!(g.hash(), g2.hash());
+    }
+
+    #[test]
+    fn invalid_genomes_are_rejected() {
+        let mut g = autorac_best("criteo");
+        g.d_emb = 100;
+        assert!(g.validate().is_err());
+        let mut g2 = autorac_best("criteo");
+        g2.blocks[0].dense_in = vec![5]; // forward reference
+        assert!(g2.validate().is_err());
+        let mut g3 = autorac_best("criteo");
+        g3.pim.dac_bits = 2;
+        g3.pim.cell_bits = 2; // 64·3·3 = 576 > 255
+        assert!(g3.validate().is_err());
+    }
+
+    #[test]
+    fn dp_rows_formula() {
+        assert_eq!(Genome::dp_rows(128), 16);
+        assert_eq!(Genome::dp_rows(64), 12); // ⌈√128⌉ = 12
+    }
+
+    #[test]
+    fn hash_distinguishes_genomes() {
+        let a = autorac_best("criteo");
+        let mut b = a.clone();
+        b.blocks[3].dense_wbits = 8;
+        assert_ne!(a.hash(), b.hash());
+    }
+}

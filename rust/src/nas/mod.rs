@@ -1,0 +1,13 @@
+//! NAS subsystem (S11/S12): genome schema, design-space operations,
+//! regularized evolution (Algorithm 1), and the calibrated accuracy
+//! surrogate.
+
+pub mod accuracy;
+pub mod evolution;
+pub mod genome;
+pub mod space;
+
+pub use accuracy::{genome_features, Surrogate};
+pub use evolution::{Individual, Search, SearchConfig, SearchTrace};
+pub use genome::{autorac_best, nasrec_like, Block, BlockShape, DenseOp, Genome, Interaction, SparseOp};
+pub use space::{design_space_size, mutate, random_genome};

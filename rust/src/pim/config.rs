@@ -1,0 +1,190 @@
+//! PIM configuration — the searched ReRAM genome half (Table 1) plus the
+//! integer quantities derived from it. Rust mirror of
+//! `python/compile/kernels/ref.py::PimConfig`.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PimConfig {
+    /// crossbar rows/cols per tile (16/32/64)
+    pub xbar: usize,
+    /// DAC resolution (1/2)
+    pub dac_bits: usize,
+    /// memristor (cell) precision (1/2)
+    pub cell_bits: usize,
+    /// ADC resolution (4/6/8)
+    pub adc_bits: usize,
+    /// activation bits (fixed 8 in AutoRAC's space)
+    pub x_bits: usize,
+    /// weight bits for the operator currently mapped (4/8)
+    pub w_bits: usize,
+}
+
+impl Default for PimConfig {
+    fn default() -> Self {
+        PimConfig {
+            xbar: 64,
+            dac_bits: 1,
+            cell_bits: 2,
+            adc_bits: 8,
+            x_bits: 8,
+            w_bits: 8,
+        }
+    }
+}
+
+pub const XBAR_SIZES: [usize; 3] = [16, 32, 64];
+pub const DAC_OPTIONS: [usize; 2] = [1, 2];
+pub const CELL_OPTIONS: [usize; 2] = [1, 2];
+pub const ADC_OPTIONS: [usize; 3] = [4, 6, 8];
+
+impl PimConfig {
+    /// input bit-serial steps
+    pub fn n_chunks(&self) -> usize {
+        self.x_bits.div_ceil(self.dac_bits)
+    }
+
+    /// weight magnitude bit planes (sign via differential pair)
+    pub fn n_planes(&self) -> usize {
+        (self.w_bits - 1).div_ceil(self.cell_bits)
+    }
+
+    /// largest analog column sum a row-tile can produce
+    pub fn adc_max_in(&self) -> i64 {
+        (self.xbar as i64)
+            * (((1i64 << self.dac_bits) - 1))
+            * (((1i64 << self.cell_bits) - 1))
+    }
+
+    /// integer LSB of the ADC transfer function (≥1)
+    pub fn adc_step(&self) -> i64 {
+        let levels = (1i64 << self.adc_bits) - 1;
+        1.max((self.adc_max_in() + levels - 1) / levels)
+    }
+
+    /// Paper §3.1: only DAC×cell×crossbar combinations whose full-scale
+    /// column sum fits the ADC are allowed ("to avoid any loss during
+    /// the analog-to-digital conversion process").
+    pub fn feasible(&self) -> bool {
+        self.adc_max_in() <= (1i64 << self.adc_bits) - 1
+    }
+
+    pub fn with_wbits(mut self, w_bits: usize) -> Self {
+        self.w_bits = w_bits;
+        self
+    }
+
+    /// Enumerate every feasible (xbar, dac, cell, adc) combination.
+    pub fn enumerate_feasible() -> Vec<PimConfig> {
+        let mut out = Vec::new();
+        for &xbar in &XBAR_SIZES {
+            for &dac_bits in &DAC_OPTIONS {
+                for &cell_bits in &CELL_OPTIONS {
+                    for &adc_bits in &ADC_OPTIONS {
+                        let c = PimConfig {
+                            xbar,
+                            dac_bits,
+                            cell_bits,
+                            adc_bits,
+                            ..PimConfig::default()
+                        };
+                        if c.feasible() {
+                            out.push(c);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("xbar", Json::Num(self.xbar as f64)),
+            ("dac_bits", Json::Num(self.dac_bits as f64)),
+            ("cell_bits", Json::Num(self.cell_bits as f64)),
+            ("adc_bits", Json::Num(self.adc_bits as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<PimConfig> {
+        Ok(PimConfig {
+            xbar: j.req_usize("xbar")?,
+            dac_bits: j.req_usize("dac_bits")?,
+            cell_bits: j.req_usize("cell_bits")?,
+            adc_bits: j.req_usize("adc_bits")?,
+            ..PimConfig::default()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_quantities_match_python() {
+        let c = PimConfig::default(); // 64/1/2/8
+        assert_eq!(c.n_chunks(), 8);
+        assert_eq!(c.n_planes(), 4); // ceil(7/2)
+        assert_eq!(c.adc_max_in(), 64 * 1 * 3);
+        assert_eq!(c.adc_step(), 1);
+        assert!(c.feasible());
+    }
+
+    #[test]
+    fn feasibility_rule_matches_python() {
+        // 64·3·3 = 576 > 255 → infeasible
+        let c = PimConfig {
+            xbar: 64,
+            dac_bits: 2,
+            cell_bits: 2,
+            adc_bits: 8,
+            ..Default::default()
+        };
+        assert!(!c.feasible());
+        // 16·1·1 = 16 > 15 → infeasible at adc=4
+        let c2 = PimConfig {
+            xbar: 16,
+            dac_bits: 1,
+            cell_bits: 1,
+            adc_bits: 4,
+            ..Default::default()
+        };
+        assert!(!c2.feasible());
+        // but feasible at adc=6
+        let c3 = PimConfig { adc_bits: 6, ..c2 };
+        assert!(c3.feasible());
+    }
+
+    #[test]
+    fn enumeration_is_nonempty_and_all_feasible() {
+        let all = PimConfig::enumerate_feasible();
+        assert!(!all.is_empty());
+        assert!(all.iter().all(PimConfig::feasible));
+        // spot known members
+        assert!(all.contains(&PimConfig::default()));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = PimConfig {
+            xbar: 32,
+            dac_bits: 2,
+            cell_bits: 1,
+            adc_bits: 8,
+            ..Default::default()
+        };
+        let j = c.to_json();
+        let c2 = PimConfig::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn wbits_4_halves_planes() {
+        let c8 = PimConfig::default();
+        let c4 = c8.with_wbits(4);
+        assert_eq!(c8.n_planes(), 4);
+        assert_eq!(c4.n_planes(), 2); // ceil(3/2)
+    }
+}

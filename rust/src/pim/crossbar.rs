@@ -1,0 +1,380 @@
+//! Functional ReRAM crossbar model (paper Fig. 3a).
+//!
+//! Computes exactly what the L1 Pallas kernel computes
+//! (`python/compile/kernels/crossbar_mvm.py` ⇔ `ref.py`): bit-serial
+//! offset-binary MVM with per-row-tile ADC quantization and digital
+//! shift-add recombination. `rust/tests/kernel_parity.rs` closes the
+//! triangle against the compiled HLO artifact.
+//!
+//! Also counts the analog-cycle / conversion / write events so the cost
+//! layer (mapping + sim) can price an operation without re-simulating.
+
+use super::config::PimConfig;
+
+/// Dense row-major i32 matrix (small helper; the sizes here are
+/// crossbar-tile scale, no BLAS needed).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatI32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl MatI32 {
+    pub fn zeros(rows: usize, cols: usize) -> MatI32 {
+        MatI32 {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<i32>>) -> MatI32 {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        assert!(rows.iter().all(|x| x.len() == c));
+        MatI32 {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[i32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// Event counts from one functional pass (consumed by the cost layer).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct XbarActivity {
+    /// analog read cycles (each = one DAC step over one row tile)
+    pub read_cycles: u64,
+    /// ADC conversions performed
+    pub adc_conversions: u64,
+    /// digital shift-add operations
+    pub shift_adds: u64,
+    /// cells touched by programming
+    pub cells_written: u64,
+    /// row-pulses of programming
+    pub write_pulses: u64,
+}
+
+impl XbarActivity {
+    pub fn merge(&mut self, o: &XbarActivity) {
+        self.read_cycles += o.read_cycles;
+        self.adc_conversions += o.adc_conversions;
+        self.shift_adds += o.shift_adds;
+        self.cells_written += o.cells_written;
+        self.write_pulses += o.write_pulses;
+    }
+}
+
+/// ADC transfer function: mid-tread quantize + full-scale clip.
+/// Mirrors ref.py::adc_transfer.
+#[inline]
+pub fn adc_transfer(v: i64, cfg: &PimConfig) -> i64 {
+    let levels = (1i64 << cfg.adc_bits) - 1;
+    let step = cfg.adc_step();
+    let code = ((v + step / 2) / step).clamp(0, levels);
+    code * step
+}
+
+/// A programmed crossbar bank holding one signed weight matrix as a
+/// differential (positive/negative) pair of bit-plane stacks.
+pub struct ProgrammedXbar {
+    pub cfg: PimConfig,
+    /// [n_planes] matrices of plane values in [0, 2^cell_bits)
+    pos_planes: Vec<MatI32>,
+    neg_planes: Vec<MatI32>,
+    pub k: usize,
+    pub n: usize,
+    pub program_activity: XbarActivity,
+}
+
+impl ProgrammedXbar {
+    /// Program a signed integer weight matrix (values within w_bits).
+    /// K is padded internally to a multiple of cfg.xbar.
+    pub fn program(wq: &MatI32, cfg: PimConfig) -> ProgrammedXbar {
+        let wmax = (1i32 << (cfg.w_bits - 1)) - 1;
+        assert!(
+            wq.data.iter().all(|&w| w.abs() <= wmax),
+            "weights exceed w_bits range"
+        );
+        let k_pad = wq.rows.div_ceil(cfg.xbar) * cfg.xbar;
+        let cell_mask = (1i32 << cfg.cell_bits) - 1;
+        let mut pos_planes = Vec::with_capacity(cfg.n_planes());
+        let mut neg_planes = Vec::with_capacity(cfg.n_planes());
+        for p in 0..cfg.n_planes() {
+            let mut pp = MatI32::zeros(k_pad, wq.cols);
+            let mut np = MatI32::zeros(k_pad, wq.cols);
+            for r in 0..wq.rows {
+                for c in 0..wq.cols {
+                    let w = wq.at(r, c);
+                    let (wp, wn) = (w.max(0), (-w).max(0));
+                    pp.set(r, c, (wp >> (p * cfg.cell_bits)) & cell_mask);
+                    np.set(r, c, (wn >> (p * cfg.cell_bits)) & cell_mask);
+                }
+            }
+            pos_planes.push(pp);
+            neg_planes.push(np);
+        }
+        // Programming cost: every plane of both banks, row-parallel.
+        let planes = cfg.n_planes() as u64;
+        let program_activity = XbarActivity {
+            cells_written: 2 * planes * (k_pad * wq.cols) as u64,
+            write_pulses: 2 * planes * k_pad as u64,
+            ..Default::default()
+        };
+        ProgrammedXbar {
+            cfg,
+            pos_planes,
+            neg_planes,
+            k: k_pad,
+            n: wq.cols,
+            program_activity,
+        }
+    }
+
+    /// Bit-serial MVM of one offset-binary input vector (values in
+    /// [0, 2^x_bits)); returns the raw integer accumulator (pre-offset
+    /// correction). Mirrors ref.py::pim_mvm_int_ref for B=1.
+    pub fn mvm_raw(&self, x_u: &[i32], activity: &mut XbarActivity) -> Vec<i64> {
+        let cfg = &self.cfg;
+        assert!(x_u.len() <= self.k, "input longer than programmed K");
+        let dac_mask = (1i32 << cfg.dac_bits) - 1;
+        let n_tiles = self.k / cfg.xbar;
+        let mut acc = vec![0i64; self.n];
+        // §Perf: row-major accumulation with the chunk bits hoisted per
+        // row (was column-major with per-element re-extraction — 8.6×).
+        let mut partials = vec![0i64; self.n];
+        let mut chunk_buf = vec![0i64; cfg.xbar];
+        for t in 0..n_tiles {
+            let r0 = t * cfg.xbar;
+            let r1 = (r0 + cfg.xbar).min(x_u.len());
+            for c in 0..cfg.n_chunks() {
+                activity.read_cycles += 1;
+                let cshift = c * cfg.dac_bits;
+                for (i, &x) in x_u[r0..r1].iter().enumerate() {
+                    chunk_buf[i] = ((x >> cshift) & dac_mask) as i64;
+                }
+                for p in 0..cfg.n_planes() {
+                    let shift = (cshift + p * cfg.cell_bits) as u32;
+                    for (planes, sign) in
+                        [(&self.pos_planes, 1i64), (&self.neg_planes, -1i64)]
+                    {
+                        let plane = &planes[p];
+                        partials.iter_mut().for_each(|v| *v = 0);
+                        for (i, r) in (r0..r1).enumerate() {
+                            let chunk = chunk_buf[i];
+                            if chunk == 0 {
+                                continue; // zero wordline drives no current
+                            }
+                            let row = plane.row(r);
+                            for (col, &w) in row.iter().enumerate() {
+                                partials[col] += chunk * w as i64;
+                            }
+                        }
+                        activity.adc_conversions += self.n as u64;
+                        activity.shift_adds += self.n as u64;
+                        for (a, &partial) in acc.iter_mut().zip(partials.iter()) {
+                            *a += sign * (adc_transfer(partial, cfg) << shift);
+                        }
+                    }
+                }
+            }
+        }
+        acc
+    }
+
+    /// Full linear op: quantized activations in, integer result with the
+    /// offset correction applied (the dummy-row read). Matches
+    /// ref.py::pim_linear_ref's integer core.
+    pub fn mvm_corrected(&self, x_u: &[i32], activity: &mut XbarActivity) -> Vec<i64> {
+        let offset = 1i32 << (self.cfg.x_bits - 1);
+        let acc = self.mvm_raw(x_u, activity);
+        let ones = vec![offset; self.k];
+        let corr = self.mvm_raw(&ones, activity);
+        acc.iter().zip(&corr).map(|(a, c)| a - c).collect()
+    }
+}
+
+/// Symmetric per-tensor weight quantization (ref.py::quant_sym).
+pub fn quant_sym(w: &[f32], bits: usize) -> (Vec<i32>, f32) {
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let amax = w.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-8);
+    let scale = amax / qmax;
+    let q = w
+        .iter()
+        .map(|&x| (x / scale).round().clamp(-qmax, qmax) as i32)
+        .collect();
+    (q, scale)
+}
+
+/// Offset-binary activation quantization (ref.py::quant_act_u8).
+pub fn quant_act(x: &[f32], bits: usize) -> (Vec<i32>, f32) {
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let offset = 1i32 << (bits - 1);
+    let amax = x.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-8);
+    let scale = amax / qmax;
+    let q = x
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-qmax, qmax) as i32 + offset)
+        .collect();
+    (q, scale)
+}
+
+/// Float-in/float-out PIM linear for one vector (ref.py::pim_linear_ref,
+/// B=1): the functional contract the HLO artifact also satisfies.
+pub fn pim_linear_vec(
+    x: &[f32],
+    w: &MatI32,
+    w_scale: f32,
+    xbar: &ProgrammedXbar,
+    activity: &mut XbarActivity,
+) -> Vec<f32> {
+    let _ = w;
+    let (mut x_u, x_scale) = quant_act(x, xbar.cfg.x_bits);
+    x_u.resize(xbar.k, 1i32 << (xbar.cfg.x_bits - 1)); // pad at offset (=0.0)
+    let out = xbar.mvm_corrected(&x_u, activity);
+    out.iter()
+        .map(|&v| v as f32 * x_scale * w_scale)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rng: &mut Rng, rows: usize, cols: usize, wmax: i32) -> MatI32 {
+        let mut m = MatI32::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = rng.below((2 * wmax + 1) as u64) as i32 - wmax;
+                m.set(r, c, v);
+            }
+        }
+        m
+    }
+
+    fn int_matmul(x: &[i32], w: &MatI32) -> Vec<i64> {
+        (0..w.cols)
+            .map(|c| {
+                (0..w.rows)
+                    .map(|r| x.get(r).copied().unwrap_or(0) as i64 * w.at(r, c) as i64)
+                    .sum()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn feasible_config_is_bit_exact_with_integer_matmul() {
+        // This is the same invariant the python test suite pins:
+        // feasible ⇒ lossless ADC ⇒ crossbar MVM ≡ integer matmul.
+        let mut rng = Rng::new(42);
+        for cfg in PimConfig::enumerate_feasible() {
+            let k = cfg.xbar * 2 - 3; // force padding
+            let wq = random_mat(&mut rng, k, 9, (1 << (cfg.w_bits - 1)) - 1);
+            let xbar = ProgrammedXbar::program(&wq, cfg);
+            let x_u: Vec<i32> = (0..k)
+                .map(|_| rng.below(1 << cfg.x_bits) as i32)
+                .collect();
+            let mut padded = x_u.clone();
+            padded.resize(xbar.k, 0);
+            let mut act = XbarActivity::default();
+            let got = xbar.mvm_raw(&padded, &mut act);
+            let want = int_matmul(&padded, &wq);
+            assert_eq!(got, want, "cfg {cfg:?}");
+            assert!(act.read_cycles > 0 && act.adc_conversions > 0);
+        }
+    }
+
+    #[test]
+    fn infeasible_config_loses_information() {
+        let cfg = PimConfig {
+            xbar: 64,
+            dac_bits: 2,
+            cell_bits: 2,
+            adc_bits: 8,
+            ..Default::default()
+        };
+        assert!(!cfg.feasible());
+        let mut rng = Rng::new(7);
+        let wq = random_mat(&mut rng, 64, 8, 127);
+        let xbar = ProgrammedXbar::program(&wq, cfg);
+        let x_u: Vec<i32> = (0..64).map(|_| rng.below(256) as i32).collect();
+        let mut act = XbarActivity::default();
+        let got = xbar.mvm_raw(&x_u, &mut act);
+        let want = int_matmul(&x_u, &wq);
+        assert_ne!(got, want);
+    }
+
+    #[test]
+    fn offset_correction_recovers_signed_products() {
+        let cfg = PimConfig::default();
+        let mut rng = Rng::new(3);
+        let wq = random_mat(&mut rng, cfg.xbar, 5, 127);
+        let xbar = ProgrammedXbar::program(&wq, cfg);
+        // signed activations in offset-binary
+        let xs: Vec<i32> = (0..cfg.xbar).map(|_| rng.below(255) as i32 - 127).collect();
+        let x_u: Vec<i32> = xs.iter().map(|&v| v + 128).collect();
+        let mut act = XbarActivity::default();
+        let got = xbar.mvm_corrected(&x_u, &mut act);
+        let want = int_matmul(&xs, &wq);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn pim_linear_vec_close_to_fp() {
+        let cfg = PimConfig::default();
+        let mut rng = Rng::new(11);
+        let k = 100;
+        let n = 12;
+        let wf: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let (wq_flat, w_scale) = quant_sym(&wf, cfg.w_bits);
+        let wq = MatI32 {
+            rows: k,
+            cols: n,
+            data: wq_flat,
+        };
+        let xbar = ProgrammedXbar::program(&wq, cfg);
+        let x: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        let mut act = XbarActivity::default();
+        let got = pim_linear_vec(&x, &wq, w_scale, &xbar, &mut act);
+        // fp reference
+        for c in 0..n {
+            let want: f32 = (0..k).map(|r| x[r] * wf[r * n + c]).sum();
+            let err = (got[c] - want).abs();
+            assert!(err < 0.35, "col {c}: got {} want {want}", got[c]);
+        }
+    }
+
+    #[test]
+    fn program_activity_counts_cells() {
+        let cfg = PimConfig::default(); // planes = 4
+        let wq = MatI32::zeros(64, 10);
+        let xbar = ProgrammedXbar::program(&wq, cfg);
+        assert_eq!(xbar.program_activity.cells_written, 2 * 4 * 64 * 10);
+        assert_eq!(xbar.program_activity.write_pulses, 2 * 4 * 64);
+    }
+
+    #[test]
+    fn weights_out_of_range_panic() {
+        let cfg = PimConfig::default().with_wbits(4);
+        let mut wq = MatI32::zeros(4, 4);
+        wq.set(0, 0, 100); // > 7
+        let r = std::panic::catch_unwind(|| ProgrammedXbar::program(&wq, cfg));
+        assert!(r.is_err());
+    }
+}

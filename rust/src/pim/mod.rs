@@ -1,0 +1,20 @@
+//! ReRAM PIM substrate (S7): device/periphery cost models and the
+//! functional crossbar the behavioral simulator and the kernel-parity
+//! tests share. Constants and substitution rationale: params.rs.
+
+pub mod buffer;
+pub mod config;
+pub mod crossbar;
+pub mod mbsa;
+pub mod noise;
+pub mod params;
+pub mod tile;
+pub mod transposed;
+
+pub use buffer::Buffer;
+pub use config::PimConfig;
+pub use crossbar::{adc_transfer, quant_act, quant_sym, MatI32, ProgrammedXbar, XbarActivity};
+pub use mbsa::Mbsa;
+pub use noise::NoiseModel;
+pub use params::{Component, TechParams};
+pub use tile::{EngineKind, Tile, TileSpec};

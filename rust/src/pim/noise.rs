@@ -1,0 +1,93 @@
+//! ReRAM non-ideality model (paper §1/§3.1; Yang ICCAD'21).
+//!
+//! Analog crossbars suffer stochastic conductance variation; its impact
+//! on inference accuracy grows with cell precision (tighter conductance
+//! levels), crossbar size (more accumulated variance per column) and
+//! shrinks with ADC headroom. Recommender models are unusually sensitive
+//! ("even a 0.2% shift in Log Loss can be critical"), which is why the
+//! paper constrains its ReRAM space. The NAS accuracy surrogate adds
+//! `logloss_penalty` for the chosen PIM genome.
+
+use super::config::PimConfig;
+
+/// Device-level variation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct NoiseModel {
+    /// relative conductance sigma per level (device lognormal σ)
+    pub sigma_g: f64,
+    /// logloss sensitivity coefficient (calibrated; see nas::accuracy)
+    pub sensitivity: f64,
+}
+
+impl Default for NoiseModel {
+    fn default() -> Self {
+        NoiseModel {
+            sigma_g: 0.02,
+            sensitivity: 0.08,
+        }
+    }
+}
+
+impl NoiseModel {
+    /// Effective relative error of one column sum for a PIM config.
+    ///
+    /// Each of `xbar` cells contributes σ_g per conductance level used;
+    /// a cell storing `cell_bits` bits packs 2^cell_bits levels into the
+    /// same conductance window, so per-cell σ scales with (2^cell−1).
+    /// Independent cell errors accumulate as √rows across the column.
+    /// The result is normalized by full scale (rows · max level).
+    pub fn column_rel_sigma(&self, cfg: &PimConfig) -> f64 {
+        let levels = ((1usize << cfg.cell_bits) - 1) as f64;
+        let per_cell = self.sigma_g * levels;
+        let col = per_cell * (cfg.xbar as f64).sqrt();
+        col / (cfg.xbar as f64 * levels) * (levels).max(1.0)
+    }
+
+    /// Expected LogLoss penalty for running a model on this config.
+    /// Monotone in the relative column error; zero in the limit of an
+    /// ideal array. This is the term Algorithm 1's criterion sees.
+    pub fn logloss_penalty(&self, cfg: &PimConfig) -> f64 {
+        self.sensitivity * self.column_rel_sigma(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bigger_crossbars_have_lower_relative_column_error() {
+        // √rows/rows = 1/√rows: accumulation is sublinear vs full scale.
+        let n = NoiseModel::default();
+        let small = n.column_rel_sigma(&PimConfig {
+            xbar: 16,
+            ..Default::default()
+        });
+        let big = n.column_rel_sigma(&PimConfig {
+            xbar: 64,
+            ..Default::default()
+        });
+        assert!(big < small);
+    }
+
+    #[test]
+    fn penalty_is_positive_and_small() {
+        let n = NoiseModel::default();
+        let p = n.logloss_penalty(&PimConfig::default());
+        assert!(p > 0.0 && p < 0.01, "{p}");
+    }
+
+    #[test]
+    fn more_cell_bits_do_not_reduce_noise() {
+        let n = NoiseModel::default();
+        let c1 = n.column_rel_sigma(&PimConfig {
+            cell_bits: 1,
+            ..Default::default()
+        });
+        let c2 = n.column_rel_sigma(&PimConfig {
+            cell_bits: 2,
+            ..Default::default()
+        });
+        assert!(c2 >= c1);
+    }
+}

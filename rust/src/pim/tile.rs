@@ -1,0 +1,147 @@
+//! Compute-tile structural model (paper Fig. 4f).
+//!
+//! A tile hosts one engine (MVM / DP / FM): a set of physical crossbar
+//! arrays with their peripheral ADCs/DACs, I/O registers, a data buffer
+//! for intermediate outputs, a functional unit for activations, and a
+//! slice of the controller/scheduler. The mapping layer decides how many
+//! arrays a tile needs; this module prices the silicon (area, leakage)
+//! and exposes per-event costs to the simulator.
+
+use super::buffer::Buffer;
+use super::config::PimConfig;
+use super::params::TechParams;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// standard MVM engine (FC / EFC / DSI and the DP sub-FCs)
+    Mvm,
+    /// DP engine: crossbars written with activations at inference time
+    Dp,
+    /// FM engine: transposed array + MBSA
+    Fm,
+}
+
+/// Structural description of one tile (produced by the mapping layer).
+#[derive(Clone, Debug)]
+pub struct TileSpec {
+    pub kind: EngineKind,
+    pub cfg: PimConfig,
+    /// physical crossbar arrays (already includes the ×2 differential
+    /// pair and ×n_planes bit-plane replication)
+    pub n_arrays: usize,
+    /// input register / buffer bytes
+    pub in_buf_bytes: usize,
+    /// output / intermediate buffer bytes
+    pub out_buf_bytes: usize,
+    /// MBSA lanes (FM tiles only)
+    pub mbsa_lanes: usize,
+}
+
+/// Priced tile.
+#[derive(Clone, Debug)]
+pub struct Tile {
+    pub spec: TileSpec,
+    pub area_mm2: f64,
+    pub leakage_mw: f64,
+    pub in_buf: Buffer,
+    pub out_buf: Buffer,
+}
+
+/// Controller + scheduler overhead as a fraction of compute area.
+const CONTROL_OVERHEAD: f64 = 0.10;
+/// MBSA lane area (mm²) — AND gate + accumulator register at 32 nm.
+const MBSA_LANE_MM2: f64 = 2.4e-6;
+
+impl Tile {
+    pub fn build(spec: TileSpec, tech: &TechParams) -> Tile {
+        let cfg = &spec.cfg;
+        let xbar_area = tech.xbar_area_mm2(cfg.xbar, cfg.xbar) * spec.n_arrays as f64;
+        let n_adc = (cfg.xbar.div_ceil(tech.cols_per_adc)) * spec.n_arrays;
+        let adc = tech.adc(cfg.adc_bits);
+        let dac = tech.dac(cfg.dac_bits);
+        let n_dac = cfg.xbar * spec.n_arrays;
+        let in_buf = Buffer::new(spec.in_buf_bytes);
+        let out_buf = Buffer::new(spec.out_buf_bytes);
+        let mbsa_area = spec.mbsa_lanes as f64 * MBSA_LANE_MM2;
+        let compute_area = xbar_area
+            + adc.area_mm2 * n_adc as f64
+            + dac.area_mm2 * n_dac as f64
+            + mbsa_area;
+        let area_mm2 = (compute_area + in_buf.area_mm2 + out_buf.area_mm2)
+            * (1.0 + CONTROL_OVERHEAD);
+        let leakage_mw = adc.leakage_mw * n_adc as f64
+            + dac.leakage_mw * n_dac as f64
+            + in_buf.leakage_mw
+            + out_buf.leakage_mw;
+        Tile {
+            spec,
+            area_mm2,
+            leakage_mw,
+            in_buf,
+            out_buf,
+        }
+    }
+
+    /// ADC instances on this tile (time-multiplexed across columns).
+    pub fn n_adcs(&self, tech: &TechParams) -> usize {
+        self.spec.cfg.xbar.div_ceil(tech.cols_per_adc) * self.spec.n_arrays
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(kind: EngineKind, n_arrays: usize) -> TileSpec {
+        TileSpec {
+            kind,
+            cfg: PimConfig::default(),
+            n_arrays,
+            in_buf_bytes: 4096,
+            out_buf_bytes: 8192,
+            mbsa_lanes: if kind == EngineKind::Fm { 64 } else { 0 },
+        }
+    }
+
+    #[test]
+    fn area_scales_linearly_with_arrays_above_buffer_floor() {
+        let t = TechParams::default();
+        let a1 = Tile::build(spec(EngineKind::Mvm, 1), &t).area_mm2;
+        let a4 = Tile::build(spec(EngineKind::Mvm, 4), &t).area_mm2;
+        let a7 = Tile::build(spec(EngineKind::Mvm, 7), &t).area_mm2;
+        assert!(a4 > a1 && a7 > a4);
+        // marginal cost per extra array is constant (buffers are a floor)
+        assert!(((a7 - a4) - (a4 - a1)).abs() < 1e-9, "a1={a1} a4={a4} a7={a7}");
+    }
+
+    #[test]
+    fn adc_area_dominates_crossbar_area() {
+        // Known PIM property (ISAAC: ADCs ≈ 58% of tile power/area).
+        let t = TechParams::default();
+        let tile = Tile::build(spec(EngineKind::Mvm, 1), &t);
+        let xbar = t.xbar_area_mm2(64, 64);
+        let adc_total = t.adc(8).area_mm2 * tile.n_adcs(&t) as f64;
+        assert!(adc_total > xbar, "adc {adc_total} vs xbar {xbar}");
+    }
+
+    #[test]
+    fn fm_tile_includes_mbsa() {
+        let t = TechParams::default();
+        let fm = Tile::build(spec(EngineKind::Fm, 1), &t);
+        let mvm = Tile::build(spec(EngineKind::Mvm, 1), &t);
+        assert!(fm.area_mm2 > mvm.area_mm2);
+    }
+
+    #[test]
+    fn smaller_adc_is_cheaper() {
+        let t = TechParams::default();
+        let mut s = spec(EngineKind::Mvm, 2);
+        s.cfg.adc_bits = 4;
+        s.cfg.xbar = 16; // keep feasible
+        let cheap = Tile::build(s.clone(), &t);
+        s.cfg.adc_bits = 8;
+        let costly = Tile::build(s, &t);
+        assert!(cheap.area_mm2 < costly.area_mm2);
+        assert!(cheap.leakage_mw < costly.leakage_mw);
+    }
+}

@@ -1,0 +1,160 @@
+//! Transposed-write ReRAM array (paper Fig. 3b; Wan ISSCC'20) — the FM
+//! engine's storage fabric.
+//!
+//! A conventional array programs operands row by row, stalling the
+//! producer behind `rows × write_pulse`. The transposed array accepts a
+//! whole vector as ONE column-parallel pulse, so the EFC layer's output
+//! vectors stream straight in ("aligns spatially with the inputs and
+//! eliminates idle buffers", §3.2). Once populated:
+//!
+//! * ones-vector wordline read → per-column sums Σ_n x_n;
+//! * reading with each stored vector itself → Σ_n x_n² on the bit lines
+//!   (concurrently — the two reductions share the pass).
+
+use super::config::PimConfig;
+use super::crossbar::XbarActivity;
+
+/// Functional + event-counting model of one transposed array of
+/// `d` wordlines × `n_slots` column slots holding d-dim vectors.
+pub struct TransposedArray {
+    pub d: usize,
+    pub n_slots: usize,
+    /// column-major storage: slot s holds vector[0..d]
+    slots: Vec<Vec<f32>>,
+    pub activity: XbarActivity,
+}
+
+impl TransposedArray {
+    pub fn new(d: usize, n_slots: usize) -> TransposedArray {
+        TransposedArray {
+            d,
+            n_slots,
+            slots: Vec::new(),
+            activity: XbarActivity::default(),
+        }
+    }
+
+    /// Column-parallel write of one vector (ONE programming pulse).
+    pub fn write_vector(&mut self, v: &[f32]) {
+        assert_eq!(v.len(), self.d, "vector dim mismatch");
+        assert!(self.slots.len() < self.n_slots, "array full");
+        self.slots.push(v.to_vec());
+        self.activity.write_pulses += 1;
+        self.activity.cells_written += self.d as u64;
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn reset(&mut self) {
+        self.slots.clear();
+    }
+
+    /// Ones-vector read: Σ_n x_n per wordline (d-dim result). One analog
+    /// cycle + one ADC conversion per wordline group.
+    pub fn read_sum(&mut self, cfg: &PimConfig) -> Vec<f64> {
+        self.activity.read_cycles += 1;
+        self.activity.adc_conversions += (self.d.div_ceil(cfg.xbar) * self.d.min(cfg.xbar)) as u64;
+        let mut out = vec![0f64; self.d];
+        for s in &self.slots {
+            for (o, &v) in out.iter_mut().zip(s.iter()) {
+                *o += v as f64;
+            }
+        }
+        out
+    }
+
+    /// Self-read: Σ_n x_n² — each stored vector drives the wordlines
+    /// against itself; bit-line accumulation sums the squares. The paper
+    /// overlaps this with `read_sum` (same pass), which the pipeline
+    /// model accounts for; functionally it is a separate reduction.
+    pub fn read_sum_squares(&mut self, cfg: &PimConfig) -> Vec<f64> {
+        self.activity.read_cycles += self.slots.len() as u64;
+        self.activity.adc_conversions +=
+            (self.slots.len() * self.d.div_ceil(cfg.xbar).max(1)) as u64;
+        let mut out = vec![0f64; self.d];
+        for s in &self.slots {
+            for (o, &v) in out.iter_mut().zip(s.iter()) {
+                *o += (v as f64) * (v as f64);
+            }
+        }
+        out
+    }
+
+    /// Full FM interaction for the stored vectors:
+    /// 0.5 · ((Σx)² − Σx²), the MBSA performing the square.
+    pub fn fm_interaction(&mut self, cfg: &PimConfig, mbsa: &mut super::mbsa::Mbsa) -> Vec<f64> {
+        let s = self.read_sum(cfg);
+        let ss = self.read_sum_squares(cfg);
+        let s2 = mbsa.square_vector(&s);
+        s2.iter()
+            .zip(&ss)
+            .map(|(a, b)| 0.5 * (a - b))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::mbsa::Mbsa;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fm_matches_pairwise_definition() {
+        let cfg = PimConfig::default();
+        let mut rng = Rng::new(5);
+        let (n, d) = (6, 8);
+        let vecs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut arr = TransposedArray::new(d, n);
+        for v in &vecs {
+            arr.write_vector(v);
+        }
+        let mut mbsa = Mbsa::new(d, 16);
+        let got = arr.fm_interaction(&cfg, &mut mbsa);
+        // explicit Σ_{i<j} x_i ⊙ x_j
+        let mut want = vec![0f64; d];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                for t in 0..d {
+                    want[t] += vecs[i][t] as f64 * vecs[j][t] as f64;
+                }
+            }
+        }
+        for t in 0..d {
+            assert!((got[t] - want[t]).abs() < 1e-4, "{t}: {} vs {}", got[t], want[t]);
+        }
+    }
+
+    #[test]
+    fn writes_are_single_pulse_per_vector() {
+        let mut arr = TransposedArray::new(16, 4);
+        arr.write_vector(&vec![1.0; 16]);
+        arr.write_vector(&vec![2.0; 16]);
+        assert_eq!(arr.activity.write_pulses, 2);
+        assert_eq!(arr.activity.cells_written, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "array full")]
+    fn overflow_panics() {
+        let mut arr = TransposedArray::new(4, 1);
+        arr.write_vector(&[0.0; 4]);
+        arr.write_vector(&[0.0; 4]);
+    }
+
+    #[test]
+    fn reset_allows_reuse() {
+        let cfg = PimConfig::default();
+        let mut arr = TransposedArray::new(4, 2);
+        arr.write_vector(&[1.0; 4]);
+        arr.reset();
+        assert_eq!(arr.occupied(), 0);
+        arr.write_vector(&[2.0; 4]);
+        let s = arr.read_sum(&cfg);
+        assert_eq!(s, vec![2.0; 4]);
+    }
+}

@@ -1,0 +1,194 @@
+//! ATNS binary tensor container — rust reader (writer lives in
+//! `python/compile/atns.py`; see that module for the format spec).
+//!
+//! Used for trained embedding tables (memory tiles) and the train-step
+//! initial parameters (e2e example). Little-endian throughout.
+
+use std::io::Read;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    I64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    /// raw little-endian payload
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(self.dtype == Dtype::F32, "{}: not f32", self.name);
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<Vec<i32>> {
+        anyhow::ensure!(self.dtype == Dtype::I32, "{}: not i32", self.name);
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// An ordered collection of named tensors.
+#[derive(Clone, Debug, Default)]
+pub struct TensorFile {
+    pub tensors: Vec<Tensor>,
+}
+
+impl TensorFile {
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    pub fn read(path: &std::path::Path) -> anyhow::Result<TensorFile> {
+        let mut f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    pub fn parse(buf: &[u8]) -> anyhow::Result<TensorFile> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> anyhow::Result<&[u8]> {
+            anyhow::ensure!(*pos + n <= buf.len(), "truncated at byte {}", *pos);
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let u32le = |pos: &mut usize| -> anyhow::Result<u32> {
+            let b = take(pos, 4)?;
+            Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        };
+        anyhow::ensure!(take(&mut pos, 4)? == b"ATNS", "bad magic");
+        let version = u32le(&mut pos)?;
+        anyhow::ensure!(version == 1, "unsupported version {version}");
+        let count = u32le(&mut pos)? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let nlen = u32le(&mut pos)? as usize;
+            let name = String::from_utf8(take(&mut pos, nlen)?.to_vec())?;
+            let hdr = take(&mut pos, 2)?;
+            let dtype = match hdr[0] {
+                0 => Dtype::F32,
+                1 => Dtype::I32,
+                2 => Dtype::I64,
+                d => anyhow::bail!("{name}: unknown dtype {d}"),
+            };
+            let ndim = hdr[1] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32le(&mut pos)? as usize);
+            }
+            let nbytes = {
+                let b = take(&mut pos, 8)?;
+                u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+                    as usize
+            };
+            let elem = match dtype {
+                Dtype::F32 | Dtype::I32 => 4,
+                Dtype::I64 => 8,
+            };
+            let expect: usize = shape.iter().product::<usize>() * elem;
+            anyhow::ensure!(
+                nbytes == expect,
+                "{name}: payload {nbytes} != shape {shape:?} × {elem}"
+            );
+            let data = take(&mut pos, nbytes)?.to_vec();
+            tensors.push(Tensor {
+                name,
+                dtype,
+                shape,
+                data,
+            });
+        }
+        anyhow::ensure!(pos == buf.len(), "trailing bytes after last tensor");
+        Ok(TensorFile { tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build an ATNS byte blob (mirrors the python writer; also used by
+    /// other test modules).
+    pub fn write_atns(tensors: &[(&str, Dtype, Vec<usize>, Vec<u8>)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend(b"ATNS");
+        out.extend(1u32.to_le_bytes());
+        out.extend((tensors.len() as u32).to_le_bytes());
+        for (name, dtype, shape, data) in tensors {
+            out.extend((name.len() as u32).to_le_bytes());
+            out.extend(name.as_bytes());
+            out.push(match dtype {
+                Dtype::F32 => 0,
+                Dtype::I32 => 1,
+                Dtype::I64 => 2,
+            });
+            out.push(shape.len() as u8);
+            for &d in shape {
+                out.extend((d as u32).to_le_bytes());
+            }
+            out.extend((data.len() as u64).to_le_bytes());
+            out.extend(data);
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip() {
+        let vals: Vec<u8> = [1f32, 2.0, 3.0, 4.0, 5.0, 6.0]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let blob = write_atns(&[("emb/0", Dtype::F32, vec![2, 3], vals)]);
+        let tf = TensorFile::parse(&blob).unwrap();
+        assert_eq!(tf.tensors.len(), 1);
+        let t = tf.get("emb/0").unwrap();
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(TensorFile::parse(b"NOPE").is_err());
+        let blob = write_atns(&[("x", Dtype::F32, vec![1], 0f32.to_le_bytes().to_vec())]);
+        assert!(TensorFile::parse(&blob[..blob.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_payload_mismatch() {
+        let blob = write_atns(&[("x", Dtype::F32, vec![3], vec![0u8; 8])]);
+        assert!(TensorFile::parse(&blob).is_err());
+    }
+
+    #[test]
+    fn dtype_guards() {
+        let blob = write_atns(&[("x", Dtype::I32, vec![1], 7i32.to_le_bytes().to_vec())]);
+        let tf = TensorFile::parse(&blob).unwrap();
+        assert!(tf.get("x").unwrap().as_f32().is_err());
+        assert_eq!(tf.get("x").unwrap().as_i32().unwrap(), vec![7]);
+    }
+}

@@ -1,0 +1,191 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! on the CPU PJRT client. Python never runs here — this is the request
+//! path. Pattern follows /opt/xla-example/load_hlo (HLO TEXT interchange;
+//! see that README for why serialized protos are rejected).
+
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Artifact metadata (from artifacts/meta.json).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub dataset: String,
+    pub batch: usize,
+    /// train-step artifacts: parameter feed order
+    pub param_order: Vec<String>,
+}
+
+/// The artifact registry + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    metas: HashMap<String, ArtifactMeta>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads meta.json; compiles lazily).
+    pub fn open(dir: &Path) -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        let meta = Json::read_file(&dir.join("meta.json"))?;
+        let mut metas = HashMap::new();
+        if let Some(arts) = meta.get("artifacts").and_then(Json::as_obj) {
+            for (name, a) in arts {
+                metas.insert(
+                    name.clone(),
+                    ArtifactMeta {
+                        name: name.clone(),
+                        kind: a.req_str("kind")?.to_string(),
+                        dataset: a.req_str("dataset")?.to_string(),
+                        batch: a.req_usize("batch")?,
+                        param_order: a
+                            .get("param_order")
+                            .and_then(Json::as_arr)
+                            .map(|v| {
+                                v.iter()
+                                    .filter_map(|s| s.as_str())
+                                    .map(String::from)
+                                    .collect()
+                            })
+                            .unwrap_or_default(),
+                    },
+                );
+            }
+        }
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            metas,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.get(name)
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.metas.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Inference artifact name for (dataset, batch).
+    pub fn model_name(dataset: &str, batch: usize) -> String {
+        format!("model_{dataset}_b{batch}")
+    }
+
+    /// Compile (once) and cache an artifact's executable.
+    pub fn ensure_compiled(&mut self, name: &str) -> anyhow::Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        anyhow::ensure!(path.exists(), "missing artifact {}", path.display());
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf-8 path"),
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with literal inputs; returns the flattened
+    /// output tuple (aot.py lowers with return_tuple=True).
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let exe = self.executables.get(name).expect("just compiled");
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Run batched CTR inference: dense [B×nd] and gathered sparse
+    /// [B×Ns×d] row-major f32 → probabilities [B].
+    pub fn infer(
+        &mut self,
+        name: &str,
+        dense: &[f32],
+        dense_dims: [usize; 2],
+        sparse: &[f32],
+        sparse_dims: [usize; 3],
+    ) -> anyhow::Result<Vec<f32>> {
+        let d_lit = lit_f32(dense, &[dense_dims[0] as i64, dense_dims[1] as i64])?;
+        let s_lit = lit_f32(
+            sparse,
+            &[
+                sparse_dims[0] as i64,
+                sparse_dims[1] as i64,
+                sparse_dims[2] as i64,
+            ],
+        )?;
+        let out = self.execute(name, &[d_lit, s_lit])?;
+        anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
+        out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("probs: {e:?}"))
+    }
+}
+
+/// Build an f32 literal of the given shape from a row-major slice.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expect as usize == data.len(),
+        "shape {dims:?} != {} elements",
+        data.len()
+    );
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expect as usize == data.len(),
+        "shape {dims:?} != {} elements",
+        data.len()
+    );
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_builders_validate_shapes() {
+        assert!(lit_f32(&[1.0, 2.0], &[2, 1]).is_ok());
+        assert!(lit_f32(&[1.0, 2.0], &[3, 1]).is_err());
+        assert!(lit_i32(&[1, 2, 3, 4], &[2, 2]).is_ok());
+    }
+
+    // Artifact-dependent tests live in rust/tests/runtime_artifacts.rs
+    // (they need `make artifacts` to have run).
+}

@@ -1,0 +1,5 @@
+//! Runtime (S14): PJRT client wrapper + artifact registry + ATNS reader.
+//! Python never runs here — artifacts were lowered at build time.
+
+pub mod atns;
+pub mod client;

@@ -1,0 +1,6 @@
+//! Behavioral simulator (S9): latency / throughput / energy / area of a
+//! mapped design under a request workload.
+
+pub mod simulator;
+
+pub use simulator::{simulate, EmbeddingFrontend, SimReport, Workload};

@@ -1,0 +1,217 @@
+//! Micro-benchmark harness (criterion is unavailable offline — DESIGN.md
+//! §8). Used by the `benches/*.rs` binaries (declared `harness = false`)
+//! and by the §Perf iteration loop.
+//!
+//! Methodology: warm up for a fixed wall-clock slice, auto-calibrate the
+//! per-sample iteration count so a sample lasts ≳1 ms, then collect N
+//! samples and report mean/median/p95 with a simple MAD-based outlier
+//! count. Results can be appended to a JSON log for before/after diffs.
+
+use super::json::Json;
+use super::stats::Quantiles;
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub throughput_per_s: f64,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("samples", Json::Num(self.samples as f64)),
+            ("iters_per_sample", Json::Num(self.iters_per_sample as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("median_ns", Json::Num(self.median_ns)),
+            ("p95_ns", Json::Num(self.p95_ns)),
+            ("min_ns", Json::Num(self.min_ns)),
+            ("throughput_per_s", Json::Num(self.throughput_per_s)),
+        ])
+    }
+}
+
+pub struct Bencher {
+    warmup: Duration,
+    samples: usize,
+    min_sample_time: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        // Honor a quick mode so `cargo bench` in CI stays fast:
+        // AUTORAC_BENCH_FAST=1 shrinks warmup/samples.
+        let fast = std::env::var("AUTORAC_BENCH_FAST").ok().as_deref() == Some("1");
+        Bencher {
+            warmup: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            samples: if fast { 10 } else { 30 },
+            min_sample_time: Duration::from_millis(if fast { 1 } else { 4 }),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_samples(mut self, n: usize) -> Bencher {
+        self.samples = n;
+        self
+    }
+
+    /// Benchmark `f`, which performs ONE unit of work per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration.
+        let warm_start = Instant::now();
+        let mut calls: u64 = 0;
+        while warm_start.elapsed() < self.warmup {
+            f();
+            calls += 1;
+        }
+        let per_call = self.warmup.as_nanos() as f64 / calls.max(1) as f64;
+        let iters = ((self.min_sample_time.as_nanos() as f64 / per_call.max(1.0)).ceil()
+            as u64)
+            .max(1);
+
+        let mut q = Quantiles::new();
+        let mut min_ns = f64::INFINITY;
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+            q.push(ns);
+            min_ns = min_ns.min(ns);
+        }
+        let mean_ns = {
+            // recompute from retained samples
+            let mut s = 0.0;
+            for i in 0..q.len() {
+                s += q.quantile(i as f64 / (q.len().max(2) - 1) as f64);
+            }
+            s / q.len() as f64
+        };
+        let median = q.median();
+        let result = BenchResult {
+            name: name.to_string(),
+            samples: self.samples,
+            iters_per_sample: iters,
+            mean_ns,
+            median_ns: median,
+            p95_ns: q.quantile(0.95),
+            min_ns,
+            throughput_per_s: 1e9 / median.max(1e-9),
+        };
+        println!(
+            "{:<48} {:>12} /iter   p95 {:>12}   {:>14}/s",
+            name,
+            fmt_ns(result.median_ns),
+            fmt_ns(result.p95_ns),
+            fmt_count(result.throughput_per_s)
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Benchmark with a per-iteration setup (excluded from timing by
+    /// amortization: setup runs once per sample, f runs `iters` times).
+    pub fn bench_with<S, T, F>(&mut self, name: &str, mut setup: S, mut f: F) -> &BenchResult
+    where
+        S: FnMut() -> T,
+        F: FnMut(&mut T),
+    {
+        let mut state = setup();
+        self.bench(name, move || f(black_box(&mut state)))
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Append results to artifacts/bench_log.json for before/after diffs.
+    pub fn write_log(&self, tag: &str) -> anyhow::Result<()> {
+        let path = std::path::Path::new("artifacts/bench_log.json");
+        let mut log = if path.exists() {
+            Json::read_file(path)?
+        } else {
+            Json::Arr(vec![])
+        };
+        if let Json::Arr(entries) = &mut log {
+            for r in &self.results {
+                let mut j = r.to_json();
+                j.set("tag", Json::Str(tag.to_string()));
+                entries.push(j);
+            }
+        }
+        log.write_file(path)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+pub fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        std::env::set_var("AUTORAC_BENCH_FAST", "1");
+        let mut b = Bencher::new().with_samples(5);
+        let mut acc = 0u64;
+        let r = b
+            .bench("noop_add", || {
+                acc = acc.wrapping_add(bb(1));
+            })
+            .clone();
+        assert!(r.median_ns > 0.0);
+        assert!(r.median_ns < 1e6, "a wrapping add should be fast");
+        assert_eq!(r.samples, 5);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(500.0), "500.0 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_count(2_000_000.0), "2.00M");
+    }
+}

@@ -1,0 +1,184 @@
+//! Tiny argv parser (clap is unavailable offline — DESIGN.md §8).
+//!
+//! Grammar: `autorac <subcommand> [positional]... [--flag] [--key value]...`
+//! Values may be given as `--key=value` or `--key value`; a `--key`
+//! followed by a non-dash token always binds greedily, so positionals must
+//! precede options. Unknown keys are collected and reported by `finish()`
+//! so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut it = argv.into_iter().peekable();
+        let mut subcommand = None;
+        let mut kv = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    kv.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    kv.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    flags.push(body.to_string());
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Args {
+            subcommand,
+            kv,
+            flags,
+            positional,
+            consumed: std::cell::RefCell::new(Vec::new()),
+        }
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error on any `--key value` / `--flag` that no handler consumed.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .kv
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!(
+                "unknown option(s): {}",
+                unknown
+                    .iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_kv_flags_positional() {
+        let a = args("search input.txt --seed 42 --out=x.json --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("search"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 42);
+        assert_eq!(a.get("out"), Some("x.json"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["input.txt".to_string()]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("simulate");
+        assert_eq!(a.usize_or("batch", 8).unwrap(), 8);
+        assert_eq!(a.f64_or("alpha", 1.5).unwrap(), 1.5);
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = args("x --n abc");
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_options_fail_finish() {
+        let a = args("x --unknown 1");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = args("x --quiet");
+        assert!(a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn no_subcommand_when_leading_dash() {
+        let a = args("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Foundation substrates (S1–S5 in DESIGN.md): everything the offline
+//! environment forced us to build instead of pulling from crates.io.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod qcheck;
+pub mod rng;
+pub mod stats;

