@@ -16,7 +16,7 @@ use autorac::pim::{PimConfig, TechParams};
 use autorac::sim::{simulate, Workload};
 use autorac::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> autorac::Result<()> {
     let tech = TechParams::default();
     let wl = Workload::default();
 

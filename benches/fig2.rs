@@ -6,7 +6,7 @@
 
 use std::path::Path;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> autorac::Result<()> {
     let dir = Path::new("artifacts");
     if !dir.join("calibration/fig2.json").exists() {
         eprintln!("SKIP fig2: run `make artifacts` first");

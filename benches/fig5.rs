@@ -6,7 +6,7 @@
 
 use autorac::nas::SearchConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> autorac::Result<()> {
     let fast = std::env::var("AUTORAC_BENCH_FAST").ok().as_deref() == Some("1");
     let cfg = SearchConfig {
         generations: if fast { 40 } else { 240 },

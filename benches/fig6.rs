@@ -8,7 +8,7 @@
 use autorac::nas::{autorac_best, DenseOp, Genome, SparseOp};
 use std::path::Path;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> autorac::Result<()> {
     let searched = Path::new("artifacts/searched_best.json");
     let (g, source) = if searched.exists() {
         (Genome::load(searched)?, "artifacts/searched_best.json (search output)")

@@ -21,7 +21,7 @@ use autorac::util::rng::Rng;
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> autorac::Result<()> {
     let mut b = Bencher::new();
     let tech = TechParams::default();
     let genome = autorac_best("criteo");

@@ -10,7 +10,7 @@ use autorac::runtime::atns::TensorFile;
 use autorac::runtime::client::Runtime;
 use std::path::Path;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> autorac::Result<()> {
     let dir = Path::new("artifacts");
     if !dir.join("calibration/accuracy.json").exists() {
         eprintln!("SKIP table2: run `make artifacts` first");
@@ -26,7 +26,9 @@ fn main() -> anyhow::Result<()> {
 
     // Rust-side verification: evaluate the AutoRAC PIM artifact on test
     // records through the actual serving stack (quantized crossbar path).
-    if dir.join("model_criteo_b512.hlo.txt").exists() {
+    if !Runtime::pjrt_available() {
+        eprintln!("SKIP rust-side eval: PJRT backend not linked (offline stub runtime::xla)");
+    } else if dir.join("model_criteo_b512.hlo.txt").exists() {
         let n = 2048usize;
         let prof = profile("criteo")?;
         let store = EmbeddingStore::from_atns(&TensorFile::read(

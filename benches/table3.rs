@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench table3`
 
-fn main() -> anyhow::Result<()> {
+fn main() -> autorac::Result<()> {
     for ds in ["criteo", "avazu", "kdd"] {
         autorac::report::table3(ds)?;
     }

@@ -11,7 +11,7 @@ use autorac::pim::TechParams;
 use autorac::sim::{simulate, Workload};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> autorac::Result<()> {
     let generations: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())

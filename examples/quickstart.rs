@@ -15,11 +15,16 @@ use autorac::runtime::atns::TensorFile;
 use autorac::runtime::client::Runtime;
 use std::path::Path;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> autorac::Result<()> {
     let dir = Path::new("artifacts");
-    anyhow::ensure!(
+    autorac::ensure!(
         dir.join("meta.json").exists(),
         "artifacts missing — run `make artifacts` first"
+    );
+    autorac::ensure!(
+        Runtime::pjrt_available(),
+        "PJRT backend not linked in this offline build (stub runtime::xla) — \
+         quickstart needs artifact execution"
     );
 
     let prof = profile("criteo")?;

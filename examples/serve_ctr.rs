@@ -18,15 +18,20 @@ use std::path::PathBuf;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> autorac::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let n: usize = argv.first().and_then(|s| s.parse().ok()).unwrap_or(2000);
     let rps: f64 = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(5000.0);
 
     let dir = PathBuf::from("artifacts");
-    anyhow::ensure!(
+    autorac::ensure!(
         dir.join("meta.json").exists(),
         "artifacts missing — run `make artifacts` first"
+    );
+    autorac::ensure!(
+        Runtime::pjrt_available(),
+        "PJRT backend not linked in this offline build (stub runtime::xla) — \
+         serve_ctr needs artifact execution"
     );
     let prof = profile("criteo")?;
     let store = Arc::new(EmbeddingStore::from_atns(&TensorFile::read(
@@ -73,7 +78,7 @@ fn main() -> anyhow::Result<()> {
     }
     drop(tx);
     let responses: Vec<_> = rx.iter().collect();
-    anyhow::ensure!(responses.len() == n, "lost responses");
+    autorac::ensure!(responses.len() == n, "lost responses");
     let snap = coord.metrics.snapshot();
     coord.shutdown();
 

@@ -12,28 +12,34 @@
 use autorac::data::{profile, make_batch, Generator, DEFAULT_SEED};
 use autorac::runtime::atns::TensorFile;
 use autorac::runtime::client::{lit_f32, lit_i32, Runtime};
+use autorac::runtime::xla;
 use std::path::Path;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> autorac::Result<()> {
     let steps: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(300);
     let dir = Path::new("artifacts");
-    anyhow::ensure!(
+    autorac::ensure!(
         dir.join("train_criteo.hlo.txt").exists(),
         "train artifact missing — run `make artifacts` first"
+    );
+    autorac::ensure!(
+        Runtime::pjrt_available(),
+        "PJRT backend not linked in this offline build (stub runtime::xla) — \
+         train_e2e needs artifact execution"
     );
 
     let mut rt = Runtime::open(dir)?;
     let meta = rt
         .meta("train_criteo")
-        .ok_or_else(|| anyhow::anyhow!("train_criteo not in meta.json"))?
+        .ok_or_else(|| autorac::err!("train_criteo not in meta.json"))?
         .clone();
     let order = meta.param_order.clone();
     let batch = meta.batch;
-    anyhow::ensure!(!order.is_empty(), "train meta lacks param_order");
+    autorac::ensure!(!order.is_empty(), "train meta lacks param_order");
 
     // Initial params + Adagrad accumulators, in feed order.
     let init = TensorFile::read(&dir.join("train_criteo_init.bin"))?;
@@ -42,7 +48,7 @@ fn main() -> anyhow::Result<()> {
         for name in &order {
             let t = init
                 .get(&format!("{prefix}/{name}"))
-                .ok_or_else(|| anyhow::anyhow!("missing init tensor {prefix}/{name}"))?;
+                .ok_or_else(|| autorac::err!("missing init tensor {prefix}/{name}"))?;
             let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
             state.push(lit_f32(&t.as_f32()?, &dims)?);
         }
@@ -92,7 +98,7 @@ fn main() -> anyhow::Result<()> {
         "loss {first:.4} → {last:.4} over {steps} steps ({:.1}s total)",
         t_train.elapsed().as_secs_f64()
     );
-    anyhow::ensure!(
+    autorac::ensure!(
         last < first,
         "training did not reduce the loss ({first} → {last})"
     );

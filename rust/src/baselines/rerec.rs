@@ -61,7 +61,7 @@ pub fn rerec_genome(dataset: &str) -> Genome {
 }
 
 /// Map the ReREC design (smart mapping — it is hand-optimized).
-pub fn rerec_model(dataset: &str, tech: &TechParams) -> anyhow::Result<MappedModel> {
+pub fn rerec_model(dataset: &str, tech: &TechParams) -> crate::Result<MappedModel> {
     map_genome(&rerec_genome(dataset), tech, MapStyle::Smart)
 }
 

@@ -27,7 +27,7 @@ pub struct WorkloadStats {
 pub const TABLE3_POOLING: usize = 64;
 
 /// `genome_stats` with a pooling factor applied to the gather count.
-pub fn genome_stats_pooled(g: &Genome, pooling: usize) -> anyhow::Result<WorkloadStats> {
+pub fn genome_stats_pooled(g: &Genome, pooling: usize) -> crate::Result<WorkloadStats> {
     let mut s = genome_stats(g)?;
     s.gathers *= pooling.max(1);
     // pooled rows are reduced (summed) as they stream: pooling adds
@@ -38,7 +38,7 @@ pub fn genome_stats_pooled(g: &Genome, pooling: usize) -> anyhow::Result<Workloa
 
 /// Walk the genome graph and accumulate MACs / bytes (mirrors the shape
 /// semantics of `Genome::shapes`).
-pub fn genome_stats(g: &Genome) -> anyhow::Result<WorkloadStats> {
+pub fn genome_stats(g: &Genome) -> crate::Result<WorkloadStats> {
     let prof = profile(&g.dataset)?;
     let shapes = g.shapes()?;
     let d = g.d_emb as f64;

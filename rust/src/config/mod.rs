@@ -78,10 +78,10 @@ const SERVE_KEYS: [&str; 6] =
     ["dataset", "workers", "batch", "max_wait_us", "requests", "rps"];
 const WORKLOAD_KEYS: [&str; 3] = ["n_requests", "arrival_rps", "seed"];
 
-fn check_keys(j: &Json, allowed: &[&str], section: &str) -> anyhow::Result<()> {
+fn check_keys(j: &Json, allowed: &[&str], section: &str) -> crate::Result<()> {
     if let Some(pairs) = j.as_obj() {
         for (k, _) in pairs {
-            anyhow::ensure!(
+            crate::ensure!(
                 allowed.contains(&k.as_str()),
                 "unknown key `{k}` in [{section}] (allowed: {allowed:?})"
             );
@@ -91,7 +91,7 @@ fn check_keys(j: &Json, allowed: &[&str], section: &str) -> anyhow::Result<()> {
 }
 
 impl Config {
-    pub fn load(path: &Path) -> anyhow::Result<Config> {
+    pub fn load(path: &Path) -> crate::Result<Config> {
         let j = Json::read_file(path)?;
         check_keys(&j, &["search", "serve", "workload"], "root")?;
         let mut cfg = Config::default();
@@ -102,8 +102,8 @@ impl Config {
                 Some(l) => {
                     let v = l
                         .as_arr()
-                        .ok_or_else(|| anyhow::anyhow!("lambdas must be an array"))?;
-                    anyhow::ensure!(v.len() == 3, "lambdas needs 3 entries");
+                        .ok_or_else(|| crate::err!("lambdas must be an array"))?;
+                    crate::ensure!(v.len() == 3, "lambdas needs 3 entries");
                     [
                         v[0].as_f64().unwrap_or(0.05),
                         v[1].as_f64().unwrap_or(0.05),
@@ -190,7 +190,7 @@ impl Config {
     }
 
     /// Optional `--config <path>` from the CLI; empty config otherwise.
-    pub fn from_args(args: &Args) -> anyhow::Result<Config> {
+    pub fn from_args(args: &Args) -> crate::Result<Config> {
         match args.get("config") {
             Some(p) => Config::load(Path::new(&p.to_string())),
             None => Ok(Config::default()),

@@ -6,7 +6,7 @@
 
 use crate::runtime::client::Runtime;
 
-/// A batched CTR scorer: dense [B×nd] + gathered sparse [B×Ns×d] → [B].
+/// A batched CTR scorer: dense `[B×nd]` + gathered sparse `[B×Ns×d]` → `[B]`.
 ///
 /// NOT `Send`: the PJRT client is `Rc`-internal, so each engine is
 /// constructed inside its worker thread (see `Coordinator::start`).
@@ -16,7 +16,7 @@ pub trait InferenceEngine {
         dense: &[f32],
         sparse: &[f32],
         batch: usize,
-    ) -> anyhow::Result<Vec<f32>>;
+    ) -> crate::Result<Vec<f32>>;
 
     /// The artifact's compiled batch size (inputs are padded to this).
     fn compiled_batch(&self) -> usize;
@@ -43,7 +43,7 @@ impl PjrtEngine {
         n_dense: usize,
         n_sparse: usize,
         d_emb: usize,
-    ) -> anyhow::Result<PjrtEngine> {
+    ) -> crate::Result<PjrtEngine> {
         let artifact = Runtime::model_name(dataset, batch);
         runtime.ensure_compiled(&artifact)?;
         Ok(PjrtEngine {
@@ -63,8 +63,8 @@ impl InferenceEngine for PjrtEngine {
         dense: &[f32],
         sparse: &[f32],
         batch: usize,
-    ) -> anyhow::Result<Vec<f32>> {
-        anyhow::ensure!(batch <= self.batch, "batch {batch} > compiled {}", self.batch);
+    ) -> crate::Result<Vec<f32>> {
+        crate::ensure!(batch <= self.batch, "batch {batch} > compiled {}", self.batch);
         // pad to the compiled batch
         let mut d = dense.to_vec();
         d.resize(self.batch * self.n_dense, 0.0);
@@ -127,7 +127,7 @@ impl InferenceEngine for MockEngine {
         dense: &[f32],
         sparse: &[f32],
         batch: usize,
-    ) -> anyhow::Result<Vec<f32>> {
+    ) -> crate::Result<Vec<f32>> {
         self.calls += 1;
         if !self.delay.is_zero() {
             std::thread::sleep(self.delay);

@@ -60,9 +60,9 @@ impl Coordinator {
         cfg: CoordinatorConfig,
         store: Arc<EmbeddingStore>,
         make_engine: F,
-    ) -> anyhow::Result<Coordinator>
+    ) -> crate::Result<Coordinator>
     where
-        F: Fn(usize) -> anyhow::Result<Box<dyn InferenceEngine>>
+        F: Fn(usize) -> crate::Result<Box<dyn InferenceEngine>>
             + Send
             + Sync
             + 'static,
@@ -100,7 +100,7 @@ impl Coordinator {
         }
         drop(ready_tx);
         for r in ready_rx.iter().take(cfg.n_workers) {
-            r.map_err(|e| anyhow::anyhow!("worker engine init failed: {e:#}"))?;
+            r.map_err(|e| crate::err!("worker engine init failed: {e:#}"))?;
         }
         metrics.reset_clock(); // engine compile time is not serving time
         Ok(Coordinator {
@@ -111,12 +111,12 @@ impl Coordinator {
     }
 
     /// Submit one request; the reply arrives on `reply`.
-    pub fn submit(&self, req: Request) -> anyhow::Result<()> {
+    pub fn submit(&self, req: Request) -> crate::Result<()> {
         self.metrics.on_request();
         self.router
             .route(req)
             .map(|_| ())
-            .map_err(|_| anyhow::anyhow!("all worker queues closed"))
+            .map_err(|_| crate::err!("all worker queues closed"))
     }
 
     /// Close intake and join workers (drains in-flight batches).
@@ -283,10 +283,10 @@ mod tests {
             dense: &[f32],
             sparse: &[f32],
             batch: usize,
-        ) -> anyhow::Result<Vec<f32>> {
+        ) -> crate::Result<Vec<f32>> {
             self.calls += 1;
             if self.calls % 2 == 0 {
-                anyhow::bail!("injected engine failure");
+                crate::bail!("injected engine failure");
             }
             self.inner.infer_batch(dense, sparse, batch)
         }

@@ -58,7 +58,7 @@ fn cards(n: usize) -> Vec<usize> {
 }
 
 /// Look up a profile by name ("criteo" | "avazu" | "kdd").
-pub fn profile(name: &str) -> anyhow::Result<Profile> {
+pub fn profile(name: &str) -> crate::Result<Profile> {
     Ok(match name {
         "criteo" => Profile {
             name: "criteo",
@@ -93,7 +93,7 @@ pub fn profile(name: &str) -> anyhow::Result<Profile> {
             gamma_pair: 0.6,
             noise: 0.5,
         },
-        other => anyhow::bail!("unknown dataset profile `{other}`"),
+        other => crate::bail!("unknown dataset profile `{other}`"),
     })
 }
 

@@ -8,14 +8,14 @@ use crate::util::rng::{seed_from_name, Rng};
 /// All embedding tables for one dataset, flattened per field.
 pub struct EmbeddingStore {
     pub d_emb: usize,
-    /// per-field tables, row-major [cards[j] × d_emb]
+    /// per-field tables, row-major `[cards[j] × d_emb]`
     tables: Vec<Vec<f32>>,
     pub cards: Vec<usize>,
 }
 
 impl EmbeddingStore {
     /// Load trained tables from an `embeddings_<ds>.bin` artifact.
-    pub fn from_atns(tf: &TensorFile) -> anyhow::Result<EmbeddingStore> {
+    pub fn from_atns(tf: &TensorFile) -> crate::Result<EmbeddingStore> {
         let mut tables = Vec::new();
         let mut cards = Vec::new();
         let mut d_emb = 0usize;
@@ -23,14 +23,14 @@ impl EmbeddingStore {
             let Some(t) = tf.get(&format!("emb/{j}")) else {
                 break;
             };
-            anyhow::ensure!(t.shape.len() == 2, "emb/{j}: expected 2-D");
+            crate::ensure!(t.shape.len() == 2, "emb/{j}: expected 2-D");
             let (c, d) = (t.shape[0], t.shape[1]);
-            anyhow::ensure!(d_emb == 0 || d == d_emb, "emb/{j}: dim mismatch");
+            crate::ensure!(d_emb == 0 || d == d_emb, "emb/{j}: dim mismatch");
             d_emb = d;
             cards.push(c);
             tables.push(t.as_f32()?);
         }
-        anyhow::ensure!(!tables.is_empty(), "no emb/<j> tensors found");
+        crate::ensure!(!tables.is_empty(), "no emb/<j> tensors found");
         Ok(EmbeddingStore {
             d_emb,
             tables,

@@ -28,3 +28,9 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod util;
+
+// Root-level error re-exports (the pattern anyhow used): new code can
+// write `autorac::Result` / `autorac::Error` instead of the full
+// `util::error` path; the `err!`/`bail!`/`ensure!` macros already live
+// here via `#[macro_export]`.
+pub use util::error::{Context, Error, Result};

@@ -26,7 +26,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> autorac::Result<()> {
     let args = Args::parse_env();
     match args.subcommand.as_deref() {
         Some("search") => cmd_search(&args),
@@ -69,7 +69,7 @@ fn main() -> anyhow::Result<()> {
             }
             args.finish()
         }
-        Some(other) => anyhow::bail!("unknown subcommand `{other}` (try --help)"),
+        Some(other) => autorac::bail!("unknown subcommand `{other}` (try --help)"),
         None => {
             print_help();
             Ok(())
@@ -92,7 +92,7 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("artifacts", "artifacts"))
 }
 
-fn search_cfg(args: &Args) -> anyhow::Result<SearchConfig> {
+fn search_cfg(args: &Args) -> autorac::Result<SearchConfig> {
     // config file first, CLI overrides on top
     let base = autorac::config::Config::from_args(args)?
         .search
@@ -111,7 +111,7 @@ fn search_cfg(args: &Args) -> anyhow::Result<SearchConfig> {
     })
 }
 
-fn cmd_search(args: &Args) -> anyhow::Result<()> {
+fn cmd_search(args: &Args) -> autorac::Result<()> {
     let cfg = search_cfg(args)?;
     let out = args.str_or("out", "artifacts/searched_best.json");
     args.finish()?;
@@ -130,7 +130,7 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+fn cmd_simulate(args: &Args) -> autorac::Result<()> {
     let dataset = args.str_or("dataset", "criteo");
     let genome = match args.get("genome") {
         Some(p) => Genome::load(std::path::Path::new(&p.to_string()))?,
@@ -163,7 +163,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+fn cmd_serve(args: &Args) -> autorac::Result<()> {
     let dataset = args.str_or("dataset", "criteo");
     let dir = artifacts_dir(args);
     let n = args.usize_or("requests", 2000)?;
@@ -171,6 +171,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let batch = args.usize_or("batch", 32)?;
     let rps = args.f64_or("rps", f64::INFINITY)?;
     args.finish()?;
+    autorac::ensure!(
+        Runtime::pjrt_available(),
+        "PJRT backend not linked in this offline build (stub runtime::xla) — \
+         `serve` needs artifact execution"
+    );
 
     let prof = profile(&dataset)?;
     let tf = TensorFile::read(&dir.join(format!("embeddings_{dataset}.bin")))?;
@@ -220,7 +225,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let responses: Vec<_> = rx.iter().collect();
     let snap = coord.metrics.snapshot();
     coord.shutdown();
-    anyhow::ensure!(responses.len() == n, "lost responses: {}", responses.len());
+    autorac::ensure!(responses.len() == n, "lost responses: {}", responses.len());
     println!("served {n} requests on {workers} worker(s), artifact batch {batch}");
     println!(
         "  throughput {:.0} req/s | mean batch {:.1} | e2e p50 {:.0} µs p99 {:.0} µs | exec p50 {:.0} µs",
@@ -232,11 +237,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+fn cmd_eval(args: &Args) -> autorac::Result<()> {
     let dataset = args.str_or("dataset", "criteo");
     let dir = artifacts_dir(args);
     let n = args.usize_or("n", 4096)?;
     args.finish()?;
+    autorac::ensure!(
+        Runtime::pjrt_available(),
+        "PJRT backend not linked in this offline build (stub runtime::xla) — \
+         `eval` needs artifact execution"
+    );
     let prof = profile(&dataset)?;
     let tf = TensorFile::read(&dir.join(format!("embeddings_{dataset}.bin")))?;
     let store = EmbeddingStore::from_atns(&tf)?;
@@ -276,7 +286,7 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_datagen(args: &Args) -> anyhow::Result<()> {
+fn cmd_datagen(args: &Args) -> autorac::Result<()> {
     let dataset = args.str_or("dataset", "criteo");
     let n = args.usize_or("n", 5)?;
     args.finish()?;

@@ -140,7 +140,7 @@ pub fn map_genome(
     g: &Genome,
     tech: &TechParams,
     style: MapStyle,
-) -> anyhow::Result<MappedModel> {
+) -> crate::Result<MappedModel> {
     g.validate()?;
     let shapes = g.shapes()?;
     let d = g.d_emb;

@@ -75,7 +75,7 @@ pub fn genome_features(g: &Genome) -> Vec<f64> {
 
 impl Surrogate {
     /// Load from `artifacts/calibration/surrogate.json`.
-    pub fn load(path: &std::path::Path) -> anyhow::Result<Surrogate> {
+    pub fn load(path: &std::path::Path) -> crate::Result<Surrogate> {
         let j = Json::read_file(path)?;
         let weights = j.req_f64s("weights")?;
         let datasets = j
@@ -83,7 +83,7 @@ impl Surrogate {
             .iter()
             .map(|d| d.as_str().unwrap_or_default().to_string())
             .collect::<Vec<_>>();
-        anyhow::ensure!(
+        crate::ensure!(
             weights.len() == FEATURE_NAMES.len() + datasets.len(),
             "weight vector length {} != {} features + {} datasets",
             weights.len(),

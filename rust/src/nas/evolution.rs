@@ -91,7 +91,7 @@ pub struct Search {
 impl Search {
     /// Targets default to the metrics of the hand-crafted NASRec design
     /// — "reach or beat the manual design on every axis".
-    pub fn new(cfg: SearchConfig, surrogate: Surrogate) -> anyhow::Result<Search> {
+    pub fn new(cfg: SearchConfig, surrogate: Surrogate) -> crate::Result<Search> {
         let tech = TechParams::default();
         let reference = super::genome::nasrec_like(&cfg.dataset);
         let r = Self::sim_genome(&reference, &tech, cfg.sim_requests)?;
@@ -112,7 +112,7 @@ impl Search {
         g: &Genome,
         tech: &TechParams,
         requests: usize,
-    ) -> anyhow::Result<SimReport> {
+    ) -> crate::Result<SimReport> {
         let mapped = map_genome(g, tech, MapStyle::Smart)?;
         Ok(simulate(
             &mapped,
@@ -125,7 +125,7 @@ impl Search {
     }
 
     /// Evaluate a genome → Individual (Algorithm 1 lines 9–11).
-    pub fn evaluate(&mut self, genome: Genome) -> anyhow::Result<Individual> {
+    pub fn evaluate(&mut self, genome: Genome) -> crate::Result<Individual> {
         let test_loss = self.surrogate.logloss(&genome);
         let r = Self::sim_genome(&genome, &self.tech, self.cfg.sim_requests)?;
         let metrics = [1.0 / r.throughput_rps, r.area_mm2, r.power_mw];
@@ -143,7 +143,7 @@ impl Search {
     }
 
     /// Line 1: all_populations ← random_search(supernet).
-    pub fn init_population(&mut self) -> anyhow::Result<()> {
+    pub fn init_population(&mut self) -> crate::Result<()> {
         let mut rng = self.rng.substream("init");
         for i in 0..self.cfg.population {
             let g = random_genome(&mut rng, &self.cfg.dataset.clone(), &format!("init{i}"));
@@ -167,7 +167,7 @@ impl Search {
     }
 
     /// Lines 3–15: one generation.
-    pub fn step(&mut self) -> anyhow::Result<()> {
+    pub fn step(&mut self) -> crate::Result<()> {
         self.generation += 1;
         // Sample_and_select: tournament of `sample_size`, best criterion.
         let mut rng = self.rng.substream(&format!("gen/{}", self.generation));
@@ -199,7 +199,7 @@ impl Search {
     }
 
     /// Run the full search; returns the best individual.
-    pub fn run(&mut self) -> anyhow::Result<Individual> {
+    pub fn run(&mut self) -> crate::Result<Individual> {
         if self.population.is_empty() {
             self.init_population()?;
         }

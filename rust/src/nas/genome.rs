@@ -73,25 +73,25 @@ pub struct BlockShape {
 }
 
 impl Genome {
-    pub fn validate(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(SPARSE_DIMS.contains(&self.d_emb), "d_emb {}", self.d_emb);
-        anyhow::ensure!(!self.blocks.is_empty(), "no blocks");
-        anyhow::ensure!(self.pim.feasible(), "PIM genome violates the ADC rule");
-        anyhow::ensure!(WEIGHT_BITS.contains(&self.final_wbits), "final_wbits");
+    pub fn validate(&self) -> crate::Result<()> {
+        crate::ensure!(SPARSE_DIMS.contains(&self.d_emb), "d_emb {}", self.d_emb);
+        crate::ensure!(!self.blocks.is_empty(), "no blocks");
+        crate::ensure!(self.pim.feasible(), "PIM genome violates the ADC rule");
+        crate::ensure!(WEIGHT_BITS.contains(&self.final_wbits), "final_wbits");
         for (i, b) in self.blocks.iter().enumerate() {
-            anyhow::ensure!(DENSE_DIMS.contains(&b.dense_dim), "block {i} dense_dim");
-            anyhow::ensure!(
+            crate::ensure!(DENSE_DIMS.contains(&b.dense_dim), "block {i} dense_dim");
+            crate::ensure!(
                 SPARSE_FEATURES.contains(&b.sparse_features),
                 "block {i} sparse_features"
             );
             for w in [b.dense_wbits, b.sparse_wbits, b.inter_wbits] {
-                anyhow::ensure!(WEIGHT_BITS.contains(&w), "block {i} wbits {w}");
+                crate::ensure!(WEIGHT_BITS.contains(&w), "block {i} wbits {w}");
             }
-            anyhow::ensure!(
+            crate::ensure!(
                 !b.dense_in.is_empty() && b.dense_in.iter().all(|&j| j <= i),
                 "block {i} dense_in"
             );
-            anyhow::ensure!(
+            crate::ensure!(
                 !b.sparse_in.is_empty() && b.sparse_in.iter().all(|&j| j <= i),
                 "block {i} sparse_in"
             );
@@ -105,7 +105,7 @@ impl Genome {
     }
 
     /// Mirror of python infer_shapes (shape semantics contract).
-    pub fn shapes(&self) -> anyhow::Result<Vec<BlockShape>> {
+    pub fn shapes(&self) -> crate::Result<Vec<BlockShape>> {
         let prof = profile(&self.dataset)?;
         let mut dense_dims = vec![prof.n_dense.max(1)];
         let mut sparse_ns = vec![prof.n_sparse()];
@@ -175,23 +175,23 @@ impl Genome {
         ])
     }
 
-    pub fn from_json(j: &Json) -> anyhow::Result<Genome> {
+    pub fn from_json(j: &Json) -> crate::Result<Genome> {
         let blocks = j
             .req_arr("blocks")?
             .iter()
-            .map(|b| -> anyhow::Result<Block> {
+            .map(|b| -> crate::Result<Block> {
                 Ok(Block {
                     dense_op: match b.req_str("dense_op")? {
                         "fc" => DenseOp::Fc,
                         "dp" => DenseOp::Dp,
-                        o => anyhow::bail!("dense_op {o}"),
+                        o => crate::bail!("dense_op {o}"),
                     },
                     dense_dim: b.req_usize("dense_dim")?,
                     dense_wbits: b.req_usize("dense_wbits")?,
                     sparse_op: match b.req_str("sparse_op")? {
                         "efc" => SparseOp::Efc,
                         "identity" => SparseOp::Identity,
-                        o => anyhow::bail!("sparse_op {o}"),
+                        o => crate::bail!("sparse_op {o}"),
                     },
                     sparse_features: b.req_usize("sparse_features")?,
                     sparse_wbits: b.req_usize("sparse_wbits")?,
@@ -199,7 +199,7 @@ impl Genome {
                         "none" => Interaction::None,
                         "dsi" => Interaction::Dsi,
                         "fm" => Interaction::Fm,
-                        o => anyhow::bail!("interaction {o}"),
+                        o => crate::bail!("interaction {o}"),
                     },
                     inter_wbits: b.req_usize("inter_wbits")?,
                     dense_in: b
@@ -214,7 +214,7 @@ impl Genome {
                         .collect(),
                 })
             })
-            .collect::<anyhow::Result<Vec<_>>>()?;
+            .collect::<crate::Result<Vec<_>>>()?;
         let g = Genome {
             name: j.req_str("name")?.to_string(),
             dataset: j.req_str("dataset")?.to_string(),
@@ -222,18 +222,18 @@ impl Genome {
             blocks,
             final_wbits: j.req_usize("final_wbits")?,
             pim: PimConfig::from_json(
-                j.get("pim").ok_or_else(|| anyhow::anyhow!("missing pim"))?,
+                j.get("pim").ok_or_else(|| crate::err!("missing pim"))?,
             )?,
         };
         g.validate()?;
         Ok(g)
     }
 
-    pub fn load(path: &std::path::Path) -> anyhow::Result<Genome> {
+    pub fn load(path: &std::path::Path) -> crate::Result<Genome> {
         Genome::from_json(&Json::read_file(path)?)
     }
 
-    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
         self.to_json().write_file(path)
     }
 

@@ -107,7 +107,7 @@ impl PimConfig {
         ])
     }
 
-    pub fn from_json(j: &Json) -> anyhow::Result<PimConfig> {
+    pub fn from_json(j: &Json) -> crate::Result<PimConfig> {
         Ok(PimConfig {
             xbar: j.req_usize("xbar")?,
             dac_bits: j.req_usize("dac_bits")?,

@@ -94,7 +94,7 @@ pub fn adc_transfer(v: i64, cfg: &PimConfig) -> i64 {
 /// differential (positive/negative) pair of bit-plane stacks.
 pub struct ProgrammedXbar {
     pub cfg: PimConfig,
-    /// [n_planes] matrices of plane values in [0, 2^cell_bits)
+    /// `[n_planes]` matrices of plane values in `[0, 2^cell_bits)`
     pos_planes: Vec<MatI32>,
     neg_planes: Vec<MatI32>,
     pub k: usize,

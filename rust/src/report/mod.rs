@@ -20,7 +20,7 @@ use std::path::Path;
 // ---------------------------------------------------------------------------
 
 /// Print Table 2 from the calibration artifacts. Returns the JSON blob.
-pub fn table2(artifacts: &Path) -> anyhow::Result<Json> {
+pub fn table2(artifacts: &Path) -> crate::Result<Json> {
     let acc = Json::read_file(&artifacts.join("calibration/accuracy.json"))?;
     let order = [
         ("dlrm", "DLRM [15]"),
@@ -62,7 +62,7 @@ pub fn table2(artifacts: &Path) -> anyhow::Result<Json> {
 pub fn table3_frontend(
     dataset: &str,
     tech: &TechParams,
-) -> anyhow::Result<(MemoryTileModel, Placement, Vec<usize>)> {
+) -> crate::Result<(MemoryTileModel, Placement, Vec<usize>)> {
     let prof = profile(dataset)?;
     let store = EmbeddingStore::random(&prof, 32, 1);
     let rows_total = MemoryTileModel::real_scale_rows(dataset);
@@ -94,7 +94,7 @@ pub struct Table3Row {
 }
 
 /// Compute Table 3 (AutoRAC vs CPU / RecNMP / naive-NASRec / ReREC).
-pub fn table3(dataset: &str) -> anyhow::Result<(Vec<Table3Row>, SimReport)> {
+pub fn table3(dataset: &str) -> crate::Result<(Vec<Table3Row>, SimReport)> {
     let tech = TechParams::default();
     let wl = Workload::default();
     let (tiles, placement, rows) = table3_frontend(dataset, &tech)?;
@@ -186,7 +186,7 @@ pub fn table3(dataset: &str) -> anyhow::Result<(Vec<Table3Row>, SimReport)> {
 // Figure 2 — LogLoss vs weight bit-width
 // ---------------------------------------------------------------------------
 
-pub fn fig2(artifacts: &Path) -> anyhow::Result<Vec<(usize, f64)>> {
+pub fn fig2(artifacts: &Path) -> crate::Result<Vec<(usize, f64)>> {
     let j = Json::read_file(&artifacts.join("calibration/fig2.json"))?;
     let mut pts: Vec<(usize, f64)> = j
         .as_obj()
@@ -210,7 +210,7 @@ pub fn fig2(artifacts: &Path) -> anyhow::Result<Vec<(usize, f64)>> {
 // Figure 5 — search criterion trajectory
 // ---------------------------------------------------------------------------
 
-pub fn fig5(cfg: SearchConfig) -> anyhow::Result<(Vec<f64>, Genome)> {
+pub fn fig5(cfg: SearchConfig) -> crate::Result<(Vec<f64>, Genome)> {
     let mut search = Search::new(cfg, Surrogate::load_default())?;
     let best = search.run()?;
     let drop = search.trace.pct_drop();

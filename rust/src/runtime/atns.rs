@@ -31,8 +31,8 @@ impl Tensor {
         self.len() == 0
     }
 
-    pub fn as_f32(&self) -> anyhow::Result<Vec<f32>> {
-        anyhow::ensure!(self.dtype == Dtype::F32, "{}: not f32", self.name);
+    pub fn as_f32(&self) -> crate::Result<Vec<f32>> {
+        crate::ensure!(self.dtype == Dtype::F32, "{}: not f32", self.name);
         Ok(self
             .data
             .chunks_exact(4)
@@ -40,8 +40,8 @@ impl Tensor {
             .collect())
     }
 
-    pub fn as_i32(&self) -> anyhow::Result<Vec<i32>> {
-        anyhow::ensure!(self.dtype == Dtype::I32, "{}: not i32", self.name);
+    pub fn as_i32(&self) -> crate::Result<Vec<i32>> {
+        crate::ensure!(self.dtype == Dtype::I32, "{}: not i32", self.name);
         Ok(self
             .data
             .chunks_exact(4)
@@ -61,29 +61,29 @@ impl TensorFile {
         self.tensors.iter().find(|t| t.name == name)
     }
 
-    pub fn read(path: &std::path::Path) -> anyhow::Result<TensorFile> {
+    pub fn read(path: &std::path::Path) -> crate::Result<TensorFile> {
         let mut f = std::fs::File::open(path)
-            .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+            .map_err(|e| crate::err!("opening {}: {e}", path.display()))?;
         let mut buf = Vec::new();
         f.read_to_end(&mut buf)?;
-        Self::parse(&buf).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+        Self::parse(&buf).map_err(|e| crate::err!("{}: {e}", path.display()))
     }
 
-    pub fn parse(buf: &[u8]) -> anyhow::Result<TensorFile> {
+    pub fn parse(buf: &[u8]) -> crate::Result<TensorFile> {
         let mut pos = 0usize;
-        let take = |pos: &mut usize, n: usize| -> anyhow::Result<&[u8]> {
-            anyhow::ensure!(*pos + n <= buf.len(), "truncated at byte {}", *pos);
+        let take = |pos: &mut usize, n: usize| -> crate::Result<&[u8]> {
+            crate::ensure!(*pos + n <= buf.len(), "truncated at byte {}", *pos);
             let s = &buf[*pos..*pos + n];
             *pos += n;
             Ok(s)
         };
-        let u32le = |pos: &mut usize| -> anyhow::Result<u32> {
+        let u32le = |pos: &mut usize| -> crate::Result<u32> {
             let b = take(pos, 4)?;
             Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
         };
-        anyhow::ensure!(take(&mut pos, 4)? == b"ATNS", "bad magic");
+        crate::ensure!(take(&mut pos, 4)? == b"ATNS", "bad magic");
         let version = u32le(&mut pos)?;
-        anyhow::ensure!(version == 1, "unsupported version {version}");
+        crate::ensure!(version == 1, "unsupported version {version}");
         let count = u32le(&mut pos)? as usize;
         let mut tensors = Vec::with_capacity(count);
         for _ in 0..count {
@@ -94,7 +94,7 @@ impl TensorFile {
                 0 => Dtype::F32,
                 1 => Dtype::I32,
                 2 => Dtype::I64,
-                d => anyhow::bail!("{name}: unknown dtype {d}"),
+                d => crate::bail!("{name}: unknown dtype {d}"),
             };
             let ndim = hdr[1] as usize;
             let mut shape = Vec::with_capacity(ndim);
@@ -111,7 +111,7 @@ impl TensorFile {
                 Dtype::I64 => 8,
             };
             let expect: usize = shape.iter().product::<usize>() * elem;
-            anyhow::ensure!(
+            crate::ensure!(
                 nbytes == expect,
                 "{name}: payload {nbytes} != shape {shape:?} × {elem}"
             );
@@ -123,7 +123,7 @@ impl TensorFile {
                 data,
             });
         }
-        anyhow::ensure!(pos == buf.len(), "trailing bytes after last tensor");
+        crate::ensure!(pos == buf.len(), "trailing bytes after last tensor");
         Ok(TensorFile { tensors })
     }
 }

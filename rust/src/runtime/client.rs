@@ -3,6 +3,7 @@
 //! path. Pattern follows /opt/xla-example/load_hlo (HLO TEXT interchange;
 //! see that README for why serialized protos are rejected).
 
+use crate::runtime::xla;
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -27,10 +28,18 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Whether a real PJRT backend is linked in. `false` in the offline
+    /// build (stub `runtime::xla`): registries open and artifacts parse,
+    /// but compilation/execution is unavailable — execution-dependent
+    /// tests and flows gate on this and skip cleanly.
+    pub fn pjrt_available() -> bool {
+        xla::AVAILABLE
+    }
+
     /// Open the artifact directory (reads meta.json; compiles lazily).
-    pub fn open(dir: &Path) -> anyhow::Result<Runtime> {
+    pub fn open(dir: &Path) -> crate::Result<Runtime> {
         let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+            .map_err(|e| crate::err!("PJRT cpu client: {e:?}"))?;
         let meta = Json::read_file(&dir.join("meta.json"))?;
         let mut metas = HashMap::new();
         if let Some(arts) = meta.get("artifacts").and_then(Json::as_obj) {
@@ -84,21 +93,21 @@ impl Runtime {
     }
 
     /// Compile (once) and cache an artifact's executable.
-    pub fn ensure_compiled(&mut self, name: &str) -> anyhow::Result<()> {
+    pub fn ensure_compiled(&mut self, name: &str) -> crate::Result<()> {
         if self.executables.contains_key(name) {
             return Ok(());
         }
         let path = self.dir.join(format!("{name}.hlo.txt"));
-        anyhow::ensure!(path.exists(), "missing artifact {}", path.display());
+        crate::ensure!(path.exists(), "missing artifact {}", path.display());
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().expect("utf-8 path"),
         )
-        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        .map_err(|e| crate::err!("parse {}: {e:?}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            .map_err(|e| crate::err!("compile {name}: {e:?}"))?;
         self.executables.insert(name.to_string(), exe);
         Ok(())
     }
@@ -109,21 +118,21 @@ impl Runtime {
         &mut self,
         name: &str,
         inputs: &[xla::Literal],
-    ) -> anyhow::Result<Vec<xla::Literal>> {
+    ) -> crate::Result<Vec<xla::Literal>> {
         self.ensure_compiled(name)?;
         let exe = self.executables.get(name).expect("just compiled");
         let result = exe
             .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+            .map_err(|e| crate::err!("execute {name}: {e:?}"))?;
         let lit = result[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+            .map_err(|e| crate::err!("fetch {name}: {e:?}"))?;
         lit.to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
+            .map_err(|e| crate::err!("untuple {name}: {e:?}"))
     }
 
-    /// Run batched CTR inference: dense [B×nd] and gathered sparse
-    /// [B×Ns×d] row-major f32 → probabilities [B].
+    /// Run batched CTR inference: dense `[B×nd]` and gathered sparse
+    /// `[B×Ns×d]` row-major f32 → probabilities `[B]`.
     pub fn infer(
         &mut self,
         name: &str,
@@ -131,7 +140,7 @@ impl Runtime {
         dense_dims: [usize; 2],
         sparse: &[f32],
         sparse_dims: [usize; 3],
-    ) -> anyhow::Result<Vec<f32>> {
+    ) -> crate::Result<Vec<f32>> {
         let d_lit = lit_f32(dense, &[dense_dims[0] as i64, dense_dims[1] as i64])?;
         let s_lit = lit_f32(
             sparse,
@@ -142,37 +151,37 @@ impl Runtime {
             ],
         )?;
         let out = self.execute(name, &[d_lit, s_lit])?;
-        anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
+        crate::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
         out[0]
             .to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("probs: {e:?}"))
+            .map_err(|e| crate::err!("probs: {e:?}"))
     }
 }
 
 /// Build an f32 literal of the given shape from a row-major slice.
-pub fn lit_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> crate::Result<xla::Literal> {
     let expect: i64 = dims.iter().product();
-    anyhow::ensure!(
+    crate::ensure!(
         expect as usize == data.len(),
         "shape {dims:?} != {} elements",
         data.len()
     );
     xla::Literal::vec1(data)
         .reshape(dims)
-        .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))
+        .map_err(|e| crate::err!("reshape {dims:?}: {e:?}"))
 }
 
 /// Build an i32 literal of the given shape.
-pub fn lit_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> crate::Result<xla::Literal> {
     let expect: i64 = dims.iter().product();
-    anyhow::ensure!(
+    crate::ensure!(
         expect as usize == data.len(),
         "shape {dims:?} != {} elements",
         data.len()
     );
     xla::Literal::vec1(data)
         .reshape(dims)
-        .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))
+        .map_err(|e| crate::err!("reshape {dims:?}: {e:?}"))
 }
 
 #[cfg(test)]

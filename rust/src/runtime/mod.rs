@@ -3,3 +3,7 @@
 
 pub mod atns;
 pub mod client;
+// Offline PJRT stand-in. To link the real bindings instead, replace this
+// line with `pub use ::xla;` and add the crate to Cargo.toml — client.rs
+// is written against the real API surface.
+pub mod xla;

@@ -147,7 +147,7 @@ impl Bencher {
     }
 
     /// Append results to artifacts/bench_log.json for before/after diffs.
-    pub fn write_log(&self, tag: &str) -> anyhow::Result<()> {
+    pub fn write_log(&self, tag: &str) -> crate::Result<()> {
         let path = std::path::Path::new("artifacts/bench_log.json");
         let mut log = if path.exists() {
             Json::read_file(path)?

@@ -69,30 +69,30 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
-    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+    pub fn usize_or(&self, key: &str, default: usize) -> crate::Result<usize> {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got `{v}`")),
+                .map_err(|_| crate::err!("--{key} expects an integer, got `{v}`")),
         }
     }
 
-    pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+    pub fn u64_or(&self, key: &str, default: u64) -> crate::Result<u64> {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got `{v}`")),
+                .map_err(|_| crate::err!("--{key} expects an integer, got `{v}`")),
         }
     }
 
-    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+    pub fn f64_or(&self, key: &str, default: f64) -> crate::Result<f64> {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got `{v}`")),
+                .map_err(|_| crate::err!("--{key} expects a number, got `{v}`")),
         }
     }
 
@@ -106,7 +106,7 @@ impl Args {
     }
 
     /// Error on any `--key value` / `--flag` that no handler consumed.
-    pub fn finish(&self) -> anyhow::Result<()> {
+    pub fn finish(&self) -> crate::Result<()> {
         let consumed = self.consumed.borrow();
         let unknown: Vec<&String> = self
             .kv
@@ -117,7 +117,7 @@ impl Args {
         if unknown.is_empty() {
             Ok(())
         } else {
-            anyhow::bail!(
+            crate::bail!(
                 "unknown option(s): {}",
                 unknown
                     .iter()

@@ -1,0 +1,329 @@
+//! Error substrate (S3 in DESIGN.md): the crate-wide `Error`/`Result`
+//! pair plus `err!`/`bail!`/`ensure!` macros and a `Context` extension
+//! trait — a zero-dependency stand-in for the `anyhow` crate, which is
+//! unavailable in the offline build environment (DESIGN.md §8,
+//! docs/adr/001-offline-zero-deps.md).
+//!
+//! Semantics mirror anyhow where it matters to this codebase:
+//!
+//! * `Error` is a cheap, `Send + Sync` message chain (outermost context
+//!   first, root cause last);
+//! * `.context("…")` / `.with_context(|| …)` wrap any error — or an
+//!   `Option` — with a higher-level frame;
+//! * `Display` prints the full chain joined by `": "` (both `{}` and the
+//!   anyhow-style alternate `{:#}` — this crate always wants the chain);
+//! * `?` converts from the std error types the codebase actually
+//!   produces (`io::Error`, `fmt::Error`, UTF-8 and number parses, and
+//!   the internal `JsonError` / `XlaError`).
+
+use std::fmt;
+
+/// Crate-wide result alias (replaces the one the anyhow crate provided).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chained error message. Frames are ordered outermost-first;
+/// the last frame is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message — usually reached through the
+    /// [`crate::err!`] macro (anyhow's `anyhow!` analogue).
+    pub fn msg(message: impl Into<String>) -> Error {
+        Error {
+            chain: vec![message.into()],
+        }
+    }
+
+    /// Wrap with an outer context frame (consuming builder form).
+    pub fn wrap(mut self, context: impl Into<String>) -> Error {
+        self.chain.insert(0, context.into());
+        self
+    }
+
+    /// The outermost (most recent) context frame.
+    pub fn outermost(&self) -> &str {
+        &self.chain[0]
+    }
+
+    /// The innermost frame — the original failure.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+
+    /// All frames, outermost first (like iterating anyhow's `Chain`).
+    pub fn frames(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{}` and `{:#}` both print the full chain: every consumer in
+        // this crate wants the whole story (anyhow prints only the
+        // outermost frame for `{}`, which loses the root cause).
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> Result<…>` reports errors via Debug; make that
+        // path human-readable instead of dumping the struct.
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl std::error::Error for Error {}
+
+// ---------------------------------------------------------------------------
+// `?` conversions for the error types this codebase produces.
+// A blanket `impl<E: std::error::Error> From<E>` would collide with the
+// reflexive `From<Error>`, so the sources are listed explicitly.
+// ---------------------------------------------------------------------------
+
+macro_rules! impl_from_error {
+    ($($ty:ty),* $(,)?) => {
+        $(impl From<$ty> for Error {
+            fn from(e: $ty) -> Error {
+                Error::msg(e.to_string())
+            }
+        })*
+    };
+}
+
+impl_from_error!(
+    std::io::Error,
+    std::fmt::Error,
+    std::string::FromUtf8Error,
+    std::str::Utf8Error,
+    std::num::ParseIntError,
+    std::num::ParseFloatError,
+    std::num::TryFromIntError,
+    super::json::JsonError,
+);
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error::msg(s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Context extension trait (analogue of anyhow's `Context`).
+// ---------------------------------------------------------------------------
+
+/// Attach context to a failing `Result` or an empty `Option`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed message.
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+
+    /// Wrap the error with a lazily-built message (free on success).
+    fn with_context<F, S>(self, f: F) -> Result<T>
+    where
+        F: FnOnce() -> S,
+        S: Into<String>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| e.into().wrap(msg))
+    }
+
+    fn with_context<F, S>(self, f: F) -> Result<T>
+    where
+        F: FnOnce() -> S,
+        S: Into<String>,
+    {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<F, S>(self, f: F) -> Result<T>
+    where
+        F: FnOnce() -> S,
+        S: Into<String>,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Macros (exported at the crate root: `crate::err!` / `autorac::err!`).
+// ---------------------------------------------------------------------------
+
+/// Build an [`Error`](crate::util::error::Error) from a format string —
+/// the analogue of anyhow's `anyhow!`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`](crate::util::error::Error) —
+/// the analogue of anyhow's `bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*).into())
+    };
+}
+
+/// Return early with an error unless the condition holds — the
+/// analogue of anyhow's `ensure!`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_display() {
+        let e = Error::msg("root failure");
+        assert_eq!(e.to_string(), "root failure");
+        assert_eq!(e.root_cause(), "root failure");
+        assert_eq!(e.outermost(), "root failure");
+        let e = crate::err!("bad value {} in {}", 42, "field");
+        assert_eq!(e.to_string(), "bad value 42 in field");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: Result<()> = Err(Error::msg("disk on fire"));
+        let e = r
+            .context("reading meta.json")
+            .context("opening artifact registry")
+            .unwrap_err();
+        assert_eq!(
+            e.to_string(),
+            "opening artifact registry: reading meta.json: disk on fire"
+        );
+        assert_eq!(e.root_cause(), "disk on fire");
+        assert_eq!(e.outermost(), "opening artifact registry");
+        assert_eq!(e.frames().count(), 3);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let mut called = false;
+        let ok: Result<u32> = Ok(7);
+        let v = ok
+            .with_context(|| {
+                called = true;
+                "never built"
+            })
+            .unwrap();
+        assert_eq!(v, 7);
+        assert!(!called, "context closure must not run on success");
+
+        let err: Result<u32> = Err(Error::msg("boom"));
+        let e = err.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "step 3: boom");
+    }
+
+    #[test]
+    fn option_context() {
+        let some: Option<u8> = Some(1);
+        assert_eq!(some.context("missing").unwrap(), 1);
+        let none: Option<u8> = None;
+        let e = none.with_context(|| "key `x` absent").unwrap_err();
+        assert_eq!(e.to_string(), "key `x` absent");
+    }
+
+    #[test]
+    fn display_alternate_matches_plain() {
+        let e = Error::msg("inner").wrap("outer");
+        assert_eq!(format!("{e}"), "outer: inner");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        // Debug is the human-readable chain too (main() exit path).
+        assert_eq!(format!("{e:?}"), "outer: inner");
+    }
+
+    #[test]
+    fn question_mark_converts_io_error() {
+        fn open_missing() -> Result<String> {
+            let text = std::fs::read_to_string("/definitely/not/a/real/path")?;
+            Ok(text)
+        }
+        let e = open_missing().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn question_mark_converts_fmt_error() {
+        fn render() -> Result<String> {
+            use std::fmt::Write;
+            let mut s = String::new();
+            write!(s, "{}", 1)?;
+            Ok(s)
+        }
+        assert_eq!(render().unwrap(), "1");
+
+        // And the explicit From path:
+        let e: Error = std::fmt::Error.into();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn question_mark_converts_parse_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>().context("expected an integer")?)
+        }
+        assert_eq!(parse("17").unwrap(), 17);
+        let e = parse("xyz").unwrap_err();
+        assert_eq!(e.outermost(), "expected an integer");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn guarded(n: usize) -> Result<usize> {
+            crate::ensure!(n > 0, "n must be positive, got {n}");
+            if n > 100 {
+                crate::bail!("n too large: {n}");
+            }
+            crate::ensure!(n != 13);
+            Ok(n)
+        }
+        assert_eq!(guarded(5).unwrap(), 5);
+        assert_eq!(
+            guarded(0).unwrap_err().to_string(),
+            "n must be positive, got 0"
+        );
+        assert_eq!(guarded(200).unwrap_err().to_string(), "n too large: 200");
+        assert!(guarded(13)
+            .unwrap_err()
+            .to_string()
+            .contains("n != 13"));
+    }
+
+    #[test]
+    fn error_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

@@ -19,12 +19,19 @@ pub enum Json {
     Obj(Vec<(String, Json)>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---------- constructors ----------
@@ -130,35 +137,35 @@ impl Json {
     }
 
     /// Required-field helpers with contextual errors.
-    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+    pub fn req_f64(&self, key: &str) -> crate::Result<f64> {
         self.get(key)
             .and_then(Json::as_f64)
-            .ok_or_else(|| anyhow::anyhow!("missing/invalid number field `{key}`"))
+            .ok_or_else(|| crate::err!("missing/invalid number field `{key}`"))
     }
 
-    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+    pub fn req_usize(&self, key: &str) -> crate::Result<usize> {
         self.get(key)
             .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow::anyhow!("missing/invalid integer field `{key}`"))
+            .ok_or_else(|| crate::err!("missing/invalid integer field `{key}`"))
     }
 
-    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+    pub fn req_str(&self, key: &str) -> crate::Result<&str> {
         self.get(key)
             .and_then(Json::as_str)
-            .ok_or_else(|| anyhow::anyhow!("missing/invalid string field `{key}`"))
+            .ok_or_else(|| crate::err!("missing/invalid string field `{key}`"))
     }
 
-    pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
+    pub fn req_arr(&self, key: &str) -> crate::Result<&[Json]> {
         self.get(key)
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow::anyhow!("missing/invalid array field `{key}`"))
+            .ok_or_else(|| crate::err!("missing/invalid array field `{key}`"))
     }
 
     /// Vec<f64> out of an array field.
-    pub fn req_f64s(&self, key: &str) -> anyhow::Result<Vec<f64>> {
+    pub fn req_f64s(&self, key: &str) -> crate::Result<Vec<f64>> {
         self.req_arr(key)?
             .iter()
-            .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("non-number in `{key}`")))
+            .map(|v| v.as_f64().ok_or_else(|| crate::err!("non-number in `{key}`")))
             .collect()
     }
 
@@ -242,18 +249,18 @@ impl Json {
         Ok(v)
     }
 
-    pub fn read_file(path: &std::path::Path) -> anyhow::Result<Json> {
+    pub fn read_file(path: &std::path::Path) -> crate::Result<Json> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
-        Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+            .map_err(|e| crate::err!("reading {}: {e}", path.display()))?;
+        Json::parse(&text).map_err(|e| crate::err!("parsing {}: {e}", path.display()))
     }
 
-    pub fn write_file(&self, path: &std::path::Path) -> anyhow::Result<()> {
+    pub fn write_file(&self, path: &std::path::Path) -> crate::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         std::fs::write(path, self.to_string_pretty())
-            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+            .map_err(|e| crate::err!("writing {}: {e}", path.display()))
     }
 }
 

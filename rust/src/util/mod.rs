@@ -3,6 +3,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod logger;
 pub mod qcheck;

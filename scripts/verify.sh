@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# One-command repo verify (CI entry point). Fully offline:
+#   1. tier-1: release build + full test suite (artifact-gated tests skip)
+#   2. rustdoc with ALL warnings denied (broken intra-doc links included)
+#
+# Usage: ./scripts/verify.sh   (from anywhere; cd's to the repo root)
+
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "== tier 1: cargo build --release =="
+cargo build --release
+
+echo "== tier 1: cargo test -q =="
+cargo test -q
+
+echo "== docs: cargo doc --no-deps (warnings denied) =="
+# -D warnings turns every rustdoc lint — including
+# rustdoc::broken_intra_doc_links and rustdoc::bare_urls — into an error.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "verify OK"
