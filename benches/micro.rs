@@ -19,7 +19,6 @@ use autorac::sim::{simulate, Workload};
 use autorac::util::bench::Bencher;
 use autorac::util::rng::Rng;
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
 
 fn main() -> autorac::Result<()> {
     let mut b = Bencher::new();
@@ -118,13 +117,12 @@ fn main() -> autorac::Result<()> {
             let (dense, ids) = gen2.features(id as usize);
             id += 1;
             coord
-                .submit(Request {
+                .submit(Request::full(
                     id,
                     dense,
-                    ids: ids.iter().map(|&x| x as i32).collect(),
-                    enqueued: Instant::now(),
-                    reply: tx,
-                })
+                    ids.iter().map(|&x| x as i32).collect(),
+                    tx,
+                ))
                 .unwrap();
             std::hint::black_box(rx.recv().unwrap());
         });

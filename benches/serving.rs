@@ -1,0 +1,135 @@
+//! Serving bench: the latency/throughput knee of the shard-aware
+//! coordinator under MockEngine — zero artifacts, fully offline.
+//!
+//! Two experiments:
+//!   1. routing-policy comparison at fixed closed-loop load (capacity
+//!      regime): throughput, tail latency and cross-shard gather rows
+//!      for round-robin / least-queued / shard-affinity;
+//!   2. open-loop Poisson sweep against measured capacity (0.4×–1.1×)
+//!      with stale-shedding admission — where the knee and the shed
+//!      rate appear.
+//!
+//! Run: `cargo bench --bench serving` (AUTORAC_BENCH_FAST=1 shrinks the
+//! request counts for smoke runs).
+
+use autorac::coordinator::loadgen::{self, Arrival, LoadGenConfig};
+use autorac::coordinator::{
+    AdmissionPolicy, BatcherConfig, Coordinator, CoordinatorConfig,
+    MetricsSnapshot, MockEngine, Policy, ServingStore,
+};
+use autorac::data::profile;
+use autorac::embeddings::{ShardMap, ShardPolicy, ShardedStore};
+use std::sync::Arc;
+use std::time::Duration;
+
+const WORKERS: usize = 4;
+const D_EMB: usize = 16;
+const BATCH: usize = 32;
+const SEED: u64 = 7;
+const COVERAGE: f64 = 0.35;
+const EXEC: Duration = Duration::from_micros(20);
+
+fn run_once(
+    policy: Policy,
+    arrival: Arrival,
+    admission: AdmissionPolicy,
+    n_requests: usize,
+) -> autorac::Result<MetricsSnapshot> {
+    let prof = profile("criteo")?;
+    let map = ShardMap::for_profile(&prof, WORKERS, ShardPolicy::HotReplicated);
+    let store = Arc::new(ShardedStore::random(&prof, D_EMB, SEED, map));
+    let (nd, nf) = (prof.n_dense, prof.n_sparse());
+    let coord = Coordinator::start_with(
+        CoordinatorConfig {
+            n_workers: WORKERS,
+            policy,
+            admission,
+            shed_after: Duration::from_millis(2),
+            batcher: BatcherConfig {
+                max_batch: BATCH,
+                max_wait: Duration::ZERO,
+            },
+            ..Default::default()
+        },
+        ServingStore::Sharded(store),
+        move |_| {
+            let mut e = MockEngine::new(BATCH, nd, nf, D_EMB);
+            e.delay = EXEC;
+            Ok(Box::new(e) as Box<dyn autorac::coordinator::InferenceEngine>)
+        },
+    )?;
+    loadgen::run(
+        &coord,
+        &prof,
+        &LoadGenConfig {
+            n_requests,
+            arrival,
+            seed: SEED,
+            coverage: COVERAGE,
+        },
+    )?;
+    let snap = coord.metrics.snapshot();
+    coord.shutdown();
+    Ok(snap)
+}
+
+fn main() -> autorac::Result<()> {
+    let fast = std::env::var("AUTORAC_BENCH_FAST").is_ok();
+    let n = if fast { 600 } else { 4000 };
+
+    println!("== serving bench: criteo, {WORKERS} workers, hot-replicated shards, coverage {COVERAGE} ==\n");
+
+    // -- 1. routing policies at closed-loop capacity ---------------------
+    println!(
+        "{:<16} {:>12} {:>10} {:>10} {:>14}",
+        "policy", "throughput", "p50 µs", "p99 µs", "cross-shard"
+    );
+    let mut capacity = 0.0f64;
+    for policy in [Policy::RoundRobin, Policy::LeastQueued, Policy::ShardAffinity] {
+        let s = run_once(
+            policy,
+            Arrival::ClosedLoop { concurrency: 64 },
+            AdmissionPolicy::RejectNew,
+            n,
+        )?;
+        println!(
+            "{:<16} {:>10.0}/s {:>10.0} {:>10.0} {:>8} ({:>4.1}%)",
+            format!("{policy:?}"),
+            s.throughput_rps,
+            s.e2e_p50_us,
+            s.e2e_p99_us,
+            s.remote_rows,
+            s.cross_shard_frac() * 100.0
+        );
+        capacity = capacity.max(s.throughput_rps);
+    }
+
+    // -- 2. open-loop knee vs capacity (stale shedding on) ---------------
+    println!("\nopen-loop Poisson sweep (shard-affinity, shed-stale 2 ms):");
+    println!(
+        "{:<10} {:>12} {:>10} {:>10} {:>10}",
+        "load", "offered/s", "p50 µs", "p99 µs", "shed-rate"
+    );
+    for frac in [0.4, 0.7, 0.9, 1.1] {
+        let rps = capacity * frac;
+        let s = run_once(
+            Policy::ShardAffinity,
+            Arrival::OpenLoop { rps },
+            AdmissionPolicy::ShedStale,
+            n,
+        )?;
+        println!(
+            "{:<10} {:>12.0} {:>10.0} {:>10.0} {:>9.1}%",
+            format!("{frac:.1}×cap"),
+            rps,
+            s.e2e_p50_us,
+            s.e2e_p99_us,
+            s.shed_rate() * 100.0
+        );
+    }
+    println!(
+        "\n(knee: p99 and shed-rate step up as offered load crosses capacity; \
+         regen via `autorac serve-bench`, methodology in EXPERIMENTS.md §SB)"
+    );
+    Ok(())
+}

@@ -68,13 +68,12 @@ fn main() -> autorac::Result<()> {
             std::thread::sleep(Duration::from_nanos(target - now));
         }
         let (dense, ids) = gen.features(id);
-        coord.submit(Request {
-            id: id as u64,
+        coord.submit(Request::full(
+            id as u64,
             dense,
-            ids: ids.iter().map(|&x| x as i32).collect(),
-            enqueued: Instant::now(),
-            reply: tx.clone(),
-        })?;
+            ids.iter().map(|&x| x as i32).collect(),
+            tx.clone(),
+        ))?;
     }
     drop(tx);
     let responses: Vec<_> = rx.iter().collect();

@@ -105,6 +105,10 @@ pub struct MockEngine {
     pub d_emb: usize,
     /// simulated per-batch compute time
     pub delay: std::time::Duration,
+    /// optional gate: `infer_batch` spins until it reads `true` — tests
+    /// use this to build queue backlog deterministically before
+    /// releasing the worker (admission/overload scenarios)
+    pub gate: Option<std::sync::Arc<std::sync::atomic::AtomicBool>>,
     pub calls: usize,
 }
 
@@ -116,6 +120,7 @@ impl MockEngine {
             n_sparse,
             d_emb,
             delay: std::time::Duration::ZERO,
+            gate: None,
             calls: 0,
         }
     }
@@ -129,6 +134,11 @@ impl InferenceEngine for MockEngine {
         batch: usize,
     ) -> crate::Result<Vec<f32>> {
         self.calls += 1;
+        if let Some(g) = &self.gate {
+            while !g.load(std::sync::atomic::Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+        }
         if !self.delay.is_zero() {
             std::thread::sleep(self.delay);
         }

@@ -1,0 +1,301 @@
+//! Deterministic load generation for the serving stack (S19).
+//!
+//! Two arrival processes over `util::rng` (both deterministic by seed
+//! in *what* they send; wall-clock timing is inherently physical):
+//!
+//! * **open loop** — Poisson arrivals at a target rate (exponential
+//!   inter-arrival gaps), the regime where queues actually grow and the
+//!   latency/throughput knee appears;
+//! * **closed loop** — a fixed number of outstanding requests, the
+//!   regime that measures capacity.
+//!
+//! Request *content* comes from the procedural `data::Generator`
+//! (record `k` of the dataset profile), and `coverage < 1.0` draws a
+//! per-request subset of tables — the multi-tower traffic shape that
+//! makes shard-affinity routing meaningful (a request touching every
+//! table looks identical to every shard).
+
+use super::server::{Admission, Coordinator, Request};
+use crate::data::{Generator, Profile};
+use crate::util::rng::{seed_from_name, Rng};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// Poisson arrivals at `rps` requests/second
+    OpenLoop { rps: f64 },
+    /// keep `concurrency` requests outstanding
+    ClosedLoop { concurrency: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct LoadGenConfig {
+    pub n_requests: usize,
+    pub arrival: Arrival,
+    /// seeds both the record stream and the table-subset draws
+    pub seed: u64,
+    /// fraction of tables each request touches (1.0 = all; the subset
+    /// is drawn per request, at least one table)
+    pub coverage: f64,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            n_requests: 1000,
+            arrival: Arrival::ClosedLoop { concurrency: 64 },
+            seed: 7,
+            coverage: 1.0,
+        }
+    }
+}
+
+/// What the run produced (latency/locality live in `Metrics`).
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub sent: usize,
+    pub accepted: usize,
+    pub rejected: usize,
+    /// responses received by the load generator
+    pub completed: usize,
+    /// accepted but never answered (shed by the worker or dropped by an
+    /// engine failure) — always `accepted - completed`
+    pub lost: usize,
+}
+
+/// Build request `k` of the deterministic stream. `rng` drives the
+/// subset draw only, so record content stays pinned to `(profile, seed,
+/// k)` regardless of coverage.
+fn make_request(
+    gen: &mut Generator,
+    rng: &mut Rng,
+    coverage: f64,
+    k: usize,
+    tx: &mpsc::Sender<super::server::Response>,
+) -> Request {
+    let (dense, ids_full) = gen.features(k);
+    let nf = ids_full.len();
+    if coverage >= 1.0 || nf == 0 {
+        let ids = ids_full.iter().map(|&x| x as i32).collect();
+        return Request::full(k as u64, dense, ids, tx.clone());
+    }
+    let m = ((nf as f64 * coverage).round() as usize).clamp(1, nf);
+    let mut fields: Vec<u32> = (0..nf as u32).collect();
+    rng.shuffle(&mut fields);
+    fields.truncate(m);
+    fields.sort_unstable();
+    let ids = fields
+        .iter()
+        .map(|&f| ids_full[f as usize] as i32)
+        .collect();
+    Request::partial(k as u64, dense, fields, ids, tx.clone())
+}
+
+/// Drive `cfg.n_requests` through the coordinator; blocks until every
+/// accepted request is either answered or shed, so the returned report
+/// is an exact completed/lost split.
+pub fn run(
+    coord: &Coordinator,
+    profile: &Profile,
+    cfg: &LoadGenConfig,
+) -> crate::Result<LoadReport> {
+    let mut gen = Generator::new(profile.clone(), cfg.seed);
+    let mut rng = Rng::new(seed_from_name(cfg.seed, "loadgen"));
+    let (tx, rx) = mpsc::channel();
+    let mut rep = LoadReport::default();
+
+    match cfg.arrival {
+        Arrival::OpenLoop { rps } => {
+            crate::ensure!(rps > 0.0, "open-loop rps must be > 0");
+            let t0 = Instant::now();
+            let mut next_ns = 0f64;
+            for k in 0..cfg.n_requests {
+                // exponential gap: -ln(1-u)/λ  (u ∈ [0,1) keeps ln finite)
+                next_ns += -(1.0 - rng.f64()).ln() / rps * 1e9;
+                loop {
+                    let now = t0.elapsed().as_nanos() as f64;
+                    if now >= next_ns {
+                        break;
+                    }
+                    let wait = next_ns - now;
+                    if wait > 200_000.0 {
+                        std::thread::sleep(Duration::from_nanos(
+                            (wait - 100_000.0) as u64,
+                        ));
+                    } else {
+                        std::hint::spin_loop();
+                    }
+                }
+                let req = make_request(&mut gen, &mut rng, cfg.coverage, k, &tx);
+                rep.sent += 1;
+                match coord.submit(req)? {
+                    Admission::Enqueued(_) => rep.accepted += 1,
+                    Admission::Rejected => rep.rejected += 1,
+                }
+            }
+            drop(tx);
+            rep.completed = rx.iter().count();
+            rep.lost = rep.accepted - rep.completed;
+        }
+        Arrival::ClosedLoop { concurrency } => {
+            let window = concurrency.max(1);
+            // `outstanding` tracks window occupancy. Shed/failed
+            // requests never answer, so on a poll timeout we release
+            // exactly as many slots as the coordinator's shed+failed
+            // counters confirm were lost — a merely-slow batch (exec
+            // time > the poll interval) keeps its slots and the loop
+            // keeps waiting, so concurrency stays a true bound.
+            // (Assumes this loadgen is the coordinator's only producer,
+            // which is how serve-bench runs it.)
+            let mut outstanding = 0usize;
+            // baseline the ghost ledger so losses from a previous run()
+            // on the same coordinator are not forgiven against THIS
+            // run's window
+            let start = coord.metrics.snapshot();
+            let mut forgiven = start.shed + start.failed;
+            while rep.sent < cfg.n_requests || outstanding > 0 {
+                for _ in rx.try_iter() {
+                    rep.completed += 1;
+                    outstanding = outstanding.saturating_sub(1);
+                }
+                while rep.sent < cfg.n_requests && outstanding < window {
+                    let k = rep.sent;
+                    let req =
+                        make_request(&mut gen, &mut rng, cfg.coverage, k, &tx);
+                    rep.sent += 1;
+                    match coord.submit(req)? {
+                        Admission::Enqueued(_) => {
+                            rep.accepted += 1;
+                            outstanding += 1;
+                        }
+                        Admission::Rejected => rep.rejected += 1,
+                    }
+                }
+                if outstanding == 0 {
+                    continue; // whole window rejected; refill
+                }
+                match rx.recv_timeout(Duration::from_millis(300)) {
+                    Ok(_) => {
+                        rep.completed += 1;
+                        outstanding -= 1;
+                    }
+                    Err(_) => {
+                        let snap = coord.metrics.snapshot();
+                        let ghosts = (snap.shed + snap.failed)
+                            .saturating_sub(forgiven);
+                        let release = (ghosts as usize).min(outstanding);
+                        forgiven += release as u64;
+                        outstanding -= release;
+                    }
+                }
+            }
+            drop(tx);
+            // Every accepted request still holds a reply sender until a
+            // worker answers or drops it, so this drain terminates and
+            // catches any straggler that raced the ghost accounting.
+            rep.completed += rx.iter().count();
+            rep.lost = rep.accepted - rep.completed;
+        }
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::MockEngine;
+    use crate::coordinator::server::{Coordinator, CoordinatorConfig};
+    use crate::data::profile;
+    use crate::embeddings::EmbeddingStore;
+    use std::sync::Arc;
+
+    fn coord(workers: usize) -> Coordinator {
+        Coordinator::start(
+            CoordinatorConfig {
+                n_workers: workers,
+                ..Default::default()
+            },
+            Arc::new(EmbeddingStore::random(&profile("kdd").unwrap(), 8, 3)),
+            |_| Ok(Box::new(MockEngine::new(16, 3, 10, 8))),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn closed_loop_completes_everything() {
+        let c = coord(2);
+        let rep = run(
+            &c,
+            &profile("kdd").unwrap(),
+            &LoadGenConfig {
+                n_requests: 120,
+                arrival: Arrival::ClosedLoop { concurrency: 16 },
+                seed: 11,
+                coverage: 1.0,
+            },
+        )
+        .unwrap();
+        assert_eq!(rep.sent, 120);
+        assert_eq!(rep.accepted, 120);
+        assert_eq!(rep.completed, 120);
+        assert_eq!(rep.rejected + rep.lost, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn open_loop_fast_rate_completes() {
+        let c = coord(1);
+        let rep = run(
+            &c,
+            &profile("kdd").unwrap(),
+            &LoadGenConfig {
+                n_requests: 80,
+                arrival: Arrival::OpenLoop { rps: 1e6 },
+                seed: 5,
+                coverage: 0.5,
+            },
+        )
+        .unwrap();
+        assert_eq!(rep.sent, 80);
+        assert_eq!(rep.completed, 80);
+        c.shutdown();
+    }
+
+    #[test]
+    fn subset_draw_is_deterministic_by_seed() {
+        let p = profile("kdd").unwrap();
+        let draw = |seed: u64| -> Vec<Vec<u32>> {
+            let mut gen = Generator::new(p.clone(), seed);
+            let mut rng = Rng::new(seed_from_name(seed, "loadgen"));
+            let (tx, _rx) = mpsc::channel();
+            (0..20)
+                .map(|k| make_request(&mut gen, &mut rng, 0.4, k, &tx).fields)
+                .collect()
+        };
+        assert_eq!(draw(9), draw(9));
+        assert_ne!(draw(9), draw(10));
+        for f in draw(9) {
+            assert_eq!(f.len(), 4); // 0.4 × 10 fields
+            assert!(f.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+        }
+    }
+
+    #[test]
+    fn partial_requests_round_trip() {
+        let c = coord(2);
+        let rep = run(
+            &c,
+            &profile("kdd").unwrap(),
+            &LoadGenConfig {
+                n_requests: 60,
+                arrival: Arrival::ClosedLoop { concurrency: 8 },
+                seed: 2,
+                coverage: 0.3,
+            },
+        )
+        .unwrap();
+        assert_eq!(rep.completed, 60);
+        c.shutdown();
+    }
+}

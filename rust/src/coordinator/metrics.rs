@@ -1,9 +1,13 @@
 //! Serving metrics: counters + constant-memory latency histograms,
 //! shared across workers behind a light mutex (snapshots are cheap; the
-//! hot path records two integers).
+//! hot path records two integers). Admission control (rejected/shed)
+//! and the sharded gather path (local vs cross-shard rows) report here,
+//! and worker queue-depth gauges are registered at startup so a
+//! snapshot shows instantaneous backpressure per worker.
 
 use crate::util::stats::LogHistogram;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 #[derive(Default)]
@@ -12,6 +16,16 @@ struct Inner {
     responses: u64,
     batches: u64,
     batched_requests: u64,
+    /// admission control: turned away at the door (queue at capacity)
+    rejected: u64,
+    /// load shedding: dequeued too late and dropped by the worker
+    shed: u64,
+    /// requests lost to engine failures (whole batch dropped)
+    failed: u64,
+    /// sharded gather accounting (rows served locally vs fetched from
+    /// a peer shard)
+    local_rows: u64,
+    remote_rows: u64,
     e2e: LogHistogram,
     queue: LogHistogram,
     exec: LogHistogram,
@@ -20,6 +34,8 @@ struct Inner {
 pub struct Metrics {
     inner: Mutex<Inner>,
     started: Mutex<Instant>,
+    /// per-worker queue-depth gauges (registered by the coordinator)
+    depths: Mutex<Vec<Arc<AtomicUsize>>>,
 }
 
 #[derive(Clone, Debug)]
@@ -27,6 +43,14 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub responses: u64,
     pub batches: u64,
+    pub rejected: u64,
+    pub shed: u64,
+    /// requests dropped because the engine failed their batch
+    pub failed: u64,
+    /// embedding rows gathered on the worker's own shard
+    pub local_rows: u64,
+    /// embedding rows fetched cross-shard
+    pub remote_rows: u64,
     pub mean_batch: f64,
     pub throughput_rps: f64,
     pub e2e_p50_us: f64,
@@ -34,6 +58,30 @@ pub struct MetricsSnapshot {
     pub queue_p99_us: f64,
     pub exec_p50_us: f64,
     pub elapsed_s: f64,
+    /// instantaneous queue depth per worker at snapshot time
+    pub worker_depths: Vec<usize>,
+}
+
+impl MetricsSnapshot {
+    /// Fraction of gathered rows that crossed shards (0 when nothing
+    /// was gathered through the sharded path).
+    pub fn cross_shard_frac(&self) -> f64 {
+        let total = self.local_rows + self.remote_rows;
+        if total == 0 {
+            0.0
+        } else {
+            self.remote_rows as f64 / total as f64
+        }
+    }
+
+    /// Fraction of arriving requests turned away or shed.
+    pub fn shed_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            (self.rejected + self.shed) as f64 / self.requests as f64
+        }
+    }
 }
 
 impl Default for Metrics {
@@ -47,6 +95,7 @@ impl Metrics {
         Metrics {
             inner: Mutex::new(Inner::default()),
             started: Mutex::new(Instant::now()),
+            depths: Mutex::new(Vec::new()),
         }
     }
 
@@ -57,8 +106,33 @@ impl Metrics {
         *self.started.lock().unwrap() = Instant::now();
     }
 
+    /// Expose worker `i`'s queue-depth counter in snapshots. Called once
+    /// per worker at coordinator startup, in worker order.
+    pub fn register_worker_depth(&self, depth: Arc<AtomicUsize>) {
+        self.depths.lock().unwrap().push(depth);
+    }
+
     pub fn on_request(&self) {
         self.inner.lock().unwrap().requests += 1;
+    }
+
+    pub fn on_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn on_shed(&self, n: usize) {
+        self.inner.lock().unwrap().shed += n as u64;
+    }
+
+    pub fn on_failed(&self, n: usize) {
+        self.inner.lock().unwrap().failed += n as u64;
+    }
+
+    /// Record a batch's sharded-gather locality (row counts).
+    pub fn on_gather(&self, local_rows: usize, remote_rows: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.local_rows += local_rows as u64;
+        m.remote_rows += remote_rows as u64;
     }
 
     pub fn on_batch(&self, size: usize, queue_ns: u64, exec_ns: u64) {
@@ -78,10 +152,22 @@ impl Metrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         let elapsed = self.started.lock().unwrap().elapsed().as_secs_f64();
+        let worker_depths = self
+            .depths
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|d| d.load(Ordering::Relaxed))
+            .collect();
         MetricsSnapshot {
             requests: m.requests,
             responses: m.responses,
             batches: m.batches,
+            rejected: m.rejected,
+            shed: m.shed,
+            failed: m.failed,
+            local_rows: m.local_rows,
+            remote_rows: m.remote_rows,
             mean_batch: if m.batches == 0 {
                 0.0
             } else {
@@ -93,6 +179,7 @@ impl Metrics {
             queue_p99_us: m.queue.quantile_ns(0.99) as f64 / 1e3,
             exec_p50_us: m.exec.quantile_ns(0.5) as f64 / 1e3,
             elapsed_s: elapsed,
+            worker_depths,
         }
     }
 }
@@ -119,5 +206,33 @@ mod tests {
         assert!((s.mean_batch - 5.0).abs() < 1e-9);
         assert!(s.e2e_p50_us >= 100.0);
         assert!(s.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn admission_and_gather_counters() {
+        let m = Metrics::new();
+        for _ in 0..4 {
+            m.on_request();
+        }
+        m.on_rejected();
+        m.on_shed(2);
+        m.on_gather(30, 10);
+        let s = m.snapshot();
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.shed, 2);
+        assert_eq!((s.local_rows, s.remote_rows), (30, 10));
+        assert!((s.cross_shard_frac() - 0.25).abs() < 1e-12);
+        assert!((s.shed_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worker_depth_gauges_report() {
+        let m = Metrics::new();
+        let d0 = Arc::new(AtomicUsize::new(0));
+        let d1 = Arc::new(AtomicUsize::new(0));
+        m.register_worker_depth(d0.clone());
+        m.register_worker_depth(d1.clone());
+        d1.store(7, Ordering::Relaxed);
+        assert_eq!(m.snapshot().worker_depths, vec![0, 7]);
     }
 }

@@ -4,23 +4,32 @@
 //!
 //! ```text
 //!  load gen ──► router ──► worker queue ──► dynamic batcher
-//!                 │                              │
-//!                 ▼                              ▼
-//!              metrics ◄── responses ◄── embedding gather ─► PJRT exec
+//!   (S19)        │  admission │ (bounded)       │ shed-stale
+//!                ▼            ▼                 ▼
+//!             metrics ◄── responses ◄── embedding gather ─► PJRT exec
+//!                              (local shard + cross-shard fetches)
 //! ```
 //!
 //! Workers are std threads (tokio is unavailable offline — DESIGN.md §8);
 //! each worker owns a PJRT `Runtime` (or any `InferenceEngine` in tests)
-//! and an `EmbeddingStore` handle, so Python is never on this path.
+//! and either a shared `EmbeddingStore` handle or its slice of a
+//! `ShardedStore` (S18), so Python is never on this path. Queues are
+//! bounded with reject/shed admission control, and `loadgen` drives the
+//! whole stack deterministically for `autorac serve-bench`.
 
 pub mod batcher;
 pub mod engine;
+pub mod loadgen;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatcherConfig, collect_batch};
 pub use engine::{InferenceEngine, MockEngine, PjrtEngine};
+pub use loadgen::{Arrival, LoadGenConfig, LoadReport};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use router::Router;
-pub use server::{Coordinator, CoordinatorConfig, Request, Response};
+pub use router::{Policy, Router};
+pub use server::{
+    Admission, AdmissionPolicy, Coordinator, CoordinatorConfig, Request,
+    Response, ServingStore,
+};

@@ -1,9 +1,15 @@
 //! Request router: spread incoming requests across worker queues.
 //!
-//! Policies: round-robin (default; uniform work) and least-queued
-//! (counter-based, for heterogeneous workers). Conservation — every
-//! accepted request lands on exactly one queue — is property-tested.
+//! Policies: round-robin (default; uniform work), least-queued
+//! (counter-based, for heterogeneous workers) and shard-affinity
+//! (score each worker by the fraction of the request's table ids its
+//! shard owns locally, falling back to least-queued on ties — keeps
+//! embedding gathers next to the memory tiles that hold the tables).
+//! Conservation — every accepted request lands on exactly one queue —
+//! is property-tested, and queues are bounded: `route_bounded` rejects
+//! a request when the chosen queue is at capacity (admission control).
 
+use crate::embeddings::ShardMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
@@ -12,6 +18,32 @@ use std::sync::Arc;
 pub enum Policy {
     RoundRobin,
     LeastQueued,
+    /// prefer the worker owning most of the request's tables; ties go
+    /// to the shallowest queue (needs a `ShardMap`, else ≡ LeastQueued)
+    ShardAffinity,
+}
+
+impl Policy {
+    /// Parse a CLI spelling ("round-robin" | "least-queued" | "shard-affinity").
+    pub fn parse(s: &str) -> crate::Result<Policy> {
+        Ok(match s {
+            "round-robin" | "rr" => Policy::RoundRobin,
+            "least-queued" | "lq" => Policy::LeastQueued,
+            "shard-affinity" | "affinity" => Policy::ShardAffinity,
+            other => crate::bail!(
+                "unknown policy `{other}` (round-robin|least-queued|shard-affinity)"
+            ),
+        })
+    }
+}
+
+/// Why a request was not enqueued.
+pub enum RouteRejection<T> {
+    /// every worker queue is closed (shutdown) — request returned
+    Closed(T),
+    /// the chosen queue is at capacity — request returned (admission
+    /// control; the caller decides whether to count it as rejected)
+    Overloaded(T),
 }
 
 pub struct Router<T> {
@@ -19,6 +51,9 @@ pub struct Router<T> {
     depths: Vec<Arc<AtomicUsize>>,
     policy: Policy,
     next: AtomicUsize,
+    /// table→shard ownership (ShardAffinity scoring); worker `i` serves
+    /// shard `i % map.n_shards`
+    shard_map: Option<Arc<ShardMap>>,
 }
 
 impl<T> Router<T> {
@@ -31,7 +66,14 @@ impl<T> Router<T> {
             depths,
             policy,
             next: AtomicUsize::new(0),
+            shard_map: None,
         }
+    }
+
+    /// Attach the shard map ShardAffinity scores against.
+    pub fn with_shards(mut self, map: Arc<ShardMap>) -> Router<T> {
+        self.shard_map = Some(map);
+        self
     }
 
     pub fn n_workers(&self) -> usize {
@@ -44,27 +86,111 @@ impl<T> Router<T> {
         self.depths[i].clone()
     }
 
-    /// Route one request; returns the chosen worker or Err(req) if every
-    /// queue is closed.
-    pub fn route(&self, req: T) -> Result<usize, T> {
-        let w = match self.policy {
+    /// Current queue depth of worker `i`.
+    pub fn depth(&self, i: usize) -> usize {
+        self.depths[i].load(Ordering::Relaxed)
+    }
+
+    /// Pick a worker for a request touching `fields` (table ids; empty
+    /// = unknown/all, which makes ShardAffinity a pure depth choice).
+    fn pick(&self, fields: &[u32]) -> usize {
+        match self.policy {
             Policy::RoundRobin => {
                 self.next.fetch_add(1, Ordering::Relaxed) % self.queues.len()
             }
-            Policy::LeastQueued => self
-                .depths
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, d)| d.load(Ordering::Relaxed))
-                .map(|(i, _)| i)
-                .unwrap_or(0),
-        };
-        match self.queues[w].send(req) {
-            Ok(()) => {
-                self.depths[w].fetch_add(1, Ordering::Relaxed);
-                Ok(w)
+            Policy::LeastQueued => self.least_queued(),
+            Policy::ShardAffinity => match &self.shard_map {
+                None => self.least_queued(),
+                Some(map) => {
+                    let mut best = 0usize;
+                    let mut best_frac = -1.0f64;
+                    let mut best_depth = usize::MAX;
+                    for w in 0..self.queues.len() {
+                        let frac =
+                            map.local_fraction(w % map.n_shards, fields);
+                        let depth = self.depths[w].load(Ordering::Relaxed);
+                        // higher locality wins; exact ties go to the
+                        // shallower queue, then the lower worker id
+                        if frac > best_frac + 1e-12
+                            || ((frac - best_frac).abs() <= 1e-12
+                                && depth < best_depth)
+                        {
+                            best = w;
+                            best_frac = frac;
+                            best_depth = depth;
+                        }
+                    }
+                    best
+                }
+            },
+        }
+    }
+
+    fn least_queued(&self) -> usize {
+        self.depths
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, d)| d.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Route one request; returns the chosen worker or Err(req) if every
+    /// queue is closed.
+    pub fn route(&self, req: T) -> Result<usize, T> {
+        match self.route_bounded(&[], usize::MAX, req) {
+            Ok(w) => Ok(w),
+            Err(RouteRejection::Closed(r)) | Err(RouteRejection::Overloaded(r)) => {
+                Err(r)
             }
-            Err(e) => Err(e.0),
+        }
+    }
+
+    /// Route a request touching `fields`, with a per-worker queue bound:
+    /// if the chosen worker's queue already holds `cap` requests the
+    /// request is rejected (returned in `Overloaded`).
+    pub fn route_bounded(
+        &self,
+        fields: &[u32],
+        cap: usize,
+        req: T,
+    ) -> Result<usize, RouteRejection<T>> {
+        let w = self.pick(fields);
+        self.dispatch(w, cap, req)
+    }
+
+    /// Like [`Router::route_bounded`] but reads the field list out of
+    /// the request itself, so callers holding an owned request don't
+    /// have to clone the slice to satisfy the borrow checker.
+    pub fn route_bounded_by<F>(
+        &self,
+        cap: usize,
+        req: T,
+        fields_of: F,
+    ) -> Result<usize, RouteRejection<T>>
+    where
+        F: FnOnce(&T) -> &[u32],
+    {
+        let w = self.pick(fields_of(&req));
+        self.dispatch(w, cap, req)
+    }
+
+    /// Enqueue on worker `w` iff a slot is free. The slot is reserved
+    /// with an atomic increment BEFORE the send (rolled back on
+    /// rejection/closure), so `cap` is a hard bound even with many
+    /// concurrent submitters — a check-then-send would let N racing
+    /// producers each observe `cap - 1` and all enqueue.
+    fn dispatch(&self, w: usize, cap: usize, req: T) -> Result<usize, RouteRejection<T>> {
+        if self.depths[w].fetch_add(1, Ordering::Relaxed) >= cap {
+            self.depths[w].fetch_sub(1, Ordering::Relaxed);
+            return Err(RouteRejection::Overloaded(req));
+        }
+        match self.queues[w].send(req) {
+            Ok(()) => Ok(w),
+            Err(e) => {
+                self.depths[w].fetch_sub(1, Ordering::Relaxed);
+                Err(RouteRejection::Closed(e.0))
+            }
         }
     }
 }
@@ -72,6 +198,7 @@ impl<T> Router<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::embeddings::ShardPolicy;
     use std::sync::mpsc;
 
     #[test]
@@ -127,5 +254,47 @@ mod tests {
         drop(rx);
         let r = Router::new(vec![tx], Policy::RoundRobin);
         assert_eq!(r.route(5).unwrap_err(), 5);
+    }
+
+    #[test]
+    fn bounded_route_rejects_at_capacity() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        let r = Router::new(vec![tx], Policy::RoundRobin);
+        assert!(r.route_bounded(&[], 2, 1).is_ok());
+        assert!(r.route_bounded(&[], 2, 2).is_ok());
+        match r.route_bounded(&[], 2, 3) {
+            Err(RouteRejection::Overloaded(req)) => assert_eq!(req, 3),
+            _ => panic!("expected Overloaded"),
+        }
+        assert_eq!(rx.try_iter().count(), 2);
+    }
+
+    #[test]
+    fn shard_affinity_prefers_local_owner() {
+        // 4 tables on 2 shards round-robin: shard 0 owns {0,2}, 1 owns {1,3}
+        let map = Arc::new(ShardMap::build(
+            &[10, 10, 10, 10],
+            1.2,
+            2,
+            ShardPolicy::RoundRobinTables,
+        ));
+        let (txs, _rxs): (Vec<_>, Vec<_>) =
+            (0..2).map(|_| mpsc::channel()).unzip();
+        let r = Router::new(txs, Policy::ShardAffinity).with_shards(map);
+        assert_eq!(r.route_bounded(&[0, 2], usize::MAX, 1u32).unwrap(), 0);
+        assert_eq!(r.route_bounded(&[1, 3], usize::MAX, 2u32).unwrap(), 1);
+        // mixed request: tie (0.5 each) → least-queued → worker 0 has
+        // depth 1, worker 1 has depth 1 → lower id after depth tie…
+        // drain nothing; both depth 1 → worker 0
+        assert_eq!(r.route_bounded(&[0, 1], usize::MAX, 3u32).unwrap(), 0);
+    }
+
+    #[test]
+    fn shard_affinity_without_map_is_least_queued() {
+        let (txs, _rxs): (Vec<_>, Vec<_>) =
+            (0..3).map(|_| mpsc::channel()).unzip();
+        let r = Router::new(txs, Policy::ShardAffinity);
+        let w = r.route_bounded(&[1, 2], usize::MAX, 7u32).unwrap();
+        assert_eq!(w, 0); // all empty → first worker
     }
 }

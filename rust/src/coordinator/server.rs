@@ -1,25 +1,76 @@
 //! The coordinator: leader that wires router → workers → batcher →
 //! embedding gather → inference engine → responses, on std threads.
+//!
+//! Admission control: queues are bounded (`queue_cap` under every
+//! policy) and overload is handled configurably — reject at the door
+//! ([`AdmissionPolicy::RejectNew`]) or additionally shed stale
+//! requests at dequeue time ([`AdmissionPolicy::ShedStale`]). Every
+//! outcome is counted in [`Metrics`], so the books always balance:
+//! `requests == responses + rejected + shed + failed`.
+//!
+//! Sharding: workers can serve from a [`ShardedStore`] (worker `i`
+//! gathers from the perspective of shard `i % n_shards`, fetching
+//! unowned tables cross-shard); the monolithic [`EmbeddingStore`] path
+//! is unchanged.
 
 use super::batcher::{collect_batch, BatcherConfig};
 use super::engine::InferenceEngine;
 use super::metrics::Metrics;
-use super::router::{Policy, Router};
-use crate::embeddings::EmbeddingStore;
+use super::router::{Policy, RouteRejection, Router};
+use crate::embeddings::{EmbeddingStore, ShardedStore};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One scoring request (features only; embedding gather happens on the
-/// worker, next to the memory tiles).
+/// worker, next to the memory tiles). `fields[k]` is the table id of
+/// `ids[k]` — a full request touches every table, a partial one (e.g. a
+/// single-tower scorer) only a subset; untouched tables are zero-padded
+/// at gather time.
 pub struct Request {
     pub id: u64,
     pub dense: Vec<f32>,
+    /// table ids touched, parallel to `ids` (strictly ascending)
+    pub fields: Vec<u32>,
     pub ids: Vec<i32>,
     pub enqueued: Instant,
     pub reply: Sender<Response>,
+}
+
+impl Request {
+    /// A request touching every table: `ids[j]` is the row of table `j`.
+    pub fn full(id: u64, dense: Vec<f32>, ids: Vec<i32>, reply: Sender<Response>) -> Request {
+        let fields = (0..ids.len() as u32).collect();
+        Request {
+            id,
+            dense,
+            fields,
+            ids,
+            enqueued: Instant::now(),
+            reply,
+        }
+    }
+
+    /// A request touching only `fields` (ids parallel to fields).
+    pub fn partial(
+        id: u64,
+        dense: Vec<f32>,
+        fields: Vec<u32>,
+        ids: Vec<i32>,
+        reply: Sender<Response>,
+    ) -> Request {
+        debug_assert_eq!(fields.len(), ids.len());
+        Request {
+            id,
+            dense,
+            fields,
+            ids,
+            enqueued: Instant::now(),
+            reply,
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -29,11 +80,38 @@ pub struct Response {
     pub e2e_ns: u64,
 }
 
+/// What happens when queues are full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// reject a new request when the chosen worker's queue holds
+    /// `queue_cap` requests (the caller sees `Admission::Rejected`)
+    RejectNew,
+    /// admit up to `queue_cap` (the bound still holds); the worker
+    /// additionally sheds requests whose queue wait exceeded
+    /// `shed_after` when it dequeues them (their reply channel closes
+    /// without a response)
+    ShedStale,
+}
+
+/// Outcome of [`Coordinator::submit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// enqueued on this worker's queue
+    Enqueued(usize),
+    /// turned away by admission control (counted in `metrics.rejected`)
+    Rejected,
+}
+
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub n_workers: usize,
     pub batcher: BatcherConfig,
     pub policy: Policy,
+    /// per-worker queue bound; `usize::MAX` = unbounded
+    pub queue_cap: usize,
+    pub admission: AdmissionPolicy,
+    /// ShedStale: max tolerated queue wait before a request is dropped
+    pub shed_after: Duration,
 }
 
 impl Default for CoordinatorConfig {
@@ -42,23 +120,54 @@ impl Default for CoordinatorConfig {
             n_workers: 1,
             batcher: BatcherConfig::default(),
             policy: Policy::RoundRobin,
+            queue_cap: usize::MAX,
+            admission: AdmissionPolicy::RejectNew,
+            shed_after: Duration::from_millis(50),
         }
     }
+}
+
+/// The embedding memory the workers gather from.
+#[derive(Clone)]
+pub enum ServingStore {
+    /// one monolithic store shared by every worker
+    Shared(Arc<EmbeddingStore>),
+    /// partitioned tables; worker `i` serves shard `i % n_shards`
+    Sharded(Arc<ShardedStore>),
 }
 
 pub struct Coordinator {
     router: Router<Request>,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    queue_cap: usize,
 }
 
 impl Coordinator {
-    /// Start workers; `make_engine(i)` runs INSIDE worker thread i to
-    /// build its backend (the PJRT client is thread-local by design),
-    /// `store` is the shared embedding memory tile.
+    /// Start workers over one shared monolithic store (the original
+    /// serving path); `make_engine(i)` runs INSIDE worker thread i to
+    /// build its backend (the PJRT client is thread-local by design).
     pub fn start<F>(
         cfg: CoordinatorConfig,
         store: Arc<EmbeddingStore>,
+        make_engine: F,
+    ) -> crate::Result<Coordinator>
+    where
+        F: Fn(usize) -> crate::Result<Box<dyn InferenceEngine>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        Coordinator::start_with(cfg, ServingStore::Shared(store), make_engine)
+    }
+
+    /// Start workers over any [`ServingStore`]. With a sharded store and
+    /// `Policy::ShardAffinity`, the router scores workers by table
+    /// ownership; otherwise the shard map only determines which tables
+    /// each worker gathers locally.
+    pub fn start_with<F>(
+        cfg: CoordinatorConfig,
+        store: ServingStore,
         make_engine: F,
     ) -> crate::Result<Coordinator>
     where
@@ -75,7 +184,10 @@ impl Coordinator {
             txs.push(tx);
             rxs.push(rx);
         }
-        let router = Router::new(txs, cfg.policy);
+        let mut router = Router::new(txs, cfg.policy);
+        if let ServingStore::Sharded(s) = &store {
+            router = router.with_shards(Arc::new(s.map.clone()));
+        }
         let make_engine = Arc::new(make_engine);
         let mut workers = Vec::new();
         let (ready_tx, ready_rx) = mpsc::channel();
@@ -84,13 +196,25 @@ impl Coordinator {
             let metrics = metrics.clone();
             let bcfg = cfg.batcher;
             let depth = router.depth_handle(i);
+            metrics.register_worker_depth(depth.clone());
             let make_engine = make_engine.clone();
             let ready = ready_tx.clone();
+            let shed_after = (cfg.admission == AdmissionPolicy::ShedStale)
+                .then_some(cfg.shed_after);
             workers.push(std::thread::spawn(move || {
                 match make_engine(i) {
                     Ok(engine) => {
                         let _ = ready.send(Ok(()));
-                        worker_loop(rx, engine, store, metrics, bcfg, depth);
+                        worker_loop(WorkerCtx {
+                            rx,
+                            engine,
+                            store,
+                            worker: i,
+                            metrics,
+                            bcfg,
+                            depth,
+                            shed_after,
+                        });
                     }
                     Err(e) => {
                         let _ = ready.send(Err(e));
@@ -107,16 +231,44 @@ impl Coordinator {
             router,
             workers,
             metrics,
+            queue_cap: cfg.queue_cap,
         })
     }
 
-    /// Submit one request; the reply arrives on `reply`.
-    pub fn submit(&self, req: Request) -> crate::Result<()> {
+    /// Submit one request; an accepted request's reply arrives on
+    /// `req.reply`, a rejected one never produces a response (its reply
+    /// sender is dropped here).
+    pub fn submit(&self, req: Request) -> crate::Result<Admission> {
+        // `queue_cap` is a hard memory bound under BOTH policies —
+        // ShedStale additionally trims stale requests at dequeue time,
+        // it does not repeal the bound the operator configured.
+        // Ledger discipline: `on_request` fires BEFORE routing (so no
+        // snapshot can ever see a response outrun its request), and a
+        // closed-queue arrival is booked as rejected — it was turned
+        // away at the door — keeping
+        // `requests == responses + rejected + shed + failed` exact.
         self.metrics.on_request();
-        self.router
-            .route(req)
-            .map(|_| ())
-            .map_err(|_| crate::err!("all worker queues closed"))
+        match self
+            .router
+            .route_bounded_by(self.queue_cap, req, |r| r.fields.as_slice())
+        {
+            Ok(w) => Ok(Admission::Enqueued(w)),
+            Err(RouteRejection::Overloaded(_req)) => {
+                self.metrics.on_rejected();
+                Ok(Admission::Rejected)
+            }
+            Err(RouteRejection::Closed(_req)) => {
+                self.metrics.on_rejected();
+                crate::bail!("all worker queues closed")
+            }
+        }
+    }
+
+    /// Instantaneous queue depth of each worker.
+    pub fn queue_depths(&self) -> Vec<usize> {
+        (0..self.router.n_workers())
+            .map(|i| self.router.depth(i))
+            .collect()
     }
 
     /// Close intake and join workers (drains in-flight batches).
@@ -128,14 +280,33 @@ impl Coordinator {
     }
 }
 
-fn worker_loop(
+struct WorkerCtx {
     rx: Receiver<Request>,
-    mut engine: Box<dyn InferenceEngine>,
-    store: Arc<EmbeddingStore>,
+    engine: Box<dyn InferenceEngine>,
+    store: ServingStore,
+    worker: usize,
     metrics: Arc<Metrics>,
     bcfg: BatcherConfig,
     depth: Arc<std::sync::atomic::AtomicUsize>,
-) {
+    /// Some(limit) ⇒ shed requests that waited longer than `limit`
+    shed_after: Option<Duration>,
+}
+
+fn worker_loop(ctx: WorkerCtx) {
+    let WorkerCtx {
+        rx,
+        mut engine,
+        store,
+        worker,
+        metrics,
+        bcfg,
+        depth,
+        shed_after,
+    } = ctx;
+    let shard = match &store {
+        ServingStore::Shared(_) => 0,
+        ServingStore::Sharded(s) => worker % s.map.n_shards,
+    };
     let nd = engine.n_dense();
     let cap = engine.compiled_batch().min(bcfg.max_batch);
     let bcfg = BatcherConfig {
@@ -144,8 +315,23 @@ fn worker_loop(
     };
     let mut dense = Vec::new();
     let mut sparse = Vec::new();
-    while let Some(batch) = collect_batch(&rx, &bcfg) {
+    while let Some(mut batch) = collect_batch(&rx, &bcfg) {
         depth.fetch_sub(batch.len().min(depth.load(Ordering::Relaxed)), Ordering::Relaxed);
+        // Load shedding: a request that sat in the queue past its
+        // budget is dropped here (its reply sender closes unanswered) —
+        // under overload this keeps served latency bounded instead of
+        // letting the queue wait grow without limit.
+        if let Some(limit) = shed_after {
+            let before = batch.len();
+            batch.retain(|r| r.enqueued.elapsed() <= limit);
+            let shed = before - batch.len();
+            if shed > 0 {
+                metrics.on_shed(shed);
+            }
+            if batch.is_empty() {
+                continue;
+            }
+        }
         let t_exec = Instant::now();
         let queue_ns = batch
             .iter()
@@ -155,12 +341,25 @@ fn worker_loop(
         // assemble inputs: dense [B×nd], gather sparse [B×Ns×d]
         dense.clear();
         sparse.clear();
+        let (mut local_rows, mut remote_rows) = (0usize, 0usize);
         for r in &batch {
             let mut row = r.dense.clone();
             row.resize(nd, 0.0);
             dense.extend_from_slice(&row);
-            store.gather(&r.ids, 1, &mut sparse);
+            match &store {
+                ServingStore::Shared(s) => {
+                    s.gather_fields(&r.fields, &r.ids, &mut sparse);
+                    local_rows += r.fields.len();
+                }
+                ServingStore::Sharded(s) => {
+                    let (l, rem) =
+                        s.gather_from(shard, &r.fields, &r.ids, &mut sparse);
+                    local_rows += l;
+                    remote_rows += rem;
+                }
+            }
         }
+        metrics.on_gather(local_rows, remote_rows);
         match engine.infer_batch(&dense, &sparse, batch.len()) {
             Ok(probs) => {
                 let exec_ns = t_exec.elapsed().as_nanos() as u64;
@@ -178,6 +377,7 @@ fn worker_loop(
             Err(e) => {
                 crate::error!("worker inference failed: {e:#}");
                 // drop the batch; senders observe a closed reply channel
+                metrics.on_failed(batch.len());
             }
         }
     }
@@ -215,14 +415,8 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let n = 200;
         for id in 0..n {
-            c.submit(Request {
-                id,
-                dense: vec![0.1; 13],
-                ids: vec![1; 26],
-                enqueued: Instant::now(),
-                reply: tx.clone(),
-            })
-            .unwrap();
+            c.submit(Request::full(id, vec![0.1; 13], vec![1; 26], tx.clone()))
+                .unwrap();
         }
         drop(tx);
         let mut got: Vec<u64> = rx.iter().take(n as usize).map(|r| r.id).collect();
@@ -231,6 +425,8 @@ mod tests {
         let snap = c.metrics.snapshot();
         assert_eq!(snap.responses, n);
         assert!(snap.mean_batch >= 1.0);
+        assert_eq!(snap.rejected, 0);
+        assert_eq!(snap.shed, 0);
         c.shutdown();
     }
 
@@ -238,14 +434,10 @@ mod tests {
     fn probabilities_are_valid() {
         let c = start(1);
         let (tx, rx) = mpsc::channel();
-        c.submit(Request {
-            id: 1,
-            dense: vec![0.5; 13],
-            ids: (0..26).collect(),
-            enqueued: Instant::now(),
-            reply: tx,
-        })
-        .unwrap();
+        let adm = c
+            .submit(Request::full(1, vec![0.5; 13], (0..26).collect(), tx))
+            .unwrap();
+        assert!(matches!(adm, Admission::Enqueued(_)));
         let resp = rx.recv().unwrap();
         assert!((0.0..=1.0).contains(&resp.prob));
         assert!(resp.e2e_ns > 0);
@@ -257,14 +449,8 @@ mod tests {
         let c = start(3);
         let (tx, rx) = mpsc::channel();
         for id in 0..50 {
-            c.submit(Request {
-                id,
-                dense: vec![0.0; 13],
-                ids: vec![0; 26],
-                enqueued: Instant::now(),
-                reply: tx.clone(),
-            })
-            .unwrap();
+            c.submit(Request::full(id, vec![0.0; 13], vec![0; 26], tx.clone()))
+                .unwrap();
         }
         drop(tx);
         c.shutdown();
@@ -329,14 +515,8 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let n = 40;
         for id in 0..n {
-            c.submit(Request {
-                id,
-                dense: vec![0.0; 13],
-                ids: vec![0; 26],
-                enqueued: Instant::now(),
-                reply: tx.clone(),
-            })
-            .unwrap();
+            c.submit(Request::full(id, vec![0.0; 13], vec![0; 26], tx.clone()))
+                .unwrap();
         }
         drop(tx);
         let ok: Vec<_> = rx.iter().collect();
@@ -346,26 +526,18 @@ mod tests {
         let snap = c.metrics.snapshot();
         assert_eq!(snap.requests, n);
         assert_eq!(snap.responses, n / 2);
+        assert_eq!(snap.failed, n / 2, "failed batches must be counted");
         c.shutdown();
         crate::util::logger::set_level(crate::util::logger::Level::Info);
     }
-
-    use crate::coordinator::batcher::BatcherConfig;
-    use std::time::Duration;
 
     #[test]
     fn batching_engages_under_burst() {
         let c = start(1);
         let (tx, rx) = mpsc::channel();
         for id in 0..64 {
-            c.submit(Request {
-                id,
-                dense: vec![0.0; 13],
-                ids: vec![0; 26],
-                enqueued: Instant::now(),
-                reply: tx.clone(),
-            })
-            .unwrap();
+            c.submit(Request::full(id, vec![0.0; 13], vec![0; 26], tx.clone()))
+                .unwrap();
         }
         drop(tx);
         let _: Vec<_> = rx.iter().collect();
@@ -375,6 +547,101 @@ mod tests {
             "burst should batch: mean {}",
             snap.mean_batch
         );
+        c.shutdown();
+    }
+
+    #[test]
+    fn reject_new_bounds_the_queue() {
+        let gate = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let gate2 = gate.clone();
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                n_workers: 1,
+                queue_cap: 8,
+                admission: AdmissionPolicy::RejectNew,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait: Duration::ZERO,
+                },
+                ..Default::default()
+            },
+            store(),
+            move |_| {
+                let mut e = MockEngine::new(4, 13, 26, 16);
+                e.gate = Some(gate2.clone());
+                Ok(Box::new(e))
+            },
+        )
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let n = 64u64;
+        let mut accepted = 0u64;
+        let mut rejected = 0u64;
+        for id in 0..n {
+            match c
+                .submit(Request::full(id, vec![0.0; 13], vec![0; 26], tx.clone()))
+                .unwrap()
+            {
+                Admission::Enqueued(_) => accepted += 1,
+                Admission::Rejected => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "cap 8 must reject part of a 64-burst");
+        gate.store(true, Ordering::Relaxed); // release the engine
+        drop(tx);
+        let got = rx.iter().count() as u64;
+        assert_eq!(got, accepted, "every accepted request gets a response");
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.requests, n);
+        assert_eq!(snap.rejected, rejected);
+        assert_eq!(snap.responses + snap.rejected, n);
+        c.shutdown();
+    }
+
+    #[test]
+    fn shed_stale_drops_overdue_requests() {
+        let gate = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let gate2 = gate.clone();
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                n_workers: 1,
+                admission: AdmissionPolicy::ShedStale,
+                shed_after: Duration::from_millis(20),
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait: Duration::ZERO,
+                },
+                ..Default::default()
+            },
+            store(),
+            move |_| {
+                let mut e = MockEngine::new(4, 13, 26, 16);
+                e.gate = Some(gate2.clone());
+                Ok(Box::new(e))
+            },
+        )
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let n = 32u64;
+        for id in 0..n {
+            assert_eq!(
+                c.submit(Request::full(id, vec![0.0; 13], vec![0; 26], tx.clone()))
+                    .unwrap(),
+                Admission::Enqueued(0),
+                "ShedStale never rejects at the door"
+            );
+        }
+        // let everything go stale, then release the engine
+        std::thread::sleep(Duration::from_millis(40));
+        gate.store(true, Ordering::Relaxed);
+        drop(tx);
+        let got = rx.iter().count() as u64;
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.requests, n);
+        assert_eq!(snap.rejected, 0);
+        assert!(snap.shed > 0, "stale requests must be shed");
+        assert_eq!(snap.responses, got);
+        assert_eq!(snap.responses + snap.shed, n, "conservation");
         c.shutdown();
     }
 }

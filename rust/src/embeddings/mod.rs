@@ -5,11 +5,18 @@
 //! and stripes them round-robin across banks so concurrent lookups in a
 //! batch land on different banks (conflict-free for the hot head of the
 //! zipf distribution).
+//!
+//! `sharding` (S18) lifts the same idea one level up: tables are
+//! partitioned across serving workers (with hot tables replicated) so
+//! the coordinator can keep gathers local to the memory tiles that own
+//! them — see DESIGN.md §7.5.
 
 pub mod placement;
+pub mod sharding;
 pub mod store;
 pub mod tilecost;
 
 pub use placement::{Placement, Strategy};
+pub use sharding::{EmbeddingShard, ShardMap, ShardPolicy, ShardedStore};
 pub use store::EmbeddingStore;
 pub use tilecost::{GatherCost, MemoryTileModel};

@@ -1,0 +1,477 @@
+//! Table-granular sharding of the embedding layer (S18).
+//!
+//! The paper's §4.1 behavioral model treats the embedding front-end as
+//! the shared bottleneck resource; RecNMP/UpDLRM (PAPERS.md) show that
+//! *where* a sparse gather lands dominates recommender serving latency.
+//! This module splits one dataset's table profile into per-worker
+//! [`EmbeddingShard`]s so the coordinator can keep gathers next to the
+//! worker that owns the tables (ShardAffinity routing), and assemble the
+//! rest cross-shard. Three placement policies:
+//!
+//! * [`ShardPolicy::RoundRobinTables`] — table `j` on shard `j % n`;
+//! * [`ShardPolicy::CapacityBalanced`] — LPT greedy bin-packing by row
+//!   count (largest table first onto the least-loaded shard), which
+//!   keeps every shard within 2× of the ideal row load (property-tested
+//!   in `rust/tests/sharding_prop.rs`);
+//! * [`ShardPolicy::HotReplicated`] — capacity-balanced, then the
+//!   tables with the most skewed access (largest zipf head share from
+//!   `data::profile`, i.e. the small tables whose few rows absorb most
+//!   lookups) are replicated on EVERY shard until the replica budget
+//!   (15% extra rows) is spent — trading a little capacity for
+//!   conflict-free local gathers on the hot tables.
+//!
+//! Row values are the unit of truth: a shard's table is byte-identical
+//! to the monolithic [`EmbeddingStore`] table, so a gather assembled
+//! across shards is element-identical to the monolithic gather (pinned
+//! by a differential property test).
+
+use super::store::EmbeddingStore;
+use crate::data::Profile;
+
+/// Extra rows `HotReplicated` may spend on replicas, as a fraction of
+/// the unreplicated total.
+pub const REPLICA_BUDGET: f64 = 0.15;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// table `j` → shard `j % n_shards`
+    RoundRobinTables,
+    /// LPT greedy: largest table first onto the least-loaded shard
+    CapacityBalanced,
+    /// capacity-balanced + hottest (most skewed) tables on every shard
+    HotReplicated,
+}
+
+impl ShardPolicy {
+    /// Parse a CLI spelling ("round-robin" | "balanced" | "hot").
+    pub fn parse(s: &str) -> crate::Result<ShardPolicy> {
+        Ok(match s {
+            "round-robin" | "rr" => ShardPolicy::RoundRobinTables,
+            "balanced" | "capacity" => ShardPolicy::CapacityBalanced,
+            "hot" | "hot-replicated" => ShardPolicy::HotReplicated,
+            other => crate::bail!(
+                "unknown placement `{other}` (round-robin|balanced|hot)"
+            ),
+        })
+    }
+}
+
+/// Which shard(s) own a replica of each table.
+#[derive(Clone, Debug)]
+pub struct ShardMap {
+    pub n_shards: usize,
+    pub policy: ShardPolicy,
+    /// `owners[table]` — sorted, deduplicated shard ids
+    owners: Vec<Vec<u32>>,
+}
+
+impl ShardMap {
+    /// Place `cards.len()` tables on `n_shards` shards. `zipf_alpha` is
+    /// the within-table access skew (only `HotReplicated` uses it).
+    pub fn build(
+        cards: &[usize],
+        zipf_alpha: f64,
+        n_shards: usize,
+        policy: ShardPolicy,
+    ) -> ShardMap {
+        assert!(n_shards > 0, "n_shards must be > 0");
+        let nt = cards.len();
+        let mut owners: Vec<Vec<u32>> = vec![Vec::new(); nt];
+        match policy {
+            ShardPolicy::RoundRobinTables => {
+                for (j, o) in owners.iter_mut().enumerate() {
+                    o.push((j % n_shards) as u32);
+                }
+            }
+            ShardPolicy::CapacityBalanced | ShardPolicy::HotReplicated => {
+                // LPT: biggest table first onto the least-loaded shard
+                // (ties: lower shard id), deterministic.
+                let mut order: Vec<usize> = (0..nt).collect();
+                order.sort_by(|&a, &b| cards[b].cmp(&cards[a]).then(a.cmp(&b)));
+                let mut load = vec![0usize; n_shards];
+                for &j in &order {
+                    let s = (0..n_shards)
+                        .min_by_key(|&s| (load[s], s))
+                        .unwrap();
+                    owners[j].push(s as u32);
+                    load[s] += cards[j];
+                }
+                if policy == ShardPolicy::HotReplicated && n_shards > 1 {
+                    // Head share of a zipf(α) table with c rows is
+                    // 1/H(c,α): small tables concentrate their traffic
+                    // on the fewest rows — replicate those first.
+                    let mut heat: Vec<(usize, f64)> = (0..nt)
+                        .map(|j| (j, 1.0 / harmonic(cards[j], zipf_alpha)))
+                        .collect();
+                    heat.sort_by(|a, b| {
+                        b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+                    });
+                    let total: usize = cards.iter().sum();
+                    let mut budget =
+                        (total as f64 * REPLICA_BUDGET) as usize;
+                    for &(j, _) in &heat {
+                        let extra = cards[j] * (n_shards - 1);
+                        let already = owners[j].len();
+                        if already == n_shards || extra > budget {
+                            continue;
+                        }
+                        budget -= extra;
+                        owners[j] = (0..n_shards as u32).collect();
+                    }
+                }
+            }
+        }
+        for o in owners.iter_mut() {
+            o.sort_unstable();
+            o.dedup();
+        }
+        ShardMap {
+            n_shards,
+            policy,
+            owners,
+        }
+    }
+
+    /// Placement for a dataset profile.
+    pub fn for_profile(
+        p: &Profile,
+        n_shards: usize,
+        policy: ShardPolicy,
+    ) -> ShardMap {
+        ShardMap::build(&p.cards, p.zipf_alpha, n_shards, policy)
+    }
+
+    pub fn n_tables(&self) -> usize {
+        self.owners.len()
+    }
+
+    /// Sorted shard ids owning a replica of `table`.
+    pub fn owners(&self, table: usize) -> &[u32] {
+        &self.owners[table]
+    }
+
+    /// First (primary) owner of `table`.
+    pub fn primary(&self, table: usize) -> usize {
+        self.owners[table][0] as usize
+    }
+
+    pub fn owns(&self, shard: usize, table: usize) -> bool {
+        self.owners[table].binary_search(&(shard as u32)).is_ok()
+    }
+
+    /// Tables with a replica on `shard` (ascending).
+    pub fn tables_of(&self, shard: usize) -> Vec<usize> {
+        (0..self.n_tables())
+            .filter(|&j| self.owns(shard, j))
+            .collect()
+    }
+
+    /// Rows stored on `shard` under this placement.
+    pub fn rows_of(&self, shard: usize, cards: &[usize]) -> usize {
+        (0..self.n_tables())
+            .filter(|&j| self.owns(shard, j))
+            .map(|j| cards[j])
+            .sum()
+    }
+
+    /// Fraction of `fields` that `shard` can serve locally (1.0 when
+    /// `fields` is empty — nothing needs to travel).
+    pub fn local_fraction(&self, shard: usize, fields: &[u32]) -> f64 {
+        if fields.is_empty() {
+            return 1.0;
+        }
+        let local = fields
+            .iter()
+            .filter(|&&f| (f as usize) < self.n_tables() && self.owns(shard, f as usize))
+            .count();
+        local as f64 / fields.len() as f64
+    }
+}
+
+fn harmonic(c: usize, alpha: f64) -> f64 {
+    (1..=c.max(1)).map(|k| 1.0 / (k as f64).powf(alpha)).sum()
+}
+
+/// One worker's slice of the embedding layer: the tables its shard
+/// owns, byte-identical to the monolithic store's tables.
+pub struct EmbeddingShard {
+    pub shard_id: usize,
+    pub d_emb: usize,
+    /// global per-table cardinalities (all tables, owned or not)
+    pub cards: Vec<usize>,
+    /// `tables[j]` is `Some(rows)` iff this shard owns table `j`
+    tables: Vec<Option<Vec<f32>>>,
+}
+
+impl EmbeddingShard {
+    /// Carve this shard's tables out of a monolithic store.
+    pub fn from_store(
+        store: &EmbeddingStore,
+        map: &ShardMap,
+        shard_id: usize,
+    ) -> EmbeddingShard {
+        let tables = (0..store.n_fields())
+            .map(|j| map.owns(shard_id, j).then(|| store.table(j).to_vec()))
+            .collect();
+        EmbeddingShard {
+            shard_id,
+            d_emb: store.d_emb,
+            cards: store.cards.clone(),
+            tables,
+        }
+    }
+
+    /// Generate ONLY the owned tables, row-identical to
+    /// `EmbeddingStore::random(profile, d_emb, seed)` — each table has
+    /// its own substream (shared `random_table` recipe), so skipping
+    /// unowned tables is free.
+    pub fn random(
+        profile: &Profile,
+        d_emb: usize,
+        seed: u64,
+        map: &ShardMap,
+        shard_id: usize,
+    ) -> EmbeddingShard {
+        let tables = profile
+            .cards
+            .iter()
+            .enumerate()
+            .map(|(j, &c)| {
+                map.owns(shard_id, j)
+                    .then(|| super::store::random_table(seed, j, c, d_emb))
+            })
+            .collect();
+        EmbeddingShard {
+            shard_id,
+            d_emb,
+            cards: profile.cards.clone(),
+            tables,
+        }
+    }
+
+    pub fn owns(&self, table: usize) -> bool {
+        table < self.tables.len() && self.tables[table].is_some()
+    }
+
+    /// One local row (id clamped like the monolithic gather); `None`
+    /// when this shard has no replica of `table`.
+    pub fn row(&self, table: usize, id: usize) -> Option<&[f32]> {
+        let t = self.tables.get(table)?.as_ref()?;
+        let d = self.d_emb;
+        let id = id.min(self.cards[table] - 1);
+        Some(&t[id * d..(id + 1) * d])
+    }
+
+    /// Rows resident on this shard.
+    pub fn local_rows(&self) -> usize {
+        self.tables
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_some())
+            .map(|(j, _)| self.cards[j])
+            .sum()
+    }
+}
+
+/// All shards of one dataset plus the map — what the coordinator hands
+/// to its workers. Worker `i` gathers from the perspective of shard
+/// `i % n_shards`: owned tables are local reads, the rest are
+/// cross-shard fetches (counted, so routing quality is measurable).
+pub struct ShardedStore {
+    pub map: ShardMap,
+    pub shards: Vec<EmbeddingShard>,
+    pub d_emb: usize,
+    pub cards: Vec<usize>,
+}
+
+impl ShardedStore {
+    /// Shard an existing monolithic store (rows are cloned per replica).
+    pub fn build(store: &EmbeddingStore, map: ShardMap) -> ShardedStore {
+        let shards = (0..map.n_shards)
+            .map(|s| EmbeddingShard::from_store(store, &map, s))
+            .collect();
+        ShardedStore {
+            d_emb: store.d_emb,
+            cards: store.cards.clone(),
+            shards,
+            map,
+        }
+    }
+
+    /// Random tables without materializing the monolithic store first;
+    /// row-identical to sharding `EmbeddingStore::random` directly.
+    pub fn random(
+        profile: &Profile,
+        d_emb: usize,
+        seed: u64,
+        map: ShardMap,
+    ) -> ShardedStore {
+        let shards = (0..map.n_shards)
+            .map(|s| EmbeddingShard::random(profile, d_emb, seed, &map, s))
+            .collect();
+        ShardedStore {
+            d_emb,
+            cards: profile.cards.clone(),
+            shards,
+            map,
+        }
+    }
+
+    pub fn n_fields(&self) -> usize {
+        self.cards.len()
+    }
+
+    /// Assemble one record's gather from the perspective of shard
+    /// `local`: a zero-filled `[n_fields × d_emb]` block is appended to
+    /// `out`, with row `ids[k]` of table `fields[k]` written at that
+    /// field's slot. Returns `(local_rows, remote_rows)` — a row served
+    /// by any shard other than `local` counts as one cross-shard fetch.
+    ///
+    /// With `fields = 0..n_fields` the block is element-identical to
+    /// `EmbeddingStore::gather` for the same ids (batch 1).
+    pub fn gather_from(
+        &self,
+        local: usize,
+        fields: &[u32],
+        ids: &[i32],
+        out: &mut Vec<f32>,
+    ) -> (usize, usize) {
+        debug_assert_eq!(fields.len(), ids.len());
+        let nf = self.n_fields();
+        let d = self.d_emb;
+        let base = out.len();
+        out.resize(base + nf * d, 0.0);
+        let (mut n_local, mut n_remote) = (0usize, 0usize);
+        for (k, &f) in fields.iter().enumerate() {
+            let j = f as usize;
+            if j >= nf {
+                continue;
+            }
+            // `as usize` + clamp-to-last mirrors the monolithic gather
+            // exactly (negative ids wrap huge and clamp to the last row)
+            let id = ids[k] as usize;
+            let serve = if self.map.owns(local, j) {
+                n_local += 1;
+                local
+            } else {
+                n_remote += 1;
+                self.map.primary(j)
+            };
+            let row = self.shards[serve]
+                .row(j, id)
+                .expect("shard map owner must hold the table");
+            out[base + j * d..base + (j + 1) * d].copy_from_slice(row);
+        }
+        (n_local, n_remote)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::profile;
+
+    #[test]
+    fn round_robin_tables_is_modulo() {
+        let p = profile("criteo").unwrap();
+        let m = ShardMap::for_profile(&p, 4, ShardPolicy::RoundRobinTables);
+        for j in 0..m.n_tables() {
+            assert_eq!(m.owners(j), &[(j % 4) as u32]);
+        }
+    }
+
+    #[test]
+    fn capacity_balanced_partitions_all_tables() {
+        let p = profile("criteo").unwrap();
+        let m = ShardMap::for_profile(&p, 3, ShardPolicy::CapacityBalanced);
+        let mut seen = 0usize;
+        for s in 0..3 {
+            seen += m.tables_of(s).len();
+        }
+        assert_eq!(seen, p.n_sparse()); // exactly-one owner per table
+        let rows: Vec<usize> = (0..3).map(|s| m.rows_of(s, &p.cards)).collect();
+        let ideal = p.cards.iter().sum::<usize>() / 3;
+        for &r in &rows {
+            assert!(r <= 2 * ideal.max(*p.cards.iter().max().unwrap()));
+        }
+    }
+
+    #[test]
+    fn hot_replication_replicates_small_skewed_tables() {
+        let p = profile("criteo").unwrap();
+        let m = ShardMap::for_profile(&p, 4, ShardPolicy::HotReplicated);
+        let replicated: Vec<usize> =
+            (0..m.n_tables()).filter(|&j| m.owners(j).len() == 4).collect();
+        assert!(!replicated.is_empty(), "budget should afford some replicas");
+        // the replicated set must be the small tables (hot heads)
+        let max_rep = replicated.iter().map(|&j| p.cards[j]).max().unwrap();
+        let max_card = *p.cards.iter().max().unwrap();
+        assert!(max_rep < max_card);
+        // budget respected
+        let total: usize = p.cards.iter().sum();
+        let stored: usize = (0..4).map(|s| m.rows_of(s, &p.cards)).sum();
+        assert!(stored <= total + (total as f64 * REPLICA_BUDGET) as usize);
+    }
+
+    #[test]
+    fn local_fraction_counts_owned_tables() {
+        let m = ShardMap::build(&[10, 10, 10, 10], 1.2, 2, ShardPolicy::RoundRobinTables);
+        // shard 0 owns tables 0, 2
+        assert_eq!(m.local_fraction(0, &[0, 2]), 1.0);
+        assert_eq!(m.local_fraction(0, &[1, 3]), 0.0);
+        assert_eq!(m.local_fraction(0, &[0, 1]), 0.5);
+        assert_eq!(m.local_fraction(0, &[]), 1.0);
+    }
+
+    #[test]
+    fn sharded_gather_matches_monolithic_full_fields() {
+        let p = profile("kdd").unwrap();
+        let store = EmbeddingStore::random(&p, 8, 11);
+        let m = ShardMap::for_profile(&p, 3, ShardPolicy::CapacityBalanced);
+        let sharded = ShardedStore::build(&store, m);
+        let nf = p.n_sparse();
+        let fields: Vec<u32> = (0..nf as u32).collect();
+        let ids: Vec<i32> = (0..nf as i32).map(|i| i % 5).collect();
+        let mut mono = Vec::new();
+        store.gather(&ids, 1, &mut mono);
+        for local in 0..3 {
+            let mut out = Vec::new();
+            let (l, r) = sharded.gather_from(local, &fields, &ids, &mut out);
+            assert_eq!(out, mono);
+            assert_eq!(l + r, nf);
+        }
+    }
+
+    #[test]
+    fn random_shard_rows_match_random_store() {
+        let p = profile("avazu").unwrap();
+        let store = EmbeddingStore::random(&p, 4, 99);
+        let m = ShardMap::for_profile(&p, 2, ShardPolicy::HotReplicated);
+        for s in 0..2 {
+            let shard = EmbeddingShard::random(&p, 4, 99, &m, s);
+            for j in 0..p.n_sparse() {
+                if shard.owns(j) {
+                    assert_eq!(shard.row(j, 0).unwrap(), store.row(j, 0));
+                    let last = p.cards[j] - 1;
+                    assert_eq!(shard.row(j, last).unwrap(), store.row(j, last));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_ids_clamp_like_monolithic() {
+        let p = profile("kdd").unwrap();
+        let store = EmbeddingStore::random(&p, 8, 5);
+        let m = ShardMap::for_profile(&p, 2, ShardPolicy::RoundRobinTables);
+        let sharded = ShardedStore::build(&store, m);
+        let nf = p.n_sparse();
+        let fields: Vec<u32> = (0..nf as u32).collect();
+        let ids = vec![i32::MAX; nf];
+        let mut mono = Vec::new();
+        store.gather(&ids, 1, &mut mono);
+        let mut out = Vec::new();
+        sharded.gather_from(0, &fields, &ids, &mut out);
+        assert_eq!(out, mono);
+    }
+}

@@ -5,6 +5,16 @@ use crate::data::Profile;
 use crate::runtime::atns::TensorFile;
 use crate::util::rng::{seed_from_name, Rng};
 
+/// One table's random init rows — THE recipe (substream name + scale)
+/// the monolithic store and the zero-copy sharded path must share:
+/// their bit-identity contract is differential-tested, and each table
+/// having its own substream is what lets a shard generate only the
+/// tables it owns.
+pub(crate) fn random_table(seed: u64, field: usize, card: usize, d_emb: usize) -> Vec<f32> {
+    let mut r = Rng::new(seed_from_name(seed, &format!("servemb/{field}")));
+    (0..card * d_emb).map(|_| (r.normal() * 0.05) as f32).collect()
+}
+
 /// All embedding tables for one dataset, flattened per field.
 pub struct EmbeddingStore {
     pub d_emb: usize,
@@ -40,11 +50,12 @@ impl EmbeddingStore {
 
     /// Random tables (tests / serving without trained artifacts).
     pub fn random(profile: &Profile, d_emb: usize, seed: u64) -> EmbeddingStore {
-        let mut tables = Vec::new();
-        for (j, &c) in profile.cards.iter().enumerate() {
-            let mut r = Rng::new(seed_from_name(seed, &format!("servemb/{j}")));
-            tables.push((0..c * d_emb).map(|_| (r.normal() * 0.05) as f32).collect());
-        }
+        let tables = profile
+            .cards
+            .iter()
+            .enumerate()
+            .map(|(j, &c)| random_table(seed, j, c, d_emb))
+            .collect();
         EmbeddingStore {
             d_emb,
             tables,
@@ -78,6 +89,40 @@ impl EmbeddingStore {
                 let id = ids[b * nf + j] as usize;
                 out.extend_from_slice(self.row(j, id.min(self.cards[j] - 1)));
             }
+        }
+    }
+
+    /// Raw rows of one table (row-major `[cards[j] × d_emb]`) — the unit
+    /// the sharding layer clones per replica.
+    pub fn table(&self, field: usize) -> &[f32] {
+        &self.tables[field]
+    }
+
+    /// Gather selected `(fields[k], ids[k])` pairs of ONE record into a
+    /// zero-filled `[n_fields × d_emb]` block appended to `out` (slots
+    /// of untouched fields stay zero — the engine's padding value).
+    /// With `fields = 0..n_fields` this is element-identical to
+    /// `gather` with batch 1.
+    pub fn gather_fields(&self, fields: &[u32], ids: &[i32], out: &mut Vec<f32>) {
+        debug_assert_eq!(fields.len(), ids.len());
+        let nf = self.n_fields();
+        // Full request (the default serving path): straight append —
+        // the zero-fill below would be memset immediately overwritten.
+        if fields.len() == nf
+            && fields.iter().enumerate().all(|(k, &f)| f as usize == k)
+        {
+            return self.gather(ids, 1, out);
+        }
+        let d = self.d_emb;
+        let base = out.len();
+        out.resize(base + nf * d, 0.0);
+        for (k, &f) in fields.iter().enumerate() {
+            let j = f as usize;
+            if j >= nf {
+                continue;
+            }
+            let id = (ids[k] as usize).min(self.cards[j] - 1);
+            out[base + j * d..base + (j + 1) * d].copy_from_slice(self.row(j, id));
         }
     }
 
@@ -124,6 +169,32 @@ mod tests {
         assert_eq!(s.global_row(0, 5), 5);
         assert_eq!(s.global_row(1, 0), p.cards[0]);
         assert_eq!(s.global_row(2, 1), p.cards[0] + p.cards[1] + 1);
+    }
+
+    #[test]
+    fn gather_fields_full_set_matches_gather() {
+        let p = profile("criteo").unwrap();
+        let s = EmbeddingStore::random(&p, 8, 9);
+        let nf = s.n_fields();
+        let ids: Vec<i32> = (0..nf as i32).map(|i| i % 7).collect();
+        let fields: Vec<u32> = (0..nf as u32).collect();
+        let mut a = Vec::new();
+        s.gather(&ids, 1, &mut a);
+        let mut b = Vec::new();
+        s.gather_fields(&fields, &ids, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gather_fields_partial_zero_fills_missing() {
+        let p = profile("kdd").unwrap();
+        let s = EmbeddingStore::random(&p, 4, 2);
+        let mut out = Vec::new();
+        s.gather_fields(&[1, 3], &[2, 0], &mut out);
+        assert_eq!(out.len(), s.n_fields() * 4);
+        assert!(out[0..4].iter().all(|&x| x == 0.0)); // field 0 untouched
+        assert_eq!(&out[4..8], s.row(1, 2));
+        assert_eq!(&out[12..16], s.row(3, 0));
     }
 
     #[test]

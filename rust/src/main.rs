@@ -1,19 +1,22 @@
 //! `autorac` CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   search    run the evolutionary co-search (Algorithm 1)
-//!   simulate  behavioral simulation of a genome on the PIM design
-//!   serve     serve CTR requests from the AOT model artifact via PJRT
-//!   eval      rust-side accuracy eval of the served model (Table 2 check)
-//!   datagen   inspect the synthetic dataset generator
+//!   search      run the evolutionary co-search (Algorithm 1)
+//!   simulate    behavioral simulation of a genome on the PIM design
+//!   serve       serve CTR requests from the AOT model artifact via PJRT
+//!   serve-bench shard-aware serving bench under MockEngine (offline)
+//!   eval        rust-side accuracy eval of the served model (Table 2 check)
+//!   datagen     inspect the synthetic dataset generator
 //!   table2 | table3 | fig2 | fig5 | fig6   regenerate paper artifacts
-//!   artifacts list artifact registry
+//!   artifacts   list artifact registry
 
+use autorac::coordinator::loadgen::{self, Arrival, LoadGenConfig, LoadReport};
 use autorac::coordinator::{
-    Coordinator, CoordinatorConfig, PjrtEngine, Request,
+    AdmissionPolicy, BatcherConfig, Coordinator, CoordinatorConfig,
+    MetricsSnapshot, MockEngine, PjrtEngine, Policy, Request, ServingStore,
 };
 use autorac::data::{make_batch, profile, Generator, Splits, DEFAULT_SEED};
-use autorac::embeddings::EmbeddingStore;
+use autorac::embeddings::{EmbeddingStore, ShardMap, ShardPolicy, ShardedStore};
 use autorac::mapping::{map_genome, MapStyle};
 use autorac::nas::{autorac_best, Genome, SearchConfig};
 use autorac::pim::TechParams;
@@ -32,6 +35,7 @@ fn main() -> autorac::Result<()> {
         Some("search") => cmd_search(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("serve-bench") => cmd_serve_bench(&args),
         Some("eval") => cmd_eval(&args),
         Some("datagen") => cmd_datagen(&args),
         Some("table2") => {
@@ -80,10 +84,14 @@ fn main() -> autorac::Result<()> {
 fn print_help() {
     println!(
         "autorac — automated PIM accelerator design for recommender systems\n\
-         usage: autorac <search|simulate|serve|eval|datagen|table2|table3|fig2|fig5|fig6|artifacts> [--opts]\n\
+         usage: autorac <search|simulate|serve|serve-bench|eval|datagen|table2|table3|fig2|fig5|fig6|artifacts> [--opts]\n\
          common: --dataset criteo|avazu|kdd   --artifacts <dir>   --seed N\n\
          search: --generations N --population N --children N --out best.json\n\
          serve:  --requests N --workers N --batch N --rps N\n\
+         serve-bench: --workers N --shards N --policy round-robin|least-queued|shard-affinity\n\
+                      --placement round-robin|balanced|hot --requests N --rps R (0=closed loop)\n\
+                      --concurrency N --coverage F --queue-cap N (0=unbounded) --admission reject|shed\n\
+                      --shed-after-us N --exec-us N --batch N --d-emb N\n\
          eval:   --n N (test records)"
     );
 }
@@ -213,13 +221,12 @@ fn cmd_serve(args: &Args) -> autorac::Result<()> {
             }
         }
         let (dense, ids) = gen.features(id);
-        coord.submit(Request {
-            id: id as u64,
+        coord.submit(Request::full(
+            id as u64,
             dense,
-            ids: ids.iter().map(|&x| x as i32).collect(),
-            enqueued: Instant::now(),
-            reply: tx.clone(),
-        })?;
+            ids.iter().map(|&x| x as i32).collect(),
+            tx.clone(),
+        ))?;
     }
     drop(tx);
     let responses: Vec<_> = rx.iter().collect();
@@ -235,6 +242,182 @@ fn cmd_serve(args: &Args) -> autorac::Result<()> {
         responses.iter().map(|r| r.prob as f64).sum::<f64>() / n as f64;
     println!("  mean p(click) {:.4}", mean_prob);
     Ok(())
+}
+
+/// Everything one serve-bench run needs (shared by the measured policy
+/// and the round-robin baseline so the comparison is apples-to-apples).
+struct ServeBenchSetup {
+    dataset: String,
+    workers: usize,
+    shards: usize,
+    placement: ShardPolicy,
+    n_requests: usize,
+    arrival: Arrival,
+    coverage: f64,
+    queue_cap: usize,
+    admission: AdmissionPolicy,
+    shed_after: std::time::Duration,
+    exec_delay: std::time::Duration,
+    batch: usize,
+    d_emb: usize,
+    seed: u64,
+}
+
+fn serve_bench_run(
+    s: &ServeBenchSetup,
+    policy: Policy,
+) -> autorac::Result<(MetricsSnapshot, LoadReport)> {
+    let prof = profile(&s.dataset)?;
+    let map = ShardMap::for_profile(&prof, s.shards, s.placement);
+    let store = Arc::new(ShardedStore::random(&prof, s.d_emb, s.seed, map));
+    let (nd, nf, d_emb, batch) = (prof.n_dense, prof.n_sparse(), s.d_emb, s.batch);
+    let delay = s.exec_delay;
+    let coord = Coordinator::start_with(
+        CoordinatorConfig {
+            n_workers: s.workers,
+            policy,
+            queue_cap: s.queue_cap,
+            admission: s.admission,
+            shed_after: s.shed_after,
+            batcher: BatcherConfig {
+                max_batch: batch,
+                max_wait: std::time::Duration::ZERO,
+            },
+        },
+        ServingStore::Sharded(store),
+        move |_| {
+            let mut e = MockEngine::new(batch, nd, nf, d_emb);
+            e.delay = delay;
+            Ok(Box::new(e))
+        },
+    )?;
+    let rep = loadgen::run(
+        &coord,
+        &prof,
+        &LoadGenConfig {
+            n_requests: s.n_requests,
+            arrival: s.arrival,
+            seed: s.seed,
+            coverage: s.coverage,
+        },
+    )?;
+    let snap = coord.metrics.snapshot();
+    coord.shutdown();
+    Ok((snap, rep))
+}
+
+fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
+    let policy = Policy::parse(&args.str_or("policy", "shard-affinity"))?;
+    let workers = args.usize_or("workers", 4)?;
+    let rps = args.f64_or("rps", 0.0)?;
+    let queue_cap = args.usize_or("queue-cap", 0)?;
+    // consume unconditionally so `--concurrency` with `--rps` still
+    // passes finish() (it is simply unused in open loop)
+    let concurrency = args.usize_or("concurrency", 64)?;
+    let admission = match args.str_or("admission", "reject").as_str() {
+        "reject" => AdmissionPolicy::RejectNew,
+        "shed" => AdmissionPolicy::ShedStale,
+        other => autorac::bail!("unknown admission `{other}` (reject|shed)"),
+    };
+    let setup = ServeBenchSetup {
+        dataset: args.str_or("dataset", "criteo"),
+        workers,
+        shards: args.usize_or("shards", workers)?,
+        placement: ShardPolicy::parse(&args.str_or("placement", "hot"))?,
+        n_requests: args.usize_or("requests", 4000)?,
+        arrival: if rps > 0.0 {
+            Arrival::OpenLoop { rps }
+        } else {
+            Arrival::ClosedLoop { concurrency }
+        },
+        coverage: args.f64_or("coverage", 0.35)?,
+        queue_cap: if queue_cap == 0 { usize::MAX } else { queue_cap },
+        admission,
+        shed_after: std::time::Duration::from_micros(
+            args.u64_or("shed-after-us", 2000)?,
+        ),
+        exec_delay: std::time::Duration::from_micros(args.u64_or("exec-us", 30)?),
+        batch: args.usize_or("batch", 32)?,
+        d_emb: args.usize_or("d-emb", 16)?,
+        seed: args.u64_or("seed", 7)?,
+    };
+    args.finish()?;
+
+    println!(
+        "serve-bench {}: {} workers / {} shards ({:?}), policy {:?}, \
+         MockEngine {} µs/batch, {:?}",
+        setup.dataset,
+        setup.workers,
+        setup.shards,
+        setup.placement,
+        policy,
+        setup.exec_delay.as_micros(),
+        setup.arrival,
+    );
+    let (snap, rep) = serve_bench_run(&setup, policy)?;
+    print_serve_bench(&snap, &rep);
+
+    // Same traffic under round-robin — the cross-shard-gather baseline.
+    if policy != Policy::RoundRobin {
+        let (base, _) = serve_bench_run(&setup, Policy::RoundRobin)?;
+        println!(
+            "baseline round-robin: cross-shard {} rows ({:.1}%) | \
+             p50 {:.0} µs p99 {:.0} µs",
+            base.remote_rows,
+            base.cross_shard_frac() * 100.0,
+            base.e2e_p50_us,
+            base.e2e_p99_us
+        );
+        match (snap.remote_rows, base.remote_rows) {
+            (0, 0) => println!(
+                "no cross-shard gathers under either policy \
+                 (single shard or fully replicated tables)"
+            ),
+            (0, b) => println!(
+                "{policy:?} eliminated cross-shard gathers entirely \
+                 (round-robin fetched {b} rows)"
+            ),
+            (a, b) if b >= a => println!(
+                "{policy:?} cross-shard gathers {:.1}× lower than round-robin",
+                b as f64 / a as f64
+            ),
+            (a, b) => println!(
+                "WARNING: {policy:?} cross-shard gathers {:.1}× HIGHER than \
+                 round-robin ({a} vs {b} rows)",
+                a as f64 / b.max(1) as f64
+            ),
+        }
+    }
+    Ok(())
+}
+
+fn print_serve_bench(snap: &MetricsSnapshot, rep: &LoadReport) {
+    println!(
+        "  sent {} | accepted {} | rejected {} | shed {} | failed {} | \
+         lost {} | shed-rate {:.1}%",
+        rep.sent,
+        rep.accepted,
+        rep.rejected,
+        snap.shed,
+        snap.failed,
+        rep.lost,
+        snap.shed_rate() * 100.0
+    );
+    println!(
+        "  throughput {:.0} req/s | mean batch {:.1} | batches {}",
+        snap.throughput_rps, snap.mean_batch, snap.batches
+    );
+    println!(
+        "  latency p50 {:.0} µs  p99 {:.0} µs | queue p99 {:.0} µs | \
+         exec p50 {:.0} µs",
+        snap.e2e_p50_us, snap.e2e_p99_us, snap.queue_p99_us, snap.exec_p50_us
+    );
+    println!(
+        "  gathers: local {} rows | cross-shard {} rows ({:.1}%)",
+        snap.local_rows,
+        snap.remote_rows,
+        snap.cross_shard_frac() * 100.0
+    );
 }
 
 fn cmd_eval(args: &Args) -> autorac::Result<()> {

@@ -34,6 +34,13 @@ pub struct OpCost {
 }
 
 impl OpCost {
+    /// Pipelined batch latency: `latency_ns + (B-1)·bottleneck_ns` —
+    /// the fill latency plus one initiation interval per extra request.
+    /// Monotone in `batch` (property-tested below).
+    pub fn batch_ns(&self, batch: usize) -> f64 {
+        self.latency_ns + batch.saturating_sub(1) as f64 * self.bottleneck_ns
+    }
+
     pub fn seq(self, other: OpCost) -> OpCost {
         OpCost {
             latency_ns: self.latency_ns + other.latency_ns,
@@ -271,6 +278,123 @@ mod tests {
         assert_eq!(c.bottleneck_ns, 9.0);
         assert_eq!(c.arrays, 5);
         assert_eq!(c.setup_ns, 100.0);
+    }
+
+    // ---- cost-invariant property suite (ISSUE 2 satellite) ----------
+    // Drawn over the real feasible PIM space so the invariants the
+    // simulator and mapper rely on hold for every searchable config.
+
+    use crate::util::qcheck::qcheck;
+
+    fn feasible_cfg(g: &mut crate::util::qcheck::Gen) -> PimConfig {
+        let all = PimConfig::enumerate_feasible();
+        *g.choose(&all)
+    }
+
+    #[test]
+    fn property_batch_formula_is_monotone_and_anchored() {
+        let t = TechParams::default();
+        qcheck(60, |g| {
+            let cfg = feasible_cfg(g);
+            let k = g.usize(1, 512);
+            let n = g.usize(1, 512);
+            let n_vecs = g.usize(1, 48);
+            let wbits = *g.choose(&[4usize, 8]);
+            let c = matmul_cost(k, n, n_vecs, wbits, &cfg, &t);
+            crate::prop_assert!(c.latency_ns >= 0.0 && c.energy_pj >= 0.0);
+            crate::prop_assert!(c.bottleneck_ns >= 0.0 && c.arrays >= 1);
+            crate::prop_assert!(
+                (c.batch_ns(1) - c.latency_ns).abs() < 1e-12,
+                "B=1 must cost the raw latency"
+            );
+            let b1 = g.usize(1, 256);
+            let b2 = g.usize(b1, 512);
+            crate::prop_assert!(
+                c.batch_ns(b1) <= c.batch_ns(b2) + 1e-9,
+                "batch cost not monotone: B{b1}={} B{b2}={}",
+                c.batch_ns(b1),
+                c.batch_ns(b2)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_matmul_monotone_in_rows_cols_bits() {
+        let t = TechParams::default();
+        qcheck(60, |g| {
+            let cfg = feasible_cfg(g);
+            let k = g.usize(1, 384);
+            let n = g.usize(1, 384);
+            let n_vecs = g.usize(1, 32);
+            let base = matmul_cost(k, n, n_vecs, 4, &cfg, &t);
+            // more rows (K): same pipeline, more silicon + energy
+            let more_k = matmul_cost(k + g.usize(1, 256), n, n_vecs, 4, &cfg, &t);
+            crate::prop_assert!(more_k.arrays >= base.arrays);
+            crate::prop_assert!(more_k.energy_pj >= base.energy_pj - 1e-9);
+            crate::prop_assert!(more_k.latency_ns >= base.latency_ns - 1e-9);
+            // more cols (N): longer cycles, more conversions, more tiles
+            let more_n = matmul_cost(k, n + g.usize(1, 256), n_vecs, 4, &cfg, &t);
+            crate::prop_assert!(more_n.arrays >= base.arrays);
+            crate::prop_assert!(more_n.energy_pj >= base.energy_pj - 1e-9);
+            crate::prop_assert!(more_n.latency_ns >= base.latency_ns - 1e-9);
+            // more weight bits: more planes → more silicon + energy at
+            // identical pipeline latency
+            let w8 = matmul_cost(k, n, n_vecs, 8, &cfg, &t);
+            crate::prop_assert!(w8.arrays >= base.arrays);
+            crate::prop_assert!(w8.energy_pj >= base.energy_pj - 1e-9);
+            crate::prop_assert!((w8.latency_ns - base.latency_ns).abs() < 1e-9);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_seq_composition_laws() {
+        qcheck(80, |g| {
+            let mk = |g: &mut crate::util::qcheck::Gen| OpCost {
+                latency_ns: g.f64(0.0, 1e4),
+                energy_pj: g.f64(0.0, 1e5),
+                bottleneck_ns: g.f64(0.0, 1e4),
+                arrays: g.usize(0, 64),
+                setup_ns: g.f64(0.0, 1e5),
+                setup_pj: g.f64(0.0, 1e5),
+            };
+            let a = mk(g);
+            let b = mk(g);
+            let c = a.seq(b);
+            crate::prop_assert!(
+                (c.latency_ns - (a.latency_ns + b.latency_ns)).abs() < 1e-9
+            );
+            crate::prop_assert!(
+                (c.energy_pj - (a.energy_pj + b.energy_pj)).abs() < 1e-9
+            );
+            crate::prop_assert!(
+                (c.bottleneck_ns - a.bottleneck_ns.max(b.bottleneck_ns)).abs()
+                    < 1e-12
+            );
+            // the chain is never faster than either stage at any batch
+            let bb = g.usize(1, 64);
+            crate::prop_assert!(c.batch_ns(bb) >= a.batch_ns(bb) - 1e-9);
+            crate::prop_assert!(c.batch_ns(bb) >= b.batch_ns(bb) - 1e-9);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_operand_read_monotone_in_reads() {
+        let t = TechParams::default();
+        qcheck(40, |g| {
+            let cfg = feasible_cfg(g);
+            let d = g.usize(1, 128);
+            let cols = g.usize(1, 128);
+            let r1 = g.usize(1, 64);
+            let r2 = r1 + g.usize(0, 64);
+            let a = operand_read_cost(d, cols, r1, &cfg, &t);
+            let b = operand_read_cost(d, cols, r2, &cfg, &t);
+            crate::prop_assert!(b.latency_ns >= a.latency_ns - 1e-9);
+            crate::prop_assert!(b.energy_pj >= a.energy_pj - 1e-9);
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,19 +1,28 @@
 //! Coordinator integration: multi-worker serving with mock engines under
-//! concurrent load, plus (artifact-gated) a PJRT-backed smoke run.
+//! concurrent load — shard-affinity conservation, admission-control
+//! accounting under overload, drain-on-shutdown, per-client FIFO — plus
+//! (artifact-gated) a PJRT-backed smoke run.
 
 use autorac::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, MockEngine, PjrtEngine, Request,
+    Admission, AdmissionPolicy, BatcherConfig, Coordinator,
+    CoordinatorConfig, MockEngine, PjrtEngine, Policy, Request, ServingStore,
 };
 use autorac::data::{profile, Generator, DEFAULT_SEED};
-use autorac::embeddings::EmbeddingStore;
+use autorac::embeddings::{EmbeddingStore, ShardMap, ShardPolicy, ShardedStore};
 use autorac::runtime::atns::TensorFile;
 use autorac::runtime::client::Runtime;
 use std::path::Path;
 use std::sync::{mpsc, Arc};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 fn store() -> Arc<EmbeddingStore> {
     Arc::new(EmbeddingStore::random(&profile("criteo").unwrap(), 32, 7))
+}
+
+fn sharded_store(n_shards: usize) -> Arc<ShardedStore> {
+    let p = profile("criteo").unwrap();
+    let map = ShardMap::for_profile(&p, n_shards, ShardPolicy::CapacityBalanced);
+    Arc::new(ShardedStore::random(&p, 16, 7, map))
 }
 
 #[test]
@@ -46,13 +55,12 @@ fn concurrent_load_from_many_producers() {
             for i in 0..per {
                 let (dense, ids) = gen.features(i as usize);
                 coord
-                    .submit(Request {
-                        id: p * 1000 + i,
+                    .submit(Request::full(
+                        p * 1000 + i,
                         dense,
-                        ids: ids.iter().map(|&x| x as i32).collect(),
-                        enqueued: Instant::now(),
-                        reply: tx.clone(),
-                    })
+                        ids.iter().map(|&x| x as i32).collect(),
+                        tx.clone(),
+                    ))
                     .unwrap();
             }
         }));
@@ -75,6 +83,237 @@ fn concurrent_load_from_many_producers() {
     if let Ok(c) = Arc::try_unwrap(coord) {
         c.shutdown();
     }
+}
+
+/// ShardAffinity conservation: every accepted request lands on exactly
+/// one queue and produces exactly one response, even when requests
+/// touch arbitrary table subsets.
+#[test]
+fn shard_affinity_conserves_requests() {
+    let sharded = sharded_store(4);
+    let coord = Coordinator::start_with(
+        CoordinatorConfig {
+            n_workers: 4,
+            policy: Policy::ShardAffinity,
+            ..Default::default()
+        },
+        ServingStore::Sharded(sharded),
+        |_| Ok(Box::new(MockEngine::new(16, 13, 26, 16))),
+    )
+    .unwrap();
+    let p = profile("criteo").unwrap();
+    let nf = p.n_sparse();
+    let mut gen = Generator::new(p, DEFAULT_SEED);
+    let mut rng = autorac::util::rng::Rng::new(99);
+    let (tx, rx) = mpsc::channel();
+    let n = 300u64;
+    for id in 0..n {
+        let (dense, ids_full) = gen.features(id as usize);
+        // random subset of 1..nf tables
+        let keep = rng.range(1, nf);
+        let mut fields: Vec<u32> = (0..nf as u32).collect();
+        rng.shuffle(&mut fields);
+        fields.truncate(keep);
+        fields.sort_unstable();
+        let ids = fields
+            .iter()
+            .map(|&f| ids_full[f as usize] as i32)
+            .collect();
+        let adm = coord
+            .submit(Request::partial(id, dense, fields, ids, tx.clone()))
+            .unwrap();
+        // unbounded queues: ShardAffinity must accept onto exactly one
+        // worker (the routed index is in range)
+        match adm {
+            Admission::Enqueued(w) => assert!(w < 4, "worker {w}"),
+            Admission::Rejected => panic!("unbounded queue rejected"),
+        }
+    }
+    drop(tx);
+    let mut got: Vec<u64> = rx.iter().map(|r| r.id).collect();
+    got.sort_unstable();
+    assert_eq!(got, (0..n).collect::<Vec<_>>(), "lost or duplicated ids");
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.requests, n);
+    assert_eq!(snap.responses, n);
+    assert_eq!(snap.rejected + snap.shed, 0);
+    // sharded gather accounting covered every requested row
+    assert!(snap.local_rows + snap.remote_rows > 0);
+    coord.shutdown();
+}
+
+/// Under overload with RejectNew, the books balance exactly:
+/// requests == responses + rejected, and the client sees precisely the
+/// accepted subset.
+#[test]
+fn reject_policy_counts_add_up_under_overload() {
+    let block = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let block2 = block.clone();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            n_workers: 2,
+            queue_cap: 6,
+            admission: AdmissionPolicy::RejectNew,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::ZERO,
+            },
+            ..Default::default()
+        },
+        store(),
+        move |_| {
+            // gated MockEngine: the worker blocks in infer_batch until
+            // released, so queue buildup (and rejection) is deterministic
+            let mut e = MockEngine::new(4, 13, 26, 32);
+            e.gate = Some(block2.clone());
+            Ok(Box::new(e))
+        },
+    )
+    .unwrap();
+    let (tx, rx) = mpsc::channel();
+    let n = 200u64;
+    let mut accepted = 0u64;
+    let mut rejected = 0u64;
+    for id in 0..n {
+        match coord
+            .submit(Request::full(id, vec![0.0; 13], vec![1; 26], tx.clone()))
+            .unwrap()
+        {
+            Admission::Enqueued(_) => accepted += 1,
+            Admission::Rejected => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "200-burst into cap-6 queues must reject");
+    block.store(true, std::sync::atomic::Ordering::Relaxed);
+    drop(tx);
+    let responses = rx.iter().count() as u64;
+    let snap = coord.metrics.snapshot();
+    assert_eq!(responses, accepted);
+    assert_eq!(snap.requests, n);
+    assert_eq!(snap.rejected, rejected);
+    assert_eq!(
+        snap.responses + snap.rejected,
+        n,
+        "admission accounting must balance"
+    );
+    coord.shutdown();
+}
+
+/// Shutdown after submission drains every in-flight request before the
+/// workers exit — no request is stranded on a queue.
+#[test]
+fn clean_shutdown_drains_in_flight_requests() {
+    let coord = Coordinator::start_with(
+        CoordinatorConfig {
+            n_workers: 3,
+            policy: Policy::ShardAffinity,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::ZERO,
+            },
+            ..Default::default()
+        },
+        ServingStore::Sharded(sharded_store(3)),
+        |_| {
+            let mut e = MockEngine::new(8, 13, 26, 16);
+            e.delay = Duration::from_micros(200); // keep work in flight
+            Ok(Box::new(e))
+        },
+    )
+    .unwrap();
+    let (tx, rx) = mpsc::channel();
+    for id in 0..90u64 {
+        coord
+            .submit(Request::full(id, vec![0.0; 13], vec![2; 26], tx.clone()))
+            .unwrap();
+    }
+    drop(tx);
+    // shutdown immediately: queues still hold most of the 90
+    coord.shutdown();
+    assert_eq!(rx.iter().count(), 90, "shutdown must drain, not drop");
+}
+
+/// Responses are FIFO per client. Two shapes: (a) a single worker
+/// preserves submission order end-to-end; (b) with ShardAffinity, a
+/// client whose requests all touch one shard's tables is sticky-routed
+/// to that worker, so its stream stays FIFO even with 3 workers.
+#[test]
+fn response_ordering_is_per_client_fifo() {
+    // (a) single worker
+    let c = Coordinator::start(
+        CoordinatorConfig::default(),
+        store(),
+        |_| Ok(Box::new(MockEngine::new(8, 13, 26, 32))),
+    )
+    .unwrap();
+    let (tx_a, rx_a) = mpsc::channel();
+    let (tx_b, rx_b) = mpsc::channel();
+    for k in 0..60u64 {
+        c.submit(Request::full(k, vec![0.0; 13], vec![0; 26], tx_a.clone()))
+            .unwrap();
+        c.submit(Request::full(1000 + k, vec![0.0; 13], vec![0; 26], tx_b.clone()))
+            .unwrap();
+    }
+    drop(tx_a);
+    drop(tx_b);
+    let a: Vec<u64> = rx_a.iter().map(|r| r.id).collect();
+    let b: Vec<u64> = rx_b.iter().map(|r| r.id).collect();
+    assert_eq!(a, (0..60).collect::<Vec<_>>(), "client A order broken");
+    assert_eq!(
+        b,
+        (1000..1060).collect::<Vec<_>>(),
+        "client B order broken"
+    );
+    c.shutdown();
+
+    // (b) shard-affine clients on 3 workers
+    let p = profile("criteo").unwrap();
+    let sharded = sharded_store(3);
+    let map = sharded.map.clone();
+    let c = Coordinator::start_with(
+        CoordinatorConfig {
+            n_workers: 3,
+            policy: Policy::ShardAffinity,
+            ..Default::default()
+        },
+        ServingStore::Sharded(sharded),
+        |_| Ok(Box::new(MockEngine::new(8, 13, 26, 16))),
+    )
+    .unwrap();
+    let mut gen = Generator::new(p, DEFAULT_SEED);
+    let mut clients: Vec<(mpsc::Sender<_>, mpsc::Receiver<_>)> =
+        (0..3).map(|_| mpsc::channel()).collect();
+    for k in 0..120u64 {
+        // client s only touches tables owned by shard s → affinity 1.0
+        // for worker s, strictly less for the others → deterministic
+        // single-queue routing
+        let s = (k % 3) as usize;
+        let fields: Vec<u32> =
+            map.tables_of(s).iter().map(|&j| j as u32).collect();
+        let (dense, ids_full) = gen.features(k as usize);
+        let ids = fields
+            .iter()
+            .map(|&f| ids_full[f as usize] as i32)
+            .collect();
+        c.submit(Request::partial(k, dense, fields, ids, clients[s].0.clone()))
+            .unwrap();
+    }
+    // drop the original senders so each client stream closes once its
+    // in-flight requests are answered
+    let receivers: Vec<mpsc::Receiver<_>> = clients
+        .drain(..)
+        .map(|(tx, rx)| {
+            drop(tx);
+            rx
+        })
+        .collect();
+    for (s, rx) in receivers.iter().enumerate() {
+        let got: Vec<u64> = rx.iter().map(|r| r.id).collect();
+        let want: Vec<u64> =
+            (0..120).filter(|k| (k % 3) as usize == s).collect();
+        assert_eq!(got, want, "client {s} stream not FIFO");
+    }
+    c.shutdown();
 }
 
 #[test]
@@ -107,13 +346,12 @@ fn pjrt_backed_serving_smoke() {
     for id in 0..64u64 {
         let (dense, ids) = gen.features(id as usize);
         coord
-            .submit(Request {
+            .submit(Request::full(
                 id,
                 dense,
-                ids: ids.iter().map(|&x| x as i32).collect(),
-                enqueued: Instant::now(),
-                reply: tx.clone(),
-            })
+                ids.iter().map(|&x| x as i32).collect(),
+                tx.clone(),
+            ))
             .unwrap();
     }
     drop(tx);

@@ -1,0 +1,216 @@
+//! Property tests for `embeddings::sharding` (ISSUE 2 satellite):
+//! ownership totality, capacity balance, replication budget, and the
+//! headline differential — a gather assembled across shards is
+//! element-identical to the monolithic `EmbeddingStore` gather on the
+//! same seed.
+
+use autorac::data::{profile, ALL_PROFILES};
+use autorac::embeddings::{
+    sharding::REPLICA_BUDGET, EmbeddingShard, EmbeddingStore, ShardMap,
+    ShardPolicy, ShardedStore,
+};
+use autorac::util::qcheck::{qcheck, Gen};
+use autorac::{prop_assert, prop_assert_eq};
+
+const POLICIES: [ShardPolicy; 3] = [
+    ShardPolicy::RoundRobinTables,
+    ShardPolicy::CapacityBalanced,
+    ShardPolicy::HotReplicated,
+];
+
+fn random_cards(g: &mut Gen) -> Vec<usize> {
+    let nt = g.usize(1, 40);
+    (0..nt).map(|_| g.usize(1, 2500)).collect()
+}
+
+#[test]
+fn every_table_is_owned_by_at_least_one_shard() {
+    qcheck(60, |g| {
+        let cards = random_cards(g);
+        let alpha = g.f64(1.05, 1.5);
+        let n_shards = g.usize(1, 8);
+        let policy = *g.choose(&POLICIES);
+        let m = ShardMap::build(&cards, alpha, n_shards, policy);
+        prop_assert_eq!(m.n_tables(), cards.len());
+        for j in 0..m.n_tables() {
+            let owners = m.owners(j);
+            prop_assert!(!owners.is_empty(), "table {j} unowned ({policy:?})");
+            prop_assert!(
+                owners.windows(2).all(|w| w[0] < w[1]),
+                "owners not sorted/unique for table {j}"
+            );
+            prop_assert!(
+                owners.iter().all(|&s| (s as usize) < n_shards),
+                "owner out of range for table {j}"
+            );
+            prop_assert_eq!(m.primary(j), owners[0] as usize);
+            if policy != ShardPolicy::HotReplicated {
+                prop_assert_eq!(owners.len(), 1);
+            }
+        }
+        // every table reachable through tables_of as well
+        let covered: usize =
+            (0..n_shards).map(|s| m.tables_of(s).len()).sum();
+        prop_assert!(covered >= cards.len(), "tables_of misses tables");
+        Ok(())
+    });
+}
+
+#[test]
+fn capacity_balanced_stays_within_2x_of_ideal() {
+    qcheck(60, |g| {
+        let cards = random_cards(g);
+        let n_shards = g.usize(1, 8);
+        let m = ShardMap::build(
+            &cards,
+            1.2,
+            n_shards,
+            ShardPolicy::CapacityBalanced,
+        );
+        let total: usize = cards.iter().sum();
+        let max_card = *cards.iter().max().unwrap();
+        // OPT can never beat max(total/m, biggest single table); LPT is
+        // a 4/3-approximation, so 2× ideal is a safe hard bound.
+        let ideal = (total.div_ceil(n_shards)).max(max_card);
+        for s in 0..n_shards {
+            let rows = m.rows_of(s, &cards);
+            prop_assert!(
+                rows <= 2 * ideal,
+                "shard {s} holds {rows} rows vs ideal {ideal}"
+            );
+        }
+        // non-replicated: loads partition the total exactly
+        let sum: usize = (0..n_shards).map(|s| m.rows_of(s, &cards)).sum();
+        prop_assert_eq!(sum, total);
+        Ok(())
+    });
+}
+
+#[test]
+fn round_robin_tables_is_modulo_assignment() {
+    qcheck(30, |g| {
+        let cards = random_cards(g);
+        let n_shards = g.usize(1, 8);
+        let m = ShardMap::build(&cards, 1.2, n_shards, ShardPolicy::RoundRobinTables);
+        for j in 0..cards.len() {
+            prop_assert_eq!(m.owners(j), &[(j % n_shards) as u32]);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hot_replication_respects_the_budget() {
+    qcheck(40, |g| {
+        let cards = random_cards(g);
+        let alpha = g.f64(1.05, 1.5);
+        let n_shards = g.usize(1, 8);
+        let m =
+            ShardMap::build(&cards, alpha, n_shards, ShardPolicy::HotReplicated);
+        let total: usize = cards.iter().sum();
+        let stored: usize =
+            (0..n_shards).map(|s| m.rows_of(s, &cards)).sum();
+        prop_assert!(
+            stored <= total + (total as f64 * REPLICA_BUDGET) as usize,
+            "replicas blow the budget: {stored} vs {total}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn local_fraction_is_a_fraction() {
+    qcheck(40, |g| {
+        let cards = random_cards(g);
+        let n_shards = g.usize(1, 6);
+        let policy = *g.choose(&POLICIES);
+        let m = ShardMap::build(&cards, 1.2, n_shards, policy);
+        let s = g.usize(0, n_shards - 1);
+        let nf = g.usize(0, cards.len());
+        let fields: Vec<u32> = (0..nf as u32).collect();
+        let f = m.local_fraction(s, &fields);
+        prop_assert!((0.0..=1.0).contains(&f), "fraction {f}");
+        // a shard fully owns its own table set
+        let own: Vec<u32> =
+            m.tables_of(s).iter().map(|&j| j as u32).collect();
+        prop_assert_eq!(m.local_fraction(s, &own), 1.0);
+        Ok(())
+    });
+}
+
+/// The headline differential: sharded gather == monolithic gather,
+/// bit-for-bit, for any placement, any observer shard, any field
+/// subset, and ids including out-of-range and negative values (both
+/// paths clamp identically).
+#[test]
+fn sharded_gather_is_element_identical_to_monolithic() {
+    qcheck(25, |g| {
+        let name = *g.choose(&ALL_PROFILES);
+        let p = profile(name).unwrap();
+        let d_emb = *g.choose(&[4usize, 8]);
+        let seed = g.u64(0, 1 << 40);
+        let n_shards = g.usize(1, 5);
+        let policy = *g.choose(&POLICIES);
+        let store = EmbeddingStore::random(&p, d_emb, seed);
+        let map = ShardMap::for_profile(&p, n_shards, policy);
+        let sharded = ShardedStore::build(&store, map);
+        let nf = p.n_sparse();
+        for _ in 0..4 {
+            // random strictly-ascending field subset
+            let keep = g.usize(1, nf);
+            let mut fields: Vec<u32> = (0..nf as u32).collect();
+            g.rng().shuffle(&mut fields);
+            fields.truncate(keep);
+            fields.sort_unstable();
+            let ids: Vec<i32> = fields
+                .iter()
+                .map(|&f| {
+                    let c = p.cards[f as usize];
+                    match g.usize(0, 9) {
+                        0 => -1,             // negative → clamps to last
+                        1 => i32::MAX,       // overflow → clamps to last
+                        _ => g.usize(0, 2 * c) as i32, // may exceed card
+                    }
+                })
+                .collect();
+            let mut mono = Vec::new();
+            store.gather_fields(&fields, &ids, &mut mono);
+            let local = g.usize(0, n_shards - 1);
+            let mut shrd = Vec::new();
+            let (l, r) = sharded.gather_from(local, &fields, &ids, &mut shrd);
+            prop_assert_eq!(l + r, fields.len());
+            prop_assert!(mono == shrd, "gather mismatch (local {local})");
+        }
+        Ok(())
+    });
+}
+
+/// Shards generated directly from the profile (without materializing
+/// the monolithic store) hold bit-identical rows — the zero-copy path
+/// `serve-bench` uses.
+#[test]
+fn directly_generated_shards_match_monolithic_rows() {
+    qcheck(15, |g| {
+        let name = *g.choose(&ALL_PROFILES);
+        let p = profile(name).unwrap();
+        let seed = g.u64(0, 1 << 40);
+        let n_shards = g.usize(1, 4);
+        let policy = *g.choose(&POLICIES);
+        let store = EmbeddingStore::random(&p, 4, seed);
+        let map = ShardMap::for_profile(&p, n_shards, policy);
+        for s in 0..n_shards {
+            let shard = EmbeddingShard::random(&p, 4, seed, &map, s);
+            for j in 0..p.n_sparse() {
+                prop_assert_eq!(shard.owns(j), map.owns(s, j));
+                if shard.owns(j) {
+                    let id = g.usize(0, p.cards[j] - 1);
+                    prop_assert!(
+                        shard.row(j, id).unwrap() == store.row(j, id),
+                        "row mismatch shard {s} table {j} id {id}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}

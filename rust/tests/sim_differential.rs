@@ -1,0 +1,249 @@
+//! Differential test for `sim::simulator` (ISSUE 2 satellite): the
+//! allocation-free topological sweep must agree with a naive
+//! event-heap reference simulator — written here, sharing no code with
+//! the production sweep beyond the cost structs — on randomized DAGs
+//! and on the real mapped genome, within float tolerance.
+//!
+//! The model both simulate: each op is a dedicated pipelined resource
+//! (accepts a new request every `bottleneck_ns`, completes it
+//! `latency_ns` later), deps always have lower ids, requests arrive in
+//! order (jittered open loop or closed loop back-to-back).
+
+use autorac::mapping::{map_genome, MapStyle, MappedModel, MappedOp, OpKind};
+use autorac::nas::autorac_best;
+use autorac::pim::{EngineKind, TechParams};
+use autorac::sim::{simulate, Workload};
+use autorac::util::qcheck::{qcheck, Gen};
+use autorac::util::rng::Rng;
+use autorac::util::stats::Quantiles;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// One "op (of request r) became ready at t" event, min-ordered by
+/// (time, request, op) so simultaneous events grant FIFO.
+struct Ev {
+    t: f64,
+    r: usize,
+    i: usize,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, o: &Self) -> bool {
+        self.t.total_cmp(&o.t).is_eq() && self.r == o.r && self.i == o.i
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.t
+            .total_cmp(&o.t)
+            .then(self.r.cmp(&o.r))
+            .then(self.i.cmp(&o.i))
+    }
+}
+
+struct RefResult {
+    latencies: Vec<f64>,
+    makespan: f64,
+    energy_per_inf: f64,
+}
+
+/// Naive event-heap simulation of the same resource model (no
+/// embedding front-end, matching `simulate(model, None, wl)`).
+fn reference_sim(model: &MappedModel, wl: &Workload) -> RefResult {
+    let n_ops = model.ops.len();
+    let nr = wl.n_requests;
+    // arrivals: replicate the sweep's jitter stream exactly
+    let mut rng = Rng::new(wl.seed);
+    let inter = if wl.arrival_rps.is_finite() {
+        1e9 / wl.arrival_rps
+    } else {
+        0.0
+    };
+    let mut arrives = Vec::with_capacity(nr);
+    let mut a = 0f64;
+    for _ in 0..nr {
+        if inter > 0.0 {
+            a += inter * (0.5 + rng.f64());
+        }
+        arrives.push(a);
+    }
+    // with no front-end the gather is a zero-latency pass-through
+    let g_done = arrives.clone();
+
+    let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n_ops];
+    for (i, op) in model.ops.iter().enumerate() {
+        for &d in &op.deps {
+            succ[d].push(i);
+        }
+    }
+    let mut deps_left: Vec<Vec<usize>> = (0..nr)
+        .map(|_| model.ops.iter().map(|o| o.deps.len()).collect())
+        .collect();
+    // running max of (g_done, completed deps) per (request, op)
+    let mut ready_at: Vec<Vec<f64>> =
+        (0..nr).map(|r| vec![g_done[r]; n_ops]).collect();
+    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    for r in 0..nr {
+        for (i, op) in model.ops.iter().enumerate() {
+            if op.deps.is_empty() {
+                heap.push(Reverse(Ev { t: g_done[r], r, i }));
+            }
+        }
+    }
+    let mut free = vec![0f64; n_ops];
+    let mut done: Vec<Vec<f64>> = (0..nr).map(|_| vec![0f64; n_ops]).collect();
+    while let Some(Reverse(ev)) = heap.pop() {
+        let op = &model.ops[ev.i];
+        let start = ev.t.max(free[ev.i]);
+        let fin = start + op.cost.latency_ns;
+        free[ev.i] = start + op.cost.bottleneck_ns.max(1e-3);
+        done[ev.r][ev.i] = fin;
+        for &s in &succ[ev.i] {
+            if ready_at[ev.r][s] < fin {
+                ready_at[ev.r][s] = fin;
+            }
+            deps_left[ev.r][s] -= 1;
+            if deps_left[ev.r][s] == 0 {
+                heap.push(Reverse(Ev {
+                    t: ready_at[ev.r][s],
+                    r: ev.r,
+                    i: s,
+                }));
+            }
+        }
+    }
+    let energy_per_inf: f64 =
+        model.ops.iter().map(|o| o.cost.energy_pj).sum();
+    let latencies: Vec<f64> = (0..nr)
+        .map(|r| done[r][n_ops - 1] - arrives[r])
+        .collect();
+    let makespan = (0..nr)
+        .map(|r| done[r][n_ops - 1])
+        .fold(0f64, f64::max);
+    RefResult {
+        latencies,
+        makespan,
+        energy_per_inf,
+    }
+}
+
+fn assert_close(a: f64, b: f64, what: &str) -> Result<(), String> {
+    let tol = 1e-9 * a.abs().max(b.abs()).max(1.0);
+    if (a - b).abs() > tol {
+        return Err(format!("{what}: sweep {a} vs reference {b}"));
+    }
+    Ok(())
+}
+
+fn differential(model: &MappedModel, wl: &Workload) -> Result<(), String> {
+    let report = simulate(model, None, wl);
+    let rf = reference_sim(model, wl);
+    let mut q = Quantiles::new();
+    for &l in &rf.latencies {
+        q.push(l);
+    }
+    assert_close(report.makespan_ns, rf.makespan, "makespan")?;
+    assert_close(report.latency_ns_mean, q.quantile(0.5), "p50 latency")?;
+    assert_close(report.latency_ns_p99, q.p99(), "p99 latency")?;
+    assert_close(report.energy_pj_per_inf, rf.energy_per_inf, "energy/inf")?;
+    let ref_rps = wl.n_requests as f64 / (rf.makespan.max(1e-9) / 1e9);
+    assert_close(report.throughput_rps, ref_rps, "throughput")?;
+    Ok(())
+}
+
+/// Random DAG with lower-id deps, random pipelined costs (including
+/// zero bottlenecks, which exercise the sweep's 1e-3 ns clamp).
+fn random_model(g: &mut Gen) -> MappedModel {
+    let n_ops = g.usize(1, 14);
+    let mut ops = Vec::with_capacity(n_ops);
+    for i in 0..n_ops {
+        let mut deps = Vec::new();
+        for j in 0..i {
+            if deps.len() < 3 && g.usize(0, 99) < 35 {
+                deps.push(j);
+            }
+        }
+        let latency = g.f64(1.0, 2_000.0);
+        let bottleneck = if g.bool() { g.f64(0.0, latency) } else { 0.0 };
+        ops.push(MappedOp {
+            id: i,
+            name: format!("op{i}"),
+            kind: OpKind::Fc,
+            engine: EngineKind::Mvm,
+            cost: autorac::mapping::OpCost {
+                latency_ns: latency,
+                energy_pj: g.f64(0.0, 1e4),
+                bottleneck_ns: bottleneck,
+                arrays: 1,
+                setup_ns: 0.0,
+                setup_pj: 0.0,
+            },
+            deps,
+            bytes_in: 0,
+            bytes_out: 0,
+        });
+    }
+    MappedModel {
+        genome_name: "random".into(),
+        dataset: "criteo".into(),
+        style: MapStyle::Smart,
+        ops,
+        tiles: Vec::new(),
+        area_mm2: 1.0,
+        leakage_mw: 1.0,
+        total_arrays: 1,
+        setup_ns: 0.0,
+        setup_pj: 0.0,
+    }
+}
+
+#[test]
+fn sweep_matches_event_heap_on_random_dags_closed_loop() {
+    qcheck(40, |g| {
+        let model = random_model(g);
+        let wl = Workload {
+            n_requests: g.usize(1, 40),
+            arrival_rps: f64::INFINITY,
+            seed: g.u64(0, u64::MAX - 1),
+        };
+        differential(&model, &wl)
+    });
+}
+
+#[test]
+fn sweep_matches_event_heap_on_random_dags_open_loop() {
+    qcheck(40, |g| {
+        let model = random_model(g);
+        let wl = Workload {
+            n_requests: g.usize(1, 40),
+            // inter-arrival 100 ns – 100 µs around the DAG latencies
+            arrival_rps: g.f64(1e4, 1e7),
+            seed: g.u64(0, u64::MAX - 1),
+        };
+        differential(&model, &wl)
+    });
+}
+
+#[test]
+fn sweep_matches_event_heap_on_real_mapped_genome() {
+    let tech = TechParams::default();
+    for style in [MapStyle::Smart, MapStyle::Naive] {
+        let model = map_genome(&autorac_best("criteo"), &tech, style).unwrap();
+        for rps in [f64::INFINITY, 2e5] {
+            let wl = Workload {
+                n_requests: 64,
+                arrival_rps: rps,
+                seed: 7,
+            };
+            if let Err(e) = differential(&model, &wl) {
+                panic!("style {style:?} rps {rps}: {e}");
+            }
+        }
+    }
+}
