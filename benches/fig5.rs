@@ -1,6 +1,7 @@
 //! Bench: regenerate **Figure 5** (% criterion drop over 240 search
-//! generations). Full fidelity by default; AUTORAC_BENCH_FAST=1 runs a
-//! 40-generation smoke version.
+//! generations) on the parallel engine — all hardware threads, memoized
+//! evaluations, bit-identical to a serial run (S20). Full fidelity by
+//! default; AUTORAC_BENCH_FAST=1 runs a 40-generation smoke version.
 //!
 //! Run: `cargo bench --bench fig5`
 
@@ -10,6 +11,7 @@ fn main() -> autorac::Result<()> {
     let fast = std::env::var("AUTORAC_BENCH_FAST").ok().as_deref() == Some("1");
     let cfg = SearchConfig {
         generations: if fast { 40 } else { 240 },
+        workers: SearchConfig::all_cores(),
         ..SearchConfig::default()
     };
     let (drop, best) = autorac::report::fig5(cfg)?;

@@ -1,0 +1,54 @@
+//! Bench: the parallel co-search engine (S20) — wall-clock across worker
+//! counts on the default-config smoke, with cache hit-rate and evals/sec
+//! (EXPERIMENTS.md §SC). The serial row (1 worker) is the baseline the
+//! speedup column divides by; traces are bit-identical across rows
+//! (pinned by `rust/tests/search_determinism.rs`), so every row does
+//! exactly the same logical work.
+//!
+//! Run: `cargo bench --bench search`   (AUTORAC_BENCH_FAST=1 shrinks it)
+
+use autorac::nas::{ParallelSearch, SearchConfig, Surrogate};
+use std::time::Instant;
+
+fn main() -> autorac::Result<()> {
+    let fast = std::env::var("AUTORAC_BENCH_FAST").ok().as_deref() == Some("1");
+    let generations = if fast { 12 } else { 24 };
+    let cores = SearchConfig::all_cores();
+    println!(
+        "search-bench sweep: {generations} generations, default SearchConfig, \
+         {cores} hardware thread(s)"
+    );
+    println!(
+        "{:>8} {:>9} {:>9} {:>9} {:>11} {:>12}",
+        "workers", "wall s", "speedup", "evals/s", "cache hits", "best"
+    );
+    let mut serial_s = f64::NAN;
+    for &workers in &[1usize, 2, 4, 8] {
+        let cfg = SearchConfig {
+            generations,
+            workers,
+            ..SearchConfig::default()
+        };
+        let t0 = Instant::now();
+        let mut s = ParallelSearch::new(cfg, Surrogate::load_default())?;
+        let best = s.run()?;
+        let dt = t0.elapsed().as_secs_f64();
+        if workers == 1 {
+            serial_s = dt;
+        }
+        let cs = s.cache_stats();
+        println!(
+            "{workers:>8} {dt:>9.2} {:>8.2}x {:>9.0} {:>5} ({:>4.1}%) {:>12.4}",
+            serial_s / dt.max(1e-9),
+            s.trace.evaluations as f64 / dt.max(1e-9),
+            cs.hits,
+            100.0 * cs.hit_rate(),
+            best.criterion
+        );
+    }
+    println!(
+        "note: ideal speedup saturates at min(workers, children_per_gen, cores); \
+         this host has {cores} core(s)"
+    );
+    Ok(())
+}

@@ -1,12 +1,15 @@
 //! Co-design search scenario: run a (reduced) Algorithm-1 evolutionary
-//! search and compare the discovered design against the hand-crafted
-//! NASRec reference on the behavioral simulator — the paper's core loop.
+//! search on the parallel engine and compare the discovered design
+//! against the hand-crafted NASRec reference on the behavioral
+//! simulator — the paper's core loop, saturating every core (S20).
 //!
-//! Run: `cargo run --release --example codesign_search -- [generations]`
-//! (240 generations ≈ the paper's full run; default 60 keeps this quick)
+//! Run: `cargo run --release --example codesign_search -- [generations] [workers]`
+//! (240 generations ≈ the paper's full run; default 60 keeps this quick;
+//! workers defaults to every hardware thread — the result is
+//! bit-identical for ANY worker count, see tests/search_determinism.rs)
 
 use autorac::mapping::{map_genome, MapStyle};
-use autorac::nas::{nasrec_like, Search, SearchConfig, Surrogate};
+use autorac::nas::{nasrec_like, ParallelSearch, SearchConfig, Surrogate};
 use autorac::pim::TechParams;
 use autorac::sim::{simulate, Workload};
 use std::time::Instant;
@@ -16,23 +19,32 @@ fn main() -> autorac::Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(60);
+    let workers: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(SearchConfig::all_cores);
 
     let cfg = SearchConfig {
         dataset: "criteo".to_string(),
         generations,
+        workers,
         ..SearchConfig::default()
     };
     println!(
-        "co-search: {} generations × {} children (population {})",
-        cfg.generations, cfg.children_per_gen, cfg.population
+        "co-search: {} generations × {} children (population {}) on {} worker(s)",
+        cfg.generations, cfg.children_per_gen, cfg.population, cfg.workers
     );
     let t0 = Instant::now();
-    let mut search = Search::new(cfg, Surrogate::load_default())?;
+    let mut search = ParallelSearch::new(cfg, Surrogate::load_default())?;
     let best = search.run()?;
+    let cs = search.cache_stats();
     println!(
-        "search finished in {:.1}s ({} candidate evaluations)",
+        "search finished in {:.1}s ({} candidate evaluations, {} simulated, \
+         cache hit-rate {:.1}%)",
         t0.elapsed().as_secs_f64(),
-        search.trace.evaluations
+        search.trace.evaluations,
+        search.sims_run(),
+        100.0 * cs.hit_rate()
     );
 
     // Figure-5-style trajectory (compressed).
@@ -42,6 +54,24 @@ fn main() -> autorac::Result<()> {
     }
 
     autorac::report::fig6(&best.genome);
+
+    // The Pareto view the scalar criterion hides: the archived front and
+    // its knee (best balanced trade-off across all four objectives).
+    println!(
+        "Pareto front: {} points (capacity {})",
+        search.archive.len(),
+        search.archive.capacity()
+    );
+    if let Some(knee) = search.archive.knee() {
+        println!(
+            "  knee: {} | loss {:.4} | 1/thr {:.3e} | area {:.2} mm² | power {:.0} mW",
+            knee.genome.name,
+            knee.objectives[0],
+            knee.objectives[1],
+            knee.objectives[2],
+            knee.objectives[3]
+        );
+    }
 
     // Head-to-head against the hand-crafted reference.
     let tech = TechParams::default();

@@ -70,9 +70,10 @@ impl Default for WorkloadConfig {
     }
 }
 
-const SEARCH_KEYS: [&str; 9] = [
+const SEARCH_KEYS: [&str; 12] = [
     "dataset", "population", "generations", "children_per_gen",
     "mutations_per_child", "sample_size", "lambdas", "seed", "sim_requests",
+    "workers", "pareto_capacity", "cache",
 ];
 const SERVE_KEYS: [&str; 6] =
     ["dataset", "workers", "batch", "max_wait_us", "requests", "rps"];
@@ -145,6 +146,12 @@ impl Config {
                     .get("sim_requests")
                     .and_then(Json::as_usize)
                     .unwrap_or(d.sim_requests),
+                workers: s.get("workers").and_then(Json::as_usize).unwrap_or(d.workers),
+                pareto_capacity: s
+                    .get("pareto_capacity")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.pareto_capacity),
+                cache: s.get("cache").and_then(Json::as_bool).unwrap_or(d.cache),
             });
         }
         if let Some(s) = j.get("serve") {
@@ -213,6 +220,9 @@ impl Config {
                     ("lambdas", Json::arr_f64(&s.lambdas)),
                     ("seed", Json::Num(s.seed as f64)),
                     ("sim_requests", Json::Num(s.sim_requests as f64)),
+                    ("workers", Json::Num(s.workers as f64)),
+                    ("pareto_capacity", Json::Num(s.pareto_capacity as f64)),
+                    ("cache", Json::Bool(s.cache)),
                 ]),
             );
         }
@@ -252,7 +262,8 @@ mod tests {
     fn loads_full_config() {
         let p = write_tmp(
             r#"{"search": {"dataset": "avazu", "generations": 10,
-                 "lambdas": [0.1, 0.2, 0.3]},
+                 "lambdas": [0.1, 0.2, 0.3], "workers": 6,
+                 "pareto_capacity": 16, "cache": false},
                 "serve": {"workers": 4, "batch": 16},
                 "workload": {"n_requests": 99}}"#,
         );
@@ -261,6 +272,9 @@ mod tests {
         assert_eq!(s.dataset, "avazu");
         assert_eq!(s.generations, 10);
         assert_eq!(s.lambdas, [0.1, 0.2, 0.3]);
+        assert_eq!(s.workers, 6);
+        assert_eq!(s.pareto_capacity, 16);
+        assert!(!s.cache);
         assert_eq!(s.population, SearchConfig::default().population);
         let sv = c.serve.unwrap();
         assert_eq!(sv.workers, 4);

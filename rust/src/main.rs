@@ -1,7 +1,8 @@
 //! `autorac` CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   search      run the evolutionary co-search (Algorithm 1)
+//!   search       run the evolutionary co-search (Algorithm 1, parallel engine)
+//!   search-bench serial vs N-worker co-search wall-clock + cache hit-rate
 //!   simulate    behavioral simulation of a genome on the PIM design
 //!   serve       serve CTR requests from the AOT model artifact via PJRT
 //!   serve-bench shard-aware serving bench under MockEngine (offline)
@@ -18,7 +19,7 @@ use autorac::coordinator::{
 use autorac::data::{make_batch, profile, Generator, Splits, DEFAULT_SEED};
 use autorac::embeddings::{EmbeddingStore, ShardMap, ShardPolicy, ShardedStore};
 use autorac::mapping::{map_genome, MapStyle};
-use autorac::nas::{autorac_best, Genome, SearchConfig};
+use autorac::nas::{autorac_best, Genome, ParallelSearch, SearchConfig, Surrogate};
 use autorac::pim::TechParams;
 use autorac::runtime::atns::TensorFile;
 use autorac::runtime::client::Runtime;
@@ -33,6 +34,7 @@ fn main() -> autorac::Result<()> {
     let args = Args::parse_env();
     match args.subcommand.as_deref() {
         Some("search") => cmd_search(&args),
+        Some("search-bench") => cmd_search_bench(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
@@ -84,9 +86,14 @@ fn main() -> autorac::Result<()> {
 fn print_help() {
     println!(
         "autorac — automated PIM accelerator design for recommender systems\n\
-         usage: autorac <search|simulate|serve|serve-bench|eval|datagen|table2|table3|fig2|fig5|fig6|artifacts> [--opts]\n\
+         usage: autorac <search|search-bench|simulate|serve|serve-bench|eval|datagen|table2|table3|fig2|fig5|fig6|artifacts> [--opts]\n\
          common: --dataset criteo|avazu|kdd   --artifacts <dir>   --seed N\n\
          search: --generations N --population N --children N --out best.json\n\
+                 --workers N (eval threads; 1 = serial) --pareto N (archive cap)\n\
+                 --no-cache (disable the genome-keyed eval memo)\n\
+         search-bench: --workers N --generations N --seed N --dataset D (default: the\n\
+                 24-generation default-config smoke, serial vs N workers,\n\
+                 plus a duplicate-heavy cache smoke)\n\
          serve:  --requests N --workers N --batch N --rps N\n\
          serve-bench: --workers N --shards N --policy round-robin|least-queued|shard-affinity\n\
                       --placement round-robin|balanced|hot --requests N --rps R (0=closed loop)\n\
@@ -115,7 +122,9 @@ fn search_cfg(args: &Args) -> autorac::Result<SearchConfig> {
         seed: args.u64_or("seed", base.seed)?,
         sim_requests: args.usize_or("sim-requests", base.sim_requests)?,
         lambdas: base.lambdas,
-        ..SearchConfig::default()
+        workers: args.usize_or("workers", base.workers)?,
+        pareto_capacity: args.usize_or("pareto", base.pareto_capacity)?,
+        cache: base.cache && !args.flag("no-cache"),
     })
 }
 
@@ -124,17 +133,132 @@ fn cmd_search(args: &Args) -> autorac::Result<()> {
     let out = args.str_or("out", "artifacts/searched_best.json");
     args.finish()?;
     let t0 = Instant::now();
-    let mut search = autorac::nas::Search::new(cfg, autorac::nas::Surrogate::load_default())?;
+    let mut search = ParallelSearch::new(cfg, Surrogate::load_default())?;
     let best = search.run()?;
+    let dt = t0.elapsed().as_secs_f64();
+    let cs = search.cache_stats();
     println!(
-        "search done in {:.1}s: {} evaluations, best criterion {:.4}",
-        t0.elapsed().as_secs_f64(),
+        "search done in {dt:.1}s on {} worker(s): {} evaluations ({:.0} evals/s), best criterion {:.4}",
+        search.cfg.workers.max(1),
         search.trace.evaluations,
+        search.trace.evaluations as f64 / dt.max(1e-9),
         best.criterion
     );
+    println!(
+        "cache: hit-rate {:.1}% ({}/{} lookups, {} genomes memoized)",
+        100.0 * cs.hit_rate(),
+        cs.hits,
+        cs.lookups(),
+        search.cache_len()
+    );
+    println!(
+        "Pareto archive: {} points (capacity {}), {} offers rejected",
+        search.archive.len(),
+        search.archive.capacity(),
+        search.archive.rejected
+    );
+    if let Some(knee) = search.archive.knee() {
+        println!(
+            "knee point: criterion {:.4} (loss {:.4}, 1/thr {:.3e}, area {:.2} mm², power {:.0} mW)",
+            knee.criterion,
+            knee.objectives[0],
+            knee.objectives[1],
+            knee.objectives[2],
+            knee.objectives[3]
+        );
+    }
     autorac::report::fig6(&best.genome);
     best.genome.save(std::path::Path::new(&out))?;
     println!("saved {out}");
+    Ok(())
+}
+
+/// `search-bench`: serial vs N-worker wall-clock on the default-config
+/// smoke, a bit-identity check between the two traces, and a
+/// duplicate-heavy smoke that must produce cache hits (verify.sh gates
+/// on its hit-rate line).
+fn cmd_search_bench(args: &Args) -> autorac::Result<()> {
+    let workers = args.usize_or("workers", 8)?;
+    let generations = args.usize_or("generations", 24)?;
+    let dataset = args.str_or("dataset", "criteo");
+    let seed = args.u64_or("seed", SearchConfig::default().seed)?;
+    args.finish()?;
+
+    let cfg = SearchConfig {
+        dataset,
+        generations,
+        seed,
+        ..SearchConfig::default()
+    };
+    fn run(
+        cfg: SearchConfig,
+    ) -> autorac::Result<(f64, ParallelSearch, autorac::nas::Individual)> {
+        let t0 = Instant::now();
+        let mut s = ParallelSearch::new(cfg, Surrogate::load_default())?;
+        let best = s.run()?;
+        let dt = t0.elapsed().as_secs_f64();
+        Ok((dt, s, best))
+    }
+
+    println!(
+        "search-bench {}: {} generations × {} children, population {}",
+        cfg.dataset, cfg.generations, cfg.children_per_gen, cfg.population
+    );
+    let (serial_s, serial, serial_best) =
+        run(SearchConfig { workers: 1, ..cfg.clone() })?;
+    println!(
+        "  serial (1 worker):   {serial_s:6.2}s  {:.0} evals/s  best {:.4}",
+        serial.trace.evaluations as f64 / serial_s.max(1e-9),
+        serial_best.criterion
+    );
+    let (par_s, par, par_best) = run(SearchConfig { workers, ..cfg.clone() })?;
+    let cs = par.cache_stats();
+    println!(
+        "  parallel ({workers} workers): {par_s:6.2}s  {:.0} evals/s  best {:.4}",
+        par.trace.evaluations as f64 / par_s.max(1e-9),
+        par_best.criterion
+    );
+    println!(
+        "  speedup {:.2}x | cache hit-rate {:.1}% ({}/{} lookups)",
+        serial_s / par_s.max(1e-9),
+        100.0 * cs.hit_rate(),
+        cs.hits,
+        cs.lookups()
+    );
+    let identical = serial.trace.best_criterion.len() == par.trace.best_criterion.len()
+        && serial
+            .trace
+            .best_criterion
+            .iter()
+            .zip(&par.trace.best_criterion)
+            .all(|(a, b)| a.to_bits() == b.to_bits())
+        && serial
+            .trace
+            .mean_criterion
+            .iter()
+            .zip(&par.trace.mean_criterion)
+            .all(|(a, b)| a.to_bits() == b.to_bits())
+        && serial_best.genome.hash() == par_best.genome.hash();
+    println!("  parallel trace bit-identical to serial: {identical}");
+    autorac::ensure!(identical, "parallel trace diverged from serial");
+
+    // Duplicate-heavy smoke: one mutation per child revisits neighbours
+    // constantly — the cache must land hits here or it is broken.
+    let (smoke_s, smoke, _) = run(SearchConfig {
+        workers,
+        mutations_per_child: 1,
+        ..cfg
+    })?;
+    let ss = smoke.cache_stats();
+    println!(
+        "  duplicate-heavy smoke: cache hit-rate {:.1}% ({}/{} lookups, \
+         {} of {} evaluations simulated, {smoke_s:.2}s)",
+        100.0 * ss.hit_rate(),
+        ss.hits,
+        ss.lookups(),
+        smoke.sims_run(),
+        smoke.trace.evaluations
+    );
     Ok(())
 }
 

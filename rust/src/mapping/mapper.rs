@@ -135,6 +135,15 @@ impl<'a> Builder<'a> {
     }
 }
 
+/// Structural cache key for a genome: hashes everything the evaluation
+/// pipeline consumes — `map_genome` and `simulate` (dataset, blocks,
+/// connections, precisions, PIM genome) plus the surrogate's features —
+/// and deliberately EXCLUDES `name`, so two search children with
+/// identical structure share one evaluation (`nas::cache::EvalCache`).
+pub fn genome_eval_key(g: &Genome) -> u64 {
+    g.structural_hash()
+}
+
 /// Map a genome onto PIM hardware.
 pub fn map_genome(
     g: &Genome,
@@ -455,5 +464,24 @@ mod tests {
         let m = map_genome(&autorac_best("criteo"), &tech, MapStyle::Smart).unwrap();
         assert!(m.setup_ns > 0.0);
         assert!(m.setup_pj > 0.0);
+    }
+
+    #[test]
+    fn eval_key_ignores_name_but_nothing_else() {
+        let a = autorac_best("criteo");
+        let mut renamed = a.clone();
+        renamed.name = "g17c3".to_string();
+        assert_ne!(a.hash(), renamed.hash(), "full hash covers the name");
+        assert_eq!(genome_eval_key(&a), genome_eval_key(&renamed));
+        // any structural field must change the key
+        let mut bits = a.clone();
+        bits.blocks[2].dense_wbits = 8;
+        assert_ne!(genome_eval_key(&a), genome_eval_key(&bits));
+        let mut pim = a.clone();
+        pim.pim.adc_bits = 6;
+        assert_ne!(genome_eval_key(&a), genome_eval_key(&pim));
+        let mut ds = a.clone();
+        ds.dataset = "avazu".to_string();
+        assert_ne!(genome_eval_key(&a), genome_eval_key(&ds));
     }
 }

@@ -7,4 +7,4 @@ pub mod cost;
 pub mod mapper;
 
 pub use cost::{cycle_time_ns, matmul_cost, OpCost};
-pub use mapper::{map_genome, MapStyle, MappedModel, MappedOp, OpKind};
+pub use mapper::{genome_eval_key, map_genome, MapStyle, MappedModel, MappedOp, OpKind};

@@ -1,0 +1,142 @@
+//! Genome-keyed evaluation cache (S22).
+//!
+//! The co-search re-visits structurally identical genomes constantly —
+//! mutation neighbourhoods are small (14 kinds over small option sets),
+//! so a child of a well-sampled parent frequently reproduces a candidate
+//! the search has already priced. Both halves of an evaluation are pure
+//! functions of the genome structure (the surrogate is deterministic and
+//! `sim::simulate` runs on a fixed workload seed), so memoizing by
+//! [`crate::mapping::genome_eval_key`] skips the redundant
+//! `map_genome` + `simulate` work without changing a single bit of the
+//! search trace — pinned by the cache-on/off equivalence check in
+//! `tests/search_determinism.rs`.
+
+use std::collections::HashMap;
+
+/// A memoized evaluation outcome: surrogate test loss and the
+/// `[1/throughput, area, power]` simulator metrics. The scalar criterion
+/// is *not* cached — it depends on the λ weights and targets, which the
+/// engine applies on top.
+pub type EvalOutcome = (f64, [f64; 3]);
+
+/// Hit/miss accounting for one search run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub misses: usize,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> usize {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served from the cache (0.0 when none ran).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// Structural-hash-keyed evaluation memo. A disabled cache never hits,
+/// never stores, and never counts — so an engine built with `cache:
+/// false` runs every simulation and reports zeroed stats.
+pub struct EvalCache {
+    map: HashMap<u64, EvalOutcome>,
+    enabled: bool,
+    stats: CacheStats,
+}
+
+impl EvalCache {
+    pub fn new(enabled: bool) -> EvalCache {
+        EvalCache {
+            map: HashMap::new(),
+            enabled,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Look up a structural key, counting the hit or miss.
+    pub fn get(&mut self, key: u64) -> Option<EvalOutcome> {
+        if !self.enabled {
+            return None;
+        }
+        match self.map.get(&key).copied() {
+            Some(v) => {
+                self.stats.hits += 1;
+                Some(v)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store an evaluation (no-op when disabled). Re-inserting a key is
+    /// harmless: evaluation is pure, so the value is identical.
+    pub fn insert(&mut self, key: u64, value: EvalOutcome) {
+        if self.enabled {
+            self.map.insert(key, value);
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Number of distinct genomes memoized.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_hits_and_misses() {
+        let mut c = EvalCache::new(true);
+        assert_eq!(c.get(1), None);
+        c.insert(1, (0.5, [1.0, 2.0, 3.0]));
+        assert_eq!(c.get(1), Some((0.5, [1.0, 2.0, 3.0])));
+        assert_eq!(c.get(2), None);
+        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 2 });
+        assert!((c.stats().hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let mut c = EvalCache::new(true);
+        let v = (0.1 + 0.2, [f64::MIN_POSITIVE, 1e300, -0.0]);
+        c.insert(7, v);
+        let got = c.get(7).unwrap();
+        assert_eq!(got.0.to_bits(), v.0.to_bits());
+        for i in 0..3 {
+            assert_eq!(got.1[i].to_bits(), v.1[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn disabled_cache_never_hits_or_counts() {
+        let mut c = EvalCache::new(false);
+        c.insert(1, (0.5, [0.0; 3]));
+        assert_eq!(c.get(1), None);
+        assert!(c.is_empty());
+        assert_eq!(c.stats().lookups(), 0);
+        assert_eq!(c.stats().hit_rate(), 0.0);
+    }
+}

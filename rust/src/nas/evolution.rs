@@ -3,6 +3,13 @@
 //! criterion = test_loss + Σᵢ λᵢ · metricᵢ / targetᵢ over
 //! metrics = [1/throughput, area, power] from the behavioral simulator
 //! (smart mapping), with test_loss from the calibrated surrogate.
+//!
+//! [`Search`] is the *serial reference* (one shared RNG stream, exactly
+//! the paper's pseudocode); production entry points run
+//! [`super::parallel::ParallelSearch`], which evaluates children
+//! concurrently, memoizes by structural genome hash, and maintains a
+//! Pareto archive — while sharing this module's [`SearchConfig`] /
+//! [`Individual`] / [`SearchTrace`] types (DESIGN.md §7.6).
 
 use super::accuracy::Surrogate;
 use super::genome::Genome;
@@ -26,6 +33,29 @@ pub struct SearchConfig {
     pub seed: u64,
     /// requests per candidate simulation
     pub sim_requests: usize,
+    /// evaluation worker threads for [`super::parallel::ParallelSearch`]
+    /// (≤ 1 evaluates inline on the caller's thread; the trace is
+    /// bit-identical either way — pinned by `tests/search_determinism.rs`)
+    pub workers: usize,
+    /// bounded capacity of the [`super::pareto::ParetoArchive`] kept
+    /// alongside the scalar criterion (clamped to ≥ 2)
+    pub pareto_capacity: usize,
+    /// memoize evaluations by structural genome hash
+    /// ([`crate::mapping::genome_eval_key`]); results are bit-identical
+    /// with the cache off, it only skips redundant simulator runs
+    pub cache: bool,
+}
+
+impl SearchConfig {
+    /// Default worker count for throughput-oriented entry points (the
+    /// benches and the co-design example): every hardware thread. The
+    /// result is bit-identical for any worker count, so this is purely
+    /// a wall-clock choice.
+    pub fn all_cores() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
 }
 
 impl Default for SearchConfig {
@@ -40,6 +70,9 @@ impl Default for SearchConfig {
             lambdas: [0.05, 0.05, 0.05],
             seed: 20_250_630,
             sim_requests: 48,
+            workers: 1,
+            pareto_capacity: 64,
+            cache: true,
         }
     }
 }
@@ -64,11 +97,47 @@ pub struct SearchTrace {
     pub evaluations: usize,
 }
 
+/// The scalar criterion (Algorithm 1 line 11):
+/// `test_loss + Σᵢ λᵢ · metricᵢ / targetᵢ`. One definition shared by the
+/// serial reference and the parallel engine, so the two can never
+/// diverge in the arithmetic their comparison tests rely on.
+pub fn criterion(
+    lambdas: &[f64; 3],
+    targets: &[f64; 3],
+    test_loss: f64,
+    metrics: &[f64; 3],
+) -> f64 {
+    let hw_term: f64 = (0..3)
+        .map(|i| lambdas[i] * metrics[i] / targets[i])
+        .sum();
+    test_loss + hw_term
+}
+
 impl SearchTrace {
+    /// Fold one generation's population into the trace (best + mean
+    /// criterion). Shared bookkeeping for both engines — the fold order
+    /// is the population order, so callers must present a
+    /// deterministically-ordered population.
+    pub fn record(&mut self, population: &[Individual]) {
+        let best = population
+            .iter()
+            .map(|i| i.criterion)
+            .fold(f64::INFINITY, f64::min);
+        let mean = population.iter().map(|i| i.criterion).sum::<f64>()
+            / population.len().max(1) as f64;
+        self.best_criterion.push(best);
+        self.mean_criterion.push(mean);
+    }
+
     /// Figure 5's y-axis: percentage drop of the best criterion relative
-    /// to generation 0 (lower is better).
+    /// to generation 0 (lower is better). An empty trace yields an empty
+    /// Vec; the explicit early return replaces a silent `unwrap_or(1.0)`
+    /// placeholder base so the contract is visible and test-pinned
+    /// rather than an accident of mapping over an empty Vec.
     pub fn pct_drop(&self) -> Vec<f64> {
-        let base = self.best_criterion.first().copied().unwrap_or(1.0);
+        let Some(&base) = self.best_criterion.first() else {
+            return Vec::new();
+        };
         self.best_criterion
             .iter()
             .map(|c| 100.0 * (c - base) / base)
@@ -129,15 +198,12 @@ impl Search {
         let test_loss = self.surrogate.logloss(&genome);
         let r = Self::sim_genome(&genome, &self.tech, self.cfg.sim_requests)?;
         let metrics = [1.0 / r.throughput_rps, r.area_mm2, r.power_mw];
-        let hw_term: f64 = (0..3)
-            .map(|i| self.cfg.lambdas[i] * metrics[i] / self.targets[i])
-            .sum();
         self.trace.evaluations += 1;
         Ok(Individual {
+            criterion: criterion(&self.cfg.lambdas, &self.targets, test_loss, &metrics),
             genome,
             test_loss,
             metrics,
-            criterion: test_loss + hw_term,
             generation: self.generation,
         })
     }
@@ -155,15 +221,7 @@ impl Search {
     }
 
     fn record_generation(&mut self) {
-        let best = self
-            .population
-            .iter()
-            .map(|i| i.criterion)
-            .fold(f64::INFINITY, f64::min);
-        let mean = self.population.iter().map(|i| i.criterion).sum::<f64>()
-            / self.population.len().max(1) as f64;
-        self.trace.best_criterion.push(best);
-        self.trace.mean_criterion.push(mean);
+        self.trace.record(&self.population);
     }
 
     /// Lines 3–15: one generation.
@@ -266,6 +324,20 @@ mod tests {
         };
         assert_eq!(run(1), run(1));
         assert_ne!(run(1), run(2));
+    }
+
+    #[test]
+    fn pct_drop_of_empty_trace_is_empty() {
+        // pins the empty-trace contract: previously this held only by
+        // accident (mapping over an empty Vec past an unwrap_or(1.0)
+        // placeholder base); now it is an explicit early return
+        assert!(SearchTrace::default().pct_drop().is_empty());
+        let one = SearchTrace {
+            best_criterion: vec![0.5],
+            mean_criterion: vec![0.5],
+            evaluations: 1,
+        };
+        assert_eq!(one.pct_drop(), vec![0.0]);
     }
 
     #[test]

@@ -239,7 +239,23 @@ impl Genome {
 
     /// Stable content hash (population dedup).
     pub fn hash(&self) -> u64 {
-        let s = self.to_json().to_string_compact();
+        Self::fnv(&self.to_json().to_string_compact())
+    }
+
+    /// Structural hash: identical to [`Genome::hash`] except the `name`
+    /// field is blanked in the canonical JSON (replaced in place, so key
+    /// order is preserved), making renamed copies of one architecture
+    /// collide intentionally — the evaluation-cache key
+    /// ([`crate::mapping::genome_eval_key`]). Avoids deep-cloning the
+    /// genome on the search hot loop.
+    pub fn structural_hash(&self) -> u64 {
+        let mut j = self.to_json();
+        j.set("name", Json::Str(String::new()));
+        Self::fnv(&j.to_string_compact())
+    }
+
+    /// FNV-1a over the canonical JSON text (shared by both hashes).
+    fn fnv(s: &str) -> u64 {
         let mut h = 0xcbf2_9ce4_8422_2325u64;
         for b in s.bytes() {
             h ^= b as u64;

@@ -1,13 +1,20 @@
-//! NAS subsystem (S11/S12): genome schema, design-space operations,
-//! regularized evolution (Algorithm 1), and the calibrated accuracy
-//! surrogate.
+//! NAS subsystem (S11/S12 + S20–S22): genome schema, design-space
+//! operations, regularized evolution (Algorithm 1, serial reference),
+//! the parallel/memoized/Pareto-aware engine, and the calibrated
+//! accuracy surrogate.
 
 pub mod accuracy;
+pub mod cache;
 pub mod evolution;
 pub mod genome;
+pub mod parallel;
+pub mod pareto;
 pub mod space;
 
 pub use accuracy::{genome_features, Surrogate};
+pub use cache::{CacheStats, EvalCache};
 pub use evolution::{Individual, Search, SearchConfig, SearchTrace};
 pub use genome::{autorac_best, nasrec_like, Block, BlockShape, DenseOp, Genome, Interaction, SparseOp};
-pub use space::{design_space_size, mutate, random_genome};
+pub use parallel::ParallelSearch;
+pub use pareto::{dominates, ParetoArchive, ParetoPoint};
+pub use space::{design_space_size, mutate, random_genome, SearchSpace};

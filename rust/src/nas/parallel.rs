@@ -1,0 +1,535 @@
+//! Parallel, memoized, Pareto-aware co-search engine (S20).
+//!
+//! Re-architecture of the serial Algorithm-1 loop in [`super::evolution`]
+//! for the ROADMAP's "as fast as the hardware allows" bar, under one hard
+//! rule: **worker count must not change a single bit of the result**
+//! (pinned by `tests/search_determinism.rs`). Three pieces make that hold:
+//!
+//! * **per-candidate RNG streams** — every random decision is drawn from
+//!   an `Rng` seeded by a stable name over `(search_seed, generation,
+//!   child_index)`, never from a shared stream, so the mutation sequence
+//!   of child *c* is independent of how many threads evaluate it;
+//! * **a std::thread worker pool** (zero new deps, the coordinator's
+//!   channel idiom: `Arc<Mutex<Receiver>>` job queue + result channel)
+//!   that evaluates one generation's children concurrently; results are
+//!   re-ordered by child index on the main thread before any state —
+//!   population, cache, archive — is touched;
+//! * **a genome-keyed evaluation cache** ([`super::cache::EvalCache`])
+//!   over [`crate::mapping::genome_eval_key`], exploiting that both the
+//!   surrogate and the fixed-seed simulator are pure functions of the
+//!   genome structure.
+//!
+//! Alongside the scalar criterion, every evaluation is offered to a
+//! bounded [`ParetoArchive`] over `[test_loss, 1/throughput, area,
+//! power]` — the front and its knee point come for free with the run.
+
+use super::accuracy::Surrogate;
+use super::cache::{CacheStats, EvalCache, EvalOutcome};
+use super::evolution::{Individual, SearchConfig, SearchTrace};
+use super::genome::Genome;
+use super::pareto::{ParetoArchive, ParetoPoint};
+use super::space::{mutate, random_genome};
+use crate::mapping::{genome_eval_key, map_genome, MapStyle};
+use crate::pim::TechParams;
+use crate::sim::{simulate, Workload};
+use crate::util::rng::{seed_from_name, Rng};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Everything one candidate evaluation needs; shared read-only across
+/// the worker threads via `Arc`.
+struct EvalCtx {
+    tech: TechParams,
+    surrogate: Surrogate,
+    sim_requests: usize,
+}
+
+impl EvalCtx {
+    /// Algorithm 1 lines 9–10: surrogate test loss + behavioral-sim
+    /// metrics `[1/throughput, area, power]`. Pure in the genome.
+    fn eval(&self, g: &Genome) -> crate::Result<EvalOutcome> {
+        let test_loss = self.surrogate.logloss(g);
+        let mapped = map_genome(g, &self.tech, MapStyle::Smart)?;
+        let r = simulate(
+            &mapped,
+            None,
+            &Workload {
+                n_requests: self.sim_requests,
+                ..Workload::default()
+            },
+        );
+        Ok((test_loss, [1.0 / r.throughput_rps, r.area_mm2, r.power_mw]))
+    }
+
+    /// [`EvalCtx::eval`] with panics converted to errors. Both the
+    /// pooled and the inline path go through this, so a panicking
+    /// evaluation produces the same `Err` for any worker count —
+    /// and a pool worker always sends a result, which is what keeps
+    /// the batch from deadlocking on a lost job.
+    fn eval_caught(&self, g: &Genome) -> crate::Result<EvalOutcome> {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.eval(g)))
+            .unwrap_or_else(|_| {
+                Err(crate::err!("search evaluation panicked on `{}`", g.name))
+            })
+    }
+}
+
+/// Job/result payloads carry a run-unique serial so a batch can never
+/// mis-associate a stale result from an aborted predecessor.
+type Job = (u64, Genome);
+type JobOut = (u64, crate::Result<EvalOutcome>);
+
+struct Pool {
+    /// `Option` so `Drop` can hang up the queue before joining.
+    job_tx: Option<mpsc::Sender<Job>>,
+    out_rx: mpsc::Receiver<JobOut>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn failures propagate as errors; an early `?` drops the
+    /// partially-built pool, whose `Drop` hangs up the queue and joins
+    /// the workers that did start.
+    fn spawn(workers: usize, ctx: Arc<EvalCtx>) -> crate::Result<Pool> {
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (out_tx, out_rx) = mpsc::channel::<JobOut>();
+        let mut pool = Pool {
+            job_tx: Some(job_tx),
+            out_rx,
+            handles: Vec::with_capacity(workers),
+        };
+        for w in 0..workers {
+            let rx = Arc::clone(&job_rx);
+            let tx = out_tx.clone();
+            let ctx = Arc::clone(&ctx);
+            let handle = std::thread::Builder::new()
+                .name(format!("nas-eval-{w}"))
+                .spawn(move || loop {
+                    // take ONE job under the lock, evaluate outside it
+                    let job = match rx.lock() {
+                        Ok(guard) => guard.recv(),
+                        Err(_) => break,
+                    };
+                    match job {
+                        Ok((serial, genome)) => {
+                            if tx.send((serial, ctx.eval_caught(&genome))).is_err() {
+                                break; // engine dropped mid-batch
+                            }
+                        }
+                        Err(_) => break, // queue hung up: shutdown
+                    }
+                })
+                .map_err(|e| {
+                    crate::err!("failed to spawn search worker {w}: {e}")
+                })?;
+            pool.handles.push(handle);
+        }
+        Ok(pool)
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.job_tx.take(); // hang up → workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The parallel engine. Drop-in for [`super::evolution::Search`] (same
+/// `SearchConfig` / `Individual` / `SearchTrace` surface), plus the
+/// archive and cache statistics.
+pub struct ParallelSearch {
+    pub cfg: SearchConfig,
+    ctx: Arc<EvalCtx>,
+    pool: Option<Pool>,
+    cache: EvalCache,
+    /// bounded Pareto front over (test_loss, 1/throughput, area, power)
+    pub archive: ParetoArchive,
+    /// design targets [1/throughput, area, power] (Algorithm 1 inputs)
+    pub targets: [f64; 3],
+    pub population: Vec<Individual>,
+    pub trace: SearchTrace,
+    generation: usize,
+    /// monotone job id (stale-result guard across batches)
+    job_serial: u64,
+    /// map+simulate runs actually executed (≤ misses once in-batch
+    /// sibling dedup kicks in; excludes the target-setting reference)
+    sims_run: usize,
+}
+
+impl ParallelSearch {
+    /// Targets default to the metrics of the hand-crafted NASRec design,
+    /// exactly like the serial reference. Degenerate configs are
+    /// rejected here so every CLI entry point errors instead of
+    /// panicking deep inside the tournament/simulator.
+    pub fn new(cfg: SearchConfig, surrogate: Surrogate) -> crate::Result<ParallelSearch> {
+        crate::ensure!(cfg.population > 0, "search population must be ≥ 1");
+        crate::ensure!(cfg.sample_size > 0, "tournament sample_size must be ≥ 1");
+        crate::ensure!(cfg.children_per_gen > 0, "children_per_gen must be ≥ 1");
+        crate::ensure!(cfg.sim_requests > 0, "sim_requests must be ≥ 1");
+        let ctx = EvalCtx {
+            tech: TechParams::default(),
+            surrogate,
+            sim_requests: cfg.sim_requests,
+        };
+        let reference = super::genome::nasrec_like(&cfg.dataset);
+        let (_, targets) = ctx.eval(&reference)?;
+        let ctx = Arc::new(ctx);
+        let pool = if cfg.workers > 1 {
+            Some(Pool::spawn(cfg.workers, Arc::clone(&ctx))?)
+        } else {
+            None
+        };
+        Ok(ParallelSearch {
+            cache: EvalCache::new(cfg.cache),
+            archive: ParetoArchive::new(cfg.pareto_capacity),
+            pool,
+            ctx,
+            targets,
+            population: Vec::new(),
+            trace: SearchTrace::default(),
+            generation: 0,
+            job_serial: 0,
+            sims_run: 0,
+            cfg,
+        })
+    }
+
+    fn criterion(&self, test_loss: f64, metrics: &[f64; 3]) -> f64 {
+        super::evolution::criterion(&self.cfg.lambdas, &self.targets, test_loss, metrics)
+    }
+
+    /// Evaluate a batch of candidates: cache pass first, then one job
+    /// per *unique* structural key (identical siblings share a single
+    /// simulation — evaluation is pure, so fanning the outcome out is
+    /// bit-identical to evaluating twice), fanned to the pool or run
+    /// inline with ≤ 1 worker. All engine state is updated in slot
+    /// order afterwards, so the outcome is independent of worker
+    /// scheduling.
+    fn eval_batch(&mut self, genomes: &[Genome]) -> crate::Result<Vec<EvalOutcome>> {
+        let n = genomes.len();
+        // where slot i's outcome comes from
+        enum Source {
+            Done(EvalOutcome),
+            Job(usize),
+        }
+        let mut sources: Vec<Source> = Vec::with_capacity(n);
+        // unique keys to evaluate, with a representative slot, in
+        // first-miss slot order
+        let mut jobs: Vec<(u64, usize)> = Vec::new();
+        let mut key_pos: std::collections::HashMap<u64, usize> =
+            std::collections::HashMap::new();
+        for (i, g) in genomes.iter().enumerate() {
+            let key = genome_eval_key(g);
+            if let Some(v) = self.cache.get(key) {
+                sources.push(Source::Done(v));
+                continue;
+            }
+            // in-batch dedup only while memoization is on: cache:false
+            // is the honest run-every-simulation baseline
+            if self.cache.enabled() {
+                if let Some(&j) = key_pos.get(&key) {
+                    sources.push(Source::Job(j));
+                    continue;
+                }
+                key_pos.insert(key, jobs.len());
+            }
+            sources.push(Source::Job(jobs.len()));
+            jobs.push((key, i));
+        }
+        let mut results: Vec<Option<crate::Result<EvalOutcome>>> =
+            Vec::with_capacity(jobs.len());
+        results.resize_with(jobs.len(), || None);
+        match &self.pool {
+            Some(pool) => {
+                let tx = pool
+                    .job_tx
+                    .as_ref()
+                    .expect("pool queue alive until Drop");
+                // serial → job index for THIS batch only
+                let mut want =
+                    std::collections::HashMap::with_capacity(jobs.len());
+                for (j, &(_, slot)) in jobs.iter().enumerate() {
+                    self.job_serial += 1;
+                    want.insert(self.job_serial, j);
+                    tx.send((self.job_serial, genomes[slot].clone()))
+                        .map_err(|_| crate::err!("search worker pool shut down"))?;
+                }
+                while !want.is_empty() {
+                    let (serial, result) = pool
+                        .out_rx
+                        .recv()
+                        .map_err(|_| crate::err!("search worker thread died"))?;
+                    if let Some(j) = want.remove(&serial) {
+                        results[j] = Some(result);
+                    }
+                    // else: stale result from an aborted batch — ignore
+                }
+            }
+            None => {
+                for (j, &(_, slot)) in jobs.iter().enumerate() {
+                    results[j] = Some(self.ctx.eval_caught(&genomes[slot]));
+                }
+            }
+        }
+        // surface errors deterministically (lowest job first), memoize,
+        // then fan the outcomes back out to their slots
+        let mut outcomes: Vec<EvalOutcome> = Vec::with_capacity(jobs.len());
+        for (&(key, _), r) in jobs.iter().zip(results) {
+            let v = r.expect("every job completed")?;
+            self.cache.insert(key, v);
+            outcomes.push(v);
+        }
+        self.trace.evaluations += n;
+        self.sims_run += outcomes.len();
+        Ok(sources
+            .into_iter()
+            .map(|s| match s {
+                Source::Done(v) => v,
+                Source::Job(j) => outcomes[j],
+            })
+            .collect())
+    }
+
+    /// Fold one evaluated candidate into population + Pareto archive.
+    fn admit(&mut self, genome: Genome, outcome: EvalOutcome, generation: usize) {
+        let (test_loss, metrics) = outcome;
+        let criterion = self.criterion(test_loss, &metrics);
+        self.archive.offer(ParetoPoint {
+            objectives: [test_loss, metrics[0], metrics[1], metrics[2]],
+            criterion,
+            generation,
+            genome: genome.clone(),
+        });
+        self.population.push(Individual {
+            genome,
+            test_loss,
+            metrics,
+            criterion,
+            generation,
+        });
+    }
+
+    /// Line 1: random initial population, one RNG stream per individual.
+    pub fn init_population(&mut self) -> crate::Result<()> {
+        let mut genomes = Vec::with_capacity(self.cfg.population);
+        for i in 0..self.cfg.population {
+            let mut rng =
+                Rng::new(seed_from_name(self.cfg.seed, &format!("par/init/{i}")));
+            genomes.push(random_genome(&mut rng, &self.cfg.dataset, &format!("init{i}")));
+        }
+        let outcomes = self.eval_batch(&genomes)?;
+        for (genome, outcome) in genomes.into_iter().zip(outcomes) {
+            self.admit(genome, outcome, 0);
+        }
+        self.record_generation();
+        Ok(())
+    }
+
+    fn record_generation(&mut self) {
+        self.trace.record(&self.population);
+    }
+
+    /// Lines 3–15: one generation. Selection draws from a generation-
+    /// named stream; each child mutates under its own `(seed, gen, c)`
+    /// stream, so the children are identical for any worker count.
+    pub fn step(&mut self) -> crate::Result<()> {
+        self.generation += 1;
+        let gen = self.generation;
+        let mut sel =
+            Rng::new(seed_from_name(self.cfg.seed, &format!("par/sel/{gen}")));
+        let parent_idx = (0..self.cfg.sample_size)
+            .map(|_| sel.below(self.population.len() as u64) as usize)
+            .min_by(|&a, &b| {
+                self.population[a]
+                    .criterion
+                    .partial_cmp(&self.population[b].criterion)
+                    .unwrap()
+            })
+            .expect("sample_size > 0");
+        let parent = self.population[parent_idx].genome.clone();
+        let mut children = Vec::with_capacity(self.cfg.children_per_gen);
+        for c in 0..self.cfg.children_per_gen {
+            let mut rng = Rng::new(seed_from_name(
+                self.cfg.seed,
+                &format!("par/gen/{gen}/child/{c}"),
+            ));
+            let mut g = parent.clone();
+            for _ in 0..self.cfg.mutations_per_child {
+                g = mutate(&g, &mut rng);
+            }
+            g.name = format!("g{gen}c{c}");
+            children.push(g);
+        }
+        let outcomes = self.eval_batch(&children)?;
+        for (genome, outcome) in children.into_iter().zip(outcomes) {
+            self.admit(genome, outcome, gen);
+        }
+        // stable sort: equal criteria keep insertion order → deterministic
+        self.population
+            .sort_by(|a, b| a.criterion.partial_cmp(&b.criterion).unwrap());
+        self.population.truncate(self.cfg.population);
+        self.record_generation();
+        Ok(())
+    }
+
+    /// Run the full search; returns the best individual.
+    pub fn run(&mut self) -> crate::Result<Individual> {
+        if self.population.is_empty() {
+            self.init_population()?;
+        }
+        for _ in 0..self.cfg.generations {
+            self.step()?;
+        }
+        Ok(self.best().clone())
+    }
+
+    pub fn best(&self) -> &Individual {
+        self.population
+            .iter()
+            .min_by(|a, b| a.criterion.partial_cmp(&b.criterion).unwrap())
+            .expect("non-empty population")
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Distinct genomes memoized so far.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// `map_genome` + `simulate` runs actually executed (logical
+    /// evaluations minus cache hits minus in-batch sibling shares).
+    pub fn sims_run(&self) -> usize {
+        self.sims_run
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nas::pareto::dominates;
+
+    fn quick_cfg(workers: usize) -> SearchConfig {
+        SearchConfig {
+            generations: 10,
+            population: 12,
+            children_per_gen: 4,
+            sample_size: 4,
+            sim_requests: 16,
+            workers,
+            ..SearchConfig::default()
+        }
+    }
+
+    #[test]
+    fn degenerate_configs_error_instead_of_panicking() {
+        for bad in [
+            SearchConfig { population: 0, ..quick_cfg(1) },
+            SearchConfig { sample_size: 0, ..quick_cfg(1) },
+            SearchConfig { children_per_gen: 0, ..quick_cfg(1) },
+            SearchConfig { sim_requests: 0, ..quick_cfg(1) },
+        ] {
+            assert!(ParallelSearch::new(bad, Surrogate::prior()).is_err());
+        }
+    }
+
+    #[test]
+    fn engine_types_are_send_and_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<EvalCtx>();
+        check::<Genome>();
+        check::<crate::util::error::Error>();
+        check::<Surrogate>();
+    }
+
+    #[test]
+    fn parallel_search_improves_criterion() {
+        let mut s = ParallelSearch::new(quick_cfg(2), Surrogate::prior()).unwrap();
+        let best = s.run().unwrap();
+        assert!(
+            best.criterion < s.trace.best_criterion[0],
+            "no improvement: {} -> {}",
+            s.trace.best_criterion[0],
+            best.criterion
+        );
+        assert_eq!(s.population.len(), s.cfg.population);
+        for w in s.trace.best_criterion.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "best went up: {w:?}");
+        }
+    }
+
+    #[test]
+    fn evaluated_genomes_are_feasible_and_archive_is_consistent() {
+        let mut s = ParallelSearch::new(quick_cfg(3), Surrogate::prior()).unwrap();
+        s.run().unwrap();
+        for ind in &s.population {
+            ind.genome.validate().unwrap();
+        }
+        assert!(!s.archive.is_empty());
+        assert!(s.archive.len() <= s.archive.capacity());
+        assert!(s.archive.knee().is_some());
+    }
+
+    #[test]
+    fn scalar_winner_is_on_or_behind_the_front() {
+        let mut s = ParallelSearch::new(quick_cfg(2), Surrogate::prior()).unwrap();
+        let best = s.run().unwrap();
+        let w = [
+            best.test_loss,
+            best.metrics[0],
+            best.metrics[1],
+            best.metrics[2],
+        ];
+        let on_front = s.archive.points().iter().any(|p| p.objectives == w);
+        let behind = s
+            .archive
+            .points()
+            .iter()
+            .any(|p| dominates(&p.objectives, &w));
+        assert!(on_front || behind, "winner lost from the archive");
+        // with all-positive λ the winner is never dominated, so it is
+        // literally the archive's best-criterion point
+        let ab = s.archive.best_criterion().unwrap();
+        assert_eq!(ab.criterion.to_bits(), best.criterion.to_bits());
+    }
+
+    #[test]
+    fn duplicate_heavy_search_hits_the_cache() {
+        // single-step mutation neighbourhoods overlap heavily — with one
+        // mutation per child the search must revisit genomes
+        let cfg = SearchConfig {
+            mutations_per_child: 1,
+            ..quick_cfg(1)
+        };
+        let mut s = ParallelSearch::new(cfg, Surrogate::prior()).unwrap();
+        s.run().unwrap();
+        let st = s.cache_stats();
+        assert!(st.hits > 0, "no cache hits on a duplicate-heavy run");
+        assert_eq!(st.lookups(), s.trace.evaluations);
+        assert!(s.cache_len() <= s.trace.evaluations);
+        // in-batch sibling dedup can only reduce work further
+        assert!(s.sims_run() <= st.misses, "{} > {}", s.sims_run(), st.misses);
+        assert_eq!(s.cache_len(), s.sims_run(), "one memo per simulation");
+    }
+
+    #[test]
+    fn cache_off_runs_every_simulation() {
+        let cfg = SearchConfig {
+            cache: false,
+            generations: 3,
+            ..quick_cfg(1)
+        };
+        let mut s = ParallelSearch::new(cfg, Surrogate::prior()).unwrap();
+        s.run().unwrap();
+        assert_eq!(s.cache_stats(), CacheStats::default());
+        assert_eq!(s.cache_len(), 0);
+        // no memo and no dedup: every logical evaluation simulates
+        assert_eq!(s.sims_run(), s.trace.evaluations);
+    }
+}

@@ -1,0 +1,414 @@
+//! Bounded Pareto archive over the paper's four co-optimized objectives
+//! (S21): `[test_loss, 1/throughput, area, power]`, all minimized.
+//!
+//! Algorithm 1 collapses the objectives into one scalar criterion; the
+//! archive is maintained *alongside* that scalar path, so the search
+//! still selects and evicts by criterion while the front records every
+//! trade-off the run discovered. Invariants (pinned by the tests below
+//! and consumed by `tests/search_determinism.rs`):
+//!
+//! * no archived point dominates another (mutual non-domination);
+//! * offering a dominated (or duplicate) point is a no-op;
+//! * capacity eviction never removes the knee point nor the
+//!   best-scalar-criterion point — with all-positive λ weights the
+//!   criterion is strictly increasing in every objective, so the global
+//!   scalar winner is never dominated and therefore stays on the front.
+
+use super::genome::Genome;
+
+/// The co-optimized objective count: test_loss, 1/throughput, area, power.
+pub const N_OBJECTIVES: usize = 4;
+
+/// `a` Pareto-dominates `b`: no worse on every objective, strictly
+/// better on at least one (all objectives minimized).
+pub fn dominates(a: &[f64; N_OBJECTIVES], b: &[f64; N_OBJECTIVES]) -> bool {
+    let mut strictly = false;
+    for i in 0..N_OBJECTIVES {
+        if a[i] > b[i] {
+            return false;
+        }
+        if a[i] < b[i] {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// One archived candidate: its objective vector, the scalar criterion
+/// the search selected by, and the genome itself so the knee point can
+/// be re-mapped / re-simulated without a second search.
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    pub objectives: [f64; N_OBJECTIVES],
+    pub criterion: f64,
+    pub generation: usize,
+    pub genome: Genome,
+}
+
+/// Dominance-pruned, capacity-bounded archive.
+pub struct ParetoArchive {
+    capacity: usize,
+    points: Vec<ParetoPoint>,
+    /// lifetime counters (offers = inserted + rejected)
+    pub inserted: usize,
+    pub rejected: usize,
+    pub evicted: usize,
+}
+
+impl ParetoArchive {
+    /// `capacity` is clamped to ≥ 2 so the two protected points (knee
+    /// and scalar winner) always fit.
+    pub fn new(capacity: usize) -> ParetoArchive {
+        ParetoArchive {
+            capacity: capacity.max(2),
+            points: Vec::new(),
+            inserted: 0,
+            rejected: 0,
+            evicted: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The current front, in insertion order.
+    pub fn points(&self) -> &[ParetoPoint] {
+        &self.points
+    }
+
+    /// Offer a candidate. Returns `true` if it entered the archive.
+    /// Deterministic: outcome depends only on the offer sequence.
+    pub fn offer(&mut self, p: ParetoPoint) -> bool {
+        // Dominated (or exactly duplicated) by an archived point → no-op.
+        if self
+            .points
+            .iter()
+            .any(|q| dominates(&q.objectives, &p.objectives) || q.objectives == p.objectives)
+        {
+            self.rejected += 1;
+            return false;
+        }
+        // Entering point prunes everything it dominates.
+        let before = self.points.len();
+        self.points.retain(|q| !dominates(&p.objectives, &q.objectives));
+        self.evicted += before - self.points.len();
+        self.points.push(p);
+        self.inserted += 1;
+        if self.points.len() > self.capacity {
+            self.evict_for_capacity();
+        }
+        true
+    }
+
+    /// Knee point: the archived point closest (L2) to the ideal corner
+    /// after min–max normalizing each objective over the front. Ties
+    /// resolve to the earliest-inserted point.
+    pub fn knee(&self) -> Option<&ParetoPoint> {
+        self.knee_index().map(|i| &self.points[i])
+    }
+
+    /// The archived point with the lowest scalar criterion.
+    pub fn best_criterion(&self) -> Option<&ParetoPoint> {
+        self.best_criterion_index().map(|i| &self.points[i])
+    }
+
+    fn knee_index(&self) -> Option<usize> {
+        let (lo, hi) = self.bounds()?;
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for (i, q) in self.points.iter().enumerate() {
+            let d = norm_dist(&q.objectives, &lo, &hi);
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        Some(best)
+    }
+
+    fn best_criterion_index(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, q) in self.points.iter().enumerate() {
+            if best.map_or(true, |b| q.criterion < self.points[b].criterion) {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    /// Per-objective (min, max) over the archive.
+    fn bounds(&self) -> Option<([f64; N_OBJECTIVES], [f64; N_OBJECTIVES])> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let mut lo = [f64::INFINITY; N_OBJECTIVES];
+        let mut hi = [f64::NEG_INFINITY; N_OBJECTIVES];
+        for q in &self.points {
+            for i in 0..N_OBJECTIVES {
+                lo[i] = lo[i].min(q.objectives[i]);
+                hi[i] = hi[i].max(q.objectives[i]);
+            }
+        }
+        Some((lo, hi))
+    }
+
+    /// Over capacity: drop the point farthest from the normalized ideal
+    /// corner, never the knee nor the scalar-criterion winner. Called
+    /// only when `len > capacity ≥ 2`, so an unprotected point exists.
+    fn evict_for_capacity(&mut self) {
+        let knee = self.knee_index();
+        let best = self.best_criterion_index();
+        let (lo, hi) = self.bounds().expect("non-empty archive");
+        let mut victim: Option<usize> = None;
+        let mut victim_d = f64::NEG_INFINITY;
+        for (i, q) in self.points.iter().enumerate() {
+            if Some(i) == knee || Some(i) == best {
+                continue;
+            }
+            let d = norm_dist(&q.objectives, &lo, &hi);
+            if d > victim_d {
+                victim_d = d;
+                victim = Some(i);
+            }
+        }
+        if let Some(i) = victim {
+            self.points.remove(i);
+            self.evicted += 1;
+        }
+    }
+}
+
+/// L2 distance to the ideal (all-minima) corner in min–max-normalized
+/// objective space; degenerate axes (max == min) contribute 0.
+fn norm_dist(
+    obj: &[f64; N_OBJECTIVES],
+    lo: &[f64; N_OBJECTIVES],
+    hi: &[f64; N_OBJECTIVES],
+) -> f64 {
+    let mut s = 0.0;
+    for i in 0..N_OBJECTIVES {
+        let span = hi[i] - lo[i];
+        if span > 0.0 {
+            let z = (obj[i] - lo[i]) / span;
+            s += z * z;
+        }
+    }
+    s.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nas::genome::autorac_best;
+    use crate::util::qcheck::qcheck;
+    use crate::util::rng::Rng;
+
+    fn point(objectives: [f64; N_OBJECTIVES], criterion: f64) -> ParetoPoint {
+        ParetoPoint {
+            objectives,
+            criterion,
+            generation: 0,
+            genome: autorac_best("criteo"),
+        }
+    }
+
+    /// Positive-weight scalarization — strictly increasing in every
+    /// objective, like the search criterion with all-positive λ.
+    fn scalar(o: &[f64; N_OBJECTIVES]) -> f64 {
+        o[0] + 0.05 * o[1] + 0.05 * o[2] + 0.05 * o[3]
+    }
+
+    fn random_objectives(rng: &mut Rng) -> [f64; N_OBJECTIVES] {
+        // coarse grid so duplicates and dominance both actually occur
+        let mut o = [0.0; N_OBJECTIVES];
+        for v in o.iter_mut() {
+            *v = rng.range(0, 9) as f64 / 8.0;
+        }
+        o
+    }
+
+    fn assert_mutually_nondominated(a: &ParetoArchive) {
+        let pts = a.points();
+        for i in 0..pts.len() {
+            for j in 0..pts.len() {
+                if i != j {
+                    assert!(
+                        !dominates(&pts[i].objectives, &pts[j].objectives),
+                        "archived {i} dominates archived {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dominance_is_a_strict_partial_order() {
+        let a = [1.0, 1.0, 1.0, 1.0];
+        let b = [1.0, 1.0, 1.0, 2.0];
+        let c = [2.0, 0.5, 1.0, 1.0];
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        assert!(!dominates(&a, &a), "irreflexive");
+        assert!(!dominates(&a, &c) && !dominates(&c, &a), "incomparable");
+    }
+
+    #[test]
+    fn dominated_insertion_is_a_noop() {
+        let mut ar = ParetoArchive::new(8);
+        assert!(ar.offer(point([1.0, 1.0, 1.0, 1.0], 1.15)));
+        assert!(!ar.offer(point([1.0, 1.0, 1.0, 1.0], 1.15)), "duplicate");
+        assert!(!ar.offer(point([2.0, 1.0, 1.0, 1.0], 2.15)), "dominated");
+        assert_eq!(ar.len(), 1);
+        assert_eq!(ar.rejected, 2);
+        // a dominating point replaces what it dominates
+        assert!(ar.offer(point([0.5, 1.0, 1.0, 1.0], 0.65)));
+        assert_eq!(ar.len(), 1);
+        assert_eq!(ar.points()[0].objectives[0], 0.5);
+    }
+
+    #[test]
+    fn archive_is_always_mutually_nondominated() {
+        qcheck(60, |g| {
+            let mut ar = ParetoArchive::new(*g.choose(&[2usize, 4, 8]));
+            let n = g.usize(1, 60);
+            let rng = g.rng();
+            for k in 0..n {
+                let o = random_objectives(rng);
+                ar.offer(ParetoPoint {
+                    objectives: o,
+                    criterion: scalar(&o),
+                    generation: k,
+                    genome: autorac_best("criteo"),
+                });
+                let pts = ar.points();
+                for i in 0..pts.len() {
+                    for j in 0..pts.len() {
+                        if i != j && dominates(&pts[i].objectives, &pts[j].objectives) {
+                            return Err(format!(
+                                "after offer {k}: archived point {i} dominates {j}"
+                            ));
+                        }
+                    }
+                }
+                crate::prop_assert!(ar.len() <= ar.capacity(), "over capacity");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn capacity_eviction_keeps_the_knee_point() {
+        // capacity 3, then a 4th mutually-non-dominated point forces an
+        // eviction. Post-insert normalized distances to the ideal corner:
+        //   A [0,1,1,1]           → 1.73   (best criterion — protected)
+        //   B [1,0,0,0]           → 1.00
+        //   K [.4,.4,.4,.4]       → 0.80   (knee — protected)
+        //   D [.9,.05,.95,.95]    → 1.62   (farthest unprotected → victim)
+        let mut ar = ParetoArchive::new(3);
+        let a = [0.0, 1.0, 1.0, 1.0];
+        let b = [1.0, 0.0, 0.0, 0.0];
+        let k = [0.4, 0.4, 0.4, 0.4];
+        let d = [0.9, 0.05, 0.95, 0.95];
+        for o in [a, b, k] {
+            assert!(ar.offer(point(o, scalar(&o))));
+        }
+        assert_eq!(ar.knee().unwrap().objectives, k);
+        assert!(ar.offer(point(d, scalar(&d))));
+        assert_eq!(ar.len(), 3, "eviction brought the archive back to capacity");
+        let has = |o: [f64; N_OBJECTIVES]| ar.points().iter().any(|p| p.objectives == o);
+        assert!(has(k), "knee point was capacity-evicted");
+        assert!(has(a), "best-criterion point was capacity-evicted");
+        assert!(!has(d), "the farthest unprotected point is the victim");
+        assert_eq!(ar.evicted, 1);
+        assert_mutually_nondominated(&ar);
+    }
+
+    #[test]
+    fn scalar_winner_stays_on_the_front() {
+        qcheck(40, |g| {
+            let mut ar = ParetoArchive::new(4);
+            let n = g.usize(1, 80);
+            let rng = g.rng();
+            let mut best_scalar = f64::INFINITY;
+            let mut best_obj = [0.0; N_OBJECTIVES];
+            for k in 0..n {
+                let o = random_objectives(rng);
+                let c = scalar(&o);
+                ar.offer(ParetoPoint {
+                    objectives: o,
+                    criterion: c,
+                    generation: k,
+                    genome: autorac_best("criteo"),
+                });
+                if c < best_scalar {
+                    best_scalar = c;
+                    best_obj = o;
+                }
+                // the global scalar winner is on the front, or dominated
+                // only by a front member (ties on the scalar can be
+                // mutually non-dominating, so equality is not enough)
+                let on_front = ar.points().iter().any(|p| p.objectives == best_obj);
+                let dominated_by_front = ar
+                    .points()
+                    .iter()
+                    .any(|p| dominates(&p.objectives, &best_obj));
+                crate::prop_assert!(
+                    on_front || dominated_by_front,
+                    "scalar winner {best_obj:?} lost from the front at offer {k}"
+                );
+            }
+            if !ar.is_empty() {
+                let archived_best = ar.best_criterion().unwrap().criterion;
+                crate::prop_assert!(
+                    (archived_best - best_scalar).abs() < 1e-12,
+                    "archived best criterion {archived_best} != global {best_scalar}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn knee_is_the_normalized_closest_point() {
+        let mut ar = ParetoArchive::new(8);
+        // a balanced point and two extremists; knee must be the balance
+        for (o, c) in [
+            ([0.0, 1.0, 1.0, 1.0], 0.15),
+            ([1.0, 0.0, 0.0, 0.0], 1.0),
+            ([0.4, 0.4, 0.4, 0.4], 0.46),
+        ] {
+            assert!(ar.offer(point(o, c)));
+        }
+        assert_mutually_nondominated(&ar);
+        let knee = ar.knee().unwrap();
+        assert_eq!(knee.objectives, [0.4, 0.4, 0.4, 0.4]);
+    }
+
+    #[test]
+    fn counters_balance() {
+        let mut rng = Rng::new(9);
+        let mut ar = ParetoArchive::new(4);
+        let mut offers = 0usize;
+        for k in 0..300 {
+            let o = random_objectives(&mut rng);
+            ar.offer(ParetoPoint {
+                objectives: o,
+                criterion: scalar(&o),
+                generation: k,
+                genome: autorac_best("criteo"),
+            });
+            offers += 1;
+        }
+        assert_eq!(ar.inserted + ar.rejected, offers);
+        assert_eq!(ar.inserted - ar.evicted, ar.len());
+    }
+}

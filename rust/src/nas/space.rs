@@ -179,6 +179,44 @@ pub fn mutate(g: &Genome, rng: &mut Rng) -> Genome {
     out
 }
 
+/// The Table-1 design space as a checkable object: `contains` answers
+/// whether a genome could have been produced by `random_genome` /
+/// `mutate` (the searchable subset — e.g. dense dims are capped at 512
+/// for calibration comparability, sources are strictly-ordered sets).
+/// Used by the qcheck property layer to pin the mutation operators.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SearchSpace;
+
+impl SearchSpace {
+    pub fn contains(&self, g: &Genome) -> bool {
+        if g.validate().is_err() || g.blocks.len() != NUM_BLOCKS {
+            return false;
+        }
+        for b in &g.blocks {
+            if !DENSE_DIMS[..6].contains(&b.dense_dim)
+                || !SPARSE_FEATURES.contains(&b.sparse_features)
+            {
+                return false;
+            }
+            // sample_sources draws ≤ 2 entries from a BTreeSet: strictly
+            // increasing, 1–2 long (emptiness/range checked by validate)
+            for sources in [&b.dense_in, &b.sparse_in] {
+                if !(1..=2).contains(&sources.len())
+                    || !sources.windows(2).all(|w| w[0] < w[1])
+                {
+                    return false;
+                }
+            }
+        }
+        // PIM genome drawn from the Table-1 option sets, ADC rule holds
+        XBAR_SIZES.contains(&g.pim.xbar)
+            && DAC_OPTIONS.contains(&g.pim.dac_bits)
+            && CELL_OPTIONS.contains(&g.pim.cell_bits)
+            && ADC_OPTIONS.contains(&g.pim.adc_bits)
+            && g.pim.feasible()
+    }
+}
+
 /// |design space| per Table 1 (mirrors arch.py::design_space_size; the
 /// paper quotes ≈2×10⁵⁴ with its connection-counting convention, ours
 /// enumerates ≈10⁴² — see EXPERIMENTS.md for the accounting difference).
@@ -246,5 +284,95 @@ mod tests {
     fn space_is_astronomically_large() {
         let s = design_space_size();
         assert!(s > 1e40, "space size {s:e}");
+    }
+
+    #[test]
+    fn reference_genomes_are_inside_the_space() {
+        let space = SearchSpace;
+        for ds in ["criteo", "avazu", "kdd"] {
+            assert!(space.contains(&autorac_best(ds)), "{ds}");
+        }
+    }
+
+    #[test]
+    fn contains_rejects_out_of_space_genomes() {
+        let space = SearchSpace;
+        let mut big = autorac_best("criteo");
+        big.blocks[0].dense_dim = 1024; // valid genome, outside the search cap
+        assert!(big.validate().is_ok());
+        assert!(!space.contains(&big));
+        let mut dup = autorac_best("criteo");
+        dup.blocks[4].dense_in = vec![3, 3]; // not a set
+        assert!(!space.contains(&dup));
+        let mut wide = autorac_best("criteo");
+        wide.blocks[4].dense_in = vec![1, 2, 3]; // arity beyond sample_sources
+        assert!(wide.validate().is_ok());
+        assert!(!space.contains(&wide));
+        let mut bad = autorac_best("criteo");
+        bad.d_emb = 100; // invalid outright
+        assert!(!space.contains(&bad));
+    }
+
+    #[test]
+    fn qcheck_mutations_stay_inside_the_space() {
+        use crate::util::qcheck::qcheck;
+        let space = SearchSpace;
+        qcheck(150, |g| {
+            let dataset = *g.choose(&["criteo", "avazu", "kdd"]);
+            let rng = g.rng();
+            let mut genome = random_genome(rng, dataset, "q");
+            crate::prop_assert!(space.contains(&genome), "random_genome escaped");
+            for step in 0..8 {
+                genome = mutate(&genome, rng);
+                crate::prop_assert!(
+                    space.contains(&genome),
+                    "mutation step {step} escaped the space"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qcheck_mutation_preserves_dataset_and_arity() {
+        use crate::util::qcheck::qcheck;
+        qcheck(150, |g| {
+            let dataset = *g.choose(&["criteo", "avazu", "kdd"]);
+            let rng = g.rng();
+            let parent = random_genome(rng, dataset, "q");
+            let child = mutate(&parent, rng);
+            crate::prop_assert_eq!(&child.dataset, &parent.dataset);
+            crate::prop_assert_eq!(child.blocks.len(), parent.blocks.len());
+            // per-block source arity stays within the sampled bounds
+            for (i, b) in child.blocks.iter().enumerate() {
+                crate::prop_assert!(
+                    (1..=2).contains(&b.dense_in.len())
+                        && (1..=2).contains(&b.sparse_in.len()),
+                    "block {i} source arity escaped"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn genome_hash_has_no_collisions_across_10k_samples() {
+        use crate::mapping::genome_eval_key;
+        use std::collections::BTreeMap;
+        let mut rng = Rng::new(0x10_000);
+        // structural-hash round trip: identical structure → identical
+        // key; over 10k random draws no two distinct structures collide
+        let mut seen: BTreeMap<u64, String> = BTreeMap::new();
+        for i in 0..10_000 {
+            // constant name: the canonical form IS the structure
+            let g = random_genome(&mut rng, "criteo", "h");
+            let key = genome_eval_key(&g);
+            assert_eq!(key, genome_eval_key(&g.clone()), "sample {i} unstable");
+            let repr = g.to_json().to_string_compact();
+            if let Some(prev) = seen.insert(key, repr.clone()) {
+                assert_eq!(prev, repr, "64-bit structural hash collision at {i}");
+            }
+        }
+        assert!(seen.len() > 9_000, "draws were not diverse: {}", seen.len());
     }
 }

@@ -8,7 +8,7 @@ use crate::baselines::{genome_stats_pooled, CpuModel, RecNmpModel, TABLE3_POOLIN
 use crate::data::profile;
 use crate::embeddings::{EmbeddingStore, MemoryTileModel, Placement, Strategy};
 use crate::mapping::{map_genome, MapStyle};
-use crate::nas::{autorac_best, nasrec_like, Genome, Search, SearchConfig, Surrogate};
+use crate::nas::{autorac_best, nasrec_like, Genome, ParallelSearch, SearchConfig, Surrogate};
 use crate::pim::TechParams;
 use crate::sim::{simulate, EmbeddingFrontend, SimReport, Workload};
 use crate::util::json::Json;
@@ -211,13 +211,17 @@ pub fn fig2(artifacts: &Path) -> crate::Result<Vec<(usize, f64)>> {
 // ---------------------------------------------------------------------------
 
 pub fn fig5(cfg: SearchConfig) -> crate::Result<(Vec<f64>, Genome)> {
-    let mut search = Search::new(cfg, Surrogate::load_default())?;
+    let mut search = ParallelSearch::new(cfg, Surrogate::load_default())?;
     let best = search.run()?;
     let drop = search.trace.pct_drop();
+    let cs = search.cache_stats();
     println!(
-        "\nFigure 5: % criterion drop over {} generations ({} evaluations)",
+        "\nFigure 5: % criterion drop over {} generations ({} evaluations, \
+         {} worker(s), cache hit-rate {:.1}%)",
         drop.len() - 1,
-        search.trace.evaluations
+        search.trace.evaluations,
+        search.cfg.workers.max(1),
+        100.0 * cs.hit_rate()
     );
     let step = (drop.len() / 24).max(1);
     let worst = drop.iter().copied().fold(0.0f64, f64::min);

@@ -1,6 +1,26 @@
 //! Behavioral simulator (S9): latency / throughput / energy / area of a
 //! mapped design under a request workload.
+//!
+//! Thread-safety contract: `simulate` is a pure function of its inputs
+//! (the per-run RNG is constructed from `Workload::seed` internally), and
+//! every type crossing it is `Send + Sync` — the parallel search engine
+//! (`nas::parallel`, S20) calls it concurrently from its worker pool.
+//! The audit below turns any regression (e.g. an `Rc` or raw pointer
+//! slipping into `MappedModel`/`SimReport`) into a compile error.
 
 pub mod simulator;
 
 pub use simulator::{simulate, EmbeddingFrontend, SimReport, Workload};
+
+// Compile-time Send/Sync audit of the simulate() boundary: the bound
+// checks run at type-check time, so the crate stops compiling if one
+// of these types grows a non-thread-safe field. Never called.
+#[allow(dead_code)]
+fn audit_simulate_boundary_is_send_sync() {
+    fn check<T: Send + Sync>() {}
+    check::<SimReport>();
+    check::<Workload>();
+    check::<crate::mapping::MappedModel>();
+    check::<crate::mapping::MappedOp>();
+    check::<crate::pim::TechParams>();
+}

@@ -1,0 +1,90 @@
+//! Determinism layer for the parallel co-search engine (S20): worker
+//! count and the evaluation cache must not change a single bit of the
+//! search result. Every assertion compares `f64::to_bits` — "close
+//! enough" is not equality here, because a reordered floating-point
+//! reduction is exactly the bug this suite exists to catch.
+
+use autorac::nas::{ParallelSearch, SearchConfig, Surrogate};
+
+fn cfg(seed: u64, workers: usize, cache: bool) -> SearchConfig {
+    SearchConfig {
+        generations: 6,
+        population: 10,
+        children_per_gen: 4,
+        sample_size: 3,
+        sim_requests: 12,
+        seed,
+        workers,
+        cache,
+        ..SearchConfig::default()
+    }
+}
+
+/// Bit-level fingerprint of one full run: best/mean criterion traces,
+/// the winning genome, and the objective vector of the archive's knee.
+#[derive(Debug, PartialEq, Eq)]
+struct Fingerprint {
+    best_bits: Vec<u64>,
+    mean_bits: Vec<u64>,
+    evaluations: usize,
+    best_genome_hash: u64,
+    knee_bits: Vec<u64>,
+}
+
+fn run(seed: u64, workers: usize, cache: bool) -> Fingerprint {
+    let mut s = ParallelSearch::new(cfg(seed, workers, cache), Surrogate::prior())
+        .expect("engine constructs offline");
+    let best = s.run().expect("search completes");
+    Fingerprint {
+        best_bits: s.trace.best_criterion.iter().map(|c| c.to_bits()).collect(),
+        mean_bits: s.trace.mean_criterion.iter().map(|c| c.to_bits()).collect(),
+        evaluations: s.trace.evaluations,
+        best_genome_hash: best.genome.hash(),
+        knee_bits: s
+            .archive
+            .knee()
+            .expect("non-empty archive")
+            .objectives
+            .iter()
+            .map(|o| o.to_bits())
+            .collect(),
+    }
+}
+
+#[test]
+fn workers_1_and_8_are_bit_identical_across_seeds() {
+    for seed in [1u64, 2, 3, 4, 5] {
+        let serial = run(seed, 1, true);
+        let parallel = run(seed, 8, true);
+        assert_eq!(serial, parallel, "seed {seed}: worker count changed the result");
+    }
+}
+
+#[test]
+fn cache_on_and_off_are_equivalent() {
+    for seed in [11u64, 12] {
+        let cached = run(seed, 4, true);
+        let uncached = run(seed, 4, false);
+        assert_eq!(cached, uncached, "seed {seed}: the cache changed the result");
+    }
+}
+
+#[test]
+fn same_seed_repeats_and_seeds_differ() {
+    assert_eq!(run(21, 2, true), run(21, 2, true), "re-run diverged");
+    assert_ne!(
+        run(21, 1, true).best_genome_hash,
+        run(22, 1, true).best_genome_hash,
+        "different seeds found the identical genome"
+    );
+}
+
+#[test]
+fn traces_record_one_entry_per_generation() {
+    let f = run(31, 3, true);
+    // init + 6 generations
+    assert_eq!(f.best_bits.len(), 7);
+    assert_eq!(f.mean_bits.len(), 7);
+    // population + 6 × children logical evaluations, cache hits included
+    assert_eq!(f.evaluations, 10 + 6 * 4);
+}

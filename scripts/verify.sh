@@ -25,6 +25,31 @@ echo "== tier 1.5: property/differential suites under --release =="
 cargo test -q --release --test sharding_prop --test sim_differential --test coordinator_e2e
 cargo test -q --release --lib mapping::cost
 
+echo "== search determinism under --release (workers=8 vs serial) =="
+# Bit-identity of the parallel engine is a release-mode property too —
+# optimized float codegen must not reorder the per-candidate reductions.
+cargo test -q --release --test search_determinism
+cargo test -q --release --lib nas::
+
+echo "== search-bench smoke: the eval cache must land hits =="
+# The duplicate-heavy smoke revisits single-step mutation neighbours; a
+# 0% hit-rate means the genome-keyed memo (or its structural hash) broke.
+bench_out=$(cargo run --quiet --release --bin autorac -- search-bench --workers 8 --generations 12)
+printf '%s\n' "$bench_out"
+# fail-closed: the smoke line must exist AND report a non-zero hit-rate
+if ! printf '%s\n' "$bench_out" | grep -q "duplicate-heavy smoke: cache hit-rate"; then
+    echo "ERROR: search-bench no longer prints the duplicate-heavy smoke line"
+    exit 1
+fi
+if printf '%s\n' "$bench_out" | grep -q "duplicate-heavy smoke: cache hit-rate 0.0%"; then
+    echo "ERROR: duplicate-heavy smoke reported a 0% cache hit-rate"
+    exit 1
+fi
+if ! printf '%s\n' "$bench_out" | grep -q "parallel trace bit-identical to serial: true"; then
+    echo "ERROR: search-bench did not confirm serial/parallel bit-identity"
+    exit 1
+fi
+
 echo "== hygiene: no un-gated #[ignore] tests =="
 # Skipping must be an artifact-gate (runtime check + eprintln SKIP), not
 # a silent #[ignore]: any #[ignore] line must carry an 'artifact'
