@@ -14,7 +14,10 @@ use autorac::data::{profile, Generator, DEFAULT_SEED};
 use autorac::embeddings::EmbeddingStore;
 use autorac::mapping::{map_genome, MapStyle};
 use autorac::nas::{autorac_best, mutate, Search, SearchConfig, Surrogate};
-use autorac::pim::{MatI32, PimConfig, ProgrammedXbar, TechParams, XbarActivity};
+use autorac::pim::{
+    BatchedXbar, MatI32, PimConfig, ProgrammedXbar, TechParams, XbarActivity,
+    XbarScratch,
+};
 use autorac::sim::{simulate, Workload};
 use autorac::util::bench::Bencher;
 use autorac::util::rng::Rng;
@@ -78,6 +81,20 @@ fn main() -> autorac::Result<()> {
         let mut act = XbarActivity::default();
         std::hint::black_box(xbar.mvm_raw(&x, &mut act));
     });
+    // batched bit-plane-packed kernel at the serving batch sizes — the
+    // before/after trajectory vs the reference loop (per-iter time here
+    // is per BATCH; divide by b for per-MVM)
+    let bx = BatchedXbar::program(&w, cfg);
+    let mut scratch = XbarScratch::default();
+    for &bsz in &[1usize, 8, 32] {
+        let xs: Vec<i32> =
+            (0..bsz * bx.k).map(|_| rng2.below(256) as i32).collect();
+        let mut out = vec![0i64; bsz * bx.n];
+        b.bench(&format!("crossbar_mvm_batch 128x64 b={bsz}"), || {
+            bx.mvm_batch(&xs, bsz, &mut out, &mut scratch);
+            std::hint::black_box(&out);
+        });
+    }
 
     // -- data + embeddings ------------------------------------------------
     let prof = profile("criteo")?;

@@ -25,7 +25,7 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{BatcherConfig, collect_batch};
-pub use engine::{InferenceEngine, MockEngine, PjrtEngine};
+pub use engine::{InferenceEngine, MockEngine, PimEngine, PjrtEngine};
 pub use loadgen::{Arrival, LoadGenConfig, LoadReport};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{Policy, Router};

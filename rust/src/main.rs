@@ -5,7 +5,10 @@
 //!   search-bench serial vs N-worker co-search wall-clock + cache hit-rate
 //!   simulate    behavioral simulation of a genome on the PIM design
 //!   serve       serve CTR requests from the AOT model artifact via PJRT
-//!   serve-bench shard-aware serving bench under MockEngine (offline)
+//!   serve-bench shard-aware serving bench, MockEngine or the native
+//!               PimEngine crossbar backend (offline)
+//!   xbar-bench  batched crossbar kernel vs per-vector reference:
+//!               MVMs/s per batch size + in-run bit-identity parity
 //!   eval        rust-side accuracy eval of the served model (Table 2 check)
 //!   datagen     inspect the synthetic dataset generator
 //!   table2 | table3 | fig2 | fig5 | fig6   regenerate paper artifacts
@@ -14,13 +17,18 @@
 use autorac::coordinator::loadgen::{self, Arrival, LoadGenConfig, LoadReport};
 use autorac::coordinator::{
     AdmissionPolicy, BatcherConfig, Coordinator, CoordinatorConfig,
-    MetricsSnapshot, MockEngine, PjrtEngine, Policy, Request, ServingStore,
+    MetricsSnapshot, MockEngine, PimEngine, PjrtEngine, Policy, Request,
+    ServingStore,
 };
 use autorac::data::{make_batch, profile, Generator, Splits, DEFAULT_SEED};
 use autorac::embeddings::{EmbeddingStore, ShardMap, ShardPolicy, ShardedStore};
 use autorac::mapping::{map_genome, MapStyle};
 use autorac::nas::{autorac_best, Genome, ParallelSearch, SearchConfig, Surrogate};
-use autorac::pim::TechParams;
+use autorac::pim::{
+    BatchedXbar, MatI32, PimConfig, ProgrammedXbar, TechParams, XbarActivity,
+    XbarScratch,
+};
+use autorac::util::rng::Rng;
 use autorac::runtime::atns::TensorFile;
 use autorac::runtime::client::Runtime;
 use autorac::sim::{simulate, Workload};
@@ -38,6 +46,7 @@ fn main() -> autorac::Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => cmd_serve(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
+        Some("xbar-bench") => cmd_xbar_bench(&args),
         Some("eval") => cmd_eval(&args),
         Some("datagen") => cmd_datagen(&args),
         Some("table2") => {
@@ -86,7 +95,7 @@ fn main() -> autorac::Result<()> {
 fn print_help() {
     println!(
         "autorac — automated PIM accelerator design for recommender systems\n\
-         usage: autorac <search|search-bench|simulate|serve|serve-bench|eval|datagen|table2|table3|fig2|fig5|fig6|artifacts> [--opts]\n\
+         usage: autorac <search|search-bench|simulate|serve|serve-bench|xbar-bench|eval|datagen|table2|table3|fig2|fig5|fig6|artifacts> [--opts]\n\
          common: --dataset criteo|avazu|kdd   --artifacts <dir>   --seed N\n\
          search: --generations N --population N --children N --out best.json\n\
                  --workers N (eval threads; 1 = serial) --pareto N (archive cap)\n\
@@ -98,7 +107,11 @@ fn print_help() {
          serve-bench: --workers N --shards N --policy round-robin|least-queued|shard-affinity\n\
                       --placement round-robin|balanced|hot --requests N --rps R (0=closed loop)\n\
                       --concurrency N --coverage F --queue-cap N (0=unbounded) --admission reject|shed\n\
-                      --shed-after-us N --exec-us N --batch N --d-emb N\n\
+                      --shed-after-us N --exec-us N (mock only) --batch N --d-emb N\n\
+                      --engine mock|pim (pim = real crossbar math on BatchedXbar banks)\n\
+         xbar-bench: --k N --n N (weight shape) --quick (short CI timings)\n\
+                      (always runs the parity sweep: batched kernel vs per-vector\n\
+                      reference, bit-identical outputs + activity, fail-closed)\n\
          eval:   --n N (test records)"
     );
 }
@@ -368,9 +381,19 @@ fn cmd_serve(args: &Args) -> autorac::Result<()> {
     Ok(())
 }
 
+/// Which compute backend serve-bench workers run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ServeEngine {
+    /// sigmoid-of-means stand-in with a configurable `--exec-us` delay
+    Mock,
+    /// real crossbar math: `PimEngine` over `BatchedXbar` banks
+    Pim,
+}
+
 /// Everything one serve-bench run needs (shared by the measured policy
 /// and the round-robin baseline so the comparison is apples-to-apples).
 struct ServeBenchSetup {
+    engine: ServeEngine,
     dataset: String,
     workers: usize,
     shards: usize,
@@ -396,6 +419,9 @@ fn serve_bench_run(
     let store = Arc::new(ShardedStore::random(&prof, s.d_emb, s.seed, map));
     let (nd, nf, d_emb, batch) = (prof.n_dense, prof.n_sparse(), s.d_emb, s.batch);
     let delay = s.exec_delay;
+    let engine = s.engine;
+    let genome = autorac_best(&s.dataset);
+    let seed = s.seed;
     let coord = Coordinator::start_with(
         CoordinatorConfig {
             n_workers: s.workers,
@@ -409,10 +435,16 @@ fn serve_bench_run(
             },
         },
         ServingStore::Sharded(store),
-        move |_| {
-            let mut e = MockEngine::new(batch, nd, nf, d_emb);
-            e.delay = delay;
-            Ok(Box::new(e))
+        move |_| match engine {
+            ServeEngine::Mock => {
+                let mut e = MockEngine::new(batch, nd, nf, d_emb);
+                e.delay = delay;
+                Ok(Box::new(e) as Box<dyn autorac::coordinator::InferenceEngine>)
+            }
+            ServeEngine::Pim => {
+                let e = PimEngine::new(&genome, batch, nd, nf, d_emb, seed)?;
+                Ok(Box::new(e) as Box<dyn autorac::coordinator::InferenceEngine>)
+            }
         },
     )?;
     let rep = loadgen::run(
@@ -443,7 +475,13 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
         "shed" => AdmissionPolicy::ShedStale,
         other => autorac::bail!("unknown admission `{other}` (reject|shed)"),
     };
+    let engine = match args.str_or("engine", "mock").as_str() {
+        "mock" => ServeEngine::Mock,
+        "pim" => ServeEngine::Pim,
+        other => autorac::bail!("unknown engine `{other}` (mock|pim)"),
+    };
     let setup = ServeBenchSetup {
+        engine,
         dataset: args.str_or("dataset", "criteo"),
         workers,
         shards: args.usize_or("shards", workers)?,
@@ -467,15 +505,23 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
     };
     args.finish()?;
 
+    let engine_desc = match setup.engine {
+        ServeEngine::Mock => {
+            format!("MockEngine {} µs/batch", setup.exec_delay.as_micros())
+        }
+        ServeEngine::Pim => format!(
+            "PimEngine (BatchedXbar banks of genome {})",
+            autorac_best(&setup.dataset).name
+        ),
+    };
     println!(
         "serve-bench {}: {} workers / {} shards ({:?}), policy {:?}, \
-         MockEngine {} µs/batch, {:?}",
+         {engine_desc}, {:?}",
         setup.dataset,
         setup.workers,
         setup.shards,
         setup.placement,
         policy,
-        setup.exec_delay.as_micros(),
         setup.arrival,
     );
     let (snap, rep) = serve_bench_run(&setup, policy)?;
@@ -542,6 +588,172 @@ fn print_serve_bench(snap: &MetricsSnapshot, rep: &LoadReport) {
         snap.remote_rows,
         snap.cross_shard_frac() * 100.0
     );
+}
+
+/// Wall-clock seconds per call of `f` (one warmup call, then as many
+/// calls as fit the budget). Single-threaded by construction.
+fn time_per_call<F: FnMut()>(budget: std::time::Duration, mut f: F) -> f64 {
+    f();
+    let t0 = Instant::now();
+    let mut calls = 0u64;
+    while t0.elapsed() < budget {
+        f();
+        calls += 1;
+    }
+    t0.elapsed().as_secs_f64() / calls.max(1) as f64
+}
+
+/// Random weights spanning the full `w_bits` range of `cfg`.
+fn random_weights(rng: &mut Rng, rows: usize, cols: usize, cfg: &PimConfig) -> MatI32 {
+    let wmax = (1i32 << (cfg.w_bits - 1)) - 1;
+    let mut wq = MatI32::zeros(rows, cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            wq.set(r, c, rng.below((2 * wmax + 1) as u64) as i32 - wmax);
+        }
+    }
+    wq
+}
+
+/// Outputs + activity of the per-vector reference over a batch.
+fn reference_mvm(
+    xbar: &ProgrammedXbar,
+    xs: &[i32],
+    b: usize,
+) -> (Vec<i64>, XbarActivity) {
+    let mut act = XbarActivity::default();
+    let mut out = Vec::with_capacity(b * xbar.n);
+    for j in 0..b {
+        out.extend(xbar.mvm_raw(&xs[j * xbar.k..(j + 1) * xbar.k], &mut act));
+    }
+    (out, act)
+}
+
+/// `xbar-bench`: the batched bit-plane-packed kernel vs the per-vector
+/// functional reference — a parity sweep over every feasible PIM config
+/// (plus lossy-ADC and blocked-path configs), then MVMs/s at
+/// b ∈ {1, 8, 32} with in-run bit-identity `ensure!`s. `verify.sh` runs
+/// this with `--quick` and greps the `parity: OK` line (fail-closed).
+fn cmd_xbar_bench(args: &Args) -> autorac::Result<()> {
+    let k = args.usize_or("k", 256)?;
+    let n = args.usize_or("n", 128)?;
+    let quick = args.flag("quick");
+    args.finish()?;
+    let budget = std::time::Duration::from_millis(if quick { 40 } else { 300 });
+
+    // ---- parity sweep: every feasible config + lossy + blocked --------
+    let mut sweep = PimConfig::enumerate_feasible();
+    let n_feasible = sweep.len();
+    sweep.push(PimConfig {
+        xbar: 64,
+        dac_bits: 2,
+        cell_bits: 2,
+        adc_bits: 8,
+        ..Default::default()
+    }); // infeasible: lossy ADC
+    sweep.push(PimConfig {
+        xbar: 128,
+        dac_bits: 1,
+        cell_bits: 1,
+        adc_bits: 8,
+        ..Default::default()
+    }); // blocked path (tile > 64 rows), lossless
+    sweep.push(PimConfig {
+        xbar: 128,
+        dac_bits: 1,
+        cell_bits: 2,
+        adc_bits: 8,
+        ..Default::default()
+    }); // blocked path, lossy
+    let mut rng = Rng::new(0xBA7C);
+    for (ci, cfg) in sweep.iter().enumerate() {
+        for w_bits in [4usize, 8] {
+            let cfg = cfg.with_wbits(w_bits);
+            let wq = random_weights(&mut rng, cfg.xbar + 3, 9, &cfg); // K-padding edge
+            let refx = ProgrammedXbar::program(&wq, cfg);
+            let bx = BatchedXbar::program(&wq, cfg);
+            autorac::ensure!(
+                bx.offset_correction() == refx.offset_correction(),
+                "offset-correction mismatch on {cfg:?}"
+            );
+            for b in [1usize, 3, 8] {
+                let xs: Vec<i32> = (0..b * bx.k)
+                    .map(|_| rng.below(1 << cfg.x_bits) as i32)
+                    .collect();
+                let (want, want_act) = reference_mvm(&refx, &xs, b);
+                let mut out = vec![0i64; b * bx.n];
+                let mut scratch = XbarScratch::default();
+                bx.mvm_batch(&xs, b, &mut out, &mut scratch);
+                autorac::ensure!(
+                    out == want,
+                    "output mismatch: config {ci} {cfg:?} b={b}"
+                );
+                autorac::ensure!(
+                    scratch.activity == want_act,
+                    "activity mismatch: config {ci} {cfg:?} b={b}"
+                );
+            }
+        }
+    }
+    println!(
+        "parity: OK — {n_feasible} feasible + {} lossy/blocked configs × \
+         w_bits {{4,8}} × b {{1,3,8}}, outputs and activity bit-identical",
+        sweep.len() - n_feasible
+    );
+
+    // ---- throughput: reference loop vs batched kernel -----------------
+    let cfg = PimConfig::default();
+    let wq = random_weights(&mut rng, k, n, &cfg);
+    let refx = ProgrammedXbar::program(&wq, cfg);
+    let bx = BatchedXbar::program(&wq, cfg);
+    println!(
+        "xbar-bench: default config {}/{}/{}/{} (lossless ADC), W {k}×{n}, \
+         x_bits {} — single-threaded",
+        cfg.xbar, cfg.dac_bits, cfg.cell_bits, cfg.adc_bits, cfg.x_bits
+    );
+    let mut speedup_b32 = 0.0;
+    for b in [1usize, 8, 32] {
+        let xs: Vec<i32> = (0..b * bx.k)
+            .map(|_| rng.below(1 << cfg.x_bits) as i32)
+            .collect();
+        // bit-identity on the measured inputs, every run
+        let (want, want_act) = reference_mvm(&refx, &xs, b);
+        let mut out = vec![0i64; b * bx.n];
+        let mut scratch = XbarScratch::default();
+        bx.mvm_batch(&xs, b, &mut out, &mut scratch);
+        autorac::ensure!(out == want, "throughput-input output mismatch b={b}");
+        autorac::ensure!(
+            scratch.activity == want_act,
+            "throughput-input activity mismatch b={b}"
+        );
+        let mut act = XbarActivity::default();
+        let ref_s = time_per_call(budget, || {
+            for j in 0..b {
+                std::hint::black_box(
+                    refx.mvm_raw(&xs[j * bx.k..(j + 1) * bx.k], &mut act),
+                );
+            }
+        });
+        let bat_s = time_per_call(budget, || {
+            bx.mvm_batch(&xs, b, &mut out, &mut scratch);
+            std::hint::black_box(&out);
+        });
+        let (ref_mvms, bat_mvms) = (b as f64 / ref_s, b as f64 / bat_s);
+        let speedup = bat_mvms / ref_mvms;
+        if b == 32 {
+            speedup_b32 = speedup;
+        }
+        println!(
+            "  b={b:<3} reference {:>10.0} MVM/s   batched {:>10.0} MVM/s   \
+             speedup {speedup:.2}x",
+            ref_mvms, bat_mvms
+        );
+    }
+    println!(
+        "  b=32 speedup {speedup_b32:.2}x (acceptance target >= 5x on the \
+         default config)"
+    );
+    Ok(())
 }
 
 fn cmd_eval(args: &Args) -> autorac::Result<()> {

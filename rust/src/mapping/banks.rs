@@ -1,0 +1,363 @@
+//! Functional PIM bank construction (S24): materialize a genome as a
+//! stack of [`BatchedXbar`]-programmed weight banks the native
+//! [`crate::coordinator::PimEngine`] serving backend executes — real
+//! crossbar math on the request path, fully offline (weights are
+//! deterministic random quantized tensors; no artifacts).
+//!
+//! The mapped network is the serving-shaped projection of the genome:
+//! a quantized bottom MLP over the dense features (one bank per block,
+//! each at that block's `dense_wbits` — the searched mixed precision),
+//! an `inter_wbits` projection into embedding space, an FM-style
+//! second-order interaction with the gathered embeddings (the
+//! digital-equivalent of the transposed-array + MBSA reduction, whose
+//! analog/pairwise equivalence `pim/transposed.rs` pins), and a
+//! `final_wbits` scoring head. Every linear layer runs through
+//! [`BatchedXbar::mvm_corrected_batch`], so serving cost and fidelity
+//! follow the PIM genome, and per-row activation quantization keeps
+//! scores **batch-size invariant** (bit-identical however requests are
+//! batched — pinned in tests).
+
+use crate::nas::genome::{Genome, Interaction};
+use crate::pim::kernel::{BatchedXbar, XbarScratch};
+use crate::pim::{quant_act_into, quant_sym, MatI32, PimConfig};
+use crate::util::rng::{seed_from_name, Rng};
+
+/// One crossbar-programmed linear layer: fp32 in/out, bit-serial integer
+/// inside (quantize → batched MVM → offset-correct → rescale).
+pub struct PimBank {
+    pub name: String,
+    pub xbar: BatchedXbar,
+    pub w_scale: f32,
+    /// logical input dim (≤ `xbar.k`, which is padded to a tile multiple)
+    pub k_in: usize,
+    pub n_out: usize,
+}
+
+/// Reusable buffers for [`PimBank::forward_batch`] (shared by every bank
+/// of a net; allocation-free after warmup). `xbar.activity` accumulates
+/// the crossbar event counts of every pass run through this scratch.
+#[derive(Default)]
+pub struct BankScratch {
+    pub xbar: XbarScratch,
+    x_u: Vec<i32>,
+    row_q: Vec<i32>,
+    scales: Vec<f32>,
+    acc: Vec<i64>,
+}
+
+impl PimBank {
+    /// Program an already-quantized weight matrix (`wq` within
+    /// `cfg.w_bits`) with its dequantization scale.
+    pub fn from_quantized(
+        name: &str,
+        wq: &MatI32,
+        w_scale: f32,
+        cfg: PimConfig,
+    ) -> PimBank {
+        PimBank {
+            name: name.to_string(),
+            xbar: BatchedXbar::program(wq, cfg),
+            w_scale,
+            k_in: wq.rows,
+            n_out: wq.cols,
+        }
+    }
+
+    /// Deterministic He-style random weights quantized to `w_bits` and
+    /// programmed as one differential bit-plane bank. The substream is
+    /// derived from `(seed, name)`, so a bank's weights depend only on
+    /// its place in the net — never on construction order.
+    pub fn random(
+        name: &str,
+        k_in: usize,
+        n_out: usize,
+        w_bits: usize,
+        base: PimConfig,
+        seed: u64,
+    ) -> PimBank {
+        let mut rng = Rng::new(seed_from_name(seed, &format!("pimbank/{name}")));
+        let sd = (2.0 / k_in.max(1) as f64).sqrt();
+        let wf: Vec<f32> = (0..k_in * n_out)
+            .map(|_| (rng.normal() * sd) as f32)
+            .collect();
+        let (q, w_scale) = quant_sym(&wf, w_bits);
+        let wq = MatI32 {
+            rows: k_in,
+            cols: n_out,
+            data: q,
+        };
+        PimBank::from_quantized(name, &wq, w_scale, base.with_wbits(w_bits))
+    }
+
+    /// Batched linear: `x` is `[b × k_in]` fp32; appends `[b × n_out]`
+    /// to `out`. Rows are quantized independently (per-row scale), so
+    /// each output row is bit-identical to the per-vector
+    /// [`crate::pim::crossbar::pim_linear_vec`] reference on the same
+    /// programmed weights.
+    pub fn forward_batch(
+        &self,
+        x: &[f32],
+        b: usize,
+        out: &mut Vec<f32>,
+        scratch: &mut BankScratch,
+    ) {
+        debug_assert_eq!(x.len(), b * self.k_in);
+        let k = self.xbar.k;
+        let x_bits = self.xbar.cfg.x_bits;
+        let offset = 1i32 << (x_bits - 1); // pad value (= 0.0 pre-offset)
+        scratch.x_u.clear();
+        scratch.x_u.reserve(b * k);
+        scratch.scales.clear();
+        for j in 0..b {
+            let row = &x[j * self.k_in..(j + 1) * self.k_in];
+            let scale = quant_act_into(row, x_bits, &mut scratch.row_q);
+            scratch.scales.push(scale);
+            scratch.x_u.extend_from_slice(&scratch.row_q);
+            scratch.x_u.resize((j + 1) * k, offset);
+        }
+        scratch.acc.clear();
+        scratch.acc.resize(b * self.n_out, 0);
+        self.xbar
+            .mvm_corrected_batch(&scratch.x_u, b, &mut scratch.acc, &mut scratch.xbar);
+        out.reserve(b * self.n_out);
+        for j in 0..b {
+            let x_scale = scratch.scales[j];
+            out.extend(
+                scratch.acc[j * self.n_out..(j + 1) * self.n_out]
+                    .iter()
+                    // same association as pim_linear_vec: (v·xs)·ws
+                    .map(|&v| v as f32 * x_scale * self.w_scale),
+            );
+        }
+    }
+}
+
+/// A genome materialized for serving: the bank stack plus the feature
+/// geometry it was built for.
+pub struct PimNet {
+    /// one bank per genome block (that block's `dense_wbits`)
+    pub bottom: Vec<PimBank>,
+    /// last bottom dim → `d_emb`, at the first interacting block's
+    /// `inter_wbits` (the searched interaction precision)
+    pub proj: PimBank,
+    /// `[bottom_out ‖ fm] → 1` scoring head at `final_wbits`
+    pub head: PimBank,
+    pub n_dense: usize,
+    pub n_sparse: usize,
+    pub d_emb: usize,
+}
+
+/// Reusable buffers for [`PimNet::forward_batch`].
+#[derive(Default)]
+pub struct NetScratch {
+    pub bank: BankScratch,
+    a: Vec<f32>,
+    bx: Vec<f32>,
+    fmv: Vec<f32>,
+    hin: Vec<f32>,
+}
+
+/// Build the serving bank stack of a genome for a dataset geometry
+/// (`n_dense` dense features, `n_sparse` embedding tables of `d_emb`
+/// dims — the *store's* dims, which may differ from `g.d_emb`).
+pub fn build_pim_net(
+    g: &Genome,
+    n_dense: usize,
+    n_sparse: usize,
+    d_emb: usize,
+    seed: u64,
+) -> crate::Result<PimNet> {
+    g.validate()?;
+    crate::ensure!(
+        n_dense > 0 && d_emb > 0,
+        "PimNet needs dense features and embedding dims (got {n_dense}/{d_emb})"
+    );
+    let mut bottom = Vec::with_capacity(g.blocks.len());
+    let mut din = n_dense;
+    for (i, blk) in g.blocks.iter().enumerate() {
+        bottom.push(PimBank::random(
+            &format!("bottom{i}"),
+            din,
+            blk.dense_dim,
+            blk.dense_wbits,
+            g.pim,
+            seed,
+        ));
+        din = blk.dense_dim;
+    }
+    let inter_bits = g
+        .blocks
+        .iter()
+        .find(|b| b.interaction != Interaction::None)
+        .map(|b| b.inter_wbits)
+        .unwrap_or(g.final_wbits);
+    let proj = PimBank::random("proj", din, d_emb, inter_bits, g.pim, seed);
+    let head = PimBank::random("head", din + d_emb, 1, g.final_wbits, g.pim, seed);
+    Ok(PimNet {
+        bottom,
+        proj,
+        head,
+        n_dense,
+        n_sparse,
+        d_emb,
+    })
+}
+
+impl PimNet {
+    /// Score a batch: `dense` `[b × n_dense]`, `sparse` `[b × n_sparse ×
+    /// d_emb]` (the gathered embeddings) → `[b]` click probabilities.
+    /// Rows are independent end to end, so results do not depend on how
+    /// requests were batched.
+    pub fn forward_batch(
+        &self,
+        dense: &[f32],
+        sparse: &[f32],
+        b: usize,
+        scratch: &mut NetScratch,
+    ) -> Vec<f32> {
+        let d = self.d_emb;
+        let ns = self.n_sparse;
+        // bottom MLP (ReLU after every bank)
+        scratch.a.clear();
+        scratch.a.extend_from_slice(&dense[..b * self.n_dense]);
+        for bank in &self.bottom {
+            scratch.bx.clear();
+            bank.forward_batch(&scratch.a, b, &mut scratch.bx, &mut scratch.bank);
+            for v in scratch.bx.iter_mut() {
+                *v = v.max(0.0);
+            }
+            std::mem::swap(&mut scratch.a, &mut scratch.bx);
+        }
+        // project into embedding space at the interaction precision
+        scratch.bx.clear();
+        self.proj
+            .forward_batch(&scratch.a, b, &mut scratch.bx, &mut scratch.bank);
+        // FM second-order pooling over (embeddings + projected bottom):
+        // 0.5·((Σ_v x_v)² − Σ_v x_v²) per dim — the Σx ∥ Σx² + MBSA
+        // reduction of pim/transposed.rs, computed digitally here.
+        scratch.fmv.clear();
+        scratch.fmv.reserve(b * d);
+        for j in 0..b {
+            for t in 0..d {
+                let pv = scratch.bx[j * d + t] as f64;
+                let (mut s, mut ss) = (pv, pv * pv);
+                for f in 0..ns {
+                    let v = sparse[(j * ns + f) * d + t] as f64;
+                    s += v;
+                    ss += v * v;
+                }
+                scratch.fmv.push((0.5 * (s * s - ss)) as f32);
+            }
+        }
+        // head over [bottom_out ‖ fm]
+        let dl = self.bottom.last().map_or(self.n_dense, |bk| bk.n_out);
+        scratch.hin.clear();
+        scratch.hin.reserve(b * (dl + d));
+        for j in 0..b {
+            scratch.hin.extend_from_slice(&scratch.a[j * dl..(j + 1) * dl]);
+            scratch.hin.extend_from_slice(&scratch.fmv[j * d..(j + 1) * d]);
+        }
+        let mut logits = Vec::with_capacity(b);
+        self.head
+            .forward_batch(&scratch.hin, b, &mut logits, &mut scratch.bank);
+        logits.iter().map(|&l| 1.0 / (1.0 + (-l).exp())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nas::genome::autorac_best;
+    use crate::pim::crossbar::pim_linear_vec;
+    use crate::pim::{ProgrammedXbar, XbarActivity};
+
+    #[test]
+    fn bank_forward_matches_per_vector_reference() {
+        let cfg = PimConfig::default();
+        let mut rng = Rng::new(7);
+        let (k, n) = (50, 12);
+        let wf: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let (q, w_scale) = quant_sym(&wf, cfg.w_bits);
+        let wq = MatI32 {
+            rows: k,
+            cols: n,
+            data: q,
+        };
+        let bank = PimBank::from_quantized("t", &wq, w_scale, cfg);
+        let refx = ProgrammedXbar::program(&wq, cfg);
+        let b = 5;
+        let x: Vec<f32> = (0..b * k).map(|_| rng.normal() as f32).collect();
+        let mut got = Vec::new();
+        let mut scratch = BankScratch::default();
+        bank.forward_batch(&x, b, &mut got, &mut scratch);
+        for j in 0..b {
+            let mut act = XbarActivity::default();
+            let want = pim_linear_vec(&x[j * k..(j + 1) * k], w_scale, &refx, &mut act);
+            assert_eq!(&got[j * n..(j + 1) * n], &want[..], "row {j}");
+        }
+        assert!(scratch.xbar.activity.read_cycles > 0);
+    }
+
+    #[test]
+    fn net_probs_are_valid_and_deterministic() {
+        let g = autorac_best("criteo");
+        let net = build_pim_net(&g, 13, 26, 16, 42).unwrap();
+        let b = 4;
+        let mut rng = Rng::new(9);
+        let dense: Vec<f32> = (0..b * 13).map(|_| rng.normal() as f32).collect();
+        let sparse: Vec<f32> =
+            (0..b * 26 * 16).map(|_| (rng.normal() * 0.05) as f32).collect();
+        let mut s1 = NetScratch::default();
+        let p1 = net.forward_batch(&dense, &sparse, b, &mut s1);
+        let mut s2 = NetScratch::default();
+        let p2 = net.forward_batch(&dense, &sparse, b, &mut s2);
+        assert_eq!(p1.len(), b);
+        assert!(p1.iter().all(|p| (0.0..=1.0).contains(p)));
+        assert!(p1.iter().zip(&p2).all(|(a, c)| a.to_bits() == c.to_bits()));
+    }
+
+    #[test]
+    fn net_scores_are_batch_size_invariant() {
+        // per-row quantization ⇒ batching is purely a throughput choice
+        let g = autorac_best("avazu");
+        let (nd, ns, d) = (10, 9, 8);
+        let net = build_pim_net(&g, nd, ns, d, 3).unwrap();
+        let b = 6;
+        let mut rng = Rng::new(11);
+        let dense: Vec<f32> = (0..b * nd).map(|_| rng.normal() as f32).collect();
+        let sparse: Vec<f32> =
+            (0..b * ns * d).map(|_| (rng.normal() * 0.05) as f32).collect();
+        let mut sc = NetScratch::default();
+        let batched = net.forward_batch(&dense, &sparse, b, &mut sc);
+        for j in 0..b {
+            let one = net.forward_batch(
+                &dense[j * nd..(j + 1) * nd],
+                &sparse[j * ns * d..(j + 1) * ns * d],
+                1,
+                &mut sc,
+            );
+            assert_eq!(one[0].to_bits(), batched[j].to_bits(), "row {j}");
+        }
+    }
+
+    #[test]
+    fn banks_follow_genome_mixed_precision() {
+        let g = autorac_best("criteo");
+        let net = build_pim_net(&g, 13, 26, 16, 1).unwrap();
+        assert_eq!(net.bottom.len(), g.blocks.len());
+        for (bank, blk) in net.bottom.iter().zip(&g.blocks) {
+            assert_eq!(bank.xbar.cfg.w_bits, blk.dense_wbits, "{}", bank.name);
+            assert_eq!(bank.n_out, blk.dense_dim);
+        }
+        assert_eq!(net.head.xbar.cfg.w_bits, g.final_wbits);
+        assert_eq!(net.head.n_out, 1);
+        assert_eq!(net.proj.n_out, 16);
+    }
+
+    #[test]
+    fn build_rejects_degenerate_geometry() {
+        let g = autorac_best("criteo");
+        assert!(build_pim_net(&g, 0, 26, 16, 1).is_err());
+        assert!(build_pim_net(&g, 13, 26, 0, 1).is_err());
+    }
+}

@@ -1,10 +1,13 @@
 //! Operator→PIM mapping engine (S8). `cost` holds the closed-form
 //! bit-serial dataflow math; `mapper` builds the execution DAG and the
 //! tile inventory for a genome under Smart (paper §3.2) or Naive
-//! (Table 3 comparison) mapping.
+//! (Table 3 comparison) mapping; `banks` (S24) materializes a genome as
+//! functional `BatchedXbar` weight banks for the native serving backend.
 
+pub mod banks;
 pub mod cost;
 pub mod mapper;
 
+pub use banks::{build_pim_net, BankScratch, NetScratch, PimBank, PimNet};
 pub use cost::{cycle_time_ns, matmul_cost, OpCost};
 pub use mapper::{genome_eval_key, map_genome, MapStyle, MappedModel, MappedOp, OpKind};

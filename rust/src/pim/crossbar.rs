@@ -100,6 +100,10 @@ pub struct ProgrammedXbar {
     pub k: usize,
     pub n: usize,
     pub program_activity: XbarActivity,
+    /// input-independent offset-correction accumulator (the dummy-row
+    /// read of the all-`offset` vector), computed once at program time
+    /// (§Perf: was a second full `mvm_raw` per `mvm_corrected` call)
+    offset_corr: Vec<i64>,
 }
 
 impl ProgrammedXbar {
@@ -136,14 +140,28 @@ impl ProgrammedXbar {
             write_pulses: 2 * planes * k_pad as u64,
             ..Default::default()
         };
-        ProgrammedXbar {
+        let mut xbar = ProgrammedXbar {
             cfg,
             pos_planes,
             neg_planes,
             k: k_pad,
             n: wq.cols,
             program_activity,
-        }
+            offset_corr: Vec::new(),
+        };
+        // Dummy-row read: the correction term depends only on the
+        // programmed weights, so simulate it once here (with throwaway
+        // counters — programming is not a serving-time read).
+        let offset = 1i32 << (xbar.cfg.x_bits - 1);
+        let ones = vec![offset; k_pad];
+        let mut act = XbarActivity::default();
+        xbar.offset_corr = xbar.mvm_raw(&ones, &mut act);
+        xbar
+    }
+
+    /// The cached input-independent offset-correction vector.
+    pub fn offset_correction(&self) -> &[i64] {
+        &self.offset_corr
     }
 
     /// Bit-serial MVM of one offset-binary input vector (values in
@@ -201,11 +219,23 @@ impl ProgrammedXbar {
     /// offset correction applied (the dummy-row read). Matches
     /// ref.py::pim_linear_ref's integer core.
     pub fn mvm_corrected(&self, x_u: &[i32], activity: &mut XbarActivity) -> Vec<i64> {
-        let offset = 1i32 << (self.cfg.x_bits - 1);
         let acc = self.mvm_raw(x_u, activity);
-        let ones = vec![offset; self.k];
-        let corr = self.mvm_raw(&ones, activity);
-        acc.iter().zip(&corr).map(|(a, c)| a - c).collect()
+        #[cfg(test)]
+        {
+            // The cached vector must always equal a fresh dummy-row read.
+            let offset = 1i32 << (self.cfg.x_bits - 1);
+            let ones = vec![offset; self.k];
+            let mut act = XbarActivity::default();
+            assert_eq!(
+                self.mvm_raw(&ones, &mut act),
+                self.offset_corr,
+                "cached offset correction diverged from recomputation"
+            );
+        }
+        acc.iter()
+            .zip(&self.offset_corr)
+            .map(|(a, c)| a - c)
+            .collect()
     }
 }
 
@@ -223,27 +253,35 @@ pub fn quant_sym(w: &[f32], bits: usize) -> (Vec<i32>, f32) {
 
 /// Offset-binary activation quantization (ref.py::quant_act_u8).
 pub fn quant_act(x: &[f32], bits: usize) -> (Vec<i32>, f32) {
+    let mut q = Vec::new();
+    let scale = quant_act_into(x, bits, &mut q);
+    (q, scale)
+}
+
+/// [`quant_act`] into a caller-owned buffer (cleared first) — the
+/// allocation-free variant the batched serving path uses. Returns the
+/// per-vector scale.
+pub fn quant_act_into(x: &[f32], bits: usize, out: &mut Vec<i32>) -> f32 {
     let qmax = ((1i32 << (bits - 1)) - 1) as f32;
     let offset = 1i32 << (bits - 1);
     let amax = x.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-8);
     let scale = amax / qmax;
-    let q = x
-        .iter()
-        .map(|&v| (v / scale).round().clamp(-qmax, qmax) as i32 + offset)
-        .collect();
-    (q, scale)
+    out.clear();
+    out.extend(
+        x.iter()
+            .map(|&v| (v / scale).round().clamp(-qmax, qmax) as i32 + offset),
+    );
+    scale
 }
 
 /// Float-in/float-out PIM linear for one vector (ref.py::pim_linear_ref,
 /// B=1): the functional contract the HLO artifact also satisfies.
 pub fn pim_linear_vec(
     x: &[f32],
-    w: &MatI32,
     w_scale: f32,
     xbar: &ProgrammedXbar,
     activity: &mut XbarActivity,
 ) -> Vec<f32> {
-    let _ = w;
     let (mut x_u, x_scale) = quant_act(x, xbar.cfg.x_bits);
     x_u.resize(xbar.k, 1i32 << (xbar.cfg.x_bits - 1)); // pad at offset (=0.0)
     let out = xbar.mvm_corrected(&x_u, activity);
@@ -351,7 +389,7 @@ mod tests {
         let xbar = ProgrammedXbar::program(&wq, cfg);
         let x: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
         let mut act = XbarActivity::default();
-        let got = pim_linear_vec(&x, &wq, w_scale, &xbar, &mut act);
+        let got = pim_linear_vec(&x, w_scale, &xbar, &mut act);
         // fp reference
         for c in 0..n {
             let want: f32 = (0..k).map(|r| x[r] * wf[r * n + c]).sum();

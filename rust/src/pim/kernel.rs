@@ -1,0 +1,555 @@
+//! Batched, layout-optimized crossbar execution core (S23).
+//!
+//! [`super::crossbar::ProgrammedXbar::mvm_raw`] is the line-for-line
+//! functional reference (one vector, scalar inner loops). This module is
+//! the production kernel the serving path runs on: [`BatchedXbar`] stores
+//! the same differential bit-plane stacks in an execution-friendly layout
+//! and [`BatchedXbar::mvm_batch`] amortizes the tile/chunk/plane traversal
+//! over a whole batch. The contract is **bit-identity**: for any
+//! [`PimConfig`] — feasible or not — outputs (i64 accumulators) and
+//! [`XbarActivity`] counts equal the per-vector reference exactly
+//! (`rust/tests/xbar_kernel.rs`, re-checked in-run by `autorac
+//! xbar-bench`).
+//!
+//! Why it is fast (DESIGN.md §7 "§Perf"):
+//!
+//! * **Bit-plane packing + popcount.** A crossbar tile has ≤ 64 rows
+//!   (`xbar ∈ {16,32,64}`), so one weight column of one bit-plane fits a
+//!   single `u64` word over the tile's rows. Splitting each `cell_bits`
+//!   plane into its constituent bits (and each `dac_bits` chunk into its
+//!   input bits) turns the chunk×plane inner product into
+//!   `Σ popcount(x_word & w_word) << (xb+wb)` — at most `dac_bits ·
+//!   cell_bits ≤ 4` AND+popcount ops per column instead of an `xbar`-long
+//!   multiply-accumulate. Tiles wider than 64 rows fall back to a blocked
+//!   i64 path over column-contiguous (transposed) plane storage.
+//! * **Batch amortization.** Weight words are loaded once per
+//!   (tile, chunk, plane, sign, column) and reused by every batch lane;
+//!   input chunk bits are extracted once per (tile, chunk) into the
+//!   scratch arena.
+//! * **Lossless-ADC fast path.** `PimConfig::feasible()` guarantees the
+//!   full-scale column sum fits the ADC (`adc_step() == 1`), which makes
+//!   [`super::crossbar::adc_transfer`] the identity on every reachable
+//!   partial — the kernel skips the transfer entirely while still
+//!   counting the conversions.
+//! * **Program-time offset correction.** The input-independent dummy-row
+//!   vector is computed once at [`BatchedXbar::program`] time, so
+//!   [`BatchedXbar::mvm_corrected_batch`] is one kernel pass plus a
+//!   subtraction (the reference used to pay a second full MVM per call).
+//!
+//! The hot path is allocation-free after warmup: all per-call buffers
+//! live in the caller-owned [`XbarScratch`] arena.
+
+use super::config::PimConfig;
+use super::crossbar::{adc_transfer, MatI32, XbarActivity};
+
+/// Largest tile height the packed (popcount) layout supports: one `u64`
+/// word per column per bit-plane. Every size in
+/// [`super::config::XBAR_SIZES`] qualifies; larger experimental tiles
+/// use the blocked path.
+pub const PACK_MAX_XBAR: usize = 64;
+
+/// Layout decision, shared by `program` and `mvm_batch`: the packed path
+/// additionally requires the 2-wide word buffers to cover every bit
+/// (`CELL_OPTIONS`/`DAC_OPTIONS` cap at 2; hand-built exotic configs
+/// fall back to the blocked path rather than truncating).
+fn use_packed(cfg: &PimConfig) -> bool {
+    cfg.xbar <= PACK_MAX_XBAR && cfg.cell_bits <= 2 && cfg.dac_bits <= 2
+}
+
+/// Reusable scratch arena for [`BatchedXbar::mvm_batch`]: per-call
+/// buffers plus the activity counters the pass accumulates into
+/// (mirroring the `&mut XbarActivity` the reference takes). Create once,
+/// pass to every call; no allocations happen after the first call with
+/// the largest batch.
+#[derive(Default)]
+pub struct XbarScratch {
+    /// event counters accumulated by every pass using this arena
+    pub activity: XbarActivity,
+    /// packed path: input bit-masks for the current (tile, chunk) —
+    /// `[b × dac_bits]` words, bit `i` = input bit of tile row `i`
+    xmasks: Vec<u64>,
+    /// blocked path: chunk values of the current (tile, chunk) — `[b × xbar]`
+    chunks: Vec<i64>,
+}
+
+/// A programmed crossbar bank in batched-execution layout: differential
+/// bit-plane stacks stored column-blocked (packed into `u64` bit-words
+/// when the tile fits, transposed i32 blocks otherwise), plus the cached
+/// offset-correction vector.
+pub struct BatchedXbar {
+    pub cfg: PimConfig,
+    /// programmed rows (K padded to a multiple of `cfg.xbar`)
+    pub k: usize,
+    /// output columns
+    pub n: usize,
+    n_tiles: usize,
+    /// `feasible()` ⇒ `adc_transfer` is the identity on every reachable
+    /// partial sum — skip it (outputs unchanged, counts unchanged)
+    lossless: bool,
+    /// packed layout (tiles ≤ [`PACK_MAX_XBAR`] rows):
+    /// `words[(((p·2+s)·cell_bits + wb)·n_tiles + t)·n + col]` is the
+    /// `u64` row-mask of weight-bit `wb` of plane `p`, sign `s`, tile
+    /// `t`, column `col`
+    packed: Vec<u64>,
+    /// blocked fallback (tiles > [`PACK_MAX_XBAR`] rows):
+    /// `vals[((p·2+s)·n_tiles + t)·(n·xbar) + col·xbar + i]` is the
+    /// plane value at tile row `i` — column-contiguous for the dot loop
+    blocked: Vec<i32>,
+    /// raw accumulator of the all-`offset` input (the dummy-row read),
+    /// computed once at program time
+    offset_corr: Vec<i64>,
+    pub program_activity: XbarActivity,
+}
+
+impl BatchedXbar {
+    /// Program a signed integer weight matrix (values within `w_bits`).
+    /// Same contract and programming activity as
+    /// [`super::crossbar::ProgrammedXbar::program`]; only the storage
+    /// layout differs.
+    pub fn program(wq: &MatI32, cfg: PimConfig) -> BatchedXbar {
+        let wmax = (1i32 << (cfg.w_bits - 1)) - 1;
+        assert!(
+            wq.data.iter().all(|&w| w.abs() <= wmax),
+            "weights exceed w_bits range"
+        );
+        let k_pad = wq.rows.div_ceil(cfg.xbar) * cfg.xbar;
+        let n_tiles = k_pad / cfg.xbar;
+        let n = wq.cols;
+        let planes = cfg.n_planes();
+        let cell = cfg.cell_bits;
+        let cell_mask = (1i32 << cell) - 1;
+        let pack = use_packed(&cfg);
+
+        let mut packed = Vec::new();
+        let mut blocked = Vec::new();
+        if pack {
+            packed.resize(planes * 2 * cell * n_tiles * n, 0u64);
+        } else {
+            blocked.resize(planes * 2 * n_tiles * n * cfg.xbar, 0i32);
+        }
+        for r in 0..wq.rows {
+            let (t, i) = (r / cfg.xbar, r % cfg.xbar);
+            for c in 0..n {
+                let w = wq.at(r, c);
+                for (s, mag) in [(0usize, w.max(0)), (1, (-w).max(0))] {
+                    for p in 0..planes {
+                        let pv = (mag >> (p * cell)) & cell_mask;
+                        if pv == 0 {
+                            continue;
+                        }
+                        if pack {
+                            for wb in 0..cell {
+                                if (pv >> wb) & 1 == 1 {
+                                    let idx = (((p * 2 + s) * cell + wb) * n_tiles
+                                        + t)
+                                        * n
+                                        + c;
+                                    packed[idx] |= 1u64 << i;
+                                }
+                            }
+                        } else {
+                            let idx = ((p * 2 + s) * n_tiles + t) * (n * cfg.xbar)
+                                + c * cfg.xbar
+                                + i;
+                            blocked[idx] = pv;
+                        }
+                    }
+                }
+            }
+        }
+
+        let program_activity = XbarActivity {
+            cells_written: 2 * planes as u64 * (k_pad * n) as u64,
+            write_pulses: 2 * planes as u64 * k_pad as u64,
+            ..Default::default()
+        };
+        let mut xb = BatchedXbar {
+            cfg,
+            k: k_pad,
+            n,
+            n_tiles,
+            lossless: cfg.feasible(),
+            packed,
+            blocked,
+            offset_corr: Vec::new(),
+            program_activity,
+        };
+        // Dummy-row read: the offset correction is input-independent, so
+        // simulate it once here instead of once per corrected MVM.
+        let offset = 1i32 << (cfg.x_bits - 1);
+        let ones = vec![offset; k_pad];
+        let mut corr = vec![0i64; n];
+        let mut scratch = XbarScratch::default();
+        xb.mvm_batch(&ones, 1, &mut corr, &mut scratch);
+        xb.offset_corr = corr;
+        xb
+    }
+
+    /// The cached input-independent offset-correction vector (raw
+    /// accumulator of the all-`offset` input).
+    pub fn offset_correction(&self) -> &[i64] {
+        &self.offset_corr
+    }
+
+    /// Batched bit-serial MVM: `xs` is row-major `[b × k]` (each vector
+    /// padded to `k` by the caller, offset-binary in `[0, 2^x_bits)`),
+    /// `out` is `[b × n]` raw accumulators (overwritten). Bit-identical
+    /// to calling [`super::crossbar::ProgrammedXbar::mvm_raw`] on each
+    /// row, including the counts accumulated into `scratch.activity`.
+    pub fn mvm_batch(
+        &self,
+        xs: &[i32],
+        b: usize,
+        out: &mut [i64],
+        scratch: &mut XbarScratch,
+    ) {
+        assert_eq!(xs.len(), b * self.k, "xs must be [b × k] (pad each row to k)");
+        assert_eq!(out.len(), b * self.n, "out must be [b × n]");
+        out.iter_mut().for_each(|v| *v = 0);
+        // NB: no early-out on n == 0 — the reference still counts
+        // read_cycles for a zero-column bank, and so must we.
+        if b == 0 {
+            return;
+        }
+        if use_packed(&self.cfg) {
+            self.mvm_batch_packed(xs, b, out, scratch);
+        } else {
+            self.mvm_batch_blocked(xs, b, out, scratch);
+        }
+    }
+
+    /// [`BatchedXbar::mvm_batch`] plus the cached offset correction:
+    /// matches [`super::crossbar::ProgrammedXbar::mvm_corrected`] per row.
+    pub fn mvm_corrected_batch(
+        &self,
+        xs: &[i32],
+        b: usize,
+        out: &mut [i64],
+        scratch: &mut XbarScratch,
+    ) {
+        self.mvm_batch(xs, b, out, scratch);
+        for j in 0..b {
+            for (o, &c) in out[j * self.n..(j + 1) * self.n]
+                .iter_mut()
+                .zip(&self.offset_corr)
+            {
+                *o -= c;
+            }
+        }
+    }
+
+    /// AND+popcount path: every tile row fits one `u64` word.
+    fn mvm_batch_packed(
+        &self,
+        xs: &[i32],
+        b: usize,
+        out: &mut [i64],
+        scratch: &mut XbarScratch,
+    ) {
+        let cfg = &self.cfg;
+        let (dac, cell, xbar, n) = (cfg.dac_bits, cfg.cell_bits, cfg.xbar, self.n);
+        debug_assert!(cell <= 2 && dac <= 2, "packed path word buffer is 2-wide");
+        scratch.xmasks.clear();
+        scratch.xmasks.resize(b * dac, 0);
+        for t in 0..self.n_tiles {
+            let r0 = t * xbar;
+            for c in 0..cfg.n_chunks() {
+                scratch.activity.read_cycles += b as u64;
+                let cshift = c * dac;
+                // Input bit extraction, once per (tile, chunk) per lane.
+                for j in 0..b {
+                    let row = &xs[j * self.k + r0..j * self.k + r0 + xbar];
+                    for xb in 0..dac {
+                        let mut m = 0u64;
+                        for (i, &x) in row.iter().enumerate() {
+                            m |= (((x >> (cshift + xb)) & 1) as u64) << i;
+                        }
+                        scratch.xmasks[j * dac + xb] = m;
+                    }
+                }
+                for p in 0..cfg.n_planes() {
+                    let shift = (cshift + p * cell) as u32;
+                    for s in 0..2usize {
+                        let sign = if s == 0 { 1i64 } else { -1i64 };
+                        scratch.activity.adc_conversions += (b * n) as u64;
+                        scratch.activity.shift_adds += (b * n) as u64;
+                        let row_base = ((p * 2 + s) * cell) * self.n_tiles + t;
+                        for col in 0..n {
+                            // ≤ 2 weight words per column (cell_bits ≤ 2)
+                            let mut ww = [0u64; 2];
+                            for (wb, w) in ww.iter_mut().take(cell).enumerate() {
+                                *w = self.packed
+                                    [(row_base + wb * self.n_tiles) * n + col];
+                            }
+                            for j in 0..b {
+                                let mut v = 0i64;
+                                for xb in 0..dac {
+                                    let m = scratch.xmasks[j * dac + xb];
+                                    for (wb, &w) in
+                                        ww.iter().take(cell).enumerate()
+                                    {
+                                        v += ((m & w).count_ones() as i64)
+                                            << (xb + wb);
+                                    }
+                                }
+                                let q = if self.lossless {
+                                    v
+                                } else {
+                                    adc_transfer(v, cfg)
+                                };
+                                out[j * n + col] += sign * (q << shift);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Blocked i64 fallback for tiles wider than [`PACK_MAX_XBAR`] rows:
+    /// column-contiguous plane storage, per-column dot products.
+    fn mvm_batch_blocked(
+        &self,
+        xs: &[i32],
+        b: usize,
+        out: &mut [i64],
+        scratch: &mut XbarScratch,
+    ) {
+        let cfg = &self.cfg;
+        let (xbar, n) = (cfg.xbar, self.n);
+        let dac_mask = (1i32 << cfg.dac_bits) - 1;
+        scratch.chunks.clear();
+        scratch.chunks.resize(b * xbar, 0);
+        for t in 0..self.n_tiles {
+            let r0 = t * xbar;
+            for c in 0..cfg.n_chunks() {
+                scratch.activity.read_cycles += b as u64;
+                let cshift = c * cfg.dac_bits;
+                for j in 0..b {
+                    let row = &xs[j * self.k + r0..j * self.k + r0 + xbar];
+                    for (i, &x) in row.iter().enumerate() {
+                        scratch.chunks[j * xbar + i] = ((x >> cshift) & dac_mask) as i64;
+                    }
+                }
+                for p in 0..cfg.n_planes() {
+                    let shift = (cshift + p * cfg.cell_bits) as u32;
+                    for s in 0..2usize {
+                        let sign = if s == 0 { 1i64 } else { -1i64 };
+                        scratch.activity.adc_conversions += (b * n) as u64;
+                        scratch.activity.shift_adds += (b * n) as u64;
+                        let plane = &self.blocked
+                            [((p * 2 + s) * self.n_tiles + t) * (n * xbar)..]
+                            [..n * xbar];
+                        for col in 0..n {
+                            let wcol = &plane[col * xbar..(col + 1) * xbar];
+                            for j in 0..b {
+                                let ch = &scratch.chunks[j * xbar..(j + 1) * xbar];
+                                let mut v = 0i64;
+                                for (&cv, &w) in ch.iter().zip(wcol) {
+                                    v += cv * w as i64;
+                                }
+                                let q = if self.lossless {
+                                    v
+                                } else {
+                                    adc_transfer(v, cfg)
+                                };
+                                out[j * n + col] += sign * (q << shift);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::crossbar::ProgrammedXbar;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rng: &mut Rng, rows: usize, cols: usize, wmax: i32) -> MatI32 {
+        let mut m = MatI32::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.set(r, c, rng.below((2 * wmax + 1) as u64) as i32 - wmax);
+            }
+        }
+        m
+    }
+
+    fn random_inputs(rng: &mut Rng, b: usize, k: usize, x_bits: usize) -> Vec<i32> {
+        (0..b * k)
+            .map(|_| rng.below(1u64 << x_bits) as i32)
+            .collect()
+    }
+
+    /// Outputs and activity of the per-vector reference on `b` rows.
+    fn reference(
+        xbar: &ProgrammedXbar,
+        xs: &[i32],
+        b: usize,
+    ) -> (Vec<i64>, XbarActivity) {
+        let mut act = XbarActivity::default();
+        let mut out = Vec::with_capacity(b * xbar.n);
+        for j in 0..b {
+            out.extend(xbar.mvm_raw(&xs[j * xbar.k..(j + 1) * xbar.k], &mut act));
+        }
+        (out, act)
+    }
+
+    #[test]
+    fn packed_path_matches_reference_on_default_config() {
+        let cfg = PimConfig::default();
+        let mut rng = Rng::new(1);
+        let wq = random_mat(&mut rng, 100, 17, 127); // K padded 100 → 128
+        let refx = ProgrammedXbar::program(&wq, cfg);
+        let bx = BatchedXbar::program(&wq, cfg);
+        assert_eq!((bx.k, bx.n), (refx.k, refx.n));
+        assert_eq!(bx.program_activity, refx.program_activity);
+        for b in [1usize, 7, 32] {
+            let xs = random_inputs(&mut rng, b, bx.k, cfg.x_bits);
+            let (want, want_act) = reference(&refx, &xs, b);
+            let mut out = vec![0i64; b * bx.n];
+            let mut scratch = XbarScratch::default();
+            bx.mvm_batch(&xs, b, &mut out, &mut scratch);
+            assert_eq!(out, want, "b={b}");
+            assert_eq!(scratch.activity, want_act, "b={b}");
+        }
+    }
+
+    #[test]
+    fn lossy_adc_config_still_bit_identical() {
+        let cfg = PimConfig {
+            xbar: 64,
+            dac_bits: 2,
+            cell_bits: 2,
+            adc_bits: 8,
+            ..Default::default()
+        };
+        assert!(!cfg.feasible());
+        let mut rng = Rng::new(2);
+        let wq = random_mat(&mut rng, 64, 11, 127);
+        let refx = ProgrammedXbar::program(&wq, cfg);
+        let bx = BatchedXbar::program(&wq, cfg);
+        let xs = random_inputs(&mut rng, 5, bx.k, cfg.x_bits);
+        let (want, want_act) = reference(&refx, &xs, 5);
+        let mut out = vec![0i64; 5 * bx.n];
+        let mut scratch = XbarScratch::default();
+        bx.mvm_batch(&xs, 5, &mut out, &mut scratch);
+        assert_eq!(out, want);
+        assert_eq!(scratch.activity, want_act);
+    }
+
+    #[test]
+    fn blocked_fallback_matches_reference() {
+        // xbar > PACK_MAX_XBAR exercises the blocked path; 128·1·1 = 128
+        // ≤ 255 is even feasible (lossless blocked), 128·1·3 is lossy.
+        for cfg in [
+            PimConfig {
+                xbar: 128,
+                dac_bits: 1,
+                cell_bits: 1,
+                adc_bits: 8,
+                ..Default::default()
+            },
+            PimConfig {
+                xbar: 128,
+                dac_bits: 1,
+                cell_bits: 2,
+                adc_bits: 8,
+                ..Default::default()
+            },
+        ] {
+            let mut rng = Rng::new(3);
+            let wq = random_mat(&mut rng, 130, 6, 127); // pads 130 → 256
+            let refx = ProgrammedXbar::program(&wq, cfg);
+            let bx = BatchedXbar::program(&wq, cfg);
+            let xs = random_inputs(&mut rng, 4, bx.k, cfg.x_bits);
+            let (want, want_act) = reference(&refx, &xs, 4);
+            let mut out = vec![0i64; 4 * bx.n];
+            let mut scratch = XbarScratch::default();
+            bx.mvm_batch(&xs, 4, &mut out, &mut scratch);
+            assert_eq!(out, want, "cfg {cfg:?}");
+            assert_eq!(scratch.activity, want_act, "cfg {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn corrected_batch_matches_reference_corrected() {
+        let cfg = PimConfig::default();
+        let mut rng = Rng::new(4);
+        let wq = random_mat(&mut rng, cfg.xbar, 9, 127);
+        let refx = ProgrammedXbar::program(&wq, cfg);
+        let bx = BatchedXbar::program(&wq, cfg);
+        assert_eq!(bx.offset_correction(), refx.offset_correction());
+        let b = 3;
+        let xs = random_inputs(&mut rng, b, bx.k, cfg.x_bits);
+        let mut out = vec![0i64; b * bx.n];
+        let mut scratch = XbarScratch::default();
+        bx.mvm_corrected_batch(&xs, b, &mut out, &mut scratch);
+        for j in 0..b {
+            let mut act = XbarActivity::default();
+            let want = refx.mvm_corrected(&xs[j * bx.k..(j + 1) * bx.k], &mut act);
+            assert_eq!(&out[j * bx.n..(j + 1) * bx.n], &want[..], "row {j}");
+        }
+    }
+
+    #[test]
+    fn scratch_is_reusable_across_batch_sizes() {
+        let cfg = PimConfig::default();
+        let mut rng = Rng::new(5);
+        let wq = random_mat(&mut rng, 64, 4, 127);
+        let bx = BatchedXbar::program(&wq, cfg);
+        let mut scratch = XbarScratch::default();
+        let mut last = Vec::new();
+        for b in [8usize, 1, 3] {
+            let xs = random_inputs(&mut rng, b, bx.k, cfg.x_bits);
+            let mut out = vec![0i64; b * bx.n];
+            bx.mvm_batch(&xs, b, &mut out, &mut scratch);
+            last = out;
+        }
+        assert_eq!(last.len(), 3 * bx.n);
+        assert!(scratch.activity.read_cycles > 0);
+    }
+
+    #[test]
+    fn zero_batch_is_a_noop() {
+        let cfg = PimConfig::default();
+        let wq = MatI32::zeros(64, 3);
+        let bx = BatchedXbar::program(&wq, cfg);
+        let mut out: Vec<i64> = Vec::new();
+        let mut scratch = XbarScratch::default();
+        bx.mvm_batch(&[], 0, &mut out, &mut scratch);
+        assert_eq!(scratch.activity, XbarActivity::default());
+    }
+
+    #[test]
+    fn zero_column_bank_still_counts_reads() {
+        // n == 0 must not short-circuit: the reference charges the
+        // read cycles of driving the (column-less) wordlines regardless
+        let cfg = PimConfig::default();
+        let wq = MatI32::zeros(64, 0);
+        let refx = ProgrammedXbar::program(&wq, cfg);
+        let bx = BatchedXbar::program(&wq, cfg);
+        let xs = vec![0i32; bx.k];
+        let mut act = XbarActivity::default();
+        let want = refx.mvm_raw(&xs, &mut act);
+        assert!(want.is_empty());
+        assert!(act.read_cycles > 0);
+        let mut out: Vec<i64> = Vec::new();
+        let mut scratch = XbarScratch::default();
+        bx.mvm_batch(&xs, 1, &mut out, &mut scratch);
+        assert_eq!(scratch.activity, act);
+    }
+
+    #[test]
+    fn weights_out_of_range_panic() {
+        let cfg = PimConfig::default().with_wbits(4);
+        let mut wq = MatI32::zeros(4, 4);
+        wq.set(0, 0, 100);
+        let r = std::panic::catch_unwind(|| BatchedXbar::program(&wq, cfg));
+        assert!(r.is_err());
+    }
+}

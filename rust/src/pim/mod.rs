@@ -5,6 +5,7 @@
 pub mod buffer;
 pub mod config;
 pub mod crossbar;
+pub mod kernel;
 pub mod mbsa;
 pub mod noise;
 pub mod params;
@@ -13,7 +14,11 @@ pub mod transposed;
 
 pub use buffer::Buffer;
 pub use config::PimConfig;
-pub use crossbar::{adc_transfer, quant_act, quant_sym, MatI32, ProgrammedXbar, XbarActivity};
+pub use crossbar::{
+    adc_transfer, quant_act, quant_act_into, quant_sym, MatI32, ProgrammedXbar,
+    XbarActivity,
+};
+pub use kernel::{BatchedXbar, XbarScratch};
 pub use mbsa::Mbsa;
 pub use noise::NoiseModel;
 pub use params::{Component, TechParams};

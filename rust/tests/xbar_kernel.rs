@@ -1,0 +1,178 @@
+//! Kernel-parity suite (ISSUE 4): `BatchedXbar::mvm_batch` must be
+//! bit-identical — `i64`-equal outputs AND equal `XbarActivity` counts —
+//! to the per-vector `ProgrammedXbar::mvm_raw` reference across every
+//! feasible PIM config, infeasible (lossy-ADC) configs, ragged batch
+//! sizes (1 / 7 / a compiled-batch-sized 32), and K-padding edges.
+//! The same contract backs `autorac xbar-bench`'s in-run parity gate.
+
+use autorac::nas::genome::WEIGHT_BITS;
+use autorac::pim::{
+    BatchedXbar, MatI32, PimConfig, ProgrammedXbar, XbarActivity, XbarScratch,
+};
+use autorac::prop_assert_eq;
+use autorac::util::qcheck::{qcheck, Gen};
+use autorac::util::rng::Rng;
+
+/// Batch sizes the property draws from: 1 (serve path floor), 7 (ragged),
+/// 32 (the default compiled/serving batch).
+const BATCHES: [usize; 3] = [1, 7, 32];
+
+fn random_mat(rng: &mut Rng, rows: usize, cols: usize, wmax: i32) -> MatI32 {
+    let mut m = MatI32::zeros(rows, cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            m.set(r, c, rng.below((2 * wmax + 1) as u64) as i32 - wmax);
+        }
+    }
+    m
+}
+
+/// Per-vector reference outputs + activity over a padded `[b × k]` batch.
+fn reference(xbar: &ProgrammedXbar, xs: &[i32], b: usize) -> (Vec<i64>, XbarActivity) {
+    let mut act = XbarActivity::default();
+    let mut out = Vec::with_capacity(b * xbar.n);
+    for j in 0..b {
+        out.extend(xbar.mvm_raw(&xs[j * xbar.k..(j + 1) * xbar.k], &mut act));
+    }
+    (out, act)
+}
+
+/// One parity case: program both layouts with the same weights, drive the
+/// same inputs, compare raw outputs, corrected outputs, and activity.
+fn check_parity(cfg: PimConfig, g: &mut Gen) -> Result<(), String> {
+    let wmax = (1i32 << (cfg.w_bits - 1)) - 1;
+    // rows straddle tile boundaries: exercises K-padding on both sides
+    let rows = g.usize(1, 2 * cfg.xbar + 5);
+    let cols = g.usize(1, 24);
+    let wq = random_mat(g.rng(), rows, cols, wmax);
+    let refx = ProgrammedXbar::program(&wq, cfg);
+    let bx = BatchedXbar::program(&wq, cfg);
+    prop_assert_eq!(bx.k, refx.k);
+    prop_assert_eq!(bx.n, refx.n);
+    prop_assert_eq!(bx.program_activity, refx.program_activity);
+    prop_assert_eq!(bx.offset_correction(), refx.offset_correction());
+
+    let b = *g.choose(&BATCHES);
+    // real rows padded to k — pad value varies (0 vs offset) to pin that
+    // padding is the caller's semantic choice, not the kernel's
+    let pad = if g.bool() { 0 } else { 1i32 << (cfg.x_bits - 1) };
+    let mut xs = Vec::with_capacity(b * bx.k);
+    for _ in 0..b {
+        for _ in 0..rows.min(bx.k) {
+            xs.push(g.rng().below(1u64 << cfg.x_bits) as i32);
+        }
+        xs.resize(xs.len() + (bx.k - rows.min(bx.k)), pad);
+    }
+
+    let (want, want_act) = reference(&refx, &xs, b);
+    let mut out = vec![0i64; b * bx.n];
+    let mut scratch = XbarScratch::default();
+    bx.mvm_batch(&xs, b, &mut out, &mut scratch);
+    prop_assert_eq!(&out, &want);
+    prop_assert_eq!(scratch.activity, want_act);
+
+    // corrected path: same subtraction as the reference's cached vector
+    let mut corrected = vec![0i64; b * bx.n];
+    bx.mvm_corrected_batch(&xs, b, &mut corrected, &mut scratch);
+    for j in 0..b {
+        let mut act = XbarActivity::default();
+        let want_c = refx.mvm_corrected(&xs[j * bx.k..(j + 1) * bx.k], &mut act);
+        prop_assert_eq!(&corrected[j * bx.n..(j + 1) * bx.n], &want_c[..]);
+    }
+    Ok(())
+}
+
+#[test]
+fn batched_kernel_matches_reference_on_all_feasible_configs() {
+    let configs = PimConfig::enumerate_feasible();
+    assert!(!configs.is_empty());
+    qcheck(40, |g| {
+        let cfg = g.choose(&configs).with_wbits(*g.choose(&WEIGHT_BITS));
+        check_parity(cfg, g)
+    });
+}
+
+#[test]
+fn batched_kernel_matches_reference_on_lossy_adc_configs() {
+    // infeasible ⇒ adc_transfer is NOT the identity; the kernel must
+    // reproduce the reference's quantized partials bit for bit
+    let lossy = [
+        PimConfig {
+            xbar: 64,
+            dac_bits: 2,
+            cell_bits: 2,
+            adc_bits: 8,
+            ..Default::default()
+        },
+        PimConfig {
+            xbar: 16,
+            dac_bits: 1,
+            cell_bits: 1,
+            adc_bits: 4,
+            ..Default::default()
+        },
+        PimConfig {
+            xbar: 64,
+            dac_bits: 2,
+            cell_bits: 1,
+            adc_bits: 6,
+            ..Default::default()
+        },
+    ];
+    for cfg in &lossy {
+        assert!(!cfg.feasible(), "{cfg:?} is meant to be infeasible");
+    }
+    qcheck(25, |g| {
+        let cfg = g.choose(&lossy).with_wbits(*g.choose(&WEIGHT_BITS));
+        check_parity(cfg, g)
+    });
+}
+
+#[test]
+fn batched_kernel_matches_reference_on_blocked_tiles() {
+    // tiles wider than the packed path's 64-row word: blocked i64 path
+    let wide = [
+        PimConfig {
+            xbar: 128,
+            dac_bits: 1,
+            cell_bits: 1,
+            adc_bits: 8,
+            ..Default::default()
+        }, // feasible → lossless blocked
+        PimConfig {
+            xbar: 96,
+            dac_bits: 1,
+            cell_bits: 2,
+            adc_bits: 8,
+            ..Default::default()
+        }, // infeasible → lossy blocked
+    ];
+    qcheck(12, |g| {
+        let cfg = g.choose(&wide).with_wbits(*g.choose(&WEIGHT_BITS));
+        check_parity(cfg, g)
+    });
+}
+
+#[test]
+fn every_feasible_config_is_covered_at_every_batch_size() {
+    // deterministic exhaustive floor under the qcheck sampling above:
+    // all feasible configs × all pinned batch sizes, one seed
+    let mut rng = Rng::new(0x5EED);
+    for cfg in PimConfig::enumerate_feasible() {
+        let wmax = (1i32 << (cfg.w_bits - 1)) - 1;
+        let wq = random_mat(&mut rng, cfg.xbar * 2 - 3, 7, wmax);
+        let refx = ProgrammedXbar::program(&wq, cfg);
+        let bx = BatchedXbar::program(&wq, cfg);
+        for b in BATCHES {
+            let xs: Vec<i32> = (0..b * bx.k)
+                .map(|_| rng.below(1u64 << cfg.x_bits) as i32)
+                .collect();
+            let (want, want_act) = reference(&refx, &xs, b);
+            let mut out = vec![0i64; b * bx.n];
+            let mut scratch = XbarScratch::default();
+            bx.mvm_batch(&xs, b, &mut out, &mut scratch);
+            assert_eq!(out, want, "cfg {cfg:?} b={b}");
+            assert_eq!(scratch.activity, want_act, "cfg {cfg:?} b={b}");
+        }
+    }
+}

@@ -50,6 +50,21 @@ if ! printf '%s\n' "$bench_out" | grep -q "parallel trace bit-identical to seria
     exit 1
 fi
 
+echo "== xbar-bench parity smoke: batched kernel vs reference =="
+# The batched crossbar kernel's contract is bit-identity with the
+# per-vector reference (outputs AND activity counts) on every config.
+# xbar-bench ensure!s it in-run and exits non-zero on any mismatch;
+# fail-closed on the parity line disappearing too.
+xbar_out=$(cargo run --quiet --release --bin autorac -- xbar-bench --quick)
+printf '%s\n' "$xbar_out"
+if ! printf '%s\n' "$xbar_out" | grep -q "parity: OK"; then
+    echo "ERROR: xbar-bench did not report kernel parity"
+    exit 1
+fi
+
+echo "== kernel-parity property suite under --release =="
+cargo test -q --release --test xbar_kernel
+
 echo "== hygiene: no un-gated #[ignore] tests =="
 # Skipping must be an artifact-gate (runtime check + eprintln SKIP), not
 # a silent #[ignore]: any #[ignore] line must carry an 'artifact'
