@@ -95,6 +95,43 @@ fn main() -> autorac::Result<()> {
             std::hint::black_box(&out);
         });
     }
+    // tile-geometry × thread sweep: rows = tile height (48 packs into
+    // one word, 128/256 into two/four — the geometries the deleted i64
+    // fallback used to catch), threads ∈ {1, all cores}. Bit-identity
+    // at every point is pinned by tests/xbar_threads.rs; this measures
+    // the wall-clock only.
+    let host = SearchConfig::all_cores();
+    let thread_grid: Vec<usize> = if host > 1 { vec![1, host] } else { vec![1] };
+    for &rows in &[48usize, 128, 256] {
+        let tcfg = PimConfig {
+            xbar: rows,
+            dac_bits: 1,
+            cell_bits: 1,
+            adc_bits: 8,
+            ..PimConfig::default()
+        };
+        let mut tw = MatI32::zeros(2 * rows, 64); // 2 tiles → real spans
+        for r in 0..2 * rows {
+            for c in 0..64 {
+                tw.set(r, c, rng2.below(255) as i32 - 127);
+            }
+        }
+        let tbx = BatchedXbar::program(&tw, tcfg);
+        let bsz = 32usize;
+        let xs: Vec<i32> =
+            (0..bsz * tbx.k).map(|_| rng2.below(256) as i32).collect();
+        let mut out = vec![0i64; bsz * tbx.n];
+        for &threads in &thread_grid {
+            let mut ts = XbarScratch::with_threads(threads);
+            b.bench(
+                &format!("crossbar_mvm_batch rows={rows} b={bsz} threads={threads}"),
+                || {
+                    tbx.mvm_batch(&xs, bsz, &mut out, &mut ts);
+                    std::hint::black_box(&out);
+                },
+            );
+        }
+    }
 
     // -- data + embeddings ------------------------------------------------
     let prof = profile("criteo")?;

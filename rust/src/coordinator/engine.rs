@@ -23,6 +23,23 @@ pub trait InferenceEngine {
         batch: usize,
     ) -> crate::Result<Vec<f32>>;
 
+    /// [`InferenceEngine::infer_batch`] into a caller-owned buffer
+    /// (cleared first). The serving worker calls this with one reused
+    /// `probs` buffer per batch; engines that can score without
+    /// allocating (`PimEngine`) override it, the default delegates.
+    fn infer_batch_into(
+        &mut self,
+        dense: &[f32],
+        sparse: &[f32],
+        batch: usize,
+        out: &mut Vec<f32>,
+    ) -> crate::Result<()> {
+        let probs = self.infer_batch(dense, sparse, batch)?;
+        out.clear();
+        out.extend_from_slice(&probs);
+        Ok(())
+    }
+
     /// The artifact's compiled batch size (inputs are padded to this).
     fn compiled_batch(&self) -> usize;
     fn n_dense(&self) -> usize;
@@ -136,6 +153,14 @@ impl PimEngine {
         })
     }
 
+    /// Let every crossbar pass of this engine use up to `threads` worker
+    /// threads (`XbarScratch::with_threads`). Scores are bit-identical
+    /// at any setting — call at construction time, before serving.
+    pub fn with_threads(mut self, threads: usize) -> PimEngine {
+        self.scratch = NetScratch::with_threads(threads);
+        self
+    }
+
     /// Crossbar event counts accumulated by every batch served so far.
     pub fn activity(&self) -> XbarActivity {
         self.scratch.bank.xbar.activity
@@ -149,6 +174,21 @@ impl InferenceEngine for PimEngine {
         sparse: &[f32],
         batch: usize,
     ) -> crate::Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(batch);
+        self.infer_batch_into(dense, sparse, batch, &mut out)?;
+        Ok(out)
+    }
+
+    /// The allocation-free scoring path: with a warmed `out` and the
+    /// engine's persistent `NetScratch`, a served batch allocates
+    /// nothing.
+    fn infer_batch_into(
+        &mut self,
+        dense: &[f32],
+        sparse: &[f32],
+        batch: usize,
+        out: &mut Vec<f32>,
+    ) -> crate::Result<()> {
         crate::ensure!(batch <= self.batch, "batch {batch} > engine batch {}", self.batch);
         crate::ensure!(
             dense.len() >= batch * self.net.n_dense,
@@ -162,7 +202,9 @@ impl InferenceEngine for PimEngine {
             sparse.len(),
             batch * self.net.n_sparse * self.net.d_emb
         );
-        Ok(self.net.forward_batch(dense, sparse, batch, &mut self.scratch))
+        self.net
+            .forward_batch_into(dense, sparse, batch, out, &mut self.scratch);
+        Ok(())
     }
 
     fn compiled_batch(&self) -> usize {
@@ -305,6 +347,26 @@ mod tests {
                 .unwrap();
             assert_eq!(one[0].to_bits(), batched[j].to_bits(), "row {j}");
         }
+    }
+
+    #[test]
+    fn pim_engine_threads_and_into_buffer_do_not_change_scores() {
+        let g = autorac_best("criteo");
+        let mut e1 = PimEngine::new(&g, 8, 13, 26, 16, 7).unwrap();
+        let mut e4 = PimEngine::new(&g, 8, 13, 26, 16, 7).unwrap().with_threads(4);
+        let b = 4;
+        let dense: Vec<f32> = (0..b * 13).map(|i| (i as f32 * 0.17).sin()).collect();
+        let sparse: Vec<f32> =
+            (0..b * 26 * 16).map(|i| (i as f32 * 0.05).cos() * 0.05).collect();
+        let p1 = e1.infer_batch(&dense, &sparse, b).unwrap();
+        // reused out-buffer across calls, threads=4
+        let mut probs = vec![9.0f32; 99]; // stale garbage must be cleared
+        e4.infer_batch_into(&dense, &sparse, b, &mut probs).unwrap();
+        assert_eq!(probs.len(), b);
+        assert!(p1.iter().zip(&probs).all(|(a, c)| a.to_bits() == c.to_bits()));
+        e4.infer_batch_into(&dense, &sparse, b, &mut probs).unwrap();
+        assert!(p1.iter().zip(&probs).all(|(a, c)| a.to_bits() == c.to_bits()));
+        assert_eq!(e1.activity().read_cycles * 2, e4.activity().read_cycles);
     }
 
     #[test]

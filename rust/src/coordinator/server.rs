@@ -292,6 +292,22 @@ struct WorkerCtx {
     shed_after: Option<Duration>,
 }
 
+/// Saturating queue-depth decrement. The gauge is shared by concurrent
+/// submitters (`Router::dispatch` increments, and transiently overshoots
+/// then rolls back on rejection) and this worker; the old
+/// `fetch_sub(n.min(depth.load()))` pattern is a check-then-act race —
+/// two racing decrements (or a rollback landing between the load and the
+/// sub) can drive the counter below the subtrahend and wrap it to
+/// `usize::MAX`, after which `route_bounded` sees an eternally-full
+/// queue and rejects everything. A `fetch_update` CAS loop re-reads the
+/// current value on every attempt, so the subtraction saturates at 0
+/// instead of underflowing, whatever interleaving happens.
+pub(crate) fn depth_release(depth: &std::sync::atomic::AtomicUsize, n: usize) {
+    let _ = depth.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+        Some(d.saturating_sub(n))
+    });
+}
+
 fn worker_loop(ctx: WorkerCtx) {
     let WorkerCtx {
         rx,
@@ -308,15 +324,19 @@ fn worker_loop(ctx: WorkerCtx) {
         ServingStore::Sharded(s) => worker % s.map.n_shards,
     };
     let nd = engine.n_dense();
+    let (ns, d_emb) = (engine.n_sparse(), engine.d_emb());
     let cap = engine.compiled_batch().min(bcfg.max_batch);
     let bcfg = BatcherConfig {
         max_batch: cap,
         ..bcfg
     };
-    let mut dense = Vec::new();
-    let mut sparse = Vec::new();
+    // Persistent per-worker arenas sized to the compiled batch: the
+    // gather/score hot path below allocates nothing per batch.
+    let mut dense: Vec<f32> = Vec::with_capacity(cap * nd);
+    let mut sparse: Vec<f32> = Vec::with_capacity(cap * ns * d_emb);
+    let mut probs: Vec<f32> = Vec::with_capacity(cap);
     while let Some(mut batch) = collect_batch(&rx, &bcfg) {
-        depth.fetch_sub(batch.len().min(depth.load(Ordering::Relaxed)), Ordering::Relaxed);
+        depth_release(&depth, batch.len());
         // Load shedding: a request that sat in the queue past its
         // budget is dropped here (its reply sender closes unanswered) —
         // under overload this keeps served latency bounded instead of
@@ -338,14 +358,16 @@ fn worker_loop(ctx: WorkerCtx) {
             .map(|r| r.enqueued.elapsed().as_nanos() as u64)
             .max()
             .unwrap_or(0);
-        // assemble inputs: dense [B×nd], gather sparse [B×Ns×d]
+        // assemble inputs: dense [B×nd], gather sparse [B×Ns×d] — both
+        // written in place into the persistent arenas (truncate/zero-pad
+        // the dense row without the per-request clone the old path paid)
         dense.clear();
         sparse.clear();
         let (mut local_rows, mut remote_rows) = (0usize, 0usize);
         for r in &batch {
-            let mut row = r.dense.clone();
-            row.resize(nd, 0.0);
-            dense.extend_from_slice(&row);
+            let take = r.dense.len().min(nd);
+            dense.extend_from_slice(&r.dense[..take]);
+            dense.resize(dense.len() + (nd - take), 0.0);
             match &store {
                 ServingStore::Shared(s) => {
                     s.gather_fields(&r.fields, &r.ids, &mut sparse);
@@ -360,11 +382,11 @@ fn worker_loop(ctx: WorkerCtx) {
             }
         }
         metrics.on_gather(local_rows, remote_rows);
-        match engine.infer_batch(&dense, &sparse, batch.len()) {
-            Ok(probs) => {
+        match engine.infer_batch_into(&dense, &sparse, batch.len(), &mut probs) {
+            Ok(()) => {
                 let exec_ns = t_exec.elapsed().as_nanos() as u64;
                 metrics.on_batch(batch.len(), queue_ns, exec_ns);
-                for (r, p) in batch.into_iter().zip(probs) {
+                for (r, &p) in batch.into_iter().zip(&probs) {
                     let e2e = r.enqueued.elapsed().as_nanos() as u64;
                     metrics.on_response(e2e);
                     let _ = r.reply.send(Response {
@@ -596,6 +618,43 @@ mod tests {
         assert_eq!(snap.rejected, rejected);
         assert_eq!(snap.responses + snap.rejected, n);
         c.shutdown();
+    }
+
+    #[test]
+    fn depth_release_never_underflows_under_concurrent_updates() {
+        // Regression for the racy `fetch_sub(n.min(load()))` pattern:
+        // hammer one gauge with racing decrements whose total exceeds
+        // the increments. An underflow wraps to ~usize::MAX, which the
+        // bounded router would read as an eternally-full queue; the
+        // saturating CAS loop must land at a small, sane value instead.
+        use std::sync::atomic::AtomicUsize;
+        let depth = Arc::new(AtomicUsize::new(0));
+        let threads = 8;
+        let rounds = 2000;
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let d = depth.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..rounds {
+                    if (t + i) % 3 == 0 {
+                        d.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        // decrements outnumber increments 2:1
+                        depth_release(&d, 1);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // never wrapped: the gauge is bounded by the total increments
+        let v = depth.load(Ordering::Relaxed);
+        assert!(v <= threads * rounds, "depth gauge wrapped: {v}");
+        // and a direct over-subtraction saturates at zero
+        depth.store(3, Ordering::Relaxed);
+        depth_release(&depth, 10);
+        assert_eq!(depth.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -45,6 +45,18 @@ pub struct BankScratch {
     acc: Vec<i64>,
 }
 
+impl BankScratch {
+    /// Scratch whose crossbar passes may use up to `threads` worker
+    /// threads ([`XbarScratch::with_threads`]) — bit-identical results
+    /// at any setting.
+    pub fn with_threads(threads: usize) -> BankScratch {
+        BankScratch {
+            xbar: XbarScratch::with_threads(threads),
+            ..BankScratch::default()
+        }
+    }
+}
+
 impl PimBank {
     /// Program an already-quantized weight matrix (`wq` within
     /// `cfg.w_bits`) with its dequantization scale.
@@ -155,6 +167,19 @@ pub struct NetScratch {
     bx: Vec<f32>,
     fmv: Vec<f32>,
     hin: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl NetScratch {
+    /// Scratch whose crossbar passes may use up to `threads` worker
+    /// threads — a pure wall-clock knob (scores are bit-identical at
+    /// any setting, test-pinned).
+    pub fn with_threads(threads: usize) -> NetScratch {
+        NetScratch {
+            bank: BankScratch::with_threads(threads),
+            ..NetScratch::default()
+        }
+    }
 }
 
 /// Build the serving bank stack of a genome for a dataset geometry
@@ -215,6 +240,22 @@ impl PimNet {
         b: usize,
         scratch: &mut NetScratch,
     ) -> Vec<f32> {
+        let mut out = Vec::with_capacity(b);
+        self.forward_batch_into(dense, sparse, b, &mut out, scratch);
+        out
+    }
+
+    /// [`PimNet::forward_batch`] into a caller-owned buffer (cleared
+    /// first) — the allocation-free variant the serving worker runs:
+    /// with a warmed `out` and `scratch`, a pass allocates nothing.
+    pub fn forward_batch_into(
+        &self,
+        dense: &[f32],
+        sparse: &[f32],
+        b: usize,
+        out: &mut Vec<f32>,
+        scratch: &mut NetScratch,
+    ) {
         let d = self.d_emb;
         let ns = self.n_sparse;
         // bottom MLP (ReLU after every bank)
@@ -257,10 +298,11 @@ impl PimNet {
             scratch.hin.extend_from_slice(&scratch.a[j * dl..(j + 1) * dl]);
             scratch.hin.extend_from_slice(&scratch.fmv[j * d..(j + 1) * d]);
         }
-        let mut logits = Vec::with_capacity(b);
+        scratch.logits.clear();
         self.head
-            .forward_batch(&scratch.hin, b, &mut logits, &mut scratch.bank);
-        logits.iter().map(|&l| 1.0 / (1.0 + (-l).exp())).collect()
+            .forward_batch(&scratch.hin, b, &mut scratch.logits, &mut scratch.bank);
+        out.clear();
+        out.extend(scratch.logits.iter().map(|&l| 1.0 / (1.0 + (-l).exp())));
     }
 }
 
@@ -339,6 +381,10 @@ mod tests {
             assert_eq!(one[0].to_bits(), batched[j].to_bits(), "row {j}");
         }
     }
+
+    // NB: PimNet/PimEngine thread-invariance (scores bit-identical at
+    // any NetScratch::with_threads setting) is pinned once, in
+    // tests/xbar_threads.rs — not duplicated here.
 
     #[test]
     fn banks_follow_genome_mixed_precision() {

@@ -1,31 +1,37 @@
-//! Batched, layout-optimized crossbar execution core (S23).
+//! Batched, layout-optimized, multi-core crossbar execution core (S23/S25).
 //!
 //! [`super::crossbar::ProgrammedXbar::mvm_raw`] is the line-for-line
 //! functional reference (one vector, scalar inner loops). This module is
 //! the production kernel the serving path runs on: [`BatchedXbar`] stores
 //! the same differential bit-plane stacks in an execution-friendly layout
 //! and [`BatchedXbar::mvm_batch`] amortizes the tile/chunk/plane traversal
-//! over a whole batch. The contract is **bit-identity**: for any
-//! [`PimConfig`] — feasible or not — outputs (i64 accumulators) and
+//! over a whole batch, optionally across worker threads. The contract is
+//! **bit-identity**: for any [`PimConfig`] — feasible or not, any tile
+//! height, any thread count — outputs (i64 accumulators) and
 //! [`XbarActivity`] counts equal the per-vector reference exactly
-//! (`rust/tests/xbar_kernel.rs`, re-checked in-run by `autorac
-//! xbar-bench`).
+//! (`rust/tests/xbar_kernel.rs`, `rust/tests/xbar_threads.rs`, re-checked
+//! in-run by `autorac xbar-bench`).
 //!
-//! Why it is fast (DESIGN.md §7 "§Perf"):
+//! Why it is fast (DESIGN.md §7 "§Perf", §7.8):
 //!
-//! * **Bit-plane packing + popcount.** A crossbar tile has ≤ 64 rows
-//!   (`xbar ∈ {16,32,64}`), so one weight column of one bit-plane fits a
-//!   single `u64` word over the tile's rows. Splitting each `cell_bits`
-//!   plane into its constituent bits (and each `dac_bits` chunk into its
-//!   input bits) turns the chunk×plane inner product into
-//!   `Σ popcount(x_word & w_word) << (xb+wb)` — at most `dac_bits ·
-//!   cell_bits ≤ 4` AND+popcount ops per column instead of an `xbar`-long
-//!   multiply-accumulate. Tiles wider than 64 rows fall back to a blocked
-//!   i64 path over column-contiguous (transposed) plane storage.
+//! * **Multi-word bit-plane packing + popcount.** One weight column of
+//!   one bit-plane is stored as `ceil(xbar/64)` `u64` row-mask words, so
+//!   EVERY tile geometry — including experimental tiles wider than 64
+//!   rows — takes the packed path: the chunk×plane inner product is
+//!   `Σ_w popcount(x_word[w] & w_word[w]) << (xb+wb)`, i.e. at most
+//!   `dac_bits · cell_bits · n_words` AND+popcount ops per column
+//!   instead of an `xbar`-long multiply-accumulate. (The old blocked
+//!   i64 fallback for tiles > 64 rows is gone.)
 //! * **Batch amortization.** Weight words are loaded once per
 //!   (tile, chunk, plane, sign, column) and reused by every batch lane;
 //!   input chunk bits are extracted once per (tile, chunk) into the
 //!   scratch arena.
+//! * **Tile-parallel execution.** [`XbarScratch::with_threads`] splits
+//!   the independent (tile, chunk) work units across scoped worker
+//!   threads, each accumulating into its own per-lane arena; the lanes
+//!   are then folded with plain integer addition, which commutes
+//!   exactly — so any thread count produces bit-identical outputs AND
+//!   activity counts (§7.8's determinism argument).
 //! * **Lossless-ADC fast path.** `PimConfig::feasible()` guarantees the
 //!   full-scale column sum fits the ADC (`adc_step() == 1`), which makes
 //!   [`super::crossbar::adc_transfer`] the identity on every reachable
@@ -37,45 +43,89 @@
 //!   subtraction (the reference used to pay a second full MVM per call).
 //!
 //! The hot path is allocation-free after warmup: all per-call buffers
-//! live in the caller-owned [`XbarScratch`] arena.
+//! (including every thread lane's) live in the caller-owned
+//! [`XbarScratch`] arena.
 
 use super::config::PimConfig;
 use super::crossbar::{adc_transfer, MatI32, XbarActivity};
 
-/// Largest tile height the packed (popcount) layout supports: one `u64`
-/// word per column per bit-plane. Every size in
-/// [`super::config::XBAR_SIZES`] qualifies; larger experimental tiles
-/// use the blocked path.
-pub const PACK_MAX_XBAR: usize = 64;
+/// Rows per packed word: one `u64` row-mask covers 64 tile rows; a tile
+/// of `xbar` rows needs `ceil(xbar / PACK_WORD_BITS)` words per column
+/// per weight bit.
+pub const PACK_WORD_BITS: usize = 64;
 
-/// Layout decision, shared by `program` and `mvm_batch`: the packed path
-/// additionally requires the 2-wide word buffers to cover every bit
-/// (`CELL_OPTIONS`/`DAC_OPTIONS` cap at 2; hand-built exotic configs
-/// fall back to the blocked path rather than truncating).
-fn use_packed(cfg: &PimConfig) -> bool {
-    cfg.xbar <= PACK_MAX_XBAR && cfg.cell_bits <= 2 && cfg.dac_bits <= 2
+/// Stack capacity (in `u64` words) for one column's hoisted weight
+/// words (`cell_bits × n_words` of them). Covers every realistic
+/// geometry — `cell_bits ≤ 2` and tiles up to 512 rows; anything bigger
+/// spills to the heap arena instead (same results, one memcpy more).
+const WW_STACK: usize = 16;
+
+/// Minimum number of inner word-operations (`units × planes × 2 ×
+/// cols × b × dac·cell·n_words`) before [`BatchedXbar::mvm_batch`] fans
+/// work out to scoped worker threads. Each call that crosses it spawns
+/// and joins its workers (`std::thread::scope` — scoped borrows instead
+/// of a persistent queue), so the threshold is set where the compute
+/// dwarfs the ~tens-of-µs spawn cost; below it (e.g. a 1-column scoring
+/// head) the serial path runs. Purely a performance knob — results are
+/// bit-identical either way.
+const PAR_MIN_OPS: usize = 1 << 17;
+
+/// One worker thread's private slice of the arena: input bit-masks, a
+/// partial output accumulator, and partial activity counters. Folded
+/// into the caller's output/activity after the scope joins.
+#[derive(Default)]
+struct Lane {
+    xmasks: Vec<u64>,
+    wwbuf: Vec<u64>,
+    out: Vec<i64>,
+    activity: XbarActivity,
 }
 
 /// Reusable scratch arena for [`BatchedXbar::mvm_batch`]: per-call
 /// buffers plus the activity counters the pass accumulates into
 /// (mirroring the `&mut XbarActivity` the reference takes). Create once,
 /// pass to every call; no allocations happen after the first call with
-/// the largest batch.
+/// the largest batch. [`XbarScratch::with_threads`] turns on
+/// tile-parallel execution (bit-identical results at any thread count).
 #[derive(Default)]
 pub struct XbarScratch {
     /// event counters accumulated by every pass using this arena
     pub activity: XbarActivity,
-    /// packed path: input bit-masks for the current (tile, chunk) —
-    /// `[b × dac_bits]` words, bit `i` = input bit of tile row `i`
+    /// worker threads `mvm_batch` may fan out to (0 and 1 = serial)
+    threads: usize,
+    /// main-lane input bit-masks for the current (tile, chunk):
+    /// `[b × dac_bits × n_words]` words, word `w` bit `i` = input bit of
+    /// tile row `w·64 + i`
     xmasks: Vec<u64>,
-    /// blocked path: chunk values of the current (tile, chunk) — `[b × xbar]`
-    chunks: Vec<i64>,
+    /// main-lane per-column weight words (`cell_bits × n_words`), loaded
+    /// once per column and reused by every batch lane
+    wwbuf: Vec<u64>,
+    /// extra-thread arenas (partial outputs + counters), reused across calls
+    lanes: Vec<Lane>,
+}
+
+impl XbarScratch {
+    /// Arena that lets `mvm_batch` split tile execution across up to
+    /// `threads` OS threads (the calling thread counts as one). 0 and 1
+    /// both mean serial. Thread count never changes a single output or
+    /// activity bit — it is purely a wall-clock knob.
+    pub fn with_threads(threads: usize) -> XbarScratch {
+        XbarScratch {
+            threads,
+            ..XbarScratch::default()
+        }
+    }
+
+    /// Configured worker-thread cap (0/1 = serial).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
 }
 
 /// A programmed crossbar bank in batched-execution layout: differential
-/// bit-plane stacks stored column-blocked (packed into `u64` bit-words
-/// when the tile fits, transposed i32 blocks otherwise), plus the cached
-/// offset-correction vector.
+/// bit-plane stacks stored column-blocked and packed into `u64` row-mask
+/// words (multi-word when the tile has more than 64 rows), plus the
+/// cached offset-correction vector.
 pub struct BatchedXbar {
     pub cfg: PimConfig,
     /// programmed rows (K padded to a multiple of `cfg.xbar`)
@@ -83,18 +133,16 @@ pub struct BatchedXbar {
     /// output columns
     pub n: usize,
     n_tiles: usize,
+    /// `u64` words per column per weight bit: `ceil(xbar / 64)`
+    n_words: usize,
     /// `feasible()` ⇒ `adc_transfer` is the identity on every reachable
     /// partial sum — skip it (outputs unchanged, counts unchanged)
     lossless: bool,
-    /// packed layout (tiles ≤ [`PACK_MAX_XBAR`] rows):
-    /// `words[(((p·2+s)·cell_bits + wb)·n_tiles + t)·n + col]` is the
-    /// `u64` row-mask of weight-bit `wb` of plane `p`, sign `s`, tile
-    /// `t`, column `col`
+    /// packed layout:
+    /// `words[((((p·2+s)·cell_bits + wb)·n_tiles + t)·n + col)·n_words + w]`
+    /// is the row-mask of weight-bit `wb` of plane `p`, sign `s`, tile
+    /// `t`, column `col`, covering tile rows `w·64 .. w·64+64`
     packed: Vec<u64>,
-    /// blocked fallback (tiles > [`PACK_MAX_XBAR`] rows):
-    /// `vals[((p·2+s)·n_tiles + t)·(n·xbar) + col·xbar + i]` is the
-    /// plane value at tile row `i` — column-contiguous for the dot loop
-    blocked: Vec<i32>,
     /// raw accumulator of the all-`offset` input (the dummy-row read),
     /// computed once at program time
     offset_corr: Vec<i64>,
@@ -114,21 +162,16 @@ impl BatchedXbar {
         );
         let k_pad = wq.rows.div_ceil(cfg.xbar) * cfg.xbar;
         let n_tiles = k_pad / cfg.xbar;
+        let n_words = cfg.xbar.div_ceil(PACK_WORD_BITS);
         let n = wq.cols;
         let planes = cfg.n_planes();
         let cell = cfg.cell_bits;
         let cell_mask = (1i32 << cell) - 1;
-        let pack = use_packed(&cfg);
 
-        let mut packed = Vec::new();
-        let mut blocked = Vec::new();
-        if pack {
-            packed.resize(planes * 2 * cell * n_tiles * n, 0u64);
-        } else {
-            blocked.resize(planes * 2 * n_tiles * n * cfg.xbar, 0i32);
-        }
+        let mut packed = vec![0u64; planes * 2 * cell * n_tiles * n * n_words];
         for r in 0..wq.rows {
             let (t, i) = (r / cfg.xbar, r % cfg.xbar);
+            let (word, bit) = (i / PACK_WORD_BITS, i % PACK_WORD_BITS);
             for c in 0..n {
                 let w = wq.at(r, c);
                 for (s, mag) in [(0usize, w.max(0)), (1, (-w).max(0))] {
@@ -137,21 +180,16 @@ impl BatchedXbar {
                         if pv == 0 {
                             continue;
                         }
-                        if pack {
-                            for wb in 0..cell {
-                                if (pv >> wb) & 1 == 1 {
-                                    let idx = (((p * 2 + s) * cell + wb) * n_tiles
-                                        + t)
-                                        * n
-                                        + c;
-                                    packed[idx] |= 1u64 << i;
-                                }
+                        for wb in 0..cell {
+                            if (pv >> wb) & 1 == 1 {
+                                let idx = (((((p * 2 + s) * cell + wb) * n_tiles
+                                    + t)
+                                    * n
+                                    + c)
+                                    * n_words)
+                                    + word;
+                                packed[idx] |= 1u64 << bit;
                             }
-                        } else {
-                            let idx = ((p * 2 + s) * n_tiles + t) * (n * cfg.xbar)
-                                + c * cfg.xbar
-                                + i;
-                            blocked[idx] = pv;
                         }
                     }
                 }
@@ -168,9 +206,9 @@ impl BatchedXbar {
             k: k_pad,
             n,
             n_tiles,
+            n_words,
             lossless: cfg.feasible(),
             packed,
-            blocked,
             offset_corr: Vec::new(),
             program_activity,
         };
@@ -195,7 +233,8 @@ impl BatchedXbar {
     /// padded to `k` by the caller, offset-binary in `[0, 2^x_bits)`),
     /// `out` is `[b × n]` raw accumulators (overwritten). Bit-identical
     /// to calling [`super::crossbar::ProgrammedXbar::mvm_raw`] on each
-    /// row, including the counts accumulated into `scratch.activity`.
+    /// row, including the counts accumulated into `scratch.activity` —
+    /// at any `XbarScratch::with_threads` setting.
     pub fn mvm_batch(
         &self,
         xs: &[i32],
@@ -211,10 +250,76 @@ impl BatchedXbar {
         if b == 0 {
             return;
         }
-        if use_packed(&self.cfg) {
-            self.mvm_batch_packed(xs, b, out, scratch);
-        } else {
-            self.mvm_batch_blocked(xs, b, out, scratch);
+        // Independent work units: one (tile, chunk) pair each. Anything
+        // a unit adds to `out`/activity commutes exactly (integer sums),
+        // so partitioning the unit range is invisible in the result.
+        let units = self.n_tiles * self.cfg.n_chunks();
+        let ops = units
+            * self.cfg.n_planes()
+            * 2
+            * self.n
+            * b
+            * (self.cfg.dac_bits * self.cfg.cell_bits * self.n_words);
+        let threads = scratch.threads.clamp(1, units.max(1));
+        if threads == 1 || ops < PAR_MIN_OPS {
+            self.run_units(
+                0..units,
+                xs,
+                b,
+                out,
+                &mut scratch.xmasks,
+                &mut scratch.wwbuf,
+                &mut scratch.activity,
+            );
+            return;
+        }
+        // Fan out: contiguous unit spans, one per thread. The calling
+        // thread takes span 0 and accumulates straight into `out`; each
+        // worker accumulates into its own zeroed lane arena. When `units`
+        // does not divide evenly, only as many lanes as have a non-empty
+        // span are kept — no thread is ever spawned to do nothing.
+        let per = units.div_ceil(threads);
+        let n_lanes = units.div_ceil(per) - 1;
+        scratch.lanes.resize_with(n_lanes, Lane::default);
+        std::thread::scope(|sc| {
+            for (w, lane) in scratch.lanes.iter_mut().enumerate() {
+                let lo = (w + 1) * per;
+                let hi = ((w + 2) * per).min(units);
+                debug_assert!(lo < hi, "empty lane span must not be spawned");
+                sc.spawn(move || {
+                    lane.out.clear();
+                    lane.out.resize(b * self.n, 0);
+                    lane.activity = XbarActivity::default();
+                    self.run_units(
+                        lo..hi,
+                        xs,
+                        b,
+                        &mut lane.out,
+                        &mut lane.xmasks,
+                        &mut lane.wwbuf,
+                        &mut lane.activity,
+                    );
+                });
+            }
+            self.run_units(
+                0..per,
+                xs,
+                b,
+                out,
+                &mut scratch.xmasks,
+                &mut scratch.wwbuf,
+                &mut scratch.activity,
+            );
+        });
+        // Order-independent reduction: lane partials and counters fold
+        // in with plain integer addition (commutative and associative
+        // exactly), so the fold order — and the thread count — cannot
+        // change a bit.
+        for lane in &scratch.lanes {
+            for (o, &p) in out.iter_mut().zip(&lane.out) {
+                *o += p;
+            }
+            scratch.activity.merge(&lane.activity);
         }
     }
 
@@ -238,123 +343,101 @@ impl BatchedXbar {
         }
     }
 
-    /// AND+popcount path: every tile row fits one `u64` word.
-    fn mvm_batch_packed(
+    /// AND+popcount core over a contiguous range of (tile, chunk) work
+    /// units. Accumulates into `out` (not zeroed here) and `activity`;
+    /// `xmasks` and `wwbuf` are this lane's input-bit and weight-word
+    /// arenas.
+    fn run_units(
         &self,
+        units: std::ops::Range<usize>,
         xs: &[i32],
         b: usize,
         out: &mut [i64],
-        scratch: &mut XbarScratch,
+        xmasks: &mut Vec<u64>,
+        wwbuf: &mut Vec<u64>,
+        activity: &mut XbarActivity,
     ) {
         let cfg = &self.cfg;
-        let (dac, cell, xbar, n) = (cfg.dac_bits, cfg.cell_bits, cfg.xbar, self.n);
-        debug_assert!(cell <= 2 && dac <= 2, "packed path word buffer is 2-wide");
-        scratch.xmasks.clear();
-        scratch.xmasks.resize(b * dac, 0);
-        for t in 0..self.n_tiles {
+        let (dac, cell, xbar, n, nw) =
+            (cfg.dac_bits, cfg.cell_bits, cfg.xbar, self.n, self.n_words);
+        let n_chunks = cfg.n_chunks();
+        // per-(plane,sign,wb) stride between weight-bit blocks
+        let wb_stride = self.n_tiles * n * nw;
+        xmasks.clear();
+        xmasks.resize(b * dac * nw, 0);
+        // one column's hoisted weight words: stack for every realistic
+        // geometry, heap arena for hand-built exotic ones
+        let mut ww_stack = [0u64; WW_STACK];
+        for u in units {
+            let (t, c) = (u / n_chunks, u % n_chunks);
             let r0 = t * xbar;
-            for c in 0..cfg.n_chunks() {
-                scratch.activity.read_cycles += b as u64;
-                let cshift = c * dac;
-                // Input bit extraction, once per (tile, chunk) per lane.
-                for j in 0..b {
-                    let row = &xs[j * self.k + r0..j * self.k + r0 + xbar];
-                    for xb in 0..dac {
-                        let mut m = 0u64;
-                        for (i, &x) in row.iter().enumerate() {
-                            m |= (((x >> (cshift + xb)) & 1) as u64) << i;
+            activity.read_cycles += b as u64;
+            let cshift = c * dac;
+            // Input bit extraction, once per (tile, chunk) per lane.
+            for j in 0..b {
+                let row = &xs[j * self.k + r0..j * self.k + r0 + xbar];
+                for xb in 0..dac {
+                    let base = (j * dac + xb) * nw;
+                    for (w, m) in xmasks[base..base + nw].iter_mut().enumerate() {
+                        let lo = w * PACK_WORD_BITS;
+                        let hi = (lo + PACK_WORD_BITS).min(xbar);
+                        let mut mask = 0u64;
+                        for (i, &x) in row[lo..hi].iter().enumerate() {
+                            mask |= (((x >> (cshift + xb)) & 1) as u64) << i;
                         }
-                        scratch.xmasks[j * dac + xb] = m;
-                    }
-                }
-                for p in 0..cfg.n_planes() {
-                    let shift = (cshift + p * cell) as u32;
-                    for s in 0..2usize {
-                        let sign = if s == 0 { 1i64 } else { -1i64 };
-                        scratch.activity.adc_conversions += (b * n) as u64;
-                        scratch.activity.shift_adds += (b * n) as u64;
-                        let row_base = ((p * 2 + s) * cell) * self.n_tiles + t;
-                        for col in 0..n {
-                            // ≤ 2 weight words per column (cell_bits ≤ 2)
-                            let mut ww = [0u64; 2];
-                            for (wb, w) in ww.iter_mut().take(cell).enumerate() {
-                                *w = self.packed
-                                    [(row_base + wb * self.n_tiles) * n + col];
-                            }
-                            for j in 0..b {
-                                let mut v = 0i64;
-                                for xb in 0..dac {
-                                    let m = scratch.xmasks[j * dac + xb];
-                                    for (wb, &w) in
-                                        ww.iter().take(cell).enumerate()
-                                    {
-                                        v += ((m & w).count_ones() as i64)
-                                            << (xb + wb);
-                                    }
-                                }
-                                let q = if self.lossless {
-                                    v
-                                } else {
-                                    adc_transfer(v, cfg)
-                                };
-                                out[j * n + col] += sign * (q << shift);
-                            }
-                        }
+                        *m = mask;
                     }
                 }
             }
-        }
-    }
-
-    /// Blocked i64 fallback for tiles wider than [`PACK_MAX_XBAR`] rows:
-    /// column-contiguous plane storage, per-column dot products.
-    fn mvm_batch_blocked(
-        &self,
-        xs: &[i32],
-        b: usize,
-        out: &mut [i64],
-        scratch: &mut XbarScratch,
-    ) {
-        let cfg = &self.cfg;
-        let (xbar, n) = (cfg.xbar, self.n);
-        let dac_mask = (1i32 << cfg.dac_bits) - 1;
-        scratch.chunks.clear();
-        scratch.chunks.resize(b * xbar, 0);
-        for t in 0..self.n_tiles {
-            let r0 = t * xbar;
-            for c in 0..cfg.n_chunks() {
-                scratch.activity.read_cycles += b as u64;
-                let cshift = c * cfg.dac_bits;
-                for j in 0..b {
-                    let row = &xs[j * self.k + r0..j * self.k + r0 + xbar];
-                    for (i, &x) in row.iter().enumerate() {
-                        scratch.chunks[j * xbar + i] = ((x >> cshift) & dac_mask) as i64;
-                    }
-                }
-                for p in 0..cfg.n_planes() {
-                    let shift = (cshift + p * cfg.cell_bits) as u32;
-                    for s in 0..2usize {
-                        let sign = if s == 0 { 1i64 } else { -1i64 };
-                        scratch.activity.adc_conversions += (b * n) as u64;
-                        scratch.activity.shift_adds += (b * n) as u64;
-                        let plane = &self.blocked
-                            [((p * 2 + s) * self.n_tiles + t) * (n * xbar)..]
-                            [..n * xbar];
-                        for col in 0..n {
-                            let wcol = &plane[col * xbar..(col + 1) * xbar];
-                            for j in 0..b {
-                                let ch = &scratch.chunks[j * xbar..(j + 1) * xbar];
-                                let mut v = 0i64;
-                                for (&cv, &w) in ch.iter().zip(wcol) {
-                                    v += cv * w as i64;
-                                }
-                                let q = if self.lossless {
-                                    v
-                                } else {
-                                    adc_transfer(v, cfg)
-                                };
-                                out[j * n + col] += sign * (q << shift);
+            for p in 0..cfg.n_planes() {
+                let shift = (cshift + p * cell) as u32;
+                for s in 0..2usize {
+                    let sign = if s == 0 { 1i64 } else { -1i64 };
+                    activity.adc_conversions += (b * n) as u64;
+                    activity.shift_adds += (b * n) as u64;
+                    // base of (plane p, sign s, weight-bit 0, tile t)
+                    let plane_base = (((p * 2 + s) * cell) * self.n_tiles + t) * n;
+                    for col in 0..n {
+                        let col_base = (plane_base + col) * nw;
+                        // Load this column's cell·nw weight words once;
+                        // every batch lane and input bit reuses them
+                        // (the "loaded once per column" contract).
+                        let ww_col: &[u64] = if cell * nw <= WW_STACK {
+                            for wb in 0..cell {
+                                ww_stack[wb * nw..(wb + 1) * nw].copy_from_slice(
+                                    &self.packed[col_base + wb * wb_stride..][..nw],
+                                );
                             }
+                            &ww_stack[..cell * nw]
+                        } else {
+                            wwbuf.clear();
+                            for wb in 0..cell {
+                                wwbuf.extend_from_slice(
+                                    &self.packed[col_base + wb * wb_stride..][..nw],
+                                );
+                            }
+                            wwbuf
+                        };
+                        for j in 0..b {
+                            let xm_base = j * dac * nw;
+                            let mut v = 0i64;
+                            for xb in 0..dac {
+                                let xm = &xmasks[xm_base + xb * nw..][..nw];
+                                for wb in 0..cell {
+                                    let ww = &ww_col[wb * nw..(wb + 1) * nw];
+                                    let mut pc = 0u64;
+                                    for (&a, &w) in xm.iter().zip(ww) {
+                                        pc += (a & w).count_ones() as u64;
+                                    }
+                                    v += (pc as i64) << (xb + wb);
+                                }
+                            }
+                            let q = if self.lossless {
+                                v
+                            } else {
+                                adc_transfer(v, cfg)
+                            };
+                            out[j * n + col] += sign * (q << shift);
                         }
                     }
                 }
@@ -443,9 +526,10 @@ mod tests {
     }
 
     #[test]
-    fn blocked_fallback_matches_reference() {
-        // xbar > PACK_MAX_XBAR exercises the blocked path; 128·1·1 = 128
-        // ≤ 255 is even feasible (lossless blocked), 128·1·3 is lossy.
+    fn wide_tiles_take_the_multi_word_packed_path() {
+        // xbar > 64 used to hit a blocked i64 fallback; it now packs
+        // into ceil(xbar/64) words. 128·1·1 = 128 ≤ 255 is feasible
+        // (lossless), 128·1·3 is lossy — both must match the reference.
         for cfg in [
             PimConfig {
                 xbar: 128,
@@ -461,11 +545,28 @@ mod tests {
                 adc_bits: 8,
                 ..Default::default()
             },
+            // non-multiple-of-64 width: last word is partial
+            PimConfig {
+                xbar: 96,
+                dac_bits: 2,
+                cell_bits: 1,
+                adc_bits: 8,
+                ..Default::default()
+            },
+            // three words per column
+            PimConfig {
+                xbar: 192,
+                dac_bits: 1,
+                cell_bits: 1,
+                adc_bits: 8,
+                ..Default::default()
+            },
         ] {
             let mut rng = Rng::new(3);
-            let wq = random_mat(&mut rng, 130, 6, 127); // pads 130 → 256
+            let wq = random_mat(&mut rng, cfg.xbar + 2, 6, 127); // ragged pad
             let refx = ProgrammedXbar::program(&wq, cfg);
             let bx = BatchedXbar::program(&wq, cfg);
+            assert_eq!(bx.n_words, cfg.xbar.div_ceil(64), "cfg {cfg:?}");
             let xs = random_inputs(&mut rng, 4, bx.k, cfg.x_bits);
             let (want, want_act) = reference(&refx, &xs, 4);
             let mut out = vec![0i64; 4 * bx.n];
@@ -474,6 +575,48 @@ mod tests {
             assert_eq!(out, want, "cfg {cfg:?}");
             assert_eq!(scratch.activity, want_act, "cfg {cfg:?}");
         }
+    }
+
+    #[test]
+    fn threaded_execution_is_bit_identical_to_serial() {
+        let cfg = PimConfig::default();
+        let mut rng = Rng::new(6);
+        let wq = random_mat(&mut rng, 300, 24, 127); // 5 tiles → real spans
+        let bx = BatchedXbar::program(&wq, cfg);
+        let b = 16;
+        let xs = random_inputs(&mut rng, b, bx.k, cfg.x_bits);
+        let mut serial = vec![0i64; b * bx.n];
+        let mut s1 = XbarScratch::with_threads(1);
+        bx.mvm_batch(&xs, b, &mut serial, &mut s1);
+        for threads in [2usize, 3, 8, 64] {
+            let mut out = vec![0i64; b * bx.n];
+            let mut st = XbarScratch::with_threads(threads);
+            // this workload clears PAR_MIN_OPS (40 units × 4 planes × 2
+            // signs × 24 cols × b=16 × 2 word-ops ≈ 2^18), so the
+            // parallel path actually runs
+            bx.mvm_batch(&xs, b, &mut out, &mut st);
+            assert_eq!(out, serial, "threads={threads}");
+            assert_eq!(st.activity, s1.activity, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn small_workloads_stay_serial_but_identical() {
+        // below PAR_MIN_OPS the kernel silently runs serial — results
+        // must still match a threads=1 arena bit for bit
+        let cfg = PimConfig::default();
+        let mut rng = Rng::new(8);
+        let wq = random_mat(&mut rng, 40, 3, 127);
+        let bx = BatchedXbar::program(&wq, cfg);
+        let xs = random_inputs(&mut rng, 2, bx.k, cfg.x_bits);
+        let mut a = vec![0i64; 2 * bx.n];
+        let mut b1 = vec![0i64; 2 * bx.n];
+        let mut sa = XbarScratch::with_threads(4);
+        let mut sb = XbarScratch::default();
+        bx.mvm_batch(&xs, 2, &mut a, &mut sa);
+        bx.mvm_batch(&xs, 2, &mut b1, &mut sb);
+        assert_eq!(a, b1);
+        assert_eq!(sa.activity, sb.activity);
     }
 
     #[test]
@@ -502,7 +645,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let wq = random_mat(&mut rng, 64, 4, 127);
         let bx = BatchedXbar::program(&wq, cfg);
-        let mut scratch = XbarScratch::default();
+        let mut scratch = XbarScratch::with_threads(2);
         let mut last = Vec::new();
         for b in [8usize, 1, 3] {
             let xs = random_inputs(&mut rng, b, bx.k, cfg.x_bits);

@@ -1,9 +1,12 @@
-//! Kernel-parity suite (ISSUE 4): `BatchedXbar::mvm_batch` must be
-//! bit-identical — `i64`-equal outputs AND equal `XbarActivity` counts —
-//! to the per-vector `ProgrammedXbar::mvm_raw` reference across every
-//! feasible PIM config, infeasible (lossy-ADC) configs, ragged batch
-//! sizes (1 / 7 / a compiled-batch-sized 32), and K-padding edges.
-//! The same contract backs `autorac xbar-bench`'s in-run parity gate.
+//! Kernel-parity suite (ISSUE 4, extended by ISSUE 5): `BatchedXbar::
+//! mvm_batch` must be bit-identical — `i64`-equal outputs AND equal
+//! `XbarActivity` counts — to the per-vector `ProgrammedXbar::mvm_raw`
+//! reference across every feasible PIM config, infeasible (lossy-ADC)
+//! configs, 65–256-row wide tiles (multi-word packing, no fallback),
+//! ragged batch sizes (1 / 7 / a compiled-batch-sized 32), K-padding
+//! edges, and kernel thread counts (serial vs threads=3 re-check on
+//! every drawn case; the dedicated suite is `xbar_threads.rs`). The
+//! same contract backs `autorac xbar-bench`'s in-run parity gate.
 
 use autorac::nas::genome::WEIGHT_BITS;
 use autorac::pim::{
@@ -71,6 +74,15 @@ fn check_parity(cfg: PimConfig, g: &mut Gen) -> Result<(), String> {
     prop_assert_eq!(&out, &want);
     prop_assert_eq!(scratch.activity, want_act);
 
+    // tile-parallel execution must be invisible in outputs AND activity
+    // (small cases fall back to the serial path — identical by
+    // construction; big ones actually fan out across threads)
+    let mut out_t = vec![0i64; b * bx.n];
+    let mut scratch_t = XbarScratch::with_threads(3);
+    bx.mvm_batch(&xs, b, &mut out_t, &mut scratch_t);
+    prop_assert_eq!(&out_t, &want);
+    prop_assert_eq!(scratch_t.activity, want_act);
+
     // corrected path: same subtraction as the reference's cached vector
     let mut corrected = vec![0i64; b * bx.n];
     bx.mvm_corrected_batch(&xs, b, &mut corrected, &mut scratch);
@@ -129,26 +141,21 @@ fn batched_kernel_matches_reference_on_lossy_adc_configs() {
 }
 
 #[test]
-fn batched_kernel_matches_reference_on_blocked_tiles() {
-    // tiles wider than the packed path's 64-row word: blocked i64 path
-    let wide = [
-        PimConfig {
-            xbar: 128,
-            dac_bits: 1,
-            cell_bits: 1,
-            adc_bits: 8,
+fn batched_kernel_matches_reference_on_wide_tiles() {
+    // Tiles of 65–256 rows pack into 2–4 u64 words per column (the old
+    // blocked i64 fallback is gone); ragged widths that straddle word
+    // boundaries (e.g. 65, 127, 129, 255) are exactly the partial-last-
+    // word edge cases. `check_parity` already draws ragged row counts
+    // (1..2·xbar+5) on top, so K-padding is exercised at every width.
+    qcheck(16, |g| {
+        let cfg = PimConfig {
+            xbar: g.usize(65, 256),
+            dac_bits: g.usize(1, 2),
+            cell_bits: g.usize(1, 2),
+            adc_bits: *g.choose(&[4usize, 6, 8]),
             ..Default::default()
-        }, // feasible → lossless blocked
-        PimConfig {
-            xbar: 96,
-            dac_bits: 1,
-            cell_bits: 2,
-            adc_bits: 8,
-            ..Default::default()
-        }, // infeasible → lossy blocked
-    ];
-    qcheck(12, |g| {
-        let cfg = g.choose(&wide).with_wbits(*g.choose(&WEIGHT_BITS));
+        }
+        .with_wbits(*g.choose(&WEIGHT_BITS));
         check_parity(cfg, g)
     });
 }

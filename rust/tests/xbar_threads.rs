@@ -1,0 +1,147 @@
+//! Determinism layer for the tile-parallel crossbar kernel (S25),
+//! mirroring `search_determinism.rs`: the thread count of an
+//! [`XbarScratch`] arena must not change a single bit of the kernel's
+//! outputs or its [`XbarActivity`] counts — a reordered reduction is
+//! exactly the bug this suite exists to catch, and integer addition is
+//! what makes bit-identity provable rather than hoped-for.
+
+use autorac::coordinator::{InferenceEngine, PimEngine};
+use autorac::mapping::{build_pim_net, NetScratch};
+use autorac::nas::autorac_best;
+use autorac::pim::{BatchedXbar, MatI32, PimConfig, XbarActivity, XbarScratch};
+use autorac::util::rng::Rng;
+
+fn random_mat(rng: &mut Rng, rows: usize, cols: usize, wmax: i32) -> MatI32 {
+    let mut m = MatI32::zeros(rows, cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            m.set(r, c, rng.below((2 * wmax + 1) as u64) as i32 - wmax);
+        }
+    }
+    m
+}
+
+/// Bit-level fingerprint of one batched pass: raw accumulators,
+/// corrected accumulators, and every activity counter.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    raw: Vec<i64>,
+    corrected: Vec<i64>,
+    activity: XbarActivity,
+}
+
+fn run(bx: &BatchedXbar, xs: &[i32], b: usize, threads: usize) -> Fingerprint {
+    let mut scratch = XbarScratch::with_threads(threads);
+    let mut raw = vec![0i64; b * bx.n];
+    bx.mvm_batch(xs, b, &mut raw, &mut scratch);
+    let act_raw = scratch.activity;
+    let mut corrected = vec![0i64; b * bx.n];
+    bx.mvm_corrected_batch(xs, b, &mut corrected, &mut scratch);
+    Fingerprint {
+        raw,
+        corrected,
+        activity: act_raw,
+    }
+}
+
+/// Configs spanning the geometry space: default 64-row tiles, a lossy
+/// ADC, a two-word 128-row tile, and a ragged three-word 192-row tile.
+fn grid() -> Vec<PimConfig> {
+    vec![
+        PimConfig::default(),
+        PimConfig {
+            xbar: 64,
+            dac_bits: 2,
+            cell_bits: 2,
+            adc_bits: 8,
+            ..Default::default()
+        },
+        PimConfig {
+            xbar: 128,
+            dac_bits: 1,
+            cell_bits: 1,
+            adc_bits: 8,
+            ..Default::default()
+        },
+        PimConfig {
+            xbar: 192,
+            dac_bits: 1,
+            cell_bits: 2,
+            adc_bits: 8,
+            ..Default::default()
+        },
+    ]
+}
+
+#[test]
+fn threads_1_and_n_are_bit_identical_across_configs() {
+    for (ci, cfg) in grid().into_iter().enumerate() {
+        let mut rng = Rng::new(100 + ci as u64);
+        // enough tiles and columns to clear the kernel's serial-work
+        // threshold, so the parallel path actually runs
+        let wq = random_mat(&mut rng, 3 * cfg.xbar + 5, 48, (1 << (cfg.w_bits - 1)) - 1);
+        let bx = BatchedXbar::program(&wq, cfg);
+        let b = 16;
+        let xs: Vec<i32> = (0..b * bx.k)
+            .map(|_| rng.below(1u64 << cfg.x_bits) as i32)
+            .collect();
+        let serial = run(&bx, &xs, b, 1);
+        for threads in [2usize, 4, 8] {
+            let parallel = run(&bx, &xs, b, threads);
+            assert_eq!(
+                serial, parallel,
+                "config {ci} ({cfg:?}): threads={threads} changed the result"
+            );
+        }
+    }
+}
+
+#[test]
+fn rerun_with_same_arena_is_stable() {
+    let cfg = PimConfig::default();
+    let mut rng = Rng::new(7);
+    let wq = random_mat(&mut rng, 256, 32, 127);
+    let bx = BatchedXbar::program(&wq, cfg);
+    let b = 8;
+    let xs: Vec<i32> = (0..b * bx.k).map(|_| rng.below(256) as i32).collect();
+    let mut scratch = XbarScratch::with_threads(4);
+    let mut a = vec![0i64; b * bx.n];
+    let mut c = vec![0i64; b * bx.n];
+    bx.mvm_batch(&xs, b, &mut a, &mut scratch);
+    let act_first = scratch.activity;
+    bx.mvm_batch(&xs, b, &mut c, &mut scratch);
+    assert_eq!(a, c, "re-run through a warmed arena diverged");
+    // counters accumulate linearly: second pass adds exactly one more
+    assert_eq!(scratch.activity.read_cycles, 2 * act_first.read_cycles);
+    assert_eq!(scratch.activity.adc_conversions, 2 * act_first.adc_conversions);
+}
+
+#[test]
+fn net_and_engine_scores_survive_any_thread_count() {
+    // the full serving stack on top of the kernel: PimNet / PimEngine
+    // scores are a pure function of the inputs, threads notwithstanding
+    let g = autorac_best("criteo");
+    let (nd, ns, d) = (13usize, 26usize, 16usize);
+    let net = build_pim_net(&g, nd, ns, d, 42).unwrap();
+    let b = 6;
+    let mut rng = Rng::new(9);
+    let dense: Vec<f32> = (0..b * nd).map(|_| rng.normal() as f32).collect();
+    let sparse: Vec<f32> =
+        (0..b * ns * d).map(|_| (rng.normal() * 0.05) as f32).collect();
+    let mut s1 = NetScratch::with_threads(1);
+    let p1 = net.forward_batch(&dense, &sparse, b, &mut s1);
+    for threads in [2usize, 4] {
+        let mut st = NetScratch::with_threads(threads);
+        let pt = net.forward_batch(&dense, &sparse, b, &mut st);
+        assert!(
+            p1.iter().zip(&pt).all(|(a, c)| a.to_bits() == c.to_bits()),
+            "PimNet: threads={threads} changed scores"
+        );
+    }
+    let mut e1 = PimEngine::new(&g, 8, nd, ns, d, 42).unwrap();
+    let mut e4 = PimEngine::new(&g, 8, nd, ns, d, 42).unwrap().with_threads(4);
+    let q1 = e1.infer_batch(&dense, &sparse, b).unwrap();
+    let q4 = e4.infer_batch(&dense, &sparse, b).unwrap();
+    assert!(q1.iter().zip(&q4).all(|(a, c)| a.to_bits() == c.to_bits()));
+    assert_eq!(e1.activity(), e4.activity(), "engine activity diverged");
+}

@@ -50,20 +50,30 @@ if ! printf '%s\n' "$bench_out" | grep -q "parallel trace bit-identical to seria
     exit 1
 fi
 
-echo "== xbar-bench parity smoke: batched kernel vs reference =="
+echo "== xbar-bench parity smoke: batched kernel vs reference, 4 threads =="
 # The batched crossbar kernel's contract is bit-identity with the
-# per-vector reference (outputs AND activity counts) on every config.
-# xbar-bench ensure!s it in-run and exits non-zero on any mismatch;
-# fail-closed on the parity line disappearing too.
-xbar_out=$(cargo run --quiet --release --bin autorac -- xbar-bench --quick)
+# per-vector reference (outputs AND activity counts) on every config AND
+# at every thread count. xbar-bench ensure!s it in-run — at threads 1
+# and 4 here — and exits non-zero on any mismatch; fail-closed on the
+# parity line disappearing too.
+xbar_out=$(cargo run --quiet --release --bin autorac -- xbar-bench --quick --threads 4)
 printf '%s\n' "$xbar_out"
 if ! printf '%s\n' "$xbar_out" | grep -q "parity: OK"; then
     echo "ERROR: xbar-bench did not report kernel parity"
     exit 1
 fi
 
-echo "== kernel-parity property suite under --release =="
-cargo test -q --release --test xbar_kernel
+echo "== hygiene: the blocked i64 kernel fallback must stay deleted =="
+# Every tile geometry now takes the multi-word packed AND+popcount path;
+# a reappearing scalar fallback would silently re-slow the large-tile
+# configs the search space rewards.
+if grep -rn "mvm_batch_blocked" rust/src; then
+    echo "ERROR: the blocked i64 fallback symbol is back in the kernel"
+    exit 1
+fi
+
+echo "== kernel-parity + thread-determinism suites under --release =="
+cargo test -q --release --test xbar_kernel --test xbar_threads
 
 echo "== hygiene: no un-gated #[ignore] tests =="
 # Skipping must be an artifact-gate (runtime check + eprintln SKIP), not
