@@ -1,13 +1,17 @@
 //! Serving bench: the latency/throughput knee of the shard-aware
 //! coordinator under MockEngine — zero artifacts, fully offline.
 //!
-//! Two experiments:
+//! Three experiments:
 //!   1. routing-policy comparison at fixed closed-loop load (capacity
 //!      regime): throughput, tail latency and cross-shard gather rows
 //!      for round-robin / least-queued / shard-affinity;
 //!   2. open-loop Poisson sweep against measured capacity (0.4×–1.1×)
 //!      with stale-shedding admission — where the knee and the shed
-//!      rate appear.
+//!      rate appear;
+//!   3. wire-parse microbench: the lazy scanner (util::json_lazy) vs
+//!      the full tree parser over the deterministic request corpus,
+//!      with and without a realistic cold `ctx` payload — the
+//!      EXPERIMENTS.md §SF numbers.
 //!
 //! Run: `cargo bench --bench serving` (AUTORAC_BENCH_FAST=1 shrinks the
 //! request counts for smoke runs).
@@ -19,6 +23,7 @@ use autorac::coordinator::{
 };
 use autorac::data::profile;
 use autorac::embeddings::{ShardMap, ShardPolicy, ShardedStore};
+use autorac::util::json_lazy;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -130,6 +135,66 @@ fn main() -> autorac::Result<()> {
     println!(
         "\n(knee: p99 and shed-rate step up as offered load crosses capacity; \
          regen via `autorac serve-bench`, methodology in EXPERIMENTS.md §SB)"
+    );
+
+    // -- 3. wire-parse microbench: lazy scanner vs tree parser -----------
+    parse_bench(n.min(512))?;
+    Ok(())
+}
+
+/// Seconds per call of `f`: one warmup call, then as many as fit the
+/// budget (single-threaded, mirrors main.rs `time_per_call`).
+fn time_per_call<F: FnMut()>(budget: Duration, mut f: F) -> f64 {
+    f();
+    let t0 = std::time::Instant::now();
+    let mut calls = 0u64;
+    while t0.elapsed() < budget {
+        f();
+        calls += 1;
+    }
+    t0.elapsed().as_secs_f64() / calls.max(1) as f64
+}
+
+fn parse_bench(n_requests: usize) -> autorac::Result<()> {
+    let prof = profile("criteo")?;
+    let cfg = LoadGenConfig {
+        n_requests,
+        arrival: Arrival::ClosedLoop { concurrency: 64 },
+        seed: SEED,
+        coverage: COVERAGE,
+    };
+    println!("\nwire-parse microbench ({n_requests}-request corpus, ns/request):");
+    println!(
+        "{:<22} {:>10} {:>10} {:>9}",
+        "corpus", "tree", "lazy", "speedup"
+    );
+    for (label, with_ctx) in [("hot fields only", false), ("with cold ctx", true)] {
+        let corpus = loadgen::wire_corpus(&prof, &cfg, with_ctx)?;
+        let lines: Vec<&[u8]> =
+            corpus.iter().map(|l| l.trim_end().as_bytes()).collect();
+        let budget = Duration::from_millis(300);
+        let per = |f: &dyn Fn(&[u8])| {
+            time_per_call(budget, || {
+                for line in &lines {
+                    f(line);
+                }
+            }) / lines.len() as f64
+                * 1e9
+        };
+        let tree_ns = per(&|b| {
+            let _ = std::hint::black_box(json_lazy::parse_request_tree(b));
+        });
+        let lazy_ns = per(&|b| {
+            let _ = std::hint::black_box(json_lazy::parse_request(b));
+        });
+        println!(
+            "{label:<22} {tree_ns:>10.0} {lazy_ns:>10.0} {:>8.1}x",
+            tree_ns / lazy_ns.max(1e-9)
+        );
+    }
+    println!(
+        "(lazy must win by >= 5x on the ctx corpus — the serving hot path \
+         only extracts id/dense/tables/ids; regen in EXPERIMENTS.md §SF)"
     );
     Ok(())
 }

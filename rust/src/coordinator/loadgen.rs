@@ -14,11 +14,25 @@
 //! per-request subset of tables — the multi-tower traffic shape that
 //! makes shard-affinity routing meaningful (a request touching every
 //! table looks identical to every shard).
+//!
+//! Since PR 6 the generator is split in two: [`build_schedule`]
+//! materialises the entire request stream (content AND open-loop send
+//! times) up front, and the drivers — in-process [`run`] or socket
+//! [`run_socket`] — merely replay it. That split is what makes the
+//! transports comparable: the same `(profile, seed, cfg)` produces the
+//! byte-identical schedule no matter how it is delivered, pinned by the
+//! schedule-determinism regression in `rust/tests/coordinator_e2e.rs`.
 
+use super::net::{NetClient, WireResponse};
 use super::server::{Admission, Coordinator, Request};
 use crate::data::{Generator, Profile};
+use crate::util::json_lazy::WireRequest;
 use crate::util::rng::{seed_from_name, Rng};
-use std::sync::mpsc;
+use crate::util::stats::Quantiles;
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -64,21 +78,62 @@ pub struct LoadReport {
     pub lost: usize,
 }
 
-/// Build request `k` of the deterministic stream. `rng` drives the
+/// Client-measured wire statistics from [`run_socket`] (the server's
+/// own e2e percentiles live in `MetricsSnapshot`; these additionally
+/// include both socket hops and the response encode/decode).
+#[derive(Clone, Debug, Default)]
+pub struct WireStats {
+    pub wire_p50_us: f64,
+    pub wire_p99_us: f64,
+    /// completed responses per second of wall clock
+    pub client_rps: f64,
+    pub elapsed_s: f64,
+}
+
+/// One fully-materialised entry of the request stream: content plus the
+/// absolute open-loop send time (`at_ns` after run start; 0 under a
+/// closed loop, where admission — not the clock — paces sends).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduledRequest {
+    pub k: u64,
+    pub at_ns: u64,
+    pub dense: Vec<f32>,
+    /// table ids touched, strictly ascending
+    pub fields: Vec<u32>,
+    pub ids: Vec<i32>,
+}
+
+impl ScheduledRequest {
+    /// Transport-level view (the line `run_socket` puts on the wire).
+    pub fn to_wire(&self) -> WireRequest {
+        WireRequest {
+            id: self.k,
+            dense: self.dense.clone(),
+            tables: self.fields.clone(),
+            ids: self.ids.clone(),
+        }
+    }
+
+    fn into_request(self, tx: &mpsc::Sender<super::server::Response>) -> Request {
+        Request::partial(self.k, self.dense, self.fields, self.ids, tx.clone())
+    }
+}
+
+/// Content of request `k` of the deterministic stream. `rng` drives the
 /// subset draw only, so record content stays pinned to `(profile, seed,
 /// k)` regardless of coverage.
-fn make_request(
+fn make_content(
     gen: &mut Generator,
     rng: &mut Rng,
     coverage: f64,
     k: usize,
-    tx: &mpsc::Sender<super::server::Response>,
-) -> Request {
+) -> (Vec<f32>, Vec<u32>, Vec<i32>) {
     let (dense, ids_full) = gen.features(k);
     let nf = ids_full.len();
     if coverage >= 1.0 || nf == 0 {
+        let fields = (0..nf as u32).collect();
         let ids = ids_full.iter().map(|&x| x as i32).collect();
-        return Request::full(k as u64, dense, ids, tx.clone());
+        return (dense, fields, ids);
     }
     let m = ((nf as f64 * coverage).round() as usize).clamp(1, nf);
     let mut fields: Vec<u32> = (0..nf as u32).collect();
@@ -89,47 +144,125 @@ fn make_request(
         .iter()
         .map(|&f| ids_full[f as usize] as i32)
         .collect();
-    Request::partial(k as u64, dense, fields, ids, tx.clone())
+    (dense, fields, ids)
 }
 
-/// Drive `cfg.n_requests` through the coordinator; blocks until every
-/// accepted request is either answered or shed, so the returned report
-/// is an exact completed/lost split.
+/// Materialise the full request stream for `(profile, cfg)`. The RNG
+/// draw order is fixed — open loop draws the arrival gap, then the
+/// content, per request — so schedules are bit-identical across calls,
+/// transports, and processes for the same seed.
+pub fn build_schedule(
+    profile: &Profile,
+    cfg: &LoadGenConfig,
+) -> crate::Result<Vec<ScheduledRequest>> {
+    if let Arrival::OpenLoop { rps } = cfg.arrival {
+        crate::ensure!(rps > 0.0, "open-loop rps must be > 0");
+    }
+    let mut gen = Generator::new(profile.clone(), cfg.seed);
+    let mut rng = Rng::new(seed_from_name(cfg.seed, "loadgen"));
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    let mut next_ns = 0f64;
+    for k in 0..cfg.n_requests {
+        let at_ns = match cfg.arrival {
+            Arrival::OpenLoop { rps } => {
+                // exponential gap: -ln(1-u)/λ  (u ∈ [0,1) keeps ln finite)
+                next_ns += -(1.0 - rng.f64()).ln() / rps * 1e9;
+                next_ns as u64
+            }
+            Arrival::ClosedLoop { .. } => 0,
+        };
+        let (dense, fields, ids) = make_content(&mut gen, &mut rng, cfg.coverage, k);
+        out.push(ScheduledRequest {
+            k: k as u64,
+            at_ns,
+            dense,
+            fields,
+            ids,
+        });
+    }
+    Ok(out)
+}
+
+/// The exact request lines a socket run sends, for parse benchmarking
+/// and differential tests. `with_ctx` appends a deterministic cold
+/// `ctx` payload (session hex, AB labels, timestamp, user agent) that
+/// the scorer ignores — the traffic shape where lazy hot-field
+/// extraction pays, since the tree parser must materialise it all.
+pub fn wire_corpus(
+    profile: &Profile,
+    cfg: &LoadGenConfig,
+    with_ctx: bool,
+) -> crate::Result<Vec<String>> {
+    let sched = build_schedule(profile, cfg)?;
+    let mut rng = Rng::new(seed_from_name(cfg.seed, "wirectx"));
+    Ok(sched
+        .iter()
+        .map(|sr| {
+            let mut line = sr.to_wire().to_line();
+            if with_ctx {
+                line.truncate(line.len() - 2); // drop `}\n`
+                line.push_str(",\"ctx\":{\"sess\":\"");
+                for _ in 0..32 {
+                    line.push(char::from_digit(rng.below(16) as u32, 16).unwrap());
+                }
+                line.push_str("\",\"ab\":[\"exp-");
+                line.push_str(&rng.below(100).to_string());
+                line.push_str("\",\"hold-");
+                line.push_str(&rng.below(10).to_string());
+                line.push_str("\"],\"ts\":");
+                line.push_str(&(1_700_000_000_000u64 + rng.below(1_000_000_000)).to_string());
+                line.push_str(
+                    ",\"ua\":\"Mozilla/5.0 (X11; Linux x86_64) AppleWebKit/537.36\"}}\n",
+                );
+            }
+            line
+        })
+        .collect())
+}
+
+fn wait_until(t0: Instant, at_ns: u64) {
+    loop {
+        let now = t0.elapsed().as_nanos() as u64;
+        if now >= at_ns {
+            break;
+        }
+        let wait = at_ns - now;
+        if wait > 200_000 {
+            std::thread::sleep(Duration::from_nanos(wait - 100_000));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// Drive `cfg.n_requests` through the coordinator in-process; blocks
+/// until every accepted request is either answered or shed, so the
+/// returned report is an exact completed/lost split.
 pub fn run(
     coord: &Coordinator,
     profile: &Profile,
     cfg: &LoadGenConfig,
 ) -> crate::Result<LoadReport> {
-    let mut gen = Generator::new(profile.clone(), cfg.seed);
-    let mut rng = Rng::new(seed_from_name(cfg.seed, "loadgen"));
+    let schedule = build_schedule(profile, cfg)?;
+    run_schedule(coord, cfg, schedule)
+}
+
+/// Replay an already-built schedule against an in-process coordinator.
+pub fn run_schedule(
+    coord: &Coordinator,
+    cfg: &LoadGenConfig,
+    schedule: Vec<ScheduledRequest>,
+) -> crate::Result<LoadReport> {
     let (tx, rx) = mpsc::channel();
     let mut rep = LoadReport::default();
 
     match cfg.arrival {
-        Arrival::OpenLoop { rps } => {
-            crate::ensure!(rps > 0.0, "open-loop rps must be > 0");
+        Arrival::OpenLoop { .. } => {
             let t0 = Instant::now();
-            let mut next_ns = 0f64;
-            for k in 0..cfg.n_requests {
-                // exponential gap: -ln(1-u)/λ  (u ∈ [0,1) keeps ln finite)
-                next_ns += -(1.0 - rng.f64()).ln() / rps * 1e9;
-                loop {
-                    let now = t0.elapsed().as_nanos() as f64;
-                    if now >= next_ns {
-                        break;
-                    }
-                    let wait = next_ns - now;
-                    if wait > 200_000.0 {
-                        std::thread::sleep(Duration::from_nanos(
-                            (wait - 100_000.0) as u64,
-                        ));
-                    } else {
-                        std::hint::spin_loop();
-                    }
-                }
-                let req = make_request(&mut gen, &mut rng, cfg.coverage, k, &tx);
+            for sr in schedule {
+                wait_until(t0, sr.at_ns);
                 rep.sent += 1;
-                match coord.submit(req)? {
+                match coord.submit(sr.into_request(&tx))? {
                     Admission::Enqueued(_) => rep.accepted += 1,
                     Admission::Rejected => rep.rejected += 1,
                 }
@@ -139,6 +272,8 @@ pub fn run(
             rep.lost = rep.accepted - rep.completed;
         }
         Arrival::ClosedLoop { concurrency } => {
+            let n = schedule.len();
+            let mut it = schedule.into_iter();
             let window = concurrency.max(1);
             // `outstanding` tracks window occupancy. Shed/failed
             // requests never answer, so on a poll timeout we release
@@ -154,17 +289,15 @@ pub fn run(
             // run's window
             let start = coord.metrics.snapshot();
             let mut forgiven = start.shed + start.failed;
-            while rep.sent < cfg.n_requests || outstanding > 0 {
+            while rep.sent < n || outstanding > 0 {
                 for _ in rx.try_iter() {
                     rep.completed += 1;
                     outstanding = outstanding.saturating_sub(1);
                 }
-                while rep.sent < cfg.n_requests && outstanding < window {
-                    let k = rep.sent;
-                    let req =
-                        make_request(&mut gen, &mut rng, cfg.coverage, k, &tx);
+                while rep.sent < n && outstanding < window {
+                    let sr = it.next().expect("schedule holds n entries");
                     rep.sent += 1;
-                    match coord.submit(req)? {
+                    match coord.submit(sr.into_request(&tx))? {
                         Admission::Enqueued(_) => {
                             rep.accepted += 1;
                             outstanding += 1;
@@ -199,6 +332,173 @@ pub fn run(
         }
     }
     Ok(rep)
+}
+
+// ---------------------------------------------------------------------------
+// Socket driver
+// ---------------------------------------------------------------------------
+
+struct ConnReport {
+    sent: usize,
+    rejected: usize,
+    completed: usize,
+    lat_us: Vec<f64>,
+}
+
+/// Saturating decrement (a late response must never underflow a window
+/// slot that a stall-release already reclaimed).
+fn release_slot(outstanding: &AtomicUsize) {
+    let _ = outstanding.fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+        v.checked_sub(1)
+    });
+}
+
+fn drive_conn(
+    addr: SocketAddr,
+    part: Vec<(u64, u64, String)>,
+    t0: Instant,
+    window: usize,
+) -> crate::Result<ConnReport> {
+    let client = NetClient::connect(&addr)?;
+    let (mut tx, mut rx) = client.split();
+    let inflight: Arc<Mutex<HashMap<u64, Instant>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let outstanding = Arc::new(AtomicUsize::new(0));
+
+    let recv = {
+        let inflight = Arc::clone(&inflight);
+        let outstanding = Arc::clone(&outstanding);
+        std::thread::spawn(move || {
+            let mut completed = 0usize;
+            let mut rejected = 0usize;
+            let mut lat_us: Vec<f64> = Vec::new();
+            loop {
+                match rx.recv() {
+                    Ok(Some(WireResponse::Ok { id, .. })) => {
+                        if let Some(sent_at) = inflight.lock().unwrap().remove(&id)
+                        {
+                            lat_us.push(sent_at.elapsed().as_nanos() as f64 / 1e3);
+                        }
+                        completed += 1;
+                        release_slot(&outstanding);
+                    }
+                    Ok(Some(WireResponse::Error { id, .. })) => {
+                        if let Some(id) = id {
+                            inflight.lock().unwrap().remove(&id);
+                        }
+                        rejected += 1;
+                        release_slot(&outstanding);
+                    }
+                    Ok(None) | Err(_) => break,
+                }
+            }
+            (completed, rejected, lat_us)
+        })
+    };
+
+    let mut sent = 0usize;
+    for (k, at_ns, line) in part {
+        if window != usize::MAX {
+            // closed loop: wait for a slot; force-release after a long
+            // stall, since a shed/failed request never answers (same
+            // role as run_schedule's ghost accounting, without access
+            // to the server's counters)
+            let mut stalled = Instant::now();
+            while outstanding.load(Ordering::Acquire) >= window {
+                std::thread::sleep(Duration::from_micros(200));
+                if stalled.elapsed() > Duration::from_secs(2) {
+                    release_slot(&outstanding);
+                    stalled = Instant::now();
+                }
+            }
+        }
+        if at_ns > 0 {
+            wait_until(t0, at_ns);
+        }
+        inflight.lock().unwrap().insert(k, Instant::now());
+        outstanding.fetch_add(1, Ordering::AcqRel);
+        if tx.send_line(&line).is_err() {
+            break; // server gone; the receiver will see EOF
+        }
+        sent += 1;
+    }
+    tx.finish();
+    let (completed, rejected, lat_us) = recv
+        .join()
+        .map_err(|_| crate::err!("socket receiver thread panicked"))?;
+    Ok(ConnReport {
+        sent,
+        rejected,
+        completed,
+        lat_us,
+    })
+}
+
+/// Replay the deterministic schedule over `conns` real loopback
+/// connections against a running `coordinator::net::NetServer` (or any
+/// server speaking the wire protocol). Entry `k` always rides
+/// connection `k % conns`, and open-loop send times stay on the ONE
+/// global clock, so the offered stream is the same Poisson process
+/// `run` offers in-process. Lines are pre-encoded before the clock
+/// starts so encode cost never distorts pacing.
+pub fn run_socket(
+    addr: &SocketAddr,
+    profile: &Profile,
+    cfg: &LoadGenConfig,
+    conns: usize,
+) -> crate::Result<(LoadReport, WireStats)> {
+    let conns = conns.max(1).min(cfg.n_requests.max(1));
+    let schedule = build_schedule(profile, cfg)?;
+    let mut parts: Vec<Vec<(u64, u64, String)>> =
+        (0..conns).map(|_| Vec::new()).collect();
+    for sr in &schedule {
+        parts[(sr.k % conns as u64) as usize].push((
+            sr.k,
+            sr.at_ns,
+            sr.to_wire().to_line(),
+        ));
+    }
+    drop(schedule);
+    let window = match cfg.arrival {
+        Arrival::OpenLoop { .. } => usize::MAX,
+        // split the global window across connections (ceil so small
+        // windows never round a connection down to zero slots)
+        Arrival::ClosedLoop { concurrency } => {
+            (concurrency.max(1) + conns - 1) / conns
+        }
+    };
+
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(conns);
+    for part in parts {
+        let addr = *addr;
+        handles.push(std::thread::spawn(move || {
+            drive_conn(addr, part, t0, window)
+        }));
+    }
+    let mut rep = LoadReport::default();
+    let mut q = Quantiles::new();
+    for h in handles {
+        let c = h
+            .join()
+            .map_err(|_| crate::err!("socket loadgen thread panicked"))??;
+        rep.sent += c.sent;
+        rep.rejected += c.rejected;
+        rep.completed += c.completed;
+        for l in c.lat_us {
+            q.push(l);
+        }
+    }
+    rep.accepted = rep.sent - rep.rejected;
+    rep.lost = rep.accepted.saturating_sub(rep.completed);
+    let elapsed = t0.elapsed().as_secs_f64();
+    let stats = WireStats {
+        wire_p50_us: if q.len() == 0 { 0.0 } else { q.median() },
+        wire_p99_us: if q.len() == 0 { 0.0 } else { q.p99() },
+        client_rps: rep.completed as f64 / elapsed.max(1e-9),
+        elapsed_s: elapsed,
+    };
+    Ok((rep, stats))
 }
 
 #[cfg(test)]
@@ -268,9 +568,8 @@ mod tests {
         let draw = |seed: u64| -> Vec<Vec<u32>> {
             let mut gen = Generator::new(p.clone(), seed);
             let mut rng = Rng::new(seed_from_name(seed, "loadgen"));
-            let (tx, _rx) = mpsc::channel();
             (0..20)
-                .map(|k| make_request(&mut gen, &mut rng, 0.4, k, &tx).fields)
+                .map(|k| make_content(&mut gen, &mut rng, 0.4, k).1)
                 .collect()
         };
         assert_eq!(draw(9), draw(9));
@@ -282,20 +581,67 @@ mod tests {
     }
 
     #[test]
-    fn partial_requests_round_trip() {
-        let c = coord(2);
-        let rep = run(
-            &c,
-            &profile("kdd").unwrap(),
-            &LoadGenConfig {
-                n_requests: 60,
-                arrival: Arrival::ClosedLoop { concurrency: 8 },
-                seed: 2,
-                coverage: 0.3,
-            },
-        )
-        .unwrap();
-        assert_eq!(rep.completed, 60);
-        c.shutdown();
+    fn schedules_are_bit_identical_by_seed() {
+        let p = profile("kdd").unwrap();
+        for arrival in [
+            Arrival::OpenLoop { rps: 5_000.0 },
+            Arrival::ClosedLoop { concurrency: 8 },
+        ] {
+            let cfg = LoadGenConfig {
+                n_requests: 40,
+                arrival,
+                seed: 13,
+                coverage: 0.6,
+            };
+            let a = build_schedule(&p, &cfg).unwrap();
+            let b = build_schedule(&p, &cfg).unwrap();
+            assert_eq!(a, b);
+            let other = build_schedule(
+                &p,
+                &LoadGenConfig {
+                    seed: 14,
+                    ..cfg.clone()
+                },
+            )
+            .unwrap();
+            assert_ne!(a, other);
+        }
+    }
+
+    #[test]
+    fn open_loop_send_times_are_monotone_nondecreasing() {
+        let p = profile("kdd").unwrap();
+        let cfg = LoadGenConfig {
+            n_requests: 64,
+            arrival: Arrival::OpenLoop { rps: 10_000.0 },
+            seed: 3,
+            coverage: 1.0,
+        };
+        let sched = build_schedule(&p, &cfg).unwrap();
+        assert!(sched.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
+        assert!(sched.iter().skip(1).all(|sr| sr.at_ns > 0));
+    }
+
+    #[test]
+    fn wire_corpus_lines_decode_to_the_schedule() {
+        use crate::util::json_lazy::{parse_request_traced, ParsePath};
+        let p = profile("kdd").unwrap();
+        let cfg = LoadGenConfig {
+            n_requests: 24,
+            arrival: Arrival::ClosedLoop { concurrency: 4 },
+            seed: 21,
+            coverage: 0.7,
+        };
+        let sched = build_schedule(&p, &cfg).unwrap();
+        for with_ctx in [false, true] {
+            let corpus = wire_corpus(&p, &cfg, with_ctx).unwrap();
+            assert_eq!(corpus.len(), sched.len());
+            for (line, sr) in corpus.iter().zip(&sched) {
+                let (got, path) =
+                    parse_request_traced(line.trim_end().as_bytes());
+                assert_eq!(path, ParsePath::Lazy, "{line}");
+                assert_eq!(got.unwrap(), sr.to_wire());
+            }
+        }
     }
 }

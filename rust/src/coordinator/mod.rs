@@ -21,13 +21,15 @@ pub mod batcher;
 pub mod engine;
 pub mod loadgen;
 pub mod metrics;
+pub mod net;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatcherConfig, collect_batch};
 pub use engine::{InferenceEngine, MockEngine, PimEngine, PjrtEngine};
-pub use loadgen::{Arrival, LoadGenConfig, LoadReport};
+pub use loadgen::{Arrival, LoadGenConfig, LoadReport, ScheduledRequest, WireStats};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use net::{NetClient, NetServer, NetServerConfig, WireResponse};
 pub use router::{Policy, Router};
 pub use server::{
     Admission, AdmissionPolicy, Coordinator, CoordinatorConfig, Request,

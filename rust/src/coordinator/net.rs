@@ -1,0 +1,613 @@
+//! Socket-native serving front end (S28): std-TCP, newline-delimited
+//! JSON, zero dependencies.
+//!
+//! ```text
+//!  client ──line──► reader thread ──Request──► coordinator queue ──► worker
+//!                      │  (lazy parse, S27)                            │
+//!  client ◄──line── reply pump ◄───────────── Response ◄──────────────┘
+//! ```
+//!
+//! One accept loop fans connections out to a reader + reply-pump thread
+//! pair. (Thread-per-connection rather than literal thread-per-core:
+//! std has no readiness API, and the serving fleet here is a handful of
+//! load-generator connections, not C10K — DESIGN.md §7.9 records the
+//! deviation.) Framing is bounded by `max_frame`, reads are polled so
+//! shutdown and idle eviction can never hang on a stalled peer, and
+//! every malformed line is answered with a structured `{"error":…}` or
+//! a clean close — never a panic: `rust/tests/wire_security.rs` pins
+//! this byte-level contract.
+//!
+//! Conservation holds over sockets because the ledger lives below the
+//! transport: `submit` books every admitted/rejected frame, workers
+//! count a response *before* attempting the reply send, and a frame
+//! that never parsed never becomes a request. A client disconnecting
+//! mid-flight therefore costs nothing but a failed write on a closed
+//! reply channel.
+
+use super::server::{Admission, Coordinator, Request, Response};
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::util::json::Json;
+use crate::util::json_lazy::{self, ParsePath, WireRequest};
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct NetServerConfig {
+    /// max bytes in one request line (newline excluded); longer frames
+    /// get a structured error and the connection is closed
+    pub max_frame: usize,
+    /// read-timeout granularity: how often a blocked reader rechecks
+    /// the shutdown flag and the idle clock
+    pub read_poll: Duration,
+    /// a connection that carries no bytes for this long is evicted
+    pub idle_timeout: Duration,
+    /// connections beyond this are refused with an error line
+    pub max_conns: usize,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            max_frame: 1 << 20,
+            read_poll: Duration::from_millis(50),
+            idle_timeout: Duration::from_secs(60),
+            max_conns: 256,
+        }
+    }
+}
+
+/// Wire-level counters (the request/response ledger itself lives in
+/// `Metrics`; these count frames and parse paths).
+#[derive(Debug, Default)]
+pub struct NetStats {
+    pub conns_opened: AtomicU64,
+    /// frames that parsed and reached `submit`
+    pub frames_ok: AtomicU64,
+    /// frames answered with a parse/shape error
+    pub frames_bad: AtomicU64,
+    /// frames decoded entirely by the lazy scanner
+    pub lazy_frames: AtomicU64,
+    /// frames that fell back to the tree parser
+    pub tree_frames: AtomicU64,
+}
+
+/// A running TCP front end over a [`Coordinator`].
+pub struct NetServer {
+    addr: SocketAddr,
+    coord: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    pub stats: Arc<NetStats>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `127.0.0.1:0` for an ephemeral port) and
+    /// start accepting. Takes ownership of the coordinator; `shutdown`
+    /// drains it.
+    pub fn start(
+        listen: &str,
+        coord: Coordinator,
+        cfg: NetServerConfig,
+    ) -> crate::Result<NetServer> {
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| crate::err!("binding {listen}: {e}"))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| crate::err!("local_addr: {e}"))?;
+        let coord = Arc::new(coord);
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let stats = Arc::new(NetStats::default());
+        let n_open = Arc::new(AtomicUsize::new(0));
+
+        let accept = {
+            let coord = Arc::clone(&coord);
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let stats = Arc::clone(&stats);
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let stream = match stream {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    if n_open.load(Ordering::Relaxed) >= cfg.max_conns {
+                        let mut s = stream;
+                        let _ = s.write_all(
+                            b"{\"error\":\"server at connection capacity\"}\n",
+                        );
+                        continue;
+                    }
+                    n_open.fetch_add(1, Ordering::Relaxed);
+                    stats.conns_opened.fetch_add(1, Ordering::Relaxed);
+                    let handle = {
+                        let coord = Arc::clone(&coord);
+                        let stop = Arc::clone(&stop);
+                        let stats = Arc::clone(&stats);
+                        let n_open = Arc::clone(&n_open);
+                        let cfg = cfg.clone();
+                        std::thread::spawn(move || {
+                            handle_conn(stream, coord, stop, cfg, stats);
+                            n_open.fetch_sub(1, Ordering::Relaxed);
+                        })
+                    };
+                    let mut held = conns.lock().unwrap();
+                    // reap finished handlers so the vec stays bounded
+                    held.retain(|h| !h.is_finished());
+                    held.push(handle);
+                }
+            })
+        };
+
+        Ok(NetServer {
+            addr,
+            coord,
+            stop,
+            accept: Some(accept),
+            conns,
+            stats,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Snapshot of the coordinator's serving ledger.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.coord.metrics.snapshot()
+    }
+
+    /// Stop accepting, close connections, then drain the coordinator.
+    /// In-flight requests of still-open connections are answered before
+    /// their reply pumps exit (workers stay live until the final
+    /// coordinator shutdown below).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        // every handler (the only other Arc holders) has exited
+        if let Ok(coord) = Arc::try_unwrap(self.coord) {
+            coord.shutdown();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection handler
+// ---------------------------------------------------------------------------
+
+enum Frame {
+    Line,
+    Eof,
+    TooLong,
+    Stop,
+}
+
+/// Accumulate one `\n`-terminated line into `buf` (newline excluded),
+/// polling the stop flag and the idle clock on every read timeout.
+/// On overflow the rest of the line is consumed but discarded.
+fn read_frame(
+    r: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    max_frame: usize,
+    stop: &AtomicBool,
+    idle: Duration,
+) -> Frame {
+    let mut last_data = Instant::now();
+    let mut overflowed = false;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Frame::Stop;
+        }
+        let (advance, done) = {
+            let avail = match r.fill_buf() {
+                Ok([]) => return Frame::Eof,
+                Ok(a) => a,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::WouldBlock | ErrorKind::TimedOut
+                    ) =>
+                {
+                    if last_data.elapsed() > idle {
+                        return Frame::Stop;
+                    }
+                    continue;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return Frame::Eof,
+            };
+            match avail.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if buf.len() + pos > max_frame {
+                        overflowed = true;
+                    }
+                    if !overflowed {
+                        buf.extend_from_slice(&avail[..pos]);
+                    }
+                    (pos + 1, true)
+                }
+                None => {
+                    if buf.len() + avail.len() > max_frame {
+                        overflowed = true;
+                    }
+                    if !overflowed {
+                        buf.extend_from_slice(avail);
+                    }
+                    (avail.len(), false)
+                }
+            }
+        };
+        r.consume(advance);
+        last_data = Instant::now();
+        if done {
+            return if overflowed { Frame::TooLong } else { Frame::Line };
+        }
+    }
+}
+
+type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
+
+fn send_error(out: &SharedWriter, id: Option<u64>, msg: &str) {
+    let mut j = Json::obj();
+    if let Some(id) = id {
+        j.set("id", Json::Num(id as f64));
+    }
+    j.set("error", Json::Str(msg.to_string()));
+    let mut line = j.to_string_compact();
+    line.push('\n');
+    if let Ok(mut w) = out.lock() {
+        let _ = w.write_all(line.as_bytes()).and_then(|_| w.flush());
+    }
+}
+
+fn response_line(r: &Response) -> String {
+    let mut s = String::with_capacity(48);
+    s.push_str("{\"id\":");
+    s.push_str(&r.id.to_string());
+    s.push_str(",\"prob\":");
+    json_lazy::write_f32(&mut s, r.prob);
+    s.push_str(",\"e2e_us\":");
+    s.push_str(&(r.e2e_ns / 1000).to_string());
+    s.push_str("}\n");
+    s
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    coord: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+    cfg: NetServerConfig,
+    stats: Arc<NetStats>,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(cfg.read_poll));
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let out: SharedWriter = Arc::new(Mutex::new(BufWriter::new(stream)));
+    let (tx, rx) = mpsc::channel::<Response>();
+
+    // The reply pump is the ONLY writer of success lines; the reader
+    // thread writes error lines through the same mutex, so lines never
+    // interleave mid-frame.
+    let pump = {
+        let out = Arc::clone(&out);
+        std::thread::spawn(move || {
+            for resp in rx {
+                let line = response_line(&resp);
+                let mut w = out.lock().unwrap();
+                if w.write_all(line.as_bytes()).and_then(|_| w.flush()).is_err() {
+                    // client gone: stop writing; remaining worker reply
+                    // sends fall on the dropped receiver harmlessly
+                    break;
+                }
+            }
+        })
+    };
+
+    let mut r = BufReader::with_capacity(64 * 1024, reader_stream);
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    loop {
+        buf.clear();
+        match read_frame(&mut r, &mut buf, cfg.max_frame, &stop, cfg.idle_timeout) {
+            Frame::Eof | Frame::Stop => break,
+            Frame::TooLong => {
+                send_error(&out, None, "frame exceeds size limit");
+                break;
+            }
+            Frame::Line => {}
+        }
+        let line: &[u8] = if buf.last() == Some(&b'\r') {
+            &buf[..buf.len() - 1]
+        } else {
+            &buf
+        };
+        if line.iter().all(|b| b.is_ascii_whitespace()) {
+            send_error(&out, None, "empty frame");
+            continue;
+        }
+        let (parsed, path) = json_lazy::parse_request_traced(line);
+        match path {
+            ParsePath::Lazy => {
+                stats.lazy_frames.fetch_add(1, Ordering::Relaxed);
+            }
+            ParsePath::Tree => {
+                stats.tree_frames.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let w: WireRequest = match parsed {
+            Ok(w) => w,
+            Err(e) => {
+                stats.frames_bad.fetch_add(1, Ordering::Relaxed);
+                send_error(&out, None, &e.to_string());
+                continue;
+            }
+        };
+        stats.frames_ok.fetch_add(1, Ordering::Relaxed);
+        let id = w.id;
+        let req = Request::partial(w.id, w.dense, w.tables, w.ids, tx.clone());
+        match coord.submit(req) {
+            Ok(Admission::Enqueued(_)) => {}
+            Ok(Admission::Rejected) => send_error(&out, Some(id), "rejected"),
+            Err(_) => {
+                send_error(&out, Some(id), "server shutting down");
+                break;
+            }
+        }
+    }
+    // Drop our sender so the pump exits once every in-flight request
+    // (each holding a clone) has been answered or dropped by a worker —
+    // this IS the per-connection drain.
+    drop(tx);
+    let _ = pump.join();
+    if let Ok(w) = out.lock() {
+        let _ = w.get_ref().shutdown(Shutdown::Both);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client side
+// ---------------------------------------------------------------------------
+
+/// One decoded response line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireResponse {
+    Ok { id: u64, prob: f32, e2e_us: u64 },
+    Error { id: Option<u64>, msg: String },
+}
+
+/// Decode a response line (tree parse: the client is not the measured
+/// system and response objects are three fields).
+pub fn parse_response_line(line: &str) -> crate::Result<WireResponse> {
+    let j = Json::parse(line.trim_end())
+        .map_err(|e| crate::err!("bad response JSON: {e}"))?;
+    if let Some(msg) = j.get("error").and_then(Json::as_str) {
+        let id = j.get("id").and_then(Json::as_f64).map(|x| x as u64);
+        return Ok(WireResponse::Error {
+            id,
+            msg: msg.to_string(),
+        });
+    }
+    Ok(WireResponse::Ok {
+        id: j.req_f64("id")? as u64,
+        prob: j.req_f64("prob")? as f32,
+        e2e_us: j.req_f64("e2e_us")? as u64,
+    })
+}
+
+/// Blocking client over one connection.
+pub struct NetClient {
+    stream: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl NetClient {
+    pub fn connect(addr: &SocketAddr) -> crate::Result<NetClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| crate::err!("connecting {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        let read_half = stream
+            .try_clone()
+            .map_err(|e| crate::err!("cloning stream: {e}"))?;
+        Ok(NetClient {
+            stream,
+            r: BufReader::new(read_half),
+        })
+    }
+
+    /// Split into independently-owned send/receive halves (for the
+    /// loadgen's sender/receiver thread pair).
+    pub fn split(self) -> (NetClientTx, NetClientRx) {
+        (
+            NetClientTx {
+                stream: self.stream,
+            },
+            NetClientRx { r: self.r },
+        )
+    }
+
+    /// Convenience: send one request and block for one line.
+    pub fn request(&mut self, req: &WireRequest) -> crate::Result<WireResponse> {
+        self.send_line(&req.to_line())?;
+        let mut line = String::new();
+        let n = self.r.read_line(&mut line)?;
+        crate::ensure!(n > 0, "server closed the connection");
+        parse_response_line(&line)
+    }
+
+    pub fn send_line(&mut self, line: &str) -> crate::Result<()> {
+        self.stream
+            .write_all(line.as_bytes())
+            .map_err(|e| crate::err!("send: {e}"))
+    }
+
+    /// Next response line; `None` on clean EOF.
+    pub fn recv(&mut self) -> crate::Result<Option<WireResponse>> {
+        let mut line = String::new();
+        let n = self
+            .r
+            .read_line(&mut line)
+            .map_err(|e| crate::err!("recv: {e}"))?;
+        if n == 0 {
+            return Ok(None);
+        }
+        parse_response_line(&line).map(Some)
+    }
+}
+
+/// Send half of a split [`NetClient`].
+pub struct NetClientTx {
+    stream: TcpStream,
+}
+
+impl NetClientTx {
+    pub fn send(&mut self, req: &WireRequest) -> crate::Result<()> {
+        self.send_line(&req.to_line())
+    }
+
+    pub fn send_line(&mut self, line: &str) -> crate::Result<()> {
+        self.stream
+            .write_all(line.as_bytes())
+            .map_err(|e| crate::err!("send: {e}"))
+    }
+
+    /// Half-close: tells the server no more requests are coming, so its
+    /// reader sees EOF and the connection drains naturally.
+    pub fn finish(&self) {
+        let _ = self.stream.shutdown(Shutdown::Write);
+    }
+}
+
+/// Receive half of a split [`NetClient`].
+pub struct NetClientRx {
+    r: BufReader<TcpStream>,
+}
+
+impl NetClientRx {
+    /// Next response line; `None` on clean EOF.
+    pub fn recv(&mut self) -> crate::Result<Option<WireResponse>> {
+        let mut line = String::new();
+        let n = self
+            .r
+            .read_line(&mut line)
+            .map_err(|e| crate::err!("recv: {e}"))?;
+        if n == 0 {
+            return Ok(None);
+        }
+        parse_response_line(&line).map(Some)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::MockEngine;
+    use crate::coordinator::server::CoordinatorConfig;
+    use crate::data::profile;
+    use crate::embeddings::EmbeddingStore;
+
+    fn server() -> NetServer {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                n_workers: 2,
+                ..Default::default()
+            },
+            Arc::new(EmbeddingStore::random(&profile("kdd").unwrap(), 8, 3)),
+            |_| Ok(Box::new(MockEngine::new(16, 3, 10, 8))),
+        )
+        .unwrap();
+        NetServer::start("127.0.0.1:0", coord, NetServerConfig::default()).unwrap()
+    }
+
+    fn valid_request(id: u64) -> WireRequest {
+        WireRequest {
+            id,
+            dense: vec![0.25; 3],
+            tables: (0..10).collect(),
+            ids: vec![1; 10],
+        }
+    }
+
+    #[test]
+    fn round_trip_over_loopback() {
+        let srv = server();
+        let mut c = NetClient::connect(&srv.local_addr()).unwrap();
+        match c.request(&valid_request(42)).unwrap() {
+            WireResponse::Ok { id, prob, .. } => {
+                assert_eq!(id, 42);
+                assert!((0.0..=1.0).contains(&prob));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert_eq!(srv.stats.frames_ok.load(Ordering::Relaxed), 1);
+        assert_eq!(srv.stats.lazy_frames.load(Ordering::Relaxed), 1);
+        let snap = srv.metrics();
+        assert_eq!(snap.requests, 1);
+        assert_eq!(snap.responses, 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn malformed_line_gets_structured_error() {
+        let srv = server();
+        let mut c = NetClient::connect(&srv.local_addr()).unwrap();
+        c.send_line("{not json}\n").unwrap();
+        match c.recv().unwrap().unwrap() {
+            WireResponse::Error { id, msg } => {
+                assert_eq!(id, None);
+                assert!(!msg.is_empty());
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert_eq!(srv.stats.frames_bad.load(Ordering::Relaxed), 1);
+        // the ledger never saw it
+        assert_eq!(srv.metrics().requests, 0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_with_idle_connection_does_not_hang() {
+        let srv = server();
+        let _idle = NetClient::connect(&srv.local_addr()).unwrap();
+        let t0 = Instant::now();
+        srv.shutdown();
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn response_line_is_parseable_and_compact() {
+        let line = response_line(&Response {
+            id: 9,
+            prob: 0.625,
+            e2e_ns: 12_345,
+        });
+        assert_eq!(line, "{\"id\":9,\"prob\":0.625,\"e2e_us\":12}\n");
+        match parse_response_line(&line).unwrap() {
+            WireResponse::Ok { id, prob, e2e_us } => {
+                assert_eq!((id, e2e_us), (9, 12));
+                assert_eq!(prob.to_bits(), 0.625f32.to_bits());
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+}

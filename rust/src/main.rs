@@ -15,11 +15,13 @@
 //!   artifacts   list artifact registry
 
 use autorac::coordinator::loadgen::{self, Arrival, LoadGenConfig, LoadReport};
+use autorac::coordinator::net::{NetServer, NetServerConfig};
 use autorac::coordinator::{
     AdmissionPolicy, BatcherConfig, Coordinator, CoordinatorConfig,
     MetricsSnapshot, MockEngine, PimEngine, PjrtEngine, Policy, Request,
     ServingStore,
 };
+use autorac::util::json_lazy;
 use autorac::data::{make_batch, profile, Generator, Splits, DEFAULT_SEED};
 use autorac::embeddings::{EmbeddingStore, ShardMap, ShardPolicy, ShardedStore};
 use autorac::mapping::{map_genome, MapStyle};
@@ -112,6 +114,10 @@ fn print_help() {
                       --engine mock|pim (pim = real crossbar math on BatchedXbar banks)\n\
                       --threads N (kernel threads per pim worker; 0 = all cores)\n\
                       --json PATH (machine-readable report, e.g. BENCH_serving.json)\n\
+                      --listen ADDR (serve over TCP, e.g. 127.0.0.1:0; loopback\n\
+                      self-bench unless --hold keeps serving until killed)\n\
+                      --connect ADDR (drive an external server; client stats only)\n\
+                      --conns N (loadgen connections, default 4) --quick (CI-sized run)\n\
          xbar-bench: --k N --n N (weight shape) --quick (short CI timings)\n\
                       --threads N (tile-parallel kernel threads; 0 = all cores)\n\
                       --json PATH (machine-readable report, e.g. BENCH_xbar.json)\n\
@@ -418,10 +424,12 @@ struct ServeBenchSetup {
     threads: usize,
 }
 
-fn serve_bench_run(
+/// Build the sharded store + coordinator for one serve-bench run
+/// (shared by the in-process driver and the `--listen` socket server).
+fn serve_bench_coordinator(
     s: &ServeBenchSetup,
     policy: Policy,
-) -> autorac::Result<(MetricsSnapshot, LoadReport)> {
+) -> autorac::Result<Coordinator> {
     let prof = profile(&s.dataset)?;
     let map = ShardMap::for_profile(&prof, s.shards, s.placement);
     let store = Arc::new(ShardedStore::random(&prof, s.d_emb, s.seed, map));
@@ -431,7 +439,7 @@ fn serve_bench_run(
     let genome = autorac_best(&s.dataset);
     let seed = s.seed;
     let threads = s.threads;
-    let coord = Coordinator::start_with(
+    Coordinator::start_with(
         CoordinatorConfig {
             n_workers: s.workers,
             policy,
@@ -456,20 +464,58 @@ fn serve_bench_run(
                 Ok(Box::new(e) as Box<dyn autorac::coordinator::InferenceEngine>)
             }
         },
-    )?;
-    let rep = loadgen::run(
-        &coord,
-        &prof,
-        &LoadGenConfig {
-            n_requests: s.n_requests,
-            arrival: s.arrival,
-            seed: s.seed,
-            coverage: s.coverage,
-        },
-    )?;
+    )
+}
+
+fn serve_bench_loadcfg(s: &ServeBenchSetup) -> LoadGenConfig {
+    LoadGenConfig {
+        n_requests: s.n_requests,
+        arrival: s.arrival,
+        seed: s.seed,
+        coverage: s.coverage,
+    }
+}
+
+fn serve_bench_run(
+    s: &ServeBenchSetup,
+    policy: Policy,
+) -> autorac::Result<(MetricsSnapshot, LoadReport)> {
+    let prof = profile(&s.dataset)?;
+    let coord = serve_bench_coordinator(s, policy)?;
+    let rep = loadgen::run(&coord, &prof, &serve_bench_loadcfg(s))?;
     let snap = coord.metrics.snapshot();
     coord.shutdown();
     Ok((snap, rep))
+}
+
+/// ns/request for the tree and lazy parsers over the deterministic wire
+/// corpus (hot fields + a realistic cold `ctx` payload the scorer
+/// ignores — exactly where lazy extraction pays).
+fn parse_microbench(
+    s: &ServeBenchSetup,
+) -> autorac::Result<(f64, f64)> {
+    let prof = profile(&s.dataset)?;
+    let mut cfg = serve_bench_loadcfg(s);
+    cfg.n_requests = cfg.n_requests.clamp(1, 512);
+    let corpus = loadgen::wire_corpus(&prof, &cfg, true)?;
+    let lines: Vec<&[u8]> =
+        corpus.iter().map(|l| l.trim_end().as_bytes()).collect();
+    let budget = std::time::Duration::from_millis(250);
+    let per = |f: &dyn Fn(&[u8])| -> f64 {
+        let t = time_per_call(budget, || {
+            for line in &lines {
+                f(line);
+            }
+        });
+        t / lines.len() as f64 * 1e9
+    };
+    let tree_ns = per(&|b| {
+        let _ = std::hint::black_box(json_lazy::parse_request_tree(b));
+    });
+    let lazy_ns = per(&|b| {
+        let _ = std::hint::black_box(json_lazy::parse_request(b));
+    });
+    Ok((tree_ns, lazy_ns))
 }
 
 fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
@@ -496,13 +542,20 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
         t => t,
     };
     let json_path = args.get("json").map(str::to_string);
+    // Socket-mode flags (S28) — consumed unconditionally so finish()
+    // passes whether or not a transport was picked.
+    let listen = args.get("listen").map(str::to_string);
+    let connect = args.get("connect").map(str::to_string);
+    let conns = args.usize_or("conns", 4)?;
+    let quick = args.flag("quick");
+    let hold = args.flag("hold");
     let setup = ServeBenchSetup {
         engine,
         dataset: args.str_or("dataset", "criteo"),
         workers,
         shards: args.usize_or("shards", workers)?,
         placement: ShardPolicy::parse(&args.str_or("placement", "hot"))?,
-        n_requests: args.usize_or("requests", 4000)?,
+        n_requests: args.usize_or("requests", if quick { 400 } else { 4000 })?,
         arrival: if rps > 0.0 {
             Arrival::OpenLoop { rps }
         } else {
@@ -521,6 +574,42 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
         threads,
     };
     args.finish()?;
+    if listen.is_some() && connect.is_some() {
+        autorac::bail!("--listen and --connect are mutually exclusive");
+    }
+
+    // Client-only mode: drive an external server over TCP and report
+    // wire-level stats (the server's ledger is not visible from here).
+    if let Some(addr_s) = connect {
+        let addr = resolve_addr(&addr_s)?;
+        let prof = profile(&setup.dataset)?;
+        println!(
+            "serve-bench {} -> {addr} ({conns} conns, {:?})",
+            setup.dataset, setup.arrival
+        );
+        let (rep, wire) =
+            loadgen::run_socket(&addr, &prof, &serve_bench_loadcfg(&setup), conns)?;
+        print_wire_stats(&rep, &wire, conns);
+        if let Some(path) = json_path {
+            let report = Json::from_pairs(vec![
+                ("bench", Json::Str("serving".into())),
+                ("transport", Json::Str("socket-client".into())),
+                ("dataset", Json::Str(setup.dataset.clone())),
+                ("conns", Json::Num(conns as f64)),
+                ("requests", Json::Num(setup.n_requests as f64)),
+                ("sent", Json::Num(rep.sent as f64)),
+                ("accepted", Json::Num(rep.accepted as f64)),
+                ("rejected", Json::Num(rep.rejected as f64)),
+                ("completed", Json::Num(rep.completed as f64)),
+                ("wire_p50_us", Json::Num(wire.wire_p50_us)),
+                ("wire_p99_us", Json::Num(wire.wire_p99_us)),
+                ("client_rps", Json::Num(wire.client_rps)),
+            ]);
+            report.write_file(std::path::Path::new(&path))?;
+            println!("wrote {path}");
+        }
+        return Ok(());
+    }
 
     let engine_desc = match setup.engine {
         ServeEngine::Mock => {
@@ -542,39 +631,66 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
         policy,
         setup.arrival,
     );
+    // Socket server mode: same stack behind the TCP front end (S28),
+    // driven over real loopback sockets; the round-robin baseline rerun
+    // is skipped (wire timing, not placement, is the subject here).
+    if let Some(listen_addr) = listen {
+        let coord = serve_bench_coordinator(&setup, policy)?;
+        let server =
+            NetServer::start(&listen_addr, coord, NetServerConfig::default())?;
+        let addr = server.local_addr();
+        println!("  listening on {addr}");
+        if hold {
+            println!("  --hold: serving until killed");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        let prof = profile(&setup.dataset)?;
+        let (rep, wire) =
+            loadgen::run_socket(&addr, &prof, &serve_bench_loadcfg(&setup), conns)?;
+        let snap = server.metrics();
+        let stats = Arc::clone(&server.stats);
+        server.shutdown();
+        print_serve_bench(&snap, &rep);
+        print_wire_stats(&rep, &wire, conns);
+        let (tree_ns, lazy_ns) = parse_microbench(&setup)?;
+        let speedup = tree_ns / lazy_ns.max(1e-9);
+        println!(
+            "  parse: tree {tree_ns:.0} ns/req | lazy {lazy_ns:.0} ns/req | \
+             lazy {speedup:.1}x faster"
+        );
+        if let Some(path) = json_path {
+            let ld = |v: &std::sync::atomic::AtomicU64| {
+                Json::Num(v.load(std::sync::atomic::Ordering::Relaxed) as f64)
+            };
+            let mut pairs = serve_bench_report(&setup, policy, &snap, &rep);
+            pairs.extend(vec![
+                ("transport", Json::Str("socket".into())),
+                ("conns", Json::Num(conns as f64)),
+                ("wire_p50_us", Json::Num(wire.wire_p50_us)),
+                ("wire_p99_us", Json::Num(wire.wire_p99_us)),
+                ("client_rps", Json::Num(wire.client_rps)),
+                ("frames_ok", ld(&stats.frames_ok)),
+                ("frames_bad", ld(&stats.frames_bad)),
+                ("lazy_frames", ld(&stats.lazy_frames)),
+                ("tree_frames", ld(&stats.tree_frames)),
+                ("tree_parse_ns", Json::Num(tree_ns)),
+                ("lazy_parse_ns", Json::Num(lazy_ns)),
+                ("lazy_speedup", Json::Num(speedup)),
+            ]);
+            let report = Json::from_pairs(pairs);
+            report.write_file(std::path::Path::new(&path))?;
+            println!("wrote {path}");
+        }
+        return Ok(());
+    }
+
     let (snap, rep) = serve_bench_run(&setup, policy)?;
     print_serve_bench(&snap, &rep);
     if let Some(path) = json_path {
-        let report = Json::from_pairs(vec![
-            ("bench", Json::Str("serving".into())),
-            (
-                "engine",
-                Json::Str(match setup.engine {
-                    ServeEngine::Mock => "mock".into(),
-                    ServeEngine::Pim => "pim".into(),
-                }),
-            ),
-            ("policy", Json::Str(format!("{policy:?}"))),
-            ("dataset", Json::Str(setup.dataset.clone())),
-            ("workers", Json::Num(setup.workers as f64)),
-            ("shards", Json::Num(setup.shards as f64)),
-            ("threads", Json::Num(setup.threads as f64)),
-            ("batch", Json::Num(setup.batch as f64)),
-            ("requests", Json::Num(setup.n_requests as f64)),
-            ("throughput_rps", Json::Num(snap.throughput_rps)),
-            ("mean_batch", Json::Num(snap.mean_batch)),
-            ("e2e_p50_us", Json::Num(snap.e2e_p50_us)),
-            ("e2e_p99_us", Json::Num(snap.e2e_p99_us)),
-            ("queue_p99_us", Json::Num(snap.queue_p99_us)),
-            ("exec_p50_us", Json::Num(snap.exec_p50_us)),
-            ("sent", Json::Num(rep.sent as f64)),
-            ("accepted", Json::Num(rep.accepted as f64)),
-            ("rejected", Json::Num(snap.rejected as f64)),
-            ("shed", Json::Num(snap.shed as f64)),
-            ("failed", Json::Num(snap.failed as f64)),
-            ("local_rows", Json::Num(snap.local_rows as f64)),
-            ("remote_rows", Json::Num(snap.remote_rows as f64)),
-        ]);
+        let report =
+            Json::from_pairs(serve_bench_report(&setup, policy, &snap, &rep));
         report.write_file(std::path::Path::new(&path))?;
         println!("wrote {path}");
     }
@@ -611,6 +727,71 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
         }
     }
     Ok(())
+}
+
+/// The serve-bench JSON report fields shared by the in-process and
+/// `--listen` transports (socket runs append wire/parse fields).
+fn serve_bench_report(
+    setup: &ServeBenchSetup,
+    policy: Policy,
+    snap: &MetricsSnapshot,
+    rep: &LoadReport,
+) -> Vec<(&'static str, Json)> {
+    vec![
+        ("bench", Json::Str("serving".into())),
+        (
+            "engine",
+            Json::Str(match setup.engine {
+                ServeEngine::Mock => "mock".into(),
+                ServeEngine::Pim => "pim".into(),
+            }),
+        ),
+        ("policy", Json::Str(format!("{policy:?}"))),
+        ("dataset", Json::Str(setup.dataset.clone())),
+        ("workers", Json::Num(setup.workers as f64)),
+        ("shards", Json::Num(setup.shards as f64)),
+        ("threads", Json::Num(setup.threads as f64)),
+        ("batch", Json::Num(setup.batch as f64)),
+        ("requests", Json::Num(setup.n_requests as f64)),
+        ("throughput_rps", Json::Num(snap.throughput_rps)),
+        ("mean_batch", Json::Num(snap.mean_batch)),
+        ("e2e_p50_us", Json::Num(snap.e2e_p50_us)),
+        ("e2e_p99_us", Json::Num(snap.e2e_p99_us)),
+        ("queue_p99_us", Json::Num(snap.queue_p99_us)),
+        ("exec_p50_us", Json::Num(snap.exec_p50_us)),
+        ("sent", Json::Num(rep.sent as f64)),
+        ("accepted", Json::Num(rep.accepted as f64)),
+        ("rejected", Json::Num(snap.rejected as f64)),
+        ("shed", Json::Num(snap.shed as f64)),
+        ("failed", Json::Num(snap.failed as f64)),
+        ("local_rows", Json::Num(snap.local_rows as f64)),
+        ("remote_rows", Json::Num(snap.remote_rows as f64)),
+    ]
+}
+
+/// Resolve `host:port` to a socket address (first resolution wins).
+fn resolve_addr(s: &str) -> autorac::Result<std::net::SocketAddr> {
+    use std::net::ToSocketAddrs;
+    s.to_socket_addrs()
+        .map_err(|e| autorac::err!("resolving `{s}`: {e}"))?
+        .next()
+        .ok_or_else(|| autorac::err!("`{s}` resolved to no address"))
+}
+
+fn print_wire_stats(
+    rep: &LoadReport,
+    wire: &autorac::coordinator::WireStats,
+    conns: usize,
+) {
+    println!(
+        "  wire ({conns} conns): completed {} | e2e p50 {:.0} µs  \
+         p99 {:.0} µs | {:.0} req/s over {:.2} s",
+        rep.completed,
+        wire.wire_p50_us,
+        wire.wire_p99_us,
+        wire.client_rps,
+        wire.elapsed_s
+    );
 }
 
 fn print_serve_bench(snap: &MetricsSnapshot, rep: &LoadReport) {

@@ -33,6 +33,14 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Maximum container nesting the parser accepts. The descent is
+/// recursive, so without a cap a hostile `[[[[…` line would overflow
+/// the stack instead of returning an error; 512 levels is far beyond
+/// any genome/config/report this crate emits. `util::json_lazy` skips
+/// cold values with the same bound so both paths agree on what is
+/// "too deep".
+pub const MAX_DEPTH: usize = 512;
+
 impl Json {
     // ---------- constructors ----------
     pub fn obj() -> Json {
@@ -239,6 +247,7 @@ impl Json {
         let mut p = Parser {
             bytes: text.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -310,6 +319,7 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -361,12 +371,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting exceeds depth limit"));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut pairs = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(pairs));
         }
         loop {
@@ -384,6 +404,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(pairs));
                 }
                 _ => return Err(self.err("expected `,` or `}`")),
@@ -393,10 +414,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -409,6 +432,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 _ => return Err(self.err("expected `,` or `]`")),
@@ -593,6 +617,24 @@ mod tests {
     fn integers_are_printed_without_fraction() {
         assert_eq!(Json::Num(42.0).to_string_compact(), "42");
         assert_eq!(Json::Num(0.25).to_string_compact(), "0.25");
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        // hostile depth: an unclosed tower of arrays 100k deep must
+        // return a parse error, not blow the recursion stack
+        let hostile = "[".repeat(100_000);
+        let e = Json::parse(&hostile).unwrap_err();
+        assert!(e.msg.contains("depth"), "{e}");
+
+        // a *closed* tower just past the cap errors too
+        let n = MAX_DEPTH + 1;
+        let closed = format!("{}{}", "[".repeat(n), "]".repeat(n));
+        assert!(Json::parse(&closed).is_err());
+
+        // comfortably inside the cap still parses
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&ok).is_ok());
     }
 
     #[test]

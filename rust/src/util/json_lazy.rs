@@ -1,0 +1,632 @@
+//! Lazy wire-request extraction (S27): hot-field scanning over raw
+//! bytes, with the `util::json` tree parser as the authoritative
+//! fallback.
+//!
+//! The serving front end (`coordinator::net`, S28) speaks one request
+//! line per inference:
+//!
+//! ```text
+//! {"id":7,"dense":[0.5,-1.25],"tables":[0,3,9],"ids":[12,44,7]}\n
+//! ```
+//!
+//! Building a full [`Json`] tree for that line allocates a `String` per
+//! key, a boxed `Json::Num` per element, and a `Vec` per container —
+//! then throws it all away after four field lookups. [`lazy_scan`]
+//! instead cursor-walks the bytes once and parses the four hot fields
+//! (`id`, `dense`, `tables`, `ids`) straight into their final typed
+//! buffers, skipping any cold field (session blobs, AB labels, user
+//! agents…) without materialising it.
+//!
+//! **Invariant — lazy never disagrees with the tree.** The scanner
+//! returns [`Scan::Fallback`] the moment it sees anything it is not
+//! trivially sure about: a non-ASCII byte anywhere, a `\` escape in any
+//! string, a hot field with a surprising type, nesting past
+//! [`json::MAX_DEPTH`], any grammar it does not recognise. Fallback
+//! re-parses the same bytes through [`Json::parse`], so the lazy path
+//! can only ever accept a *subset* of what the tree accepts, and on
+//! that subset it produces bit-identical values by construction: both
+//! paths scan the same number extent, call the same `str::parse::<f64>`,
+//! and convert through the same narrowing helpers. Duplicate keys keep
+//! the tree's first-occurrence-wins semantics ([`Json::get`] returns
+//! the first match). The differential qcheck suite
+//! (`rust/tests/json_lazy_prop.rs`) pins all of this.
+
+use super::json::{self, Json};
+
+/// Hard caps applied by [`WireRequest::validate`] on BOTH parse paths.
+/// These are request-shape sanity bounds (anti-DoS hygiene), not panic
+/// guards — the embedding gather paths already clamp hostile row ids.
+pub const MAX_WIRE_FIELDS: usize = 4096;
+/// Cap on `dense` length (see [`MAX_WIRE_FIELDS`]).
+pub const MAX_WIRE_DENSE: usize = 4096;
+
+/// A decoded serving request, transport-level view.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    pub id: u64,
+    pub dense: Vec<f32>,
+    /// table indices, strictly ascending (same contract as
+    /// `coordinator::server::Request::fields`)
+    pub tables: Vec<u32>,
+    /// one embedding row id per entry of `tables`
+    pub ids: Vec<i32>,
+}
+
+/// Which parser produced a result — surfaced so tests and server
+/// counters can pin the lazy hit-rate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParsePath {
+    Lazy,
+    Tree,
+}
+
+/// Outcome of one lazy pass over the bytes.
+pub enum Scan {
+    Done(WireRequest),
+    /// the scanner was not sure; re-parse through the tree. The reason
+    /// is for diagnostics only — the tree path is authoritative for
+    /// both acceptance and the error message.
+    Fallback(&'static str),
+}
+
+// ---------------------------------------------------------------------------
+// Shared narrowing helpers — the ONE definition both paths go through,
+// so a lazy-accepted number can never convert differently than the
+// tree-accepted same number.
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn f64_to_u64(x: f64) -> Option<u64> {
+    // `as` saturates, which is fine: a request id only needs identity
+    (x >= 0.0 && x.fract() == 0.0).then(|| x as u64)
+}
+
+#[inline]
+fn f64_to_u32(x: f64) -> Option<u32> {
+    (x >= 0.0 && x <= u32::MAX as f64 && x.fract() == 0.0).then(|| x as u32)
+}
+
+#[inline]
+fn f64_to_i32(x: f64) -> Option<i32> {
+    (x >= i32::MIN as f64 && x <= i32::MAX as f64 && x.fract() == 0.0)
+        .then(|| x as i32)
+}
+
+impl WireRequest {
+    /// Decode from an already-built tree (the fallback path).
+    pub fn from_json(j: &Json) -> crate::Result<WireRequest> {
+        let id = j
+            .get("id")
+            .and_then(Json::as_f64)
+            .and_then(f64_to_u64)
+            .ok_or_else(|| crate::err!("missing/invalid number field `id`"))?;
+        let dense: Vec<f32> = j
+            .req_arr("dense")?
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as f32))
+            .collect::<Option<_>>()
+            .ok_or_else(|| crate::err!("non-number in `dense`"))?;
+        let tables: Vec<u32> = j
+            .req_arr("tables")?
+            .iter()
+            .map(|v| v.as_f64().and_then(f64_to_u32))
+            .collect::<Option<_>>()
+            .ok_or_else(|| crate::err!("non-u32 in `tables`"))?;
+        let ids: Vec<i32> = j
+            .req_arr("ids")?
+            .iter()
+            .map(|v| v.as_f64().and_then(f64_to_i32))
+            .collect::<Option<_>>()
+            .ok_or_else(|| crate::err!("non-i32 in `ids`"))?;
+        Ok(WireRequest { id, dense, tables, ids })
+    }
+
+    /// Shape sanity, applied after BOTH parse paths.
+    pub fn validate(&self) -> crate::Result<()> {
+        crate::ensure!(
+            self.tables.len() == self.ids.len(),
+            "`tables` ({}) and `ids` ({}) lengths differ",
+            self.tables.len(),
+            self.ids.len()
+        );
+        crate::ensure!(
+            self.tables.len() <= MAX_WIRE_FIELDS,
+            "too many sparse fields ({} > {MAX_WIRE_FIELDS})",
+            self.tables.len()
+        );
+        crate::ensure!(
+            self.dense.len() <= MAX_WIRE_DENSE,
+            "too many dense features ({} > {MAX_WIRE_DENSE})",
+            self.dense.len()
+        );
+        crate::ensure!(
+            self.tables.windows(2).all(|w| w[0] < w[1]),
+            "`tables` must be strictly ascending"
+        );
+        Ok(())
+    }
+
+    /// Encode as one request line (trailing `\n` included). Floats use
+    /// Rust's shortest round-trip formatting; an f32 printed this way,
+    /// parsed back as f64 and narrowed, recovers the original bits —
+    /// pinned by the encoder round-trip qcheck.
+    pub fn to_line(&self) -> String {
+        let mut s = String::with_capacity(
+            40 + 12 * (self.dense.len() + self.tables.len() + self.ids.len()),
+        );
+        s.push_str("{\"id\":");
+        s.push_str(&self.id.to_string());
+        s.push_str(",\"dense\":[");
+        for (i, &x) in self.dense.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            write_f32(&mut s, x);
+        }
+        s.push_str("],\"tables\":[");
+        for (i, &t) in self.tables.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&t.to_string());
+        }
+        s.push_str("],\"ids\":[");
+        for (i, &v) in self.ids.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&v.to_string());
+        }
+        s.push_str("]}\n");
+        s
+    }
+}
+
+/// Append an f32 as a JSON number in shortest round-trip form (shared
+/// with the response encoder in `coordinator::net`). JSON has no
+/// NaN/Inf; mirror `json::write_num` and emit `null`, which both decode
+/// paths then reject as a non-number (fail-loud beats a silently
+/// corrupted feature).
+pub fn write_f32(out: &mut String, x: f32) {
+    if x.is_finite() {
+        // -0.0 must take the Display branch ("-0") to round-trip its bits
+        if x.fract() == 0.0 && x.abs() < 1.0e7 && !(x == 0.0 && x.is_sign_negative()) {
+            out.push_str(&format!("{}", x as i64));
+        } else {
+            out.push_str(&format!("{x}"));
+        }
+    } else {
+        out.push_str("null");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
+
+/// Parse one request line, lazy-first. See [`parse_request_traced`].
+pub fn parse_request(bytes: &[u8]) -> crate::Result<WireRequest> {
+    parse_request_traced(bytes).0
+}
+
+/// Parse one request line and report which path produced the result.
+pub fn parse_request_traced(bytes: &[u8]) -> (crate::Result<WireRequest>, ParsePath) {
+    match lazy_scan(bytes) {
+        Scan::Done(req) => {
+            let res = req.validate().map(|()| req);
+            (res, ParsePath::Lazy)
+        }
+        Scan::Fallback(_) => (parse_request_tree(bytes), ParsePath::Tree),
+    }
+}
+
+/// The authoritative tree path (public so benches can time it head-to-
+/// head against the lazy path on identical bytes).
+pub fn parse_request_tree(bytes: &[u8]) -> crate::Result<WireRequest> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| crate::err!("request is not valid UTF-8"))?;
+    let j = Json::parse(text).map_err(|e| crate::err!("bad request JSON: {e}"))?;
+    let req = WireRequest::from_json(&j)?;
+    req.validate()?;
+    Ok(req)
+}
+
+// ---------------------------------------------------------------------------
+// The scanner
+// ---------------------------------------------------------------------------
+
+/// One pass over the bytes. Never errors and never panics: anything
+/// suspicious is a [`Scan::Fallback`].
+pub fn lazy_scan(bytes: &[u8]) -> Scan {
+    let mut c = Cursor { b: bytes, i: 0 };
+    macro_rules! fall {
+        ($why:expr) => {
+            return Scan::Fallback($why)
+        };
+    }
+    c.skip_ws();
+    if c.peek() != Some(b'{') {
+        fall!("top level is not an object");
+    }
+    c.i += 1;
+
+    let mut id: Option<u64> = None;
+    let mut dense: Option<Vec<f32>> = None;
+    let mut tables: Option<Vec<u32>> = None;
+    let mut ids: Option<Vec<i32>> = None;
+
+    c.skip_ws();
+    if c.peek() == Some(b'}') {
+        c.i += 1;
+    } else {
+        loop {
+            c.skip_ws();
+            let (ks, ke) = match c.raw_string() {
+                Ok(span) => span,
+                Err(why) => fall!(why),
+            };
+            c.skip_ws();
+            if c.peek() != Some(b':') {
+                fall!("expected `:` after key");
+            }
+            c.i += 1;
+            c.skip_ws();
+            // First occurrence wins (Json::get semantics); later
+            // duplicates are skipped like any cold field.
+            let outcome = match &bytes[ks..ke] {
+                b"id" if id.is_none() => match c.number() {
+                    Ok(x) => match f64_to_u64(x) {
+                        Some(v) => {
+                            id = Some(v);
+                            Ok(())
+                        }
+                        None => Err("`id` is not a u64"),
+                    },
+                    Err(why) => Err(why),
+                },
+                b"dense" if dense.is_none() => {
+                    match c.number_array(|x| Some(x as f32)) {
+                        Ok(v) => {
+                            dense = Some(v);
+                            Ok(())
+                        }
+                        Err(why) => Err(why),
+                    }
+                }
+                b"tables" if tables.is_none() => match c.number_array(f64_to_u32) {
+                    Ok(v) => {
+                        tables = Some(v);
+                        Ok(())
+                    }
+                    Err(why) => Err(why),
+                },
+                b"ids" if ids.is_none() => match c.number_array(f64_to_i32) {
+                    Ok(v) => {
+                        ids = Some(v);
+                        Ok(())
+                    }
+                    Err(why) => Err(why),
+                },
+                _ => c.skip_value(0),
+            };
+            if let Err(why) = outcome {
+                fall!(why);
+            }
+            c.skip_ws();
+            match c.peek() {
+                Some(b',') => c.i += 1,
+                Some(b'}') => {
+                    c.i += 1;
+                    break;
+                }
+                _ => fall!("expected `,` or `}`"),
+            }
+        }
+    }
+    c.skip_ws();
+    if c.i != bytes.len() {
+        fall!("trailing bytes after object");
+    }
+    match (id, dense, tables, ids) {
+        (Some(id), Some(dense), Some(tables), Some(ids)) => {
+            Scan::Done(WireRequest { id, dense, tables, ids })
+        }
+        // missing hot field: let the tree path own the error message
+        _ => Scan::Fallback("missing hot field"),
+    }
+}
+
+type ScanResult<T> = Result<T, &'static str>;
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    #[inline]
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    #[inline]
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    /// A `"…"` span with NO escapes, NO control bytes, NO non-ASCII —
+    /// the only strings the lazy path trusts itself with. Returns the
+    /// byte span between the quotes.
+    fn raw_string(&mut self) -> ScanResult<(usize, usize)> {
+        if self.peek() != Some(b'"') {
+            return Err("expected a string");
+        }
+        self.i += 1;
+        let start = self.i;
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string"),
+                Some(b'"') => {
+                    let end = self.i;
+                    self.i += 1;
+                    return Ok((start, end));
+                }
+                Some(b'\\') => return Err("escape in string"),
+                Some(c) if c < 0x20 || c >= 0x80 => {
+                    return Err("non-ASCII or control byte in string")
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+
+    /// Scan a number with EXACTLY the tree parser's extent grammar and
+    /// the same `str::parse::<f64>` — bit-identical by construction.
+    fn number(&mut self) -> ScanResult<f64> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if self.i == start {
+            return Err("expected a number");
+        }
+        // the extent is ASCII by construction of the scan above
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .ok_or("invalid number")
+    }
+
+    /// `[n, n, …]` of numbers straight into a typed vec.
+    fn number_array<T>(&mut self, narrow: impl Fn(f64) -> Option<T>) -> ScanResult<Vec<T>> {
+        if self.peek() != Some(b'[') {
+            return Err("expected an array");
+        }
+        self.i += 1;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(out);
+        }
+        loop {
+            self.skip_ws();
+            let x = self.number()?;
+            out.push(narrow(x).ok_or("element out of range for target type")?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                _ => return Err("expected `,` or `]`"),
+            }
+        }
+    }
+
+    /// Skip one cold JSON value without materialising it. Mirrors the
+    /// tree parser's grammar (same literals, same number extents, same
+    /// [`json::MAX_DEPTH`]) but with the stricter lazy string rule, so
+    /// it accepts a strict subset of what the tree accepts.
+    fn skip_value(&mut self, depth: usize) -> ScanResult<()> {
+        match self.peek() {
+            Some(b'{') => self.skip_object(depth + 1),
+            Some(b'[') => self.skip_array(depth + 1),
+            Some(b'"') => self.raw_string().map(|_| ()),
+            Some(b't') => self.skip_lit(b"true"),
+            Some(b'f') => self.skip_lit(b"false"),
+            Some(b'n') => self.skip_lit(b"null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number().map(|_| ()),
+            _ => Err("expected a JSON value"),
+        }
+    }
+
+    fn skip_lit(&mut self, lit: &[u8]) -> ScanResult<()> {
+        if self.b[self.i..].starts_with(lit) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err("bad literal")
+        }
+    }
+
+    fn skip_object(&mut self, depth: usize) -> ScanResult<()> {
+        if depth > json::MAX_DEPTH {
+            return Err("nesting exceeds depth limit");
+        }
+        self.i += 1; // past `{`
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.skip_ws();
+            self.raw_string()?;
+            self.skip_ws();
+            if self.peek() != Some(b':') {
+                return Err("expected `:`");
+            }
+            self.i += 1;
+            self.skip_ws();
+            self.skip_value(depth)?;
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => return Err("expected `,` or `}`"),
+            }
+        }
+    }
+
+    fn skip_array(&mut self, depth: usize) -> ScanResult<()> {
+        if depth > json::MAX_DEPTH {
+            return Err("nesting exceeds depth limit");
+        }
+        self.i += 1; // past `[`
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.skip_ws();
+            self.skip_value(depth)?;
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => return Err("expected `,` or `]`"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> WireRequest {
+        WireRequest {
+            id: 7,
+            dense: vec![0.5, -1.25, 3.0],
+            tables: vec![0, 3, 9],
+            ids: vec![12, -4, 7],
+        }
+    }
+
+    #[test]
+    fn happy_path_stays_lazy_and_round_trips() {
+        let line = req().to_line();
+        let (got, path) = parse_request_traced(line.trim_end().as_bytes());
+        assert_eq!(path, ParsePath::Lazy);
+        assert_eq!(got.unwrap(), req());
+    }
+
+    #[test]
+    fn cold_fields_are_skipped_lazily() {
+        let line = concat!(
+            r#"{"ctx":{"sess":"abc","ab":["x","y"],"n":null,"ok":true},"#,
+            r#""id":7,"dense":[0.5,-1.25,3],"tables":[0,3,9],"ids":[12,-4,7],"#,
+            r#""extra":[1,[2,[3]]]}"#
+        );
+        let (got, path) = parse_request_traced(line.as_bytes());
+        assert_eq!(path, ParsePath::Lazy);
+        assert_eq!(got.unwrap(), req());
+    }
+
+    #[test]
+    fn escapes_and_unicode_fall_back_but_agree() {
+        for line in [
+            r#"{"id":1,"dense":[1],"tables":[0],"ids":[2],"note":"a\nb"}"#,
+            "{\"id\":1,\"dense\":[1],\"tables\":[0],\"ids\":[2],\"note\":\"caf\u{e9}\"}",
+        ] {
+            let (got, path) = parse_request_traced(line.as_bytes());
+            assert_eq!(path, ParsePath::Tree, "{line}");
+            let tree = parse_request_tree(line.as_bytes()).unwrap();
+            assert_eq!(got.unwrap(), tree);
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_keep_first_occurrence() {
+        let line = r#"{"id":1,"id":999,"dense":[1],"dense":"junk","tables":[0],"ids":[2]}"#;
+        let (got, path) = parse_request_traced(line.as_bytes());
+        assert_eq!(path, ParsePath::Lazy);
+        let got = got.unwrap();
+        assert_eq!(got.id, 1);
+        assert_eq!(got.dense, vec![1.0]);
+        // and the tree agrees
+        assert_eq!(got, parse_request_tree(line.as_bytes()).unwrap());
+    }
+
+    #[test]
+    fn validation_rejects_shape_violations_on_both_paths() {
+        // mismatched lengths
+        let line = r#"{"id":1,"dense":[1],"tables":[0,1],"ids":[2]}"#;
+        assert!(parse_request(line.as_bytes()).is_err());
+        assert!(parse_request_tree(line.as_bytes()).is_err());
+        // unsorted tables
+        let line = r#"{"id":1,"dense":[1],"tables":[3,0],"ids":[2,2]}"#;
+        assert!(parse_request(line.as_bytes()).is_err());
+        assert!(parse_request_tree(line.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn hostile_inputs_error_without_panicking() {
+        for bad in [
+            &b""[..],
+            b"{",
+            b"garbage",
+            b"{\"id\":}",
+            b"\xff\xfe\x00",
+            b"[1,2,3]",
+            b"{\"id\":1,\"dense\":[1],\"tables\":[0],\"ids\":[2]} trailing",
+        ] {
+            assert!(parse_request(bad).is_err(), "{bad:?}");
+        }
+        // deep nesting in a cold field: falls back, tree rejects at cap
+        let deep = format!(
+            r#"{{"id":1,"dense":[1],"tables":[0],"ids":[2],"x":{}1{}}}"#,
+            "[".repeat(json::MAX_DEPTH + 4),
+            "]".repeat(json::MAX_DEPTH + 4)
+        );
+        assert!(parse_request(deep.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn nonfinite_floats_encode_as_null_and_are_rejected() {
+        let mut r = req();
+        r.dense[0] = f32::NAN;
+        let line = r.to_line();
+        assert!(line.contains("null"));
+        assert!(parse_request(line.trim_end().as_bytes()).is_err());
+    }
+}

@@ -5,6 +5,7 @@ pub mod bench;
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod json_lazy;
 pub mod logger;
 pub mod qcheck;
 pub mod rng;

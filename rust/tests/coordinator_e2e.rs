@@ -3,17 +3,21 @@
 //! accounting under overload, drain-on-shutdown, per-client FIFO — plus
 //! (artifact-gated) a PJRT-backed smoke run.
 
+use autorac::coordinator::loadgen::{self, Arrival, LoadGenConfig};
 use autorac::coordinator::{
     Admission, AdmissionPolicy, BatcherConfig, Coordinator,
-    CoordinatorConfig, MockEngine, PjrtEngine, Policy, Request, ServingStore,
+    CoordinatorConfig, MockEngine, NetClient, NetServer, NetServerConfig,
+    PjrtEngine, Policy, Request, ServingStore, WireResponse,
 };
 use autorac::data::{profile, Generator, DEFAULT_SEED};
 use autorac::embeddings::{EmbeddingStore, ShardMap, ShardPolicy, ShardedStore};
 use autorac::runtime::atns::TensorFile;
 use autorac::runtime::client::Runtime;
+use autorac::util::json_lazy::WireRequest;
+use std::io::Write;
 use std::path::Path;
 use std::sync::{mpsc, Arc};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn store() -> Arc<EmbeddingStore> {
     Arc::new(EmbeddingStore::random(&profile("criteo").unwrap(), 32, 7))
@@ -314,6 +318,169 @@ fn response_ordering_is_per_client_fifo() {
         assert_eq!(got, want, "client {s} stream not FIFO");
     }
     c.shutdown();
+}
+
+fn wire_request(id: u64) -> WireRequest {
+    WireRequest {
+        id,
+        dense: vec![0.1; 13],
+        tables: (0..26).collect(),
+        ids: vec![1; 26],
+    }
+}
+
+/// Conservation over real sockets with hostile clients in the mix:
+/// `requests == responses + rejected + shed + failed` must hold with a
+/// client that vanishes mid-request and one that stalls on a half-sent
+/// frame — and shutdown must not wait for the staller.
+#[test]
+fn socket_e2e_conservation_with_hostile_clients() {
+    let prof = profile("criteo").unwrap();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            n_workers: 2,
+            ..Default::default()
+        },
+        Arc::new(EmbeddingStore::random(&prof, 16, 7)),
+        |_| {
+            let mut e = MockEngine::new(16, 13, 26, 16);
+            e.delay = Duration::from_micros(100); // keep replies in flight
+            Ok(Box::new(e))
+        },
+    )
+    .unwrap();
+    let srv =
+        NetServer::start("127.0.0.1:0", coord, NetServerConfig::default()).unwrap();
+    let addr = srv.local_addr();
+
+    // one client vanishes right after sending a valid request — its
+    // response has nowhere to go, but the ledger must still book it
+    {
+        let mut c = NetClient::connect(&addr).unwrap();
+        c.send_line(&wire_request(1000).to_line()).unwrap();
+    }
+    // ... and one stalls forever on a half-sent frame (never booked)
+    let mut stall = std::net::TcpStream::connect(addr).unwrap();
+    stall.write_all(b"{\"id\":2000,\"dense\":[0.1").unwrap();
+
+    // 4 well-behaved concurrent clients, 30 requests each
+    let mut handles = Vec::new();
+    for cidx in 0..4u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut c = NetClient::connect(&addr).unwrap();
+            let mut got = 0u64;
+            for k in 0..30u64 {
+                match c.request(&wire_request(cidx * 100 + k)).unwrap() {
+                    WireResponse::Ok { id, .. } => {
+                        assert_eq!(id, cidx * 100 + k);
+                        got += 1;
+                    }
+                    WireResponse::Error { msg, .. } => {
+                        panic!("unbounded queues rejected: {msg}")
+                    }
+                }
+            }
+            got
+        }));
+    }
+    let completed: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(completed, 120);
+
+    // the vanished client's request may still be in flight — wait for
+    // the books to balance, then pin them
+    let t0 = Instant::now();
+    let snap = loop {
+        let s = srv.metrics();
+        if s.requests == 121
+            && s.responses + s.rejected + s.shed + s.failed == s.requests
+        {
+            break s;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "ledger never balanced: {s:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    // 120 well-behaved + 1 vanished; the staller's half-frame was never
+    // parsed, so it must not appear anywhere
+    assert_eq!(snap.requests, 121);
+    assert_eq!(snap.rejected + snap.shed + snap.failed, 0);
+
+    // drain must complete promptly with the staller still attached
+    let t0 = Instant::now();
+    srv.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "shutdown blocked on a stalled connection"
+    );
+    drop(stall);
+}
+
+/// Seed-determinism survives the transport: the same seed produces the
+/// same schedule object twice, and scoring that schedule in-process vs
+/// over a loopback socket yields bit-identical id→prob maps.
+#[test]
+fn socket_and_in_process_runs_agree_bit_for_bit_per_seed() {
+    let prof = profile("criteo").unwrap();
+    let cfg = LoadGenConfig {
+        n_requests: 80,
+        arrival: Arrival::ClosedLoop { concurrency: 8 },
+        seed: 21,
+        coverage: 0.5,
+    };
+    let s1 = loadgen::build_schedule(&prof, &cfg).unwrap();
+    let s2 = loadgen::build_schedule(&prof, &cfg).unwrap();
+    assert_eq!(s1, s2, "schedule must be a pure function of the seed");
+
+    let mk = || {
+        Coordinator::start(
+            CoordinatorConfig {
+                n_workers: 2,
+                ..Default::default()
+            },
+            Arc::new(EmbeddingStore::random(&prof, 16, 7)),
+            |_| Ok(Box::new(MockEngine::new(16, 13, 26, 16))),
+        )
+        .unwrap()
+    };
+
+    // in-process: submit the schedule's content directly
+    let coord = mk();
+    let (tx, rx) = mpsc::channel();
+    for sr in &s1 {
+        coord
+            .submit(Request::partial(
+                sr.k,
+                sr.dense.clone(),
+                sr.fields.clone(),
+                sr.ids.clone(),
+                tx.clone(),
+            ))
+            .unwrap();
+    }
+    drop(tx);
+    let mut inproc: Vec<(u64, u32)> =
+        rx.iter().map(|r| (r.id, r.prob.to_bits())).collect();
+    inproc.sort_unstable();
+    coord.shutdown();
+
+    // over the socket: the same schedule crosses the wire encoder, the
+    // lazy parser, and the response encoder — bits must survive all of it
+    let srv =
+        NetServer::start("127.0.0.1:0", mk(), NetServerConfig::default()).unwrap();
+    let mut c = NetClient::connect(&srv.local_addr()).unwrap();
+    let mut wired: Vec<(u64, u32)> = Vec::new();
+    for sr in &s1 {
+        match c.request(&sr.to_wire()).unwrap() {
+            WireResponse::Ok { id, prob, .. } => wired.push((id, prob.to_bits())),
+            other => panic!("socket run failed on {}: {other:?}", sr.k),
+        }
+    }
+    wired.sort_unstable();
+    srv.shutdown();
+    assert_eq!(inproc.len(), 80);
+    assert_eq!(inproc, wired, "the transport changed the scored results");
 }
 
 #[test]

@@ -1,0 +1,368 @@
+//! Differential property suite for `util::json_lazy` (ISSUE 6
+//! satellite): the lazy scanner must NEVER disagree with the tree
+//! parser — same accept/reject decision on every input, bit-identical
+//! fields on every accept — and the fallback trigger paths (escapes,
+//! unicode, depth, type surprises) must actually fire.
+
+use autorac::coordinator::loadgen::{self, Arrival, LoadGenConfig};
+use autorac::data::profile;
+use autorac::util::json_lazy::{
+    self, parse_request_traced, parse_request_tree, write_f32, ParsePath,
+    WireRequest,
+};
+use autorac::util::qcheck::{qcheck, Gen};
+use autorac::{prop_assert, prop_assert_eq};
+
+/// Bit-level equality (f32 payloads compared through `to_bits`, so
+/// -0.0 vs 0.0 and NaN patterns cannot silently pass `==`).
+fn same_request(a: &WireRequest, b: &WireRequest) -> bool {
+    a.id == b.id
+        && a.tables == b.tables
+        && a.ids == b.ids
+        && a.dense.len() == b.dense.len()
+        && a.dense
+            .iter()
+            .zip(&b.dense)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// The headline differential: whatever `parse_request` returns must
+/// match the authoritative tree parse on the same bytes.
+fn check_differential(bytes: &[u8]) -> Result<ParsePath, String> {
+    let (fast, path) = parse_request_traced(bytes);
+    let tree = parse_request_tree(bytes);
+    match (&fast, &tree) {
+        (Ok(a), Ok(b)) => {
+            if !same_request(a, b) {
+                return Err(format!(
+                    "paths disagree on value ({path:?}):\n  fast {a:?}\n  tree {b:?}\n  \
+                     input {:?}",
+                    String::from_utf8_lossy(bytes)
+                ));
+            }
+        }
+        (Err(_), Err(_)) => {}
+        _ => {
+            return Err(format!(
+                "paths disagree on acceptance ({path:?}): fast ok={} tree ok={} \
+                 input {:?}",
+                fast.is_ok(),
+                tree.is_ok(),
+                String::from_utf8_lossy(bytes)
+            ))
+        }
+    }
+    Ok(path)
+}
+
+// ---------------------------------------------------------------------------
+// Random request-line generator. Tracks whether it emitted anything the
+// lazy scanner is documented to refuse (escape / non-ASCII), so the
+// path assertion can be exact.
+// ---------------------------------------------------------------------------
+
+struct LineGen {
+    out: String,
+    /// true once a `\` escape or a non-ASCII char was emitted anywhere
+    forced_tree: bool,
+}
+
+impl LineGen {
+    fn string(&mut self, g: &mut Gen) {
+        self.out.push('"');
+        for _ in 0..g.usize(0, 8) {
+            match g.usize(0, 9) {
+                0..=5 => {
+                    // plain ASCII letter/digit — lazy-safe
+                    let c = b'a' + g.usize(0, 25) as u8;
+                    self.out.push(c as char);
+                }
+                6 => {
+                    self.out.push_str("\\n");
+                    self.forced_tree = true;
+                }
+                7 => {
+                    self.out.push_str("\\u00e9");
+                    self.forced_tree = true;
+                }
+                8 => {
+                    self.out.push_str("\\\"");
+                    self.forced_tree = true;
+                }
+                _ => {
+                    self.out.push('é'); // raw UTF-8, non-ASCII byte
+                    self.forced_tree = true;
+                }
+            }
+        }
+        self.out.push('"');
+    }
+
+    fn number(&mut self, g: &mut Gen) {
+        match g.usize(0, 3) {
+            0 => self.out.push_str(&g.u64(0, 1 << 40).to_string()),
+            1 => self.out.push_str(&format!("{}", g.f64(-1.0e4, 1.0e4))),
+            2 => self.out.push_str(&format!("{:e}", g.f64(-1.0, 1.0))),
+            _ => self.out.push_str(&format!("-{}", g.u64(0, 1000))),
+        }
+    }
+
+    /// Any JSON value, for cold fields the scanner must skip blind.
+    fn value(&mut self, g: &mut Gen, depth: usize) {
+        match g.usize(0, if depth < 3 { 5 } else { 3 }) {
+            0 => self.number(g),
+            1 => self.string(g),
+            2 => self.out.push_str(g.choose(&["true", "false", "null"])),
+            3 => self.number(g),
+            4 | 5 => {
+                let (open, close) = if g.bool() { ('[', ']') } else { ('{', '}') };
+                self.out.push(open);
+                for i in 0..g.usize(0, 3) {
+                    if i > 0 {
+                        self.out.push(',');
+                    }
+                    if open == '{' {
+                        self.string(g);
+                        self.out.push(':');
+                    }
+                    self.value(g, depth + 1);
+                }
+                self.out.push(close);
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+/// One randomised request line: hot fields (each present with high
+/// probability, occasionally malformed) interleaved with cold fields in
+/// random order.
+fn gen_line(g: &mut Gen) -> (String, bool) {
+    let mut lg = LineGen { out: String::from("{"), forced_tree: false };
+    let mut fields: Vec<usize> = (0..g.usize(4, 7)).collect();
+    // crude in-place shuffle off the qcheck rng
+    for i in (1..fields.len()).rev() {
+        let j = g.usize(0, i);
+        fields.swap(i, j);
+    }
+    for (n, f) in fields.iter().enumerate() {
+        if n > 0 {
+            lg.out.push(',');
+        }
+        match f {
+            0 => {
+                lg.out.push_str("\"id\":");
+                if g.usize(0, 9) == 0 {
+                    lg.out.push_str("\"oops\""); // type surprise
+                } else {
+                    lg.out.push_str(&g.u64(0, 1 << 40).to_string());
+                }
+            }
+            1 => {
+                lg.out.push_str("\"dense\":[");
+                for i in 0..g.usize(0, 6) {
+                    if i > 0 {
+                        lg.out.push(',');
+                    }
+                    lg.number(g);
+                }
+                lg.out.push(']');
+            }
+            2 => {
+                lg.out.push_str("\"tables\":[");
+                let n = g.usize(0, 6);
+                let mut t = g.vec_usize(n, 0, 500);
+                t.sort_unstable();
+                t.dedup();
+                if g.usize(0, 9) == 0 {
+                    t.reverse(); // violate the ascending contract
+                }
+                for (i, v) in t.iter().enumerate() {
+                    if i > 0 {
+                        lg.out.push(',');
+                    }
+                    lg.out.push_str(&v.to_string());
+                }
+                lg.out.push(']');
+            }
+            3 => {
+                lg.out.push_str("\"ids\":[");
+                for i in 0..g.usize(0, 6) {
+                    if i > 0 {
+                        lg.out.push(',');
+                    }
+                    lg.out.push_str(&g.u64(0, 100_000).to_string());
+                }
+                lg.out.push(']');
+            }
+            _ => {
+                // cold field with an arbitrary payload (duplicates of a
+                // hot key also land here sometimes — first wins)
+                match g.usize(0, 5) {
+                    0 => lg.out.push_str("\"ctx\":"),
+                    1 => lg.out.push_str("\"ua\":"),
+                    2 => lg.out.push_str("\"id\":"), // duplicate key
+                    _ => {
+                        lg.string(g);
+                        lg.out.push(':');
+                    }
+                }
+                lg.value(g, 0);
+            }
+        }
+    }
+    lg.out.push('}');
+    (lg.out, lg.forced_tree)
+}
+
+#[test]
+fn lazy_and_tree_agree_on_random_request_lines() {
+    qcheck(400, |g| {
+        let (line, forced_tree) = gen_line(g);
+        let path = check_differential(line.as_bytes())?;
+        if forced_tree {
+            prop_assert_eq!(path, ParsePath::Tree);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fallback_triggers_route_to_the_tree_and_still_agree() {
+    // Each construct is documented to push the scanner onto the tree
+    // path; the differential must hold there too.
+    let cases: &[&str] = &[
+        // escape in a cold string value
+        r#"{"id":1,"dense":[0.5],"tables":[2],"ids":[3],"ua":"a\tb"}"#,
+        // escape in a KEY
+        r#"{"id":1,"dense":[],"tables":[],"ids":[],"k\ney":0}"#,
+        // raw unicode in a cold value
+        "{\"id\":1,\"dense\":[0.5],\"tables\":[2],\"ids\":[3],\"city\":\"Zürich\"}",
+        // hot field with a surprising type
+        r#"{"id":"7","dense":[0.5],"tables":[2],"ids":[3]}"#,
+        r#"{"id":1,"dense":"nope","tables":[2],"ids":[3]}"#,
+        r#"{"id":1,"dense":[0.5],"tables":[2.5],"ids":[3]}"#,
+        r#"{"id":-1,"dense":[],"tables":[],"ids":[]}"#,
+        // missing hot field
+        r#"{"id":1,"dense":[0.5],"tables":[2]}"#,
+        // top level not an object
+        r#"[1,2,3]"#,
+        // trailing bytes
+        r#"{"id":1,"dense":[],"tables":[],"ids":[]} x"#,
+        // grammar the scanner refuses mid-stream
+        r#"{"id":1 "dense":[]}"#,
+    ];
+    // nesting past MAX_DEPTH inside a cold field
+    let deep = format!(
+        r#"{{"id":1,"dense":[],"tables":[],"ids":[],"deep":{}{}}}"#,
+        "[".repeat(600),
+        "]".repeat(600)
+    );
+    for case in cases.iter().copied().chain([deep.as_str()]) {
+        let (_, path) = parse_request_traced(case.as_bytes());
+        assert_eq!(path, ParsePath::Tree, "expected fallback for {case:?}");
+        check_differential(case.as_bytes()).unwrap();
+    }
+}
+
+#[test]
+fn hostile_byte_soup_never_panics_and_never_disagrees() {
+    qcheck(400, |g| {
+        let n = g.usize(0, 64);
+        let bytes: Vec<u8> = match g.usize(0, 2) {
+            // arbitrary bytes (mostly invalid UTF-8)
+            0 => (0..n).map(|_| g.u64(0, 255) as u8).collect(),
+            // JSON-ish punctuation soup
+            1 => (0..n)
+                .map(|_| *g.choose(b"{}[]\",:0123456789.eE+- \\\x00\x1f"))
+                .collect(),
+            // valid prefix, truncated at a random point
+            _ => {
+                let (line, _) = gen_line(g);
+                let cut = g.usize(0, line.len());
+                line.as_bytes()[..cut].to_vec()
+            }
+        };
+        check_differential(&bytes)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn encoder_round_trips_bit_exactly_on_the_lazy_path() {
+    qcheck(300, |g| {
+        let nd = g.usize(0, 8);
+        let mut dense = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            dense.push(match g.usize(0, 5) {
+                0 => -0.0f32,
+                1 => f32::MIN_POSITIVE / 2.0, // subnormal
+                2 => g.f64(-1.0e30, 1.0e30) as f32,
+                3 => g.u64(0, 1 << 24) as f32,
+                _ => g.f64(-8.0, 8.0) as f32,
+            });
+        }
+        let nt = g.usize(0, 8);
+        let mut tables: Vec<u32> =
+            g.vec_usize(nt, 0, 4000).iter().map(|&t| t as u32).collect();
+        tables.sort_unstable();
+        tables.dedup();
+        let ids: Vec<i32> = (0..tables.len())
+            .map(|_| g.u64(0, i32::MAX as u64) as i32)
+            .collect();
+        // ids stay <= 2^53: the wire narrows through f64 on both paths,
+        // so only f64-exact integers can round-trip
+        let req = WireRequest { id: g.u64(0, 1 << 53), dense, tables, ids };
+        let line = req.to_line();
+        let (parsed, path) = parse_request_traced(line.trim_end().as_bytes());
+        let parsed = parsed.map_err(|e| format!("round trip failed: {e}"))?;
+        prop_assert_eq!(path, ParsePath::Lazy);
+        prop_assert!(
+            same_request(&req, &parsed),
+            "round trip not bit-exact:\n  sent {req:?}\n  got  {parsed:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn nonfinite_floats_encode_to_null_and_reject_on_both_paths() {
+    for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+        let mut s = String::new();
+        write_f32(&mut s, bad);
+        assert_eq!(s, "null");
+        let req = WireRequest {
+            id: 1,
+            dense: vec![bad],
+            tables: vec![0],
+            ids: vec![0],
+        };
+        let line = req.to_line();
+        check_differential(line.trim_end().as_bytes()).unwrap();
+        assert!(json_lazy::parse_request(line.trim_end().as_bytes()).is_err());
+    }
+}
+
+#[test]
+fn the_serving_corpus_stays_entirely_on_the_lazy_path() {
+    let prof = profile("kdd").unwrap();
+    let cfg = LoadGenConfig {
+        n_requests: 64,
+        arrival: Arrival::OpenLoop { rps: 50_000.0 },
+        seed: 11,
+        coverage: 0.5,
+    };
+    for with_ctx in [false, true] {
+        let corpus = loadgen::wire_corpus(&prof, &cfg, with_ctx).unwrap();
+        assert_eq!(corpus.len(), 64);
+        for line in &corpus {
+            let bytes = line.trim_end().as_bytes();
+            let path = check_differential(bytes).unwrap();
+            assert_eq!(
+                path,
+                ParsePath::Lazy,
+                "corpus line fell back (with_ctx={with_ctx}): {line:?}"
+            );
+        }
+    }
+}

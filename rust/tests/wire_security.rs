@@ -1,0 +1,342 @@
+//! Malformed-input suite for the socket front end (ISSUE 6 satellite):
+//! whatever bytes arrive, the server answers a structured error line or
+//! closes the connection cleanly — it never panics, never hangs, and
+//! its ledger never books a frame that failed to parse.
+//!
+//! Every exchange runs under a per-case timeout: the probe socket has a
+//! 5 s read timeout and a blocked read is a test FAILURE (hang), not a
+//! wait. The suite ends with a health check — a fresh connection must
+//! still be served after the barrage — and a clean server shutdown.
+
+use autorac::coordinator::{
+    Coordinator, CoordinatorConfig, MockEngine, NetClient, NetServer,
+    NetServerConfig, WireResponse,
+};
+use autorac::data::profile;
+use autorac::embeddings::EmbeddingStore;
+use autorac::util::json::Json;
+use autorac::util::json_lazy::WireRequest;
+use autorac::util::rng::Rng;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+const PROBE_TIMEOUT: Duration = Duration::from_secs(5);
+
+fn server() -> NetServer {
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            n_workers: 2,
+            ..Default::default()
+        },
+        Arc::new(EmbeddingStore::random(&profile("kdd").unwrap(), 8, 3)),
+        |_| Ok(Box::new(MockEngine::new(16, 3, 10, 8))),
+    )
+    .unwrap();
+    NetServer::start("127.0.0.1:0", coord, NetServerConfig::default()).unwrap()
+}
+
+fn valid_request(id: u64) -> WireRequest {
+    WireRequest {
+        id,
+        dense: vec![0.25; 3],
+        tables: (0..10).collect(),
+        ids: vec![1; 10],
+    }
+}
+
+/// What one hostile exchange produced.
+#[derive(Debug)]
+enum Outcome {
+    /// every response line the server sent before closing / before we
+    /// stopped reading (one per request line we pushed)
+    Lines(Vec<String>),
+    /// the server closed without answering
+    CleanClose,
+}
+
+/// Send `payload` on a fresh connection, half-close, then drain up to
+/// `expect_lines` response lines. Panics (= test failure) if any read
+/// blocks past [`PROBE_TIMEOUT`] — that is the hang the suite exists to
+/// catch.
+fn probe(addr: &SocketAddr, payload: &[u8], expect_lines: usize) -> Outcome {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(PROBE_TIMEOUT)).unwrap();
+    s.write_all(payload).expect("write");
+    s.shutdown(Shutdown::Write).unwrap();
+    let mut r = BufReader::new(s);
+    let mut lines = Vec::new();
+    for _ in 0..expect_lines {
+        let mut line = String::new();
+        match r.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => lines.push(line),
+            Err(e)
+                if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) =>
+            {
+                panic!("server hung for {PROBE_TIMEOUT:?} on {payload:?}")
+            }
+            Err(e) => panic!("probe read failed: {e}"),
+        }
+    }
+    if lines.is_empty() {
+        Outcome::CleanClose
+    } else {
+        Outcome::Lines(lines)
+    }
+}
+
+/// A response line must be well-formed JSON with an `"error"` string —
+/// the structured-error contract.
+fn assert_error_line(line: &str, case: &str) {
+    let j = Json::parse(line.trim_end())
+        .unwrap_or_else(|e| panic!("unparseable error line for {case}: {e}"));
+    assert!(
+        j.get("error").and_then(Json::as_str).is_some(),
+        "no `error` field for {case}: {line:?}"
+    );
+}
+
+#[test]
+fn malformed_frames_get_errors_or_clean_closes_never_hangs() {
+    let srv = server();
+    let addr = srv.local_addr();
+
+    // (payload, expected responses, label) — expected 0 means a clean
+    // close with no line is also acceptable.
+    let mut cases: Vec<(Vec<u8>, usize, String)> = vec![
+        // truncated frame: valid bytes, no newline, then EOF
+        (
+            valid_request(1).to_line().trim_end().as_bytes()[..20].to_vec(),
+            0,
+            "truncated frame".into(),
+        ),
+        // empty and whitespace-only frames
+        (b"\n".to_vec(), 1, "empty frame".into()),
+        (b"   \t \r\n".to_vec(), 1, "whitespace frame".into()),
+        // NUL and control bytes
+        (b"\x00\x01\x02\n".to_vec(), 1, "control bytes".into()),
+        // invalid UTF-8 inside a string value
+        (
+            b"{\"id\":1,\"dense\":[],\"tables\":[],\"ids\":[],\"s\":\"\xff\xfe\"}\n"
+                .to_vec(),
+            1,
+            "invalid UTF-8".into(),
+        ),
+        // deep nesting: must be a depth error, not a stack overflow
+        (
+            {
+                let mut v = b"{\"deep\":".to_vec();
+                v.extend(std::iter::repeat(b'[').take(5000));
+                v.extend(std::iter::repeat(b']').take(5000));
+                v.extend(b"}\n");
+                v
+            },
+            1,
+            "5000-deep nesting".into(),
+        ),
+        // bare deep array (top level not even an object)
+        (
+            {
+                let mut v: Vec<u8> = std::iter::repeat(b'[').take(5000).collect();
+                v.push(b'\n');
+                v
+            },
+            1,
+            "unclosed deep array".into(),
+        ),
+        // huge length claim: dense above MAX_WIRE_DENSE
+        (
+            {
+                let mut s = String::from("{\"id\":1,\"dense\":[");
+                s.push_str(&vec!["0.5"; 5000].join(","));
+                s.push_str("],\"tables\":[],\"ids\":[]}\n");
+                s.into_bytes()
+            },
+            1,
+            "oversize dense".into(),
+        ),
+        // shape violations
+        (
+            b"{\"id\":1,\"dense\":[],\"tables\":[1,2],\"ids\":[3]}\n".to_vec(),
+            1,
+            "length mismatch".into(),
+        ),
+        (
+            b"{\"id\":1,\"dense\":[],\"tables\":[2,1],\"ids\":[0,0]}\n".to_vec(),
+            1,
+            "non-ascending tables".into(),
+        ),
+        // type surprises
+        (
+            b"{\"id\":\"x\",\"dense\":[],\"tables\":[],\"ids\":[]}\n".to_vec(),
+            1,
+            "string id".into(),
+        ),
+        (b"{not json}\n".to_vec(), 1, "not json".into()),
+        (b"null\n".to_vec(), 1, "bare null".into()),
+    ];
+    // deterministic random byte soup, some lines ending in '\n'
+    let mut rng = Rng::new(0xBAD_F00D);
+    for k in 0..16 {
+        let n = 1 + rng.below(64) as usize;
+        let mut v: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        v.retain(|&b| b != b'\n');
+        v.push(b'\n');
+        cases.push((v, 1, format!("byte soup #{k}")));
+    }
+
+    for (payload, expect, label) in &cases {
+        match probe(&addr, payload, (*expect).max(1)) {
+            Outcome::CleanClose => {}
+            Outcome::Lines(lines) => {
+                for line in &lines {
+                    assert_error_line(line, label);
+                }
+                assert!(
+                    lines.len() >= *expect,
+                    "{label}: wanted {expect} error line(s), got {lines:?}"
+                );
+            }
+        }
+    }
+
+    // nothing malformed ever reached the admission ledger
+    let snap = srv.metrics();
+    assert_eq!(snap.requests, 0, "a malformed frame was submitted");
+
+    // health check: the server still serves a fresh, valid connection
+    let mut c = NetClient::connect(&addr).unwrap();
+    match c.request(&valid_request(99)).unwrap() {
+        WireResponse::Ok { id, .. } => assert_eq!(id, 99),
+        other => panic!("health check failed: {other:?}"),
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn duplicate_keys_are_first_occurrence_wins_and_still_served() {
+    let srv = server();
+    let mut c = NetClient::connect(&srv.local_addr()).unwrap();
+    // second "id" is hostile garbage; first one wins (Json::get order)
+    c.send_line(
+        "{\"id\":5,\"dense\":[0.5,0.5,0.5],\"tables\":[0,1],\"ids\":[2,3],\
+         \"id\":\"evil\"}\n",
+    )
+    .unwrap();
+    match c.recv().unwrap().expect("server closed") {
+        WireResponse::Ok { id, .. } => assert_eq!(id, 5),
+        other => panic!("unexpected: {other:?}"),
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn over_frame_line_errors_and_closes_without_buffering_it() {
+    let srv = server();
+    let addr = srv.local_addr();
+    // 2 MiB of digits in one line — double the 1 MiB frame cap. The
+    // server must answer one structured error and close, having
+    // discarded (not accumulated) the overflow.
+    let mut payload = Vec::with_capacity(2 << 20);
+    payload.extend(b"{\"id\":");
+    payload.extend(std::iter::repeat(b'1').take(2 << 20));
+    payload.push(b'\n');
+    match probe(&addr, &payload, 2) {
+        Outcome::Lines(lines) => {
+            assert_eq!(lines.len(), 1, "expected close after the error");
+            assert_error_line(&lines[0], "over-frame line");
+            assert!(
+                lines[0].contains("size limit"),
+                "unexpected error: {:?}",
+                lines[0]
+            );
+        }
+        Outcome::CleanClose => panic!("expected a structured error first"),
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn pipelined_garbage_between_valid_requests_does_not_poison_the_stream() {
+    let srv = server();
+    let mut c = NetClient::connect(&srv.local_addr()).unwrap();
+    c.send_line(&valid_request(1).to_line()).unwrap();
+    c.send_line("garbage\n").unwrap();
+    c.send_line(&valid_request(2).to_line()).unwrap();
+    let mut ok = 0;
+    let mut err = 0;
+    for _ in 0..3 {
+        match c.recv().unwrap().expect("server closed early") {
+            WireResponse::Ok { id, .. } => {
+                assert!(id == 1 || id == 2);
+                ok += 1;
+            }
+            WireResponse::Error { .. } => err += 1,
+        }
+    }
+    assert_eq!((ok, err), (2, 1));
+    let snap = srv.metrics();
+    assert_eq!(snap.requests, 2);
+    assert_eq!(srv.stats.frames_bad.load(std::sync::atomic::Ordering::Relaxed), 1);
+    srv.shutdown();
+}
+
+#[test]
+fn slow_trickled_frame_is_assembled_not_rejected() {
+    // a frame arriving one byte at a time over ~100 ms still parses
+    let srv = server();
+    let mut s = TcpStream::connect(&srv.local_addr()).unwrap();
+    s.set_read_timeout(Some(PROBE_TIMEOUT)).unwrap();
+    let line = valid_request(7).to_line();
+    for chunk in line.as_bytes().chunks(8) {
+        s.write_all(chunk).unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut resp = String::new();
+    r.read_line(&mut resp).unwrap();
+    let j = Json::parse(resp.trim_end()).unwrap();
+    assert_eq!(j.get("id").and_then(Json::as_f64), Some(7.0));
+    assert!(j.get("error").is_none(), "trickled frame rejected: {resp:?}");
+    drop(r);
+    let _ = s.shutdown(Shutdown::Both);
+    srv.shutdown();
+}
+
+#[test]
+fn a_stalled_connection_never_blocks_other_clients() {
+    let srv = server();
+    let addr = srv.local_addr();
+    // open a connection, send half a frame, and just… stop
+    let mut stall = TcpStream::connect(&addr).unwrap();
+    stall.write_all(b"{\"id\":1,\"den").unwrap();
+    stall.flush().unwrap();
+    // other clients must be completely unaffected
+    for k in 0..4 {
+        let mut c = NetClient::connect(&addr).unwrap();
+        match c.request(&valid_request(k)).unwrap() {
+            WireResponse::Ok { id, .. } => assert_eq!(id, k),
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+    // and shutdown must not wait for the staller
+    let t0 = std::time::Instant::now();
+    srv.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "shutdown blocked on a stalled connection"
+    );
+    // the staller sees its socket die rather than hanging forever
+    stall.set_read_timeout(Some(PROBE_TIMEOUT)).unwrap();
+    let mut buf = [0u8; 64];
+    match stall.read(&mut buf) {
+        Ok(_) => {}
+        Err(e) => assert!(
+            !matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut),
+            "stalled socket still open after shutdown"
+        ),
+    }
+}

@@ -25,6 +25,36 @@ echo "== tier 1.5: property/differential suites under --release =="
 cargo test -q --release --test sharding_prop --test sim_differential --test coordinator_e2e
 cargo test -q --release --lib mapping::cost
 
+echo "== wire suites under --release: lazy/tree differential + malformed-input =="
+# The lazy scanner's whole contract is "never disagrees with the tree
+# parser"; the security suite pins "malformed bytes never panic or hang
+# the server". Both are release-mode properties (optimized byte loops).
+cargo test -q --release --test json_lazy_prop --test wire_security
+
+echo "== serve-bench socket smoke: loopback TCP end to end =="
+# One CI-sized run through the real stack: TCP accept loop, lazy wire
+# parse, coordinator, response encoder, loadgen socket clients. Fail
+# closed on the report lines AND the JSON fields disappearing.
+serve_json=$(mktemp)
+serve_out=$(cargo run --quiet --release --bin autorac -- serve-bench \
+    --listen 127.0.0.1:0 --quick --conns 4 --json "$serve_json")
+printf '%s\n' "$serve_out"
+if ! printf '%s\n' "$serve_out" | grep -q "wire (4 conns)"; then
+    echo "ERROR: serve-bench --listen no longer reports wire-level stats"
+    exit 1
+fi
+if ! printf '%s\n' "$serve_out" | grep -q "parse: tree"; then
+    echo "ERROR: serve-bench --listen no longer runs the parse microbench"
+    exit 1
+fi
+for field in '"transport": "socket"' '"wire_p50_us"' '"throughput_rps"' '"lazy_speedup"'; do
+    if ! grep -q "$field" "$serve_json"; then
+        echo "ERROR: serve-bench socket JSON report lost $field"
+        exit 1
+    fi
+done
+rm -f "$serve_json"
+
 echo "== search determinism under --release (workers=8 vs serial) =="
 # Bit-identity of the parallel engine is a release-mode property too —
 # optimized float codegen must not reorder the per-candidate reductions.
