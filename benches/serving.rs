@@ -1,14 +1,18 @@
 //! Serving bench: the latency/throughput knee of the shard-aware
 //! coordinator under MockEngine — zero artifacts, fully offline.
 //!
-//! Three experiments:
+//! Four experiments:
 //!   1. routing-policy comparison at fixed closed-loop load (capacity
 //!      regime): throughput, tail latency and cross-shard gather rows
 //!      for round-robin / least-queued / shard-affinity;
 //!   2. open-loop Poisson sweep against measured capacity (0.4×–1.1×)
 //!      with stale-shedding admission — where the knee and the shed
 //!      rate appear;
-//!   3. wire-parse microbench: the lazy scanner (util::json_lazy) vs
+//!   3. hot-row cache A/B at 0.8× capacity open-loop load: the same
+//!      skewed traffic with the cache off vs a 1024-row prefetched
+//!      tier — p50/p99, hit rate and coalesced rows (EXPERIMENTS.md
+//!      §SG);
+//!   4. wire-parse microbench: the lazy scanner (util::json_lazy) vs
 //!      the full tree parser over the deterministic request corpus,
 //!      with and without a realistic cold `ctx` payload — the
 //!      EXPERIMENTS.md §SF numbers.
@@ -22,7 +26,10 @@ use autorac::coordinator::{
     MetricsSnapshot, MockEngine, Policy, ServingStore,
 };
 use autorac::data::profile;
-use autorac::embeddings::{ShardMap, ShardPolicy, ShardedStore};
+use autorac::embeddings::{
+    head_rows_per_table, HotCacheConfig, HotRowCache, ShardMap, ShardPolicy,
+    ShardedStore,
+};
 use autorac::util::json_lazy;
 use std::sync::Arc;
 use std::time::Duration;
@@ -39,10 +46,35 @@ fn run_once(
     arrival: Arrival,
     admission: AdmissionPolicy,
     n_requests: usize,
+    cache_rows: usize,
 ) -> autorac::Result<MetricsSnapshot> {
     let prof = profile("criteo")?;
-    let map = ShardMap::for_profile(&prof, WORKERS, ShardPolicy::HotReplicated);
+    let cached = if cache_rows > 0 {
+        head_rows_per_table(&prof.cards, prof.zipf_alpha, cache_rows)
+    } else {
+        Vec::new()
+    };
+    let map = ShardMap::build_cached(
+        &prof.cards,
+        prof.zipf_alpha,
+        WORKERS,
+        ShardPolicy::HotReplicated,
+        &cached,
+    );
     let store = Arc::new(ShardedStore::random(&prof, D_EMB, SEED, map));
+    let serving = if cache_rows > 0 {
+        let cache = HotRowCache::new(
+            &store,
+            prof.zipf_alpha,
+            HotCacheConfig {
+                capacity: cache_rows,
+                prefetch: true,
+            },
+        );
+        ServingStore::Cached(store, Arc::new(cache))
+    } else {
+        ServingStore::Sharded(store)
+    };
     let (nd, nf) = (prof.n_dense, prof.n_sparse());
     let coord = Coordinator::start_with(
         CoordinatorConfig {
@@ -56,7 +88,7 @@ fn run_once(
             },
             ..Default::default()
         },
-        ServingStore::Sharded(store),
+        serving,
         move |_| {
             let mut e = MockEngine::new(BATCH, nd, nf, D_EMB);
             e.delay = EXEC;
@@ -71,6 +103,7 @@ fn run_once(
             arrival,
             seed: SEED,
             coverage: COVERAGE,
+            oov_frac: 0.0,
         },
     )?;
     let snap = coord.metrics.snapshot();
@@ -96,6 +129,7 @@ fn main() -> autorac::Result<()> {
             Arrival::ClosedLoop { concurrency: 64 },
             AdmissionPolicy::RejectNew,
             n,
+            0,
         )?;
         println!(
             "{:<16} {:>10.0}/s {:>10.0} {:>10.0} {:>8} ({:>4.1}%)",
@@ -122,6 +156,7 @@ fn main() -> autorac::Result<()> {
             Arrival::OpenLoop { rps },
             AdmissionPolicy::ShedStale,
             n,
+            0,
         )?;
         println!(
             "{:<10} {:>12.0} {:>10.0} {:>10.0} {:>9.1}%",
@@ -137,7 +172,44 @@ fn main() -> autorac::Result<()> {
          regen via `autorac serve-bench`, methodology in EXPERIMENTS.md §SB)"
     );
 
-    // -- 3. wire-parse microbench: lazy scanner vs tree parser -----------
+    // -- 3. hot-row cache A/B at 0.8x capacity ---------------------------
+    println!("\nhot-row cache A/B (shard-affinity, open-loop 0.8×cap, shed-stale 2 ms):");
+    println!(
+        "{:<14} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "cache", "p50 µs", "p99 µs", "hit-rate", "coalesced", "cross-shard"
+    );
+    let rps = capacity * 0.8;
+    let mut p99 = [0.0f64; 2];
+    for (i, rows) in [0usize, 1024].into_iter().enumerate() {
+        let s = run_once(
+            Policy::ShardAffinity,
+            Arrival::OpenLoop { rps },
+            AdmissionPolicy::ShedStale,
+            n,
+            rows,
+        )?;
+        p99[i] = s.e2e_p99_us;
+        println!(
+            "{:<14} {:>10.0} {:>10.0} {:>9.1}% {:>12} {:>12}",
+            if rows == 0 {
+                "off".to_string()
+            } else {
+                format!("{rows} rows")
+            },
+            s.e2e_p50_us,
+            s.e2e_p99_us,
+            s.cache_hit_rate() * 100.0,
+            s.coalesced_rows,
+            s.remote_rows,
+        );
+    }
+    println!(
+        "(cache p99 {:.2}x vs off; zipf head traffic served from the shared \
+         tier, methodology in EXPERIMENTS.md §SG)",
+        p99[0] / p99[1].max(1e-9)
+    );
+
+    // -- 4. wire-parse microbench: lazy scanner vs tree parser -----------
     parse_bench(n.min(512))?;
     Ok(())
 }
@@ -162,6 +234,7 @@ fn parse_bench(n_requests: usize) -> autorac::Result<()> {
         arrival: Arrival::ClosedLoop { concurrency: 64 },
         seed: SEED,
         coverage: COVERAGE,
+        oov_frac: 0.0,
     };
     println!("\nwire-parse microbench ({n_requests}-request corpus, ns/request):");
     println!(

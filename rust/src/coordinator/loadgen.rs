@@ -52,6 +52,10 @@ pub struct LoadGenConfig {
     /// fraction of tables each request touches (1.0 = all; the subset
     /// is drawn per request, at least one table)
     pub coverage: f64,
+    /// fraction of ids replaced by the `-1` missing-feature sentinel
+    /// (the hostile traffic shape of real CTR logs; 0.0 = none, and the
+    /// schedule stays bit-identical to the pre-OOV generator)
+    pub oov_frac: f64,
 }
 
 impl Default for LoadGenConfig {
@@ -61,6 +65,7 @@ impl Default for LoadGenConfig {
             arrival: Arrival::ClosedLoop { concurrency: 64 },
             seed: 7,
             coverage: 1.0,
+            oov_frac: 0.0,
         }
     }
 }
@@ -126,24 +131,39 @@ fn make_content(
     gen: &mut Generator,
     rng: &mut Rng,
     coverage: f64,
+    oov_frac: f64,
     k: usize,
 ) -> (Vec<f32>, Vec<u32>, Vec<i32>) {
     let (dense, ids_full) = gen.features(k);
     let nf = ids_full.len();
-    if coverage >= 1.0 || nf == 0 {
-        let fields = (0..nf as u32).collect();
-        let ids = ids_full.iter().map(|&x| x as i32).collect();
-        return (dense, fields, ids);
+    let (fields, mut ids): (Vec<u32>, Vec<i32>) = if coverage >= 1.0 || nf == 0 {
+        (
+            (0..nf as u32).collect(),
+            ids_full.iter().map(|&x| x as i32).collect(),
+        )
+    } else {
+        let m = ((nf as f64 * coverage).round() as usize).clamp(1, nf);
+        let mut fields: Vec<u32> = (0..nf as u32).collect();
+        rng.shuffle(&mut fields);
+        fields.truncate(m);
+        fields.sort_unstable();
+        let ids = fields
+            .iter()
+            .map(|&f| ids_full[f as usize] as i32)
+            .collect();
+        (fields, ids)
+    };
+    // Missing-feature injection: each id independently becomes the `-1`
+    // sentinel with probability `oov_frac`. The draws happen ONLY when
+    // the knob is on, so every `oov_frac == 0.0` schedule stays
+    // bit-identical to schedules built before the knob existed.
+    if oov_frac > 0.0 {
+        for id in ids.iter_mut() {
+            if rng.chance(oov_frac) {
+                *id = -1;
+            }
+        }
     }
-    let m = ((nf as f64 * coverage).round() as usize).clamp(1, nf);
-    let mut fields: Vec<u32> = (0..nf as u32).collect();
-    rng.shuffle(&mut fields);
-    fields.truncate(m);
-    fields.sort_unstable();
-    let ids = fields
-        .iter()
-        .map(|&f| ids_full[f as usize] as i32)
-        .collect();
     (dense, fields, ids)
 }
 
@@ -171,7 +191,8 @@ pub fn build_schedule(
             }
             Arrival::ClosedLoop { .. } => 0,
         };
-        let (dense, fields, ids) = make_content(&mut gen, &mut rng, cfg.coverage, k);
+        let (dense, fields, ids) =
+            make_content(&mut gen, &mut rng, cfg.coverage, cfg.oov_frac, k);
         out.push(ScheduledRequest {
             k: k as u64,
             at_ns,
@@ -533,6 +554,7 @@ mod tests {
                 arrival: Arrival::ClosedLoop { concurrency: 16 },
                 seed: 11,
                 coverage: 1.0,
+                oov_frac: 0.0,
             },
         )
         .unwrap();
@@ -554,6 +576,7 @@ mod tests {
                 arrival: Arrival::OpenLoop { rps: 1e6 },
                 seed: 5,
                 coverage: 0.5,
+                oov_frac: 0.0,
             },
         )
         .unwrap();
@@ -569,7 +592,7 @@ mod tests {
             let mut gen = Generator::new(p.clone(), seed);
             let mut rng = Rng::new(seed_from_name(seed, "loadgen"));
             (0..20)
-                .map(|k| make_content(&mut gen, &mut rng, 0.4, k).1)
+                .map(|k| make_content(&mut gen, &mut rng, 0.4, 0.0, k).1)
                 .collect()
         };
         assert_eq!(draw(9), draw(9));
@@ -592,6 +615,7 @@ mod tests {
                 arrival,
                 seed: 13,
                 coverage: 0.6,
+                oov_frac: 0.0,
             };
             let a = build_schedule(&p, &cfg).unwrap();
             let b = build_schedule(&p, &cfg).unwrap();
@@ -609,6 +633,44 @@ mod tests {
     }
 
     #[test]
+    fn oov_injection_is_opt_in_and_preserves_clean_ids() {
+        let p = profile("kdd").unwrap();
+        let base = LoadGenConfig {
+            n_requests: 40,
+            arrival: Arrival::ClosedLoop { concurrency: 8 },
+            seed: 17,
+            coverage: 1.0,
+            oov_frac: 0.0,
+        };
+        let clean = build_schedule(&p, &base).unwrap();
+        assert!(
+            clean.iter().all(|sr| sr.ids.iter().all(|&i| i >= 0)),
+            "oov_frac 0.0 injects nothing"
+        );
+        let hostile = build_schedule(
+            &p,
+            &LoadGenConfig {
+                oov_frac: 0.5,
+                ..base.clone()
+            },
+        )
+        .unwrap();
+        let n_neg: usize = hostile
+            .iter()
+            .map(|sr| sr.ids.iter().filter(|&&i| i < 0).count())
+            .sum();
+        assert!(n_neg > 0, "oov_frac 0.5 must inject sentinels");
+        // injection only replaces ids — fields and surviving ids match
+        // the clean schedule exactly (full coverage: no subset draws)
+        for (c, h) in clean.iter().zip(&hostile) {
+            assert_eq!(c.fields, h.fields);
+            for (&ic, &ih) in c.ids.iter().zip(&h.ids) {
+                assert!(ih == ic || ih == -1, "clean {ic} became {ih}");
+            }
+        }
+    }
+
+    #[test]
     fn open_loop_send_times_are_monotone_nondecreasing() {
         let p = profile("kdd").unwrap();
         let cfg = LoadGenConfig {
@@ -616,6 +678,7 @@ mod tests {
             arrival: Arrival::OpenLoop { rps: 10_000.0 },
             seed: 3,
             coverage: 1.0,
+            oov_frac: 0.0,
         };
         let sched = build_schedule(&p, &cfg).unwrap();
         assert!(sched.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
@@ -631,6 +694,7 @@ mod tests {
             arrival: Arrival::ClosedLoop { concurrency: 4 },
             seed: 21,
             coverage: 0.7,
+            oov_frac: 0.0,
         };
         let sched = build_schedule(&p, &cfg).unwrap();
         for with_ctx in [false, true] {

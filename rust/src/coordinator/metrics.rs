@@ -5,6 +5,7 @@
 //! and worker queue-depth gauges are registered at startup so a
 //! snapshot shows instantaneous backpressure per worker.
 
+use crate::embeddings::hotcache::GatherStats;
 use crate::util::stats::LogHistogram;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -26,6 +27,15 @@ struct Inner {
     /// a peer shard)
     local_rows: u64,
     remote_rows: u64,
+    /// out-of-range ids resolved to the row-0 OOV embedding
+    oob_ids: u64,
+    /// hot-row cache tier (S29): lookups split by outcome, plus
+    /// warm-phase evictions copied in once at startup
+    cache_hits: u64,
+    cache_misses: u64,
+    cache_evictions: u64,
+    /// duplicate rows served by the batch coalescer's scatter (S30)
+    coalesced_rows: u64,
     e2e: LogHistogram,
     queue: LogHistogram,
     exec: LogHistogram,
@@ -51,6 +61,16 @@ pub struct MetricsSnapshot {
     pub local_rows: u64,
     /// embedding rows fetched cross-shard
     pub remote_rows: u64,
+    /// out-of-range ids resolved to the row-0 OOV embedding
+    pub oob_ids: u64,
+    /// hot-row cache lookups that hit / missed (both 0 with no cache)
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// warm-phase cache evictions (final once serving starts — the
+    /// cache is immutable after warmup)
+    pub cache_evictions: u64,
+    /// duplicate rows the batch coalescer served without a fetch
+    pub coalesced_rows: u64,
     pub mean_batch: f64,
     pub throughput_rps: f64,
     pub e2e_p50_us: f64,
@@ -71,6 +91,17 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.remote_rows as f64 / total as f64
+        }
+    }
+
+    /// Fraction of cache lookups that hit (0 when the cache saw no
+    /// traffic — disabled or never consulted).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
         }
     }
 
@@ -128,11 +159,22 @@ impl Metrics {
         self.inner.lock().unwrap().failed += n as u64;
     }
 
-    /// Record a batch's sharded-gather locality (row counts).
-    pub fn on_gather(&self, local_rows: usize, remote_rows: usize) {
+    /// Record one batch's gather ledger: locality, cache outcomes,
+    /// coalesced duplicates, and OOV resolutions — one lock for all six.
+    pub fn on_gather(&self, gs: &GatherStats) {
         let mut m = self.inner.lock().unwrap();
-        m.local_rows += local_rows as u64;
-        m.remote_rows += remote_rows as u64;
+        m.local_rows += gs.local as u64;
+        m.remote_rows += gs.remote as u64;
+        m.oob_ids += gs.oob as u64;
+        m.cache_hits += gs.cache_hits as u64;
+        m.cache_misses += gs.cache_misses as u64;
+        m.coalesced_rows += gs.coalesced as u64;
+    }
+
+    /// Copy in the cache's warm-phase eviction count (called once at
+    /// startup; the serving-phase cache never evicts).
+    pub fn on_cache_evictions(&self, n: u64) {
+        self.inner.lock().unwrap().cache_evictions += n;
     }
 
     pub fn on_batch(&self, size: usize, queue_ns: u64, exec_ns: u64) {
@@ -168,6 +210,11 @@ impl Metrics {
             failed: m.failed,
             local_rows: m.local_rows,
             remote_rows: m.remote_rows,
+            oob_ids: m.oob_ids,
+            cache_hits: m.cache_hits,
+            cache_misses: m.cache_misses,
+            cache_evictions: m.cache_evictions,
+            coalesced_rows: m.coalesced_rows,
             mean_batch: if m.batches == 0 {
                 0.0
             } else {
@@ -216,13 +263,46 @@ mod tests {
         }
         m.on_rejected();
         m.on_shed(2);
-        m.on_gather(30, 10);
+        m.on_gather(&GatherStats {
+            requested: 40,
+            local: 30,
+            remote: 10,
+            ..Default::default()
+        });
         let s = m.snapshot();
         assert_eq!(s.rejected, 1);
         assert_eq!(s.shed, 2);
         assert_eq!((s.local_rows, s.remote_rows), (30, 10));
         assert!((s.cross_shard_frac() - 0.25).abs() < 1e-12);
         assert!((s.shed_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(s.cache_hit_rate(), 0.0, "no cache traffic yet");
+    }
+
+    #[test]
+    fn cache_and_oov_counters_accumulate() {
+        let m = Metrics::new();
+        m.on_gather(&GatherStats {
+            requested: 100,
+            local: 10,
+            remote: 5,
+            cache_hits: 60,
+            cache_misses: 15,
+            coalesced: 25,
+            oob: 3,
+        });
+        m.on_gather(&GatherStats {
+            requested: 20,
+            cache_hits: 20,
+            ..Default::default()
+        });
+        m.on_cache_evictions(7);
+        let s = m.snapshot();
+        assert_eq!(s.cache_hits, 80);
+        assert_eq!(s.cache_misses, 15);
+        assert_eq!(s.cache_evictions, 7);
+        assert_eq!(s.coalesced_rows, 25);
+        assert_eq!(s.oob_ids, 3);
+        assert!((s.cache_hit_rate() - 80.0 / 95.0).abs() < 1e-12);
     }
 
     #[test]

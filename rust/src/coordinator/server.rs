@@ -12,12 +12,20 @@
 //! gathers from the perspective of shard `i % n_shards`, fetching
 //! unowned tables cross-shard); the monolithic [`EmbeddingStore`] path
 //! is unchanged.
+//!
+//! Caching (S29/S30): [`ServingStore::Cached`] layers an immutable
+//! [`HotRowCache`] over the sharded store — workers consult it before
+//! any shard, and every sharded/cached gather goes through each
+//! worker's [`BatchGatherer`] so duplicate rows within a batch are
+//! fetched once and scattered (RecNMP-style coalescing).
 
 use super::batcher::{collect_batch, BatcherConfig};
 use super::engine::InferenceEngine;
 use super::metrics::Metrics;
 use super::router::{Policy, RouteRejection, Router};
-use crate::embeddings::{EmbeddingStore, ShardedStore};
+use crate::embeddings::{
+    BatchGatherer, EmbeddingStore, GatherStats, HotRowCache, ShardedStore,
+};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
@@ -134,6 +142,10 @@ pub enum ServingStore {
     Shared(Arc<EmbeddingStore>),
     /// partitioned tables; worker `i` serves shard `i % n_shards`
     Sharded(Arc<ShardedStore>),
+    /// sharded store fronted by an immutable hot-row cache every worker
+    /// consults before touching any shard (the cache was warmed before
+    /// serving started and never mutates here — lock-free reads)
+    Cached(Arc<ShardedStore>, Arc<HotRowCache>),
 }
 
 pub struct Coordinator {
@@ -185,8 +197,17 @@ impl Coordinator {
             rxs.push(rx);
         }
         let mut router = Router::new(txs, cfg.policy);
-        if let ServingStore::Sharded(s) = &store {
-            router = router.with_shards(Arc::new(s.map.clone()));
+        match &store {
+            ServingStore::Shared(_) => {}
+            ServingStore::Sharded(s) => {
+                router = router.with_shards(Arc::new(s.map.clone()));
+            }
+            ServingStore::Cached(s, c) => {
+                router = router.with_shards(Arc::new(s.map.clone()));
+                // warm-phase evictions are final — the serving-phase
+                // cache is immutable — so book them once, up front
+                metrics.on_cache_evictions(c.stats.evictions());
+            }
         }
         let make_engine = Arc::new(make_engine);
         let mut workers = Vec::new();
@@ -321,7 +342,17 @@ fn worker_loop(ctx: WorkerCtx) {
     } = ctx;
     let shard = match &store {
         ServingStore::Shared(_) => 0,
-        ServingStore::Sharded(s) => worker % s.map.n_shards,
+        ServingStore::Sharded(s) | ServingStore::Cached(s, _) => {
+            worker % s.map.n_shards
+        }
+    };
+    // per-worker coalescing engine for the sharded/cached paths (its
+    // arenas persist across batches — allocation-free after warmup)
+    let mut gatherer = match &store {
+        ServingStore::Shared(_) => None,
+        ServingStore::Sharded(s) | ServingStore::Cached(s, _) => {
+            Some(BatchGatherer::new(&s.cards))
+        }
     };
     let nd = engine.n_dense();
     let (ns, d_emb) = (engine.n_sparse(), engine.d_emb());
@@ -363,25 +394,40 @@ fn worker_loop(ctx: WorkerCtx) {
         // the dense row without the per-request clone the old path paid)
         dense.clear();
         sparse.clear();
-        let (mut local_rows, mut remote_rows) = (0usize, 0usize);
         for r in &batch {
             let take = r.dense.len().min(nd);
             dense.extend_from_slice(&r.dense[..take]);
             dense.resize(dense.len() + (nd - take), 0.0);
-            match &store {
-                ServingStore::Shared(s) => {
-                    s.gather_fields(&r.fields, &r.ids, &mut sparse);
-                    local_rows += r.fields.len();
-                }
-                ServingStore::Sharded(s) => {
-                    let (l, rem) =
-                        s.gather_from(shard, &r.fields, &r.ids, &mut sparse);
-                    local_rows += l;
-                    remote_rows += rem;
-                }
-            }
         }
-        metrics.on_gather(local_rows, remote_rows);
+        // sparse side: the sharded/cached paths gather the WHOLE batch
+        // through the coalescer (duplicate rows fetched once); the
+        // monolithic path stays per-record
+        let gs = match &store {
+            ServingStore::Shared(s) => {
+                let mut gs = GatherStats::default();
+                for r in &batch {
+                    gs.oob += s.gather_fields(&r.fields, &r.ids, &mut sparse);
+                    gs.requested += r.fields.len();
+                    gs.local += r.fields.len();
+                }
+                gs
+            }
+            ServingStore::Sharded(s) => gatherer.as_mut().unwrap().gather_batch(
+                s,
+                None,
+                shard,
+                batch.iter().map(|r| (r.fields.as_slice(), r.ids.as_slice())),
+                &mut sparse,
+            ),
+            ServingStore::Cached(s, c) => gatherer.as_mut().unwrap().gather_batch(
+                s,
+                Some(&**c),
+                shard,
+                batch.iter().map(|r| (r.fields.as_slice(), r.ids.as_slice())),
+                &mut sparse,
+            ),
+        };
+        metrics.on_gather(&gs);
         match engine.infer_batch_into(&dense, &sparse, batch.len(), &mut probs) {
             Ok(()) => {
                 let exec_ns = t_exec.elapsed().as_nanos() as u64;

@@ -1,0 +1,617 @@
+//! Tiered hot-row cache + intra-batch coalescing above [`ShardedStore`]
+//! (S29/S30, DESIGN.md §7.10).
+//!
+//! RecNMP and ProactivePIM (PAPERS.md) locate the recommender serving
+//! win inside the embedding gather: a small zipf head absorbs most
+//! lookups, the same rows recur within a compiled batch, and the hot
+//! set is predictable enough to prefetch. This module is that tier for
+//! the serving stack:
+//!
+//! * [`HotRowCache`] — a bounded, zipf-profile-seeded cache of the
+//!   hottest rows across every table, packed into one compact arena
+//!   (the hot head of a ~20k-row store fits in L2 where the scattered
+//!   full tables do not). Admission is priority-driven: row `r` of
+//!   table `j` scores `(1/(r+1)^α) / H(card_j, α)` — its predicted
+//!   share of the table's traffic normalised to a probability, so
+//!   priorities are comparable ACROSS tables. Build-time
+//!   [`prefetch`](HotCacheConfig::prefetch) loads the predicted global
+//!   head set (ProactivePIM-style shared-row preloading); online
+//!   [`HotRowCache::offer`] admits with min-priority eviction during
+//!   warmup. After warmup the cache is immutable and lock-free: workers
+//!   share it behind an `Arc`, and the serving hot path takes no locks —
+//!   the store is static, a static store has a static optimal cache, so
+//!   online admission during serving would buy contention and nothing
+//!   else.
+//! * [`BatchGatherer`] — RecNMP-style batch coalescing: each unique
+//!   `(table, id)` pair in a compiled batch is fetched exactly once
+//!   (cache first, then local shard, then cross-shard), staged in a
+//!   unique-row arena, and scattered to every requesting slot.
+//!   Epoch-stamped dedup arrays make the per-batch reset free, and
+//!   every arena persists across batches — allocation-free after
+//!   warmup, per the PR 5 serving contract.
+//!
+//! The whole tier is behaviour-transparent: gathers with the cache on
+//! or off are bit-identical to [`ShardedStore::gather_from`], pinned by
+//! the differential property suite in `rust/tests/hotcache_prop.rs`.
+
+use super::sharding::{harmonic, ShardedStore};
+use super::store::resolve_id;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sentinel in [`HotRowCache::slot_of`] / epoch stamps: not resident.
+const NOT_RESIDENT: u32 = u32::MAX;
+
+/// How a [`HotRowCache`] is provisioned.
+#[derive(Clone, Copy, Debug)]
+pub struct HotCacheConfig {
+    /// maximum resident rows (0 disables the cache entirely)
+    pub capacity: usize,
+    /// preload the predicted global head set at build time
+    /// ([`head_rows_per_table`]) — the ProactivePIM move; `false`
+    /// starts cold and relies on [`HotRowCache::offer`]
+    pub prefetch: bool,
+}
+
+/// Lock-free hit/miss/eviction counters (relaxed; exact totals are
+/// reconciled per batch through `GatherStats` → `Metrics`).
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl CacheStats {
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-table sizes of the globally-hottest `n` rows under zipf(α):
+/// `out[j]` head rows of table `j` belong to the global top-`n` by
+/// admission priority `(1/(r+1)^α) / H(card_j, α)`. Within a table the
+/// priority strictly decreases with row rank, so each table's share is
+/// always a prefix of its rows — which is what lets the cache, the
+/// cache-aware `ShardMap::build_cached`, and the property suite all
+/// describe the same set by counts alone. Ties break toward the lower
+/// table index, then the lower row, deterministically.
+pub fn head_rows_per_table(cards: &[usize], alpha: f64, n: usize) -> Vec<usize> {
+    let nt = cards.len();
+    let mut counts = vec![0usize; nt];
+    if n == 0 || nt == 0 {
+        return counts;
+    }
+    // only the first min(card, n) rows of any table can reach the top n
+    let mut cand: Vec<(f64, usize, usize)> = Vec::new();
+    for (j, &c) in cards.iter().enumerate() {
+        let h = harmonic(c, alpha);
+        for r in 0..c.min(n) {
+            cand.push((1.0 / ((r + 1) as f64).powf(alpha) / h, j, r));
+        }
+    }
+    cand.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0)
+            .unwrap()
+            .then(a.1.cmp(&b.1))
+            .then(a.2.cmp(&b.2))
+    });
+    for &(_, j, _) in cand.iter().take(n) {
+        counts[j] += 1;
+    }
+    counts
+}
+
+/// A bounded cache of hot embedding rows shared by every worker.
+///
+/// Two-phase lifecycle: a mutable WARM phase (construction, `prefetch`,
+/// [`offer`](HotRowCache::offer)) where admission and eviction happen,
+/// then an immutable SERVING phase behind an `Arc` where
+/// [`lookup`](HotRowCache::lookup) is the only operation — reads plus
+/// two relaxed counters, no locks.
+pub struct HotRowCache {
+    d_emb: usize,
+    capacity: usize,
+    alpha: f64,
+    /// global per-table cardinalities
+    cards: Vec<usize>,
+    /// prefix sums of `cards`: global row of `(j, id)` is `offsets[j] + id`
+    offsets: Vec<usize>,
+    /// per-table zipf normaliser `H(card, α)`
+    hnorm: Vec<f64>,
+    /// global row → slot index (`NOT_RESIDENT` when absent)
+    slot_of: Vec<u32>,
+    /// slot → (global row, admission priority)
+    slots: Vec<(u32, f64)>,
+    /// slot `s`'s embedding at `rows[s*d_emb .. (s+1)*d_emb]`
+    rows: Vec<f32>,
+    pub stats: CacheStats,
+}
+
+impl HotRowCache {
+    /// Build over `store`'s row space. With `prefetch` the predicted
+    /// head set is resident on return (never evicting — the set is
+    /// sized to `capacity`); without it the cache starts cold.
+    pub fn new(store: &ShardedStore, alpha: f64, cfg: HotCacheConfig) -> HotRowCache {
+        let cards = store.cards.clone();
+        let total = store.total_rows();
+        assert!(
+            total < NOT_RESIDENT as usize,
+            "row space exceeds the u32 slot index"
+        );
+        let mut offsets = Vec::with_capacity(cards.len());
+        let mut acc = 0usize;
+        for &c in &cards {
+            offsets.push(acc);
+            acc += c;
+        }
+        let hnorm = cards.iter().map(|&c| harmonic(c, alpha)).collect();
+        let capacity = cfg.capacity.min(total);
+        let mut cache = HotRowCache {
+            d_emb: store.d_emb,
+            capacity,
+            alpha,
+            cards,
+            offsets,
+            hnorm,
+            slot_of: vec![NOT_RESIDENT; total],
+            slots: Vec::with_capacity(capacity),
+            rows: Vec::with_capacity(capacity * store.d_emb),
+            stats: CacheStats::default(),
+        };
+        if cfg.prefetch && capacity > 0 {
+            let head = head_rows_per_table(&cache.cards, alpha, capacity);
+            for (j, &take) in head.iter().enumerate() {
+                for r in 0..take {
+                    cache.offer(store, j, r);
+                }
+            }
+        }
+        cache
+    }
+
+    /// Admission priority of `(table, id)`: the row's predicted share of
+    /// its table's traffic under zipf(α), a probability in (0, 1] —
+    /// finite and positive, so comparisons are total.
+    fn priority(&self, table: usize, id: usize) -> f64 {
+        1.0 / ((id + 1) as f64).powf(self.alpha) / self.hnorm[table]
+    }
+
+    #[inline]
+    fn global(&self, table: usize, id: usize) -> usize {
+        debug_assert!(id < self.cards[table], "offer/lookup take resolved ids");
+        self.offsets[table] + id
+    }
+
+    /// WARM phase: offer `(table, id)` for admission. Admits into free
+    /// capacity directly; at capacity it evicts the minimum-priority
+    /// resident iff the offered row is strictly hotter. Returns whether
+    /// the row is resident afterwards because of this call.
+    pub fn offer(&mut self, store: &ShardedStore, table: usize, id: usize) -> bool {
+        if self.capacity == 0 {
+            return false;
+        }
+        let g = self.global(table, id);
+        if self.slot_of[g] != NOT_RESIDENT {
+            return false; // already resident
+        }
+        let p = self.priority(table, id);
+        let row = store.shards[store.map.primary(table)]
+            .row(table, id)
+            .expect("shard map primary must hold the table");
+        let d = self.d_emb;
+        if self.slots.len() < self.capacity {
+            let s = self.slots.len();
+            self.slots.push((g as u32, p));
+            self.rows.extend_from_slice(row);
+            self.slot_of[g] = s as u32;
+            return true;
+        }
+        // full: linear-scan the victim (warm-phase only — O(capacity)
+        // here buys a zero-bookkeeping serving phase)
+        let mut victim = 0usize;
+        for s in 1..self.slots.len() {
+            if self.slots[s].1 < self.slots[victim].1 {
+                victim = s;
+            }
+        }
+        let (vg, vp) = self.slots[victim];
+        if p <= vp {
+            return false; // colder than everything resident
+        }
+        self.slot_of[vg as usize] = NOT_RESIDENT;
+        self.slots[victim] = (g as u32, p);
+        self.rows[victim * d..(victim + 1) * d].copy_from_slice(row);
+        self.slot_of[g] = victim as u32;
+        self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// SERVING phase: the row of `(table, id)` if resident. `id` must
+    /// already be resolved in-range (see
+    /// [`resolve_id`](super::store::resolve_id)). Counts a hit or miss.
+    #[inline]
+    pub fn lookup(&self, table: usize, id: usize) -> Option<&[f32]> {
+        let s = self.slot_of[self.global(table, id)];
+        if s == NOT_RESIDENT {
+            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        self.stats.hits.fetch_add(1, Ordering::Relaxed);
+        let (s, d) = (s as usize, self.d_emb);
+        Some(&self.rows[s * d..(s + 1) * d])
+    }
+
+    /// Residency without touching the hit/miss counters (tests,
+    /// placement accounting).
+    pub fn resident(&self, table: usize, id: usize) -> bool {
+        self.slot_of[self.global(table, id)] != NOT_RESIDENT
+    }
+
+    /// Resident rows (never exceeds [`capacity`](HotRowCache::capacity)).
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn d_emb(&self) -> usize {
+        self.d_emb
+    }
+
+    /// Resident head-row counts per table (for cache-aware placement:
+    /// `ShardMap::build_cached` charges replicas only for the uncached
+    /// remainder of each table).
+    pub fn resident_per_table(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.cards.len()];
+        for &(g, _) in &self.slots {
+            // binary search the owning table by offset
+            let g = g as usize;
+            let j = match self.offsets.binary_search(&g) {
+                Ok(j) => j,
+                Err(j) => j - 1,
+            };
+            counts[j] += 1;
+        }
+        counts
+    }
+}
+
+/// Per-batch gather ledger. Every requested row is served exactly once:
+/// `requested == cache_hits + local + remote + coalesced`, and with a
+/// cache attached `cache_misses == local + remote` (the misses are
+/// precisely the rows that fell through to the shards).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GatherStats {
+    /// valid `(field, id)` pairs requested (pre-dedup)
+    pub requested: usize,
+    /// unique rows gathered from the local shard
+    pub local: usize,
+    /// unique rows fetched cross-shard
+    pub remote: usize,
+    /// unique rows served straight from the hot cache
+    pub cache_hits: usize,
+    /// unique rows the cache did not hold (0 with no cache attached)
+    pub cache_misses: usize,
+    /// duplicate occurrences served by the scatter instead of a fetch
+    pub coalesced: usize,
+    /// out-of-range ids resolved to row 0, counted per occurrence
+    pub oob: usize,
+}
+
+impl GatherStats {
+    /// The conservation invariant above, as a checkable predicate.
+    pub fn balanced(&self) -> bool {
+        self.requested == self.cache_hits + self.local + self.remote + self.coalesced
+            && (self.cache_hits + self.cache_misses == 0
+                || self.cache_misses == self.local + self.remote)
+    }
+}
+
+/// Batch-coalescing gather engine, one per worker. All state persists
+/// across batches (allocation-free after warmup); the epoch stamp makes
+/// "clear the dedup index" a single increment.
+pub struct BatchGatherer {
+    /// prefix sums of the table cardinalities (global-row keying)
+    offsets: Vec<usize>,
+    /// global row → epoch it was last staged in
+    seen_epoch: Vec<u32>,
+    /// global row → its slot in `uniq` for the stamped epoch
+    seen_pos: Vec<u32>,
+    epoch: u32,
+    /// staging arena for this batch's unique rows, append-only within a
+    /// batch — duplicates scatter from here, so a later write to the
+    /// same output slot (repeated field in one record) can never corrupt
+    /// what other slots copy
+    uniq: Vec<f32>,
+}
+
+impl BatchGatherer {
+    pub fn new(cards: &[usize]) -> BatchGatherer {
+        let total: usize = cards.iter().sum();
+        let mut offsets = Vec::with_capacity(cards.len());
+        let mut acc = 0usize;
+        for &c in cards {
+            offsets.push(acc);
+            acc += c;
+        }
+        BatchGatherer {
+            offsets,
+            seen_epoch: vec![0; total],
+            seen_pos: vec![0; total],
+            epoch: 0,
+            uniq: Vec::new(),
+        }
+    }
+
+    /// Gather a whole compiled batch: for each `(fields, ids)` record a
+    /// zero-filled `[n_fields × d_emb]` block is appended to `out`,
+    /// exactly as [`ShardedStore::gather_from`] would per record — the
+    /// output is bit-identical to that per-record path with any cache
+    /// state, cold, warm, or absent (property-pinned). Unique rows are
+    /// fetched once — cache, then local shard, then cross-shard — and
+    /// duplicates are scattered from the staging arena.
+    pub fn gather_batch<'a, I>(
+        &mut self,
+        store: &ShardedStore,
+        cache: Option<&HotRowCache>,
+        local: usize,
+        requests: I,
+        out: &mut Vec<f32>,
+    ) -> GatherStats
+    where
+        I: IntoIterator<Item = (&'a [u32], &'a [i32])>,
+    {
+        // new epoch invalidates every stamp at once; on u32 wrap, clear
+        // the stamps for real so an ancient stamp can never alias
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.seen_epoch.fill(0);
+            self.epoch = 1;
+        }
+        self.uniq.clear();
+        let d = store.d_emb;
+        let nf = store.n_fields();
+        let mut st = GatherStats::default();
+        for (fields, ids) in requests {
+            debug_assert_eq!(fields.len(), ids.len());
+            let base = out.len();
+            out.resize(base + nf * d, 0.0);
+            for (k, &f) in fields.iter().enumerate() {
+                let j = f as usize;
+                if j >= nf {
+                    continue;
+                }
+                let (id, was_oob) = resolve_id(ids[k], store.cards[j]);
+                st.oob += was_oob as usize;
+                st.requested += 1;
+                let g = self.offsets[j] + id;
+                let dst = base + j * d;
+                if self.seen_epoch[g] == self.epoch {
+                    // coalesced: scatter the staged copy, no fetch
+                    st.coalesced += 1;
+                    let pos = self.seen_pos[g] as usize * d;
+                    out[dst..dst + d].copy_from_slice(&self.uniq[pos..pos + d]);
+                    continue;
+                }
+                // first sighting this batch: fetch once
+                let mut row: Option<&[f32]> = None;
+                if let Some(c) = cache {
+                    if let Some(r) = c.lookup(j, id) {
+                        st.cache_hits += 1;
+                        row = Some(r);
+                    } else {
+                        st.cache_misses += 1;
+                    }
+                }
+                let row = match row {
+                    Some(r) => r,
+                    None => {
+                        let serve = if store.map.owns(local, j) {
+                            st.local += 1;
+                            local
+                        } else {
+                            st.remote += 1;
+                            store.map.primary(j)
+                        };
+                        store.shards[serve]
+                            .row(j, id)
+                            .expect("shard map owner must hold the table")
+                    }
+                };
+                let pos = self.uniq.len() / d;
+                self.uniq.extend_from_slice(row);
+                self.seen_epoch[g] = self.epoch;
+                self.seen_pos[g] = pos as u32;
+                out[dst..dst + d].copy_from_slice(row);
+            }
+        }
+        debug_assert!(st.balanced(), "gather ledger out of balance: {st:?}");
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::profile;
+    use crate::embeddings::{ShardMap, ShardPolicy};
+
+    fn sharded(name: &str, n_shards: usize) -> ShardedStore {
+        let p = profile(name).unwrap();
+        let map = ShardMap::for_profile(&p, n_shards, ShardPolicy::HotReplicated);
+        ShardedStore::random(&p, 8, 42, map)
+    }
+
+    #[test]
+    fn prefetch_fills_to_capacity_with_the_head_set() {
+        let s = sharded("kdd", 2);
+        let cap = 64;
+        let c = HotRowCache::new(
+            &s,
+            1.35,
+            HotCacheConfig {
+                capacity: cap,
+                prefetch: true,
+            },
+        );
+        assert_eq!(c.len(), cap);
+        assert_eq!(c.stats.evictions(), 0, "prefetch is sized to capacity");
+        // the resident set is exactly the predicted head set
+        let head = head_rows_per_table(&s.cards, 1.35, cap);
+        assert_eq!(c.resident_per_table(), head);
+        for (j, &take) in head.iter().enumerate() {
+            for r in 0..take {
+                assert!(c.resident(j, r), "head row ({j}, {r}) missing");
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_returns_the_store_row_bit_identically() {
+        let s = sharded("kdd", 3);
+        let c = HotRowCache::new(
+            &s,
+            1.35,
+            HotCacheConfig {
+                capacity: 128,
+                prefetch: true,
+            },
+        );
+        let mut hits = 0;
+        for j in 0..s.n_fields() {
+            for r in 0..4.min(s.cards[j]) {
+                if let Some(row) = c.lookup(j, r) {
+                    let want = s.shards[s.map.primary(j)].row(j, r).unwrap();
+                    assert_eq!(row, want);
+                    hits += 1;
+                }
+            }
+        }
+        assert!(hits > 0, "a 128-row cache must hold some 4-row heads");
+        assert_eq!(c.stats.hits(), hits);
+    }
+
+    #[test]
+    fn cold_offers_evict_strictly_colder_rows() {
+        let s = sharded("kdd", 2);
+        let mut c = HotRowCache::new(
+            &s,
+            1.35,
+            HotCacheConfig {
+                capacity: 4,
+                prefetch: false,
+            },
+        );
+        assert!(c.is_empty());
+        // fill with the COLDEST rows of table 0, then offer hotter ones:
+        // each must evict (ascending priority ⇒ every offer beats the min)
+        let card = s.cards[0];
+        for r in (card - 4..card).rev() {
+            assert!(c.offer(&s, 0, r));
+        }
+        assert_eq!((c.len(), c.stats.evictions()), (4, 0));
+        for r in 0..4 {
+            assert!(c.offer(&s, 0, r), "hotter row {r} must be admitted");
+        }
+        assert_eq!(c.stats.evictions(), 4);
+        assert_eq!(c.len(), 4, "occupancy bounded by capacity");
+        // now resident: rows 0..4; a cold row bounces
+        assert!(!c.offer(&s, 0, card - 1));
+        for r in 0..4 {
+            assert!(c.resident(0, r));
+        }
+    }
+
+    #[test]
+    fn head_rows_per_table_is_conserved_and_prefix_shaped() {
+        let cards = vec![10usize, 500, 3, 80];
+        let total: usize = cards.iter().sum();
+        for n in [0usize, 1, 7, 64, 1000] {
+            let head = head_rows_per_table(&cards, 1.25, n);
+            assert_eq!(head.iter().sum::<usize>(), n.min(total));
+            for (j, &h) in head.iter().enumerate() {
+                assert!(h <= cards[j]);
+            }
+        }
+        // hotter (smaller) tables get their heads first
+        let head = head_rows_per_table(&cards, 1.25, 4);
+        assert!(head[2] >= 1, "3-row table has the hottest head: {head:?}");
+    }
+
+    #[test]
+    fn coalescing_batch_matches_per_record_gather() {
+        let s = sharded("kdd", 3);
+        let nf = s.n_fields();
+        let fields: Vec<u32> = (0..nf as u32).collect();
+        // duplicate-heavy batch: same hot ids repeated + one OOV id
+        let recs: Vec<Vec<i32>> = (0..6)
+            .map(|b| (0..nf).map(|j| ((j + b) % 3) as i32 - 1).collect())
+            .collect();
+        let mut want = Vec::new();
+        let (mut wl, mut wr, mut woob) = (0, 0, 0);
+        for ids in &recs {
+            let (l, r, o) = s.gather_from(1, &fields, ids, &mut want);
+            wl += l;
+            wr += r;
+            woob += o;
+        }
+        let mut g = BatchGatherer::new(&s.cards);
+        let mut got = Vec::new();
+        let st = g.gather_batch(
+            &s,
+            None,
+            1,
+            recs.iter().map(|ids| (fields.as_slice(), ids.as_slice())),
+            &mut got,
+        );
+        assert_eq!(got, want);
+        assert_eq!(st.oob, woob);
+        assert_eq!(st.requested, wl + wr);
+        assert!(st.coalesced > 0, "repeated ids must coalesce");
+        assert!(st.balanced(), "{st:?}");
+    }
+
+    #[test]
+    fn repeated_fields_in_one_record_stay_last_write_wins() {
+        // hostile records where a repeated field overwrites its own
+        // output slot between a row's first fetch and a later coalesced
+        // repeat — the scatter must serve the STAGED copy, not whatever
+        // the output slot currently holds. [2, 2, 2]/[5, 1, 5] is the
+        // sharp case: by the third pair, slot 2 holds row 1's embedding,
+        // but the coalesced (2, 5) must still produce row 5.
+        let s = sharded("kdd", 2);
+        for (fields, ids) in [
+            (vec![2u32, 2, 3], vec![5i32, 1, 5]),
+            (vec![2u32, 2, 2], vec![5i32, 1, 5]),
+        ] {
+            let mut want = Vec::new();
+            s.gather_from(0, &fields, &ids, &mut want);
+            let mut g = BatchGatherer::new(&s.cards);
+            let mut got = Vec::new();
+            let st = g.gather_batch(
+                &s,
+                None,
+                0,
+                std::iter::once((&fields[..], &ids[..])),
+                &mut got,
+            );
+            assert_eq!(got, want, "last-write-wins must match gather_from");
+            assert_eq!(st.requested, 3);
+            assert!(st.balanced());
+        }
+    }
+}

@@ -11,12 +11,16 @@
 //! the coordinator can keep gathers local to the memory tiles that own
 //! them — see DESIGN.md §7.5.
 
+pub mod hotcache;
 pub mod placement;
 pub mod sharding;
 pub mod store;
 pub mod tilecost;
 
+pub use hotcache::{
+    head_rows_per_table, BatchGatherer, CacheStats, GatherStats, HotCacheConfig, HotRowCache,
+};
 pub use placement::{Placement, Strategy};
 pub use sharding::{EmbeddingShard, ShardMap, ShardPolicy, ShardedStore};
-pub use store::EmbeddingStore;
+pub use store::{resolve_id, EmbeddingStore};
 pub use tilecost::{GatherCost, MemoryTileModel};

@@ -25,7 +25,7 @@
 //! across shards is element-identical to the monolithic gather (pinned
 //! by a differential property test).
 
-use super::store::EmbeddingStore;
+use super::store::{resolve_id, EmbeddingStore};
 use crate::data::Profile;
 
 /// Extra rows `HotReplicated` may spend on replicas, as a fraction of
@@ -74,6 +74,24 @@ impl ShardMap {
         n_shards: usize,
         policy: ShardPolicy,
     ) -> ShardMap {
+        ShardMap::build_cached(cards, zipf_alpha, n_shards, policy, &[])
+    }
+
+    /// [`ShardMap::build`] with a hot-row cache in the picture:
+    /// `cached_rows[j]` head rows of table `j` live in a shared
+    /// [`HotRowCache`](super::hotcache::HotRowCache) tier that every
+    /// worker reads locally, so those rows are charged against the
+    /// `HotReplicated` replica budget ONLY ONCE (the cache copy) instead
+    /// of once per shard — replicating a partially-cached table costs
+    /// just its uncached remainder. An empty slice (or any other policy)
+    /// reduces to the plain placement.
+    pub fn build_cached(
+        cards: &[usize],
+        zipf_alpha: f64,
+        n_shards: usize,
+        policy: ShardPolicy,
+        cached_rows: &[usize],
+    ) -> ShardMap {
         assert!(n_shards > 0, "n_shards must be > 0");
         let nt = cards.len();
         let mut owners: Vec<Vec<u32>> = vec![Vec::new(); nt];
@@ -100,17 +118,35 @@ impl ShardMap {
                     // Head share of a zipf(α) table with c rows is
                     // 1/H(c,α): small tables concentrate their traffic
                     // on the fewest rows — replicate those first.
-                    let mut heat: Vec<(usize, f64)> = (0..nt)
-                        .map(|j| (j, 1.0 / harmonic(cards[j], zipf_alpha)))
-                        .collect();
-                    heat.sort_by(|a, b| {
-                        b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
-                    });
+                    //
+                    // Budget arithmetic is exact to the row: the float
+                    // budget is ROUNDED, not truncated (`as usize`
+                    // floored away up to one row of budget per build,
+                    // and made the spent-vs-allowed bound asymmetric
+                    // with the property suite's own rounding).
+                    //
+                    // The pass is first-fit-decreasing over the heat
+                    // order: a table whose replica cost exceeds the
+                    // REMAINING budget is skipped and the scan continues
+                    // to colder tables. The alternative (stop at the
+                    // first misfit) strands the whole tail of the budget
+                    // whenever one large-but-hot table lands early; FFD
+                    // instead spends it on the hottest tables that fit.
+                    // The replicated set is therefore exactly a prefix
+                    // of `heat_order` FILTERED to tables that fit as the
+                    // scan reaches them — pinned by
+                    // `hot_replication_budget_is_exact_and_first_fit_by_heat`.
                     let total: usize = cards.iter().sum();
                     let mut budget =
-                        (total as f64 * REPLICA_BUDGET) as usize;
-                    for &(j, _) in &heat {
-                        let extra = cards[j] * (n_shards - 1);
+                        (total as f64 * REPLICA_BUDGET).round() as usize;
+                    for j in heat_order(cards, zipf_alpha) {
+                        // rows already resident in the shared cache tier
+                        // are local everywhere; a replica only pays for
+                        // the uncached remainder
+                        let cached =
+                            cached_rows.get(j).copied().unwrap_or(0);
+                        let extra = cards[j].saturating_sub(cached)
+                            * (n_shards - 1);
                         let already = owners[j].len();
                         if already == n_shards || extra > budget {
                             continue;
@@ -188,8 +224,23 @@ impl ShardMap {
     }
 }
 
-fn harmonic(c: usize, alpha: f64) -> f64 {
+/// Generalized harmonic number `H(c, α) = Σ_{k=1..c} 1/k^α` — the zipf
+/// normaliser. `1/H(c, α)` is the head row's share of a table's traffic,
+/// the heat score replication and cache admission both rank by.
+pub fn harmonic(c: usize, alpha: f64) -> f64 {
     (1..=c.max(1)).map(|k| 1.0 / (k as f64).powf(alpha)).sum()
+}
+
+/// Tables by descending predicted head share `1/H(card, α)` (ties:
+/// lower index first) — exactly the order the `HotReplicated` pass
+/// spends its replica budget in, exported so property tests and the
+/// cache tier can re-derive it independently.
+pub fn heat_order(cards: &[usize], alpha: f64) -> Vec<usize> {
+    let mut heat: Vec<(usize, f64)> = (0..cards.len())
+        .map(|j| (j, 1.0 / harmonic(cards[j], alpha)))
+        .collect();
+    heat.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    heat.into_iter().map(|(j, _)| j).collect()
 }
 
 /// One worker's slice of the embedding layer: the tables its shard
@@ -253,12 +304,15 @@ impl EmbeddingShard {
         table < self.tables.len() && self.tables[table].is_some()
     }
 
-    /// One local row (id clamped like the monolithic gather); `None`
-    /// when this shard has no replica of `table`.
+    /// One local row; `None` when this shard has no replica of `table`.
+    /// `id` is normally already resolved in-range (see
+    /// [`resolve_id`](super::store::resolve_id)); a raw out-of-range id
+    /// falls back to row 0 — the OOV row — matching the monolithic
+    /// store's semantics, never the old clamp-to-last aliasing.
     pub fn row(&self, table: usize, id: usize) -> Option<&[f32]> {
         let t = self.tables.get(table)?.as_ref()?;
         let d = self.d_emb;
-        let id = id.min(self.cards[table] - 1);
+        let id = if id < self.cards[table] { id } else { 0 };
         Some(&t[id * d..(id + 1) * d])
     }
 
@@ -321,11 +375,20 @@ impl ShardedStore {
         self.cards.len()
     }
 
+    /// Rows across all tables (replicas not counted) — the global-row
+    /// index space the cache tier and coalescer are keyed by.
+    pub fn total_rows(&self) -> usize {
+        self.cards.iter().sum()
+    }
+
     /// Assemble one record's gather from the perspective of shard
     /// `local`: a zero-filled `[n_fields × d_emb]` block is appended to
     /// `out`, with row `ids[k]` of table `fields[k]` written at that
-    /// field's slot. Returns `(local_rows, remote_rows)` — a row served
-    /// by any shard other than `local` counts as one cross-shard fetch.
+    /// field's slot. Returns `(local_rows, remote_rows, oob_ids)` — a
+    /// row served by any shard other than `local` counts as one
+    /// cross-shard fetch, and every out-of-range id (resolved to row 0,
+    /// the OOV row, via [`resolve_id`](super::store::resolve_id)) is
+    /// counted in the third slot.
     ///
     /// With `fields = 0..n_fields` the block is element-identical to
     /// `EmbeddingStore::gather` for the same ids (batch 1).
@@ -335,21 +398,22 @@ impl ShardedStore {
         fields: &[u32],
         ids: &[i32],
         out: &mut Vec<f32>,
-    ) -> (usize, usize) {
+    ) -> (usize, usize, usize) {
         debug_assert_eq!(fields.len(), ids.len());
         let nf = self.n_fields();
         let d = self.d_emb;
         let base = out.len();
         out.resize(base + nf * d, 0.0);
-        let (mut n_local, mut n_remote) = (0usize, 0usize);
+        let (mut n_local, mut n_remote, mut n_oob) = (0usize, 0usize, 0usize);
         for (k, &f) in fields.iter().enumerate() {
             let j = f as usize;
             if j >= nf {
                 continue;
             }
-            // `as usize` + clamp-to-last mirrors the monolithic gather
-            // exactly (negative ids wrap huge and clamp to the last row)
-            let id = ids[k] as usize;
+            // shared OOV semantics with the monolithic gather: negative
+            // or past-card ids resolve to row 0, bit-identically
+            let (id, was_oob) = resolve_id(ids[k], self.cards[j]);
+            n_oob += was_oob as usize;
             let serve = if self.map.owns(local, j) {
                 n_local += 1;
                 local
@@ -362,7 +426,7 @@ impl ShardedStore {
                 .expect("shard map owner must hold the table");
             out[base + j * d..base + (j + 1) * d].copy_from_slice(row);
         }
-        (n_local, n_remote)
+        (n_local, n_remote, n_oob)
     }
 }
 
@@ -407,10 +471,56 @@ mod tests {
         let max_rep = replicated.iter().map(|&j| p.cards[j]).max().unwrap();
         let max_card = *p.cards.iter().max().unwrap();
         assert!(max_rep < max_card);
-        // budget respected
+        // budget respected (exact rounding, not truncation)
         let total: usize = p.cards.iter().sum();
         let stored: usize = (0..4).map(|s| m.rows_of(s, &p.cards)).sum();
-        assert!(stored <= total + (total as f64 * REPLICA_BUDGET) as usize);
+        assert!(stored <= total + (total as f64 * REPLICA_BUDGET).round() as usize);
+    }
+
+    #[test]
+    fn cached_head_rows_stretch_the_replica_budget() {
+        let p = profile("criteo").unwrap();
+        let plain = ShardMap::for_profile(&p, 4, ShardPolicy::HotReplicated);
+        // pretend a cache pins the 64 hottest rows of every table: each
+        // replica cost drops by 64·(n-1), and the placement must follow
+        // the SAME first-fit-decreasing walk with those discounted costs
+        // (mirror-simulated here — the discount can re-shuffle which
+        // tables fit, so "superset of plain" is NOT the contract; the
+        // documented walk is)
+        let cached = vec![64usize; p.n_sparse()];
+        let m = ShardMap::build_cached(
+            &p.cards,
+            p.zipf_alpha,
+            4,
+            ShardPolicy::HotReplicated,
+            &cached,
+        );
+        let total: usize = p.cards.iter().sum();
+        let mut remaining = (total as f64 * REPLICA_BUDGET).round() as usize;
+        let mut expect = vec![false; p.n_sparse()];
+        for j in heat_order(&p.cards, p.zipf_alpha) {
+            let extra = p.cards[j].saturating_sub(64) * 3;
+            if extra <= remaining {
+                remaining -= extra;
+                expect[j] = true;
+            }
+        }
+        let mut replicated = 0usize;
+        for j in 0..m.n_tables() {
+            assert_eq!(
+                m.owners(j).len() == 4,
+                expect[j],
+                "table {j} diverges from the discounted FFD walk"
+            );
+            replicated += (m.owners(j).len() == 4) as usize;
+        }
+        assert!(replicated > 0, "the discount must afford some replicas");
+        // an empty cache slice is exactly the plain build
+        let zero =
+            ShardMap::build_cached(&p.cards, p.zipf_alpha, 4, ShardPolicy::HotReplicated, &[]);
+        for j in 0..zero.n_tables() {
+            assert_eq!(zero.owners(j), plain.owners(j));
+        }
     }
 
     #[test]
@@ -436,9 +546,10 @@ mod tests {
         store.gather(&ids, 1, &mut mono);
         for local in 0..3 {
             let mut out = Vec::new();
-            let (l, r) = sharded.gather_from(local, &fields, &ids, &mut out);
+            let (l, r, oob) = sharded.gather_from(local, &fields, &ids, &mut out);
             assert_eq!(out, mono);
             assert_eq!(l + r, nf);
+            assert_eq!(oob, 0);
         }
     }
 
@@ -460,18 +571,26 @@ mod tests {
     }
 
     #[test]
-    fn out_of_range_ids_clamp_like_monolithic() {
+    fn out_of_range_ids_resolve_like_monolithic() {
         let p = profile("kdd").unwrap();
         let store = EmbeddingStore::random(&p, 8, 5);
         let m = ShardMap::for_profile(&p, 2, ShardPolicy::RoundRobinTables);
         let sharded = ShardedStore::build(&store, m);
         let nf = p.n_sparse();
         let fields: Vec<u32> = (0..nf as u32).collect();
-        let ids = vec![i32::MAX; nf];
-        let mut mono = Vec::new();
-        store.gather(&ids, 1, &mut mono);
-        let mut out = Vec::new();
-        sharded.gather_from(0, &fields, &ids, &mut out);
-        assert_eq!(out, mono);
+        for hostile in [-1i32, i32::MIN, i32::MAX] {
+            let ids = vec![hostile; nf];
+            let mut mono = Vec::new();
+            let mono_oob = store.gather(&ids, 1, &mut mono);
+            let mut out = Vec::new();
+            let (_, _, oob) = sharded.gather_from(0, &fields, &ids, &mut out);
+            assert_eq!(out, mono, "id {hostile}");
+            assert_eq!(oob, nf);
+            assert_eq!(mono_oob, nf);
+            // and all of it is the row-0 OOV embedding
+            for j in 0..nf {
+                assert_eq!(&out[j * 8..(j + 1) * 8], store.row(j, 0));
+            }
+        }
     }
 }

@@ -15,6 +15,38 @@ pub(crate) fn random_table(seed: u64, field: usize, card: usize, d_emb: usize) -
     (0..card * d_emb).map(|_| (r.normal() * 0.05) as f32).collect()
 }
 
+/// Resolve a wire-level id against a table of `card` rows: in-range ids
+/// map to themselves, everything else — negative sentinels (the standard
+/// missing-feature encoding in CTR logs) and ids past the table — maps
+/// to row 0, the designated OOV row. Returns `(row, was_oob)`.
+///
+/// Row 0 rather than a clamp is deliberate: the old path converted the
+/// id with `as usize` and clamped to `cards[j] - 1`, so every negative
+/// id wrapped huge and silently aliased the LAST row of its table — one
+/// arbitrary trained row absorbing all missing features (and the row a
+/// popularity-driven cache would then pin as the hottest in the system).
+/// Every gather path — monolithic, sharded, cached — resolves through
+/// this one function, so their bit-identity contracts carry the same
+/// OOV semantics.
+#[inline]
+pub fn resolve_id(id: i32, card: usize) -> (usize, bool) {
+    if id >= 0 && (id as usize) < card {
+        (id as usize, false)
+    } else {
+        (0, true)
+    }
+}
+
+/// Construction-time guard shared by every store/shard builder: a
+/// zero-row table can serve nothing (not even row 0, the OOV row) and
+/// used to surface as a `cards[j] - 1` underflow panic mid-gather.
+pub(crate) fn validate_cards(cards: &[usize]) -> crate::Result<()> {
+    for (j, &c) in cards.iter().enumerate() {
+        crate::ensure!(c > 0, "table {j} has cardinality 0 (cannot hold the OOV row)");
+    }
+    Ok(())
+}
+
 /// All embedding tables for one dataset, flattened per field.
 pub struct EmbeddingStore {
     pub d_emb: usize,
@@ -41,6 +73,7 @@ impl EmbeddingStore {
             tables.push(t.as_f32()?);
         }
         crate::ensure!(!tables.is_empty(), "no emb/<j> tensors found");
+        validate_cards(&cards)?;
         Ok(EmbeddingStore {
             d_emb,
             tables,
@@ -50,6 +83,7 @@ impl EmbeddingStore {
 
     /// Random tables (tests / serving without trained artifacts).
     pub fn random(profile: &Profile, d_emb: usize, seed: u64) -> EmbeddingStore {
+        validate_cards(&profile.cards).expect("profile has a zero-row table");
         let tables = profile
             .cards
             .iter()
@@ -79,17 +113,21 @@ impl EmbeddingStore {
     }
 
     /// Gather a batch: ids is row-major [batch × n_fields]; output is
-    /// [batch × n_fields × d_emb] appended to `out`.
-    pub fn gather(&self, ids: &[i32], batch: usize, out: &mut Vec<f32>) {
+    /// [batch × n_fields × d_emb] appended to `out`. Out-of-range ids
+    /// resolve to row 0 (see [`resolve_id`]); returns how many did.
+    pub fn gather(&self, ids: &[i32], batch: usize, out: &mut Vec<f32>) -> usize {
         let nf = self.n_fields();
         debug_assert_eq!(ids.len(), batch * nf);
         out.reserve(batch * nf * self.d_emb);
+        let mut oob = 0usize;
         for b in 0..batch {
             for j in 0..nf {
-                let id = ids[b * nf + j] as usize;
-                out.extend_from_slice(self.row(j, id.min(self.cards[j] - 1)));
+                let (id, was_oob) = resolve_id(ids[b * nf + j], self.cards[j]);
+                oob += was_oob as usize;
+                out.extend_from_slice(self.row(j, id));
             }
         }
+        oob
     }
 
     /// Raw rows of one table (row-major `[cards[j] × d_emb]`) — the unit
@@ -102,8 +140,9 @@ impl EmbeddingStore {
     /// zero-filled `[n_fields × d_emb]` block appended to `out` (slots
     /// of untouched fields stay zero — the engine's padding value).
     /// With `fields = 0..n_fields` this is element-identical to
-    /// `gather` with batch 1.
-    pub fn gather_fields(&self, fields: &[u32], ids: &[i32], out: &mut Vec<f32>) {
+    /// `gather` with batch 1. Out-of-range ids resolve to row 0 (see
+    /// [`resolve_id`]); returns how many did.
+    pub fn gather_fields(&self, fields: &[u32], ids: &[i32], out: &mut Vec<f32>) -> usize {
         debug_assert_eq!(fields.len(), ids.len());
         let nf = self.n_fields();
         // Full request (the default serving path): straight append —
@@ -116,14 +155,17 @@ impl EmbeddingStore {
         let d = self.d_emb;
         let base = out.len();
         out.resize(base + nf * d, 0.0);
+        let mut oob = 0usize;
         for (k, &f) in fields.iter().enumerate() {
             let j = f as usize;
             if j >= nf {
                 continue;
             }
-            let id = (ids[k] as usize).min(self.cards[j] - 1);
+            let (id, was_oob) = resolve_id(ids[k], self.cards[j]);
+            oob += was_oob as usize;
             out[base + j * d..base + (j + 1) * d].copy_from_slice(self.row(j, id));
         }
+        oob
     }
 
     /// Global row index of (field, id) — the unit the placement stripes.
@@ -198,12 +240,51 @@ mod tests {
     }
 
     #[test]
-    fn out_of_range_ids_clamp() {
+    fn out_of_range_ids_resolve_to_the_oov_row() {
         let p = profile("kdd").unwrap();
         let s = EmbeddingStore::random(&p, 8, 4);
-        let ids = vec![i32::MAX; s.n_fields()];
+        let nf = s.n_fields();
+        // the canonical hostile set: negative sentinel, extreme
+        // negative, exactly card, past card — all must land on row 0
+        for hostile in [-1i32, i32::MIN, i32::MAX] {
+            let ids = vec![hostile; nf];
+            let mut out = Vec::new();
+            let oob = s.gather(&ids, 1, &mut out);
+            assert_eq!(oob, nf, "every id is OOV");
+            for j in 0..nf {
+                assert_eq!(&out[j * 8..(j + 1) * 8], s.row(j, 0), "id {hostile}");
+            }
+        }
+        // per-table boundary cases: card and card+7 are OOV, card-1 not
+        for j in 0..nf {
+            let c = s.cards[j];
+            assert_eq!(resolve_id(c as i32, c), (0, true));
+            assert_eq!(resolve_id((c + 7) as i32, c), (0, true));
+            assert_eq!(resolve_id(c as i32 - 1, c), (c - 1, false));
+            assert_eq!(resolve_id(0, c), (0, false));
+        }
+    }
+
+    #[test]
+    fn gather_fields_counts_oob_like_gather() {
+        let p = profile("kdd").unwrap();
+        let s = EmbeddingStore::random(&p, 4, 6);
+        // partial request mixing valid, negative, and past-card ids
+        let fields = [0u32, 2, 5];
+        let cards = [s.cards[0], s.cards[2], s.cards[5]];
+        let ids = [1i32, -1, cards[2] as i32];
         let mut out = Vec::new();
-        s.gather(&ids, 1, &mut out); // must not panic
-        assert_eq!(out.len(), s.n_fields() * 8);
+        let oob = s.gather_fields(&fields, &ids, &mut out);
+        assert_eq!(oob, 2);
+        assert_eq!(&out[2 * 4..3 * 4], s.row(2, 0), "negative → OOV row");
+        assert_eq!(&out[5 * 4..6 * 4], s.row(5, 0), "past card → OOV row");
+        assert_eq!(&out[0..4], s.row(0, 1), "valid id untouched");
+    }
+
+    #[test]
+    fn zero_cardinality_table_is_rejected_at_construction() {
+        assert!(validate_cards(&[5, 0, 3]).is_err());
+        assert!(validate_cards(&[5, 1, 3]).is_ok());
+        assert!(validate_cards(&[]).is_ok());
     }
 }

@@ -23,7 +23,10 @@ use autorac::coordinator::{
 };
 use autorac::util::json_lazy;
 use autorac::data::{make_batch, profile, Generator, Splits, DEFAULT_SEED};
-use autorac::embeddings::{EmbeddingStore, ShardMap, ShardPolicy, ShardedStore};
+use autorac::embeddings::{
+    head_rows_per_table, EmbeddingStore, HotCacheConfig, HotRowCache, ShardMap,
+    ShardPolicy, ShardedStore,
+};
 use autorac::mapping::{map_genome, MapStyle};
 use autorac::nas::{autorac_best, Genome, ParallelSearch, SearchConfig, Surrogate};
 use autorac::pim::{
@@ -111,6 +114,9 @@ fn print_help() {
                       --placement round-robin|balanced|hot --requests N --rps R (0=closed loop)\n\
                       --concurrency N --coverage F --queue-cap N (0=unbounded) --admission reject|shed\n\
                       --shed-after-us N --exec-us N (mock only) --batch N --d-emb N\n\
+                      --cache-rows N (hot-row cache capacity; 0 = off; in-process\n\
+                      runs also rerun cache-off for the p99 comparison)\n\
+                      --oov-frac F (fraction of ids replaced by the -1 sentinel)\n\
                       --engine mock|pim (pim = real crossbar math on BatchedXbar banks)\n\
                       --threads N (kernel threads per pim worker; 0 = all cores)\n\
                       --json PATH (machine-readable report, e.g. BENCH_serving.json)\n\
@@ -404,6 +410,7 @@ enum ServeEngine {
 
 /// Everything one serve-bench run needs (shared by the measured policy
 /// and the round-robin baseline so the comparison is apples-to-apples).
+#[derive(Clone)]
 struct ServeBenchSetup {
     engine: ServeEngine,
     dataset: String,
@@ -422,6 +429,10 @@ struct ServeBenchSetup {
     seed: u64,
     /// kernel worker threads per pim engine (mock ignores it)
     threads: usize,
+    /// hot-row cache capacity in rows (0 = no cache tier)
+    cache_rows: usize,
+    /// fraction of ids the loadgen replaces with the `-1` OOV sentinel
+    oov_frac: f64,
 }
 
 /// Build the sharded store + coordinator for one serve-bench run
@@ -431,8 +442,35 @@ fn serve_bench_coordinator(
     policy: Policy,
 ) -> autorac::Result<Coordinator> {
     let prof = profile(&s.dataset)?;
-    let map = ShardMap::for_profile(&prof, s.shards, s.placement);
+    // Cache-aware placement: rows resident in the hot cache are served
+    // before any shard is consulted, so the HotReplicated pass charges
+    // replicas only for each table's uncached remainder.
+    let cached_rows = if s.cache_rows > 0 {
+        head_rows_per_table(&prof.cards, prof.zipf_alpha, s.cache_rows)
+    } else {
+        Vec::new()
+    };
+    let map = ShardMap::build_cached(
+        &prof.cards,
+        prof.zipf_alpha,
+        s.shards,
+        s.placement,
+        &cached_rows,
+    );
     let store = Arc::new(ShardedStore::random(&prof, s.d_emb, s.seed, map));
+    let serving = if s.cache_rows > 0 {
+        let cache = HotRowCache::new(
+            &store,
+            prof.zipf_alpha,
+            HotCacheConfig {
+                capacity: s.cache_rows,
+                prefetch: true,
+            },
+        );
+        ServingStore::Cached(store, Arc::new(cache))
+    } else {
+        ServingStore::Sharded(store)
+    };
     let (nd, nf, d_emb, batch) = (prof.n_dense, prof.n_sparse(), s.d_emb, s.batch);
     let delay = s.exec_delay;
     let engine = s.engine;
@@ -451,7 +489,7 @@ fn serve_bench_coordinator(
                 max_wait: std::time::Duration::ZERO,
             },
         },
-        ServingStore::Sharded(store),
+        serving,
         move |_| match engine {
             ServeEngine::Mock => {
                 let mut e = MockEngine::new(batch, nd, nf, d_emb);
@@ -473,6 +511,7 @@ fn serve_bench_loadcfg(s: &ServeBenchSetup) -> LoadGenConfig {
         arrival: s.arrival,
         seed: s.seed,
         coverage: s.coverage,
+        oov_frac: s.oov_frac,
     }
 }
 
@@ -541,6 +580,12 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
         0 => host_threads(),
         t => t,
     };
+    let cache_rows = args.usize_or("cache-rows", 0)?;
+    let oov_frac = args.f64_or("oov-frac", 0.0)?;
+    autorac::ensure!(
+        (0.0..=1.0).contains(&oov_frac),
+        "--oov-frac must be in [0, 1], got {oov_frac}"
+    );
     let json_path = args.get("json").map(str::to_string);
     // Socket-mode flags (S28) — consumed unconditionally so finish()
     // passes whether or not a transport was picked.
@@ -572,6 +617,8 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
         d_emb: args.usize_or("d-emb", 16)?,
         seed: args.u64_or("seed", 7)?,
         threads,
+        cache_rows,
+        oov_frac,
     };
     args.finish()?;
     if listen.is_some() && connect.is_some() {
@@ -726,6 +773,39 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
             ),
         }
     }
+
+    // Same traffic with the cache disabled — the p99 headline the cache
+    // tier exists for (EXPERIMENTS.md §SG). Identical schedule by
+    // construction: the loadgen is deterministic by seed and the cache
+    // never changes what is gathered, only where it is read from.
+    if setup.cache_rows > 0 {
+        let off = ServeBenchSetup {
+            cache_rows: 0,
+            ..setup.clone()
+        };
+        let (base, _) = serve_bench_run(&off, policy)?;
+        println!(
+            "baseline cache-off: p50 {:.0} µs p99 {:.0} µs | local {} rows | \
+             cross-shard {} rows",
+            base.e2e_p50_us, base.e2e_p99_us, base.local_rows, base.remote_rows
+        );
+        if snap.e2e_p99_us < base.e2e_p99_us {
+            println!(
+                "cache p99 win: {:.0} µs -> {:.0} µs ({:.2}x) at {} cached rows",
+                base.e2e_p99_us,
+                snap.e2e_p99_us,
+                base.e2e_p99_us / snap.e2e_p99_us.max(1e-9),
+                setup.cache_rows
+            );
+        } else {
+            println!(
+                "WARNING: cache did not improve p99 ({:.0} µs vs {:.0} µs \
+                 cache-off) — capacity below the head set, or the run is \
+                 too short/noisy to separate them",
+                snap.e2e_p99_us, base.e2e_p99_us
+            );
+        }
+    }
     Ok(())
 }
 
@@ -766,6 +846,13 @@ fn serve_bench_report(
         ("failed", Json::Num(snap.failed as f64)),
         ("local_rows", Json::Num(snap.local_rows as f64)),
         ("remote_rows", Json::Num(snap.remote_rows as f64)),
+        ("cache_rows", Json::Num(setup.cache_rows as f64)),
+        ("cache_hits", Json::Num(snap.cache_hits as f64)),
+        ("cache_misses", Json::Num(snap.cache_misses as f64)),
+        ("cache_hit_rate", Json::Num(snap.cache_hit_rate())),
+        ("cache_evictions", Json::Num(snap.cache_evictions as f64)),
+        ("coalesced_rows", Json::Num(snap.coalesced_rows as f64)),
+        ("oob_ids", Json::Num(snap.oob_ids as f64)),
     ]
 }
 
@@ -816,11 +903,25 @@ fn print_serve_bench(snap: &MetricsSnapshot, rep: &LoadReport) {
         snap.e2e_p50_us, snap.e2e_p99_us, snap.queue_p99_us, snap.exec_p50_us
     );
     println!(
-        "  gathers: local {} rows | cross-shard {} rows ({:.1}%)",
+        "  gathers: local {} rows | cross-shard {} rows ({:.1}%) | \
+         coalesced {} | oob ids {}",
         snap.local_rows,
         snap.remote_rows,
-        snap.cross_shard_frac() * 100.0
+        snap.cross_shard_frac() * 100.0,
+        snap.coalesced_rows,
+        snap.oob_ids
     );
+    // printed only when the cache saw traffic, so verify.sh's grep for
+    // this line is fail-closed: a silently-disabled cache breaks CI
+    if snap.cache_hits + snap.cache_misses > 0 {
+        println!(
+            "  cache: hit-rate {:.1}% ({}/{} lookups) | evictions {}",
+            snap.cache_hit_rate() * 100.0,
+            snap.cache_hits,
+            snap.cache_hits + snap.cache_misses,
+            snap.cache_evictions
+        );
+    }
 }
 
 /// Wall-clock seconds per call of `f` (one warmup call, then as many

@@ -428,6 +428,7 @@ fn socket_and_in_process_runs_agree_bit_for_bit_per_seed() {
         arrival: Arrival::ClosedLoop { concurrency: 8 },
         seed: 21,
         coverage: 0.5,
+        oov_frac: 0.0,
     };
     let s1 = loadgen::build_schedule(&prof, &cfg).unwrap();
     let s2 = loadgen::build_schedule(&prof, &cfg).unwrap();

@@ -351,6 +351,7 @@ fn the_serving_corpus_stays_entirely_on_the_lazy_path() {
         arrival: Arrival::OpenLoop { rps: 50_000.0 },
         seed: 11,
         coverage: 0.5,
+        oov_frac: 0.0,
     };
     for with_ctx in [false, true] {
         let corpus = loadgen::wire_corpus(&prof, &cfg, with_ctx).unwrap();

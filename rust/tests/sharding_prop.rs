@@ -6,8 +6,8 @@
 
 use autorac::data::{profile, ALL_PROFILES};
 use autorac::embeddings::{
-    sharding::REPLICA_BUDGET, EmbeddingShard, EmbeddingStore, ShardMap,
-    ShardPolicy, ShardedStore,
+    sharding::{harmonic, heat_order, REPLICA_BUDGET},
+    EmbeddingShard, EmbeddingStore, ShardMap, ShardPolicy, ShardedStore,
 };
 use autorac::util::qcheck::{qcheck, Gen};
 use autorac::{prop_assert, prop_assert_eq};
@@ -110,10 +110,118 @@ fn hot_replication_respects_the_budget() {
         let total: usize = cards.iter().sum();
         let stored: usize =
             (0..n_shards).map(|s| m.rows_of(s, &cards)).sum();
+        // budget arithmetic is exact now: rounded, not truncated
         prop_assert!(
-            stored <= total + (total as f64 * REPLICA_BUDGET) as usize,
+            stored <= total + (total as f64 * REPLICA_BUDGET).round() as usize,
             "replicas blow the budget: {stored} vs {total}"
         );
+        Ok(())
+    });
+}
+
+/// Pin the whole HotReplicated pass, not just its bound: mirror-simulate
+/// the documented first-fit-decreasing walk (heat order, skip tables
+/// that don't fit, keep going) and require the replicated set to match
+/// exactly — so the budget is spent on precisely the tables the
+/// documented algorithm picks, and a colder table is replicated only
+/// when every hotter unreplicated table genuinely did not fit.
+#[test]
+fn hot_replication_budget_is_exact_and_first_fit_by_heat() {
+    qcheck(40, |g| {
+        let cards = random_cards(g);
+        let alpha = g.f64(1.05, 1.5);
+        let n_shards = g.usize(2, 8);
+        let m =
+            ShardMap::build(&cards, alpha, n_shards, ShardPolicy::HotReplicated);
+        let total: usize = cards.iter().sum();
+        let budget = (total as f64 * REPLICA_BUDGET).round() as usize;
+        let mut remaining = budget;
+        let mut expect_replicated = vec![false; cards.len()];
+        for j in heat_order(&cards, alpha) {
+            let extra = cards[j] * (n_shards - 1);
+            if extra <= remaining {
+                remaining -= extra;
+                expect_replicated[j] = true;
+            }
+        }
+        let mut spent = 0usize;
+        for j in 0..cards.len() {
+            let replicated = m.owners(j).len() == n_shards;
+            prop_assert!(
+                replicated == expect_replicated[j],
+                "table {j} (card {}) diverges from the FFD walk",
+                cards[j]
+            );
+            // partial replication never happens: 1 owner or all
+            prop_assert!(
+                m.owners(j).len() == 1 || replicated,
+                "table {j} partially replicated"
+            );
+            if replicated {
+                spent += cards[j] * (n_shards - 1);
+            }
+        }
+        prop_assert!(spent <= budget, "spent {spent} > budget {budget}");
+        // heat_order really is sorted by descending head share
+        let order = heat_order(&cards, alpha);
+        prop_assert!(order
+            .windows(2)
+            .all(|w| 1.0 / harmonic(cards[w[0]], alpha)
+                >= 1.0 / harmonic(cards[w[1]], alpha)));
+        Ok(())
+    });
+}
+
+/// Cache-aware placement follows the SAME first-fit-decreasing walk
+/// with each table's replica cost discounted by its cached head rows
+/// (mirror-simulated); zero cached rows reproduces `build` exactly.
+/// (Note: "superset of the plain replicas" is deliberately NOT claimed —
+/// a discount can let a hot table that previously didn't fit consume
+/// budget a colder table was using.)
+#[test]
+fn cached_discount_follows_the_same_ffd_walk() {
+    qcheck(40, |g| {
+        let cards = random_cards(g);
+        let alpha = g.f64(1.05, 1.5);
+        let n_shards = g.usize(2, 6);
+        let plain =
+            ShardMap::build(&cards, alpha, n_shards, ShardPolicy::HotReplicated);
+        let zero = ShardMap::build_cached(
+            &cards,
+            alpha,
+            n_shards,
+            ShardPolicy::HotReplicated,
+            &[],
+        );
+        let cached: Vec<usize> =
+            cards.iter().map(|&c| g.usize(0, c.min(64))).collect();
+        let discounted = ShardMap::build_cached(
+            &cards,
+            alpha,
+            n_shards,
+            ShardPolicy::HotReplicated,
+            &cached,
+        );
+        let total: usize = cards.iter().sum();
+        let mut remaining = (total as f64 * REPLICA_BUDGET).round() as usize;
+        let mut expect = vec![false; cards.len()];
+        for j in heat_order(&cards, alpha) {
+            let extra = cards[j].saturating_sub(cached[j]) * (n_shards - 1);
+            if extra <= remaining {
+                remaining -= extra;
+                expect[j] = true;
+            }
+        }
+        for j in 0..cards.len() {
+            prop_assert!(
+                zero.owners(j) == plain.owners(j),
+                "no cached rows must reproduce build (table {j})"
+            );
+            prop_assert!(
+                (discounted.owners(j).len() == n_shards) == expect[j],
+                "table {j} diverges from the discounted FFD walk"
+            );
+        }
         Ok(())
     });
 }
@@ -141,7 +249,8 @@ fn local_fraction_is_a_fraction() {
 /// The headline differential: sharded gather == monolithic gather,
 /// bit-for-bit, for any placement, any observer shard, any field
 /// subset, and ids including out-of-range and negative values (both
-/// paths clamp identically).
+/// paths resolve them to row 0, the OOV row, and report matching
+/// `oob` counts).
 #[test]
 fn sharded_gather_is_element_identical_to_monolithic() {
     qcheck(25, |g| {
@@ -167,18 +276,28 @@ fn sharded_gather_is_element_identical_to_monolithic() {
                 .map(|&f| {
                     let c = p.cards[f as usize];
                     match g.usize(0, 9) {
-                        0 => -1,             // negative → clamps to last
-                        1 => i32::MAX,       // overflow → clamps to last
+                        0 => -1,             // negative → OOV row 0
+                        1 => i32::MAX,       // overflow → OOV row 0
                         _ => g.usize(0, 2 * c) as i32, // may exceed card
                     }
                 })
                 .collect();
+            let expect_oob = fields
+                .iter()
+                .zip(&ids)
+                .filter(|(&f, &id)| {
+                    id < 0 || id as usize >= p.cards[f as usize]
+                })
+                .count();
             let mut mono = Vec::new();
-            store.gather_fields(&fields, &ids, &mut mono);
+            let mono_oob = store.gather_fields(&fields, &ids, &mut mono);
             let local = g.usize(0, n_shards - 1);
             let mut shrd = Vec::new();
-            let (l, r) = sharded.gather_from(local, &fields, &ids, &mut shrd);
+            let (l, r, oob) =
+                sharded.gather_from(local, &fields, &ids, &mut shrd);
             prop_assert_eq!(l + r, fields.len());
+            prop_assert_eq!(mono_oob, expect_oob);
+            prop_assert_eq!(oob, expect_oob);
             prop_assert!(mono == shrd, "gather mismatch (local {local})");
         }
         Ok(())

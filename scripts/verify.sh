@@ -22,7 +22,7 @@ echo "== tier 1.5: property/differential suites under --release =="
 # The qcheck suites draw hundreds of randomized cases; running them
 # optimized both speeds CI and exercises the release float paths the
 # benches measure.
-cargo test -q --release --test sharding_prop --test sim_differential --test coordinator_e2e
+cargo test -q --release --test sharding_prop --test sim_differential --test coordinator_e2e --test hotcache_prop
 cargo test -q --release --lib mapping::cost
 
 echo "== wire suites under --release: lazy/tree differential + malformed-input =="
@@ -31,13 +31,17 @@ echo "== wire suites under --release: lazy/tree differential + malformed-input =
 # the server". Both are release-mode properties (optimized byte loops).
 cargo test -q --release --test json_lazy_prop --test wire_security
 
-echo "== serve-bench socket smoke: loopback TCP end to end =="
+echo "== serve-bench socket smoke: loopback TCP end to end, cache on =="
 # One CI-sized run through the real stack: TCP accept loop, lazy wire
-# parse, coordinator, response encoder, loadgen socket clients. Fail
-# closed on the report lines AND the JSON fields disappearing.
-serve_json=$(mktemp)
+# parse, coordinator, hot-row cache tier + batch coalescer, response
+# encoder, loadgen socket clients (with OOV sentinels injected so the
+# oob_ids counter is exercised). Fail closed on the report lines AND
+# the JSON fields disappearing. The report is kept at the repo root as
+# the serving paper-artifact snapshot.
+serve_json=BENCH_serving.json
 serve_out=$(cargo run --quiet --release --bin autorac -- serve-bench \
-    --listen 127.0.0.1:0 --quick --conns 4 --json "$serve_json")
+    --listen 127.0.0.1:0 --quick --conns 4 --cache-rows 256 \
+    --oov-frac 0.05 --json "$serve_json")
 printf '%s\n' "$serve_out"
 if ! printf '%s\n' "$serve_out" | grep -q "wire (4 conns)"; then
     echo "ERROR: serve-bench --listen no longer reports wire-level stats"
@@ -47,13 +51,19 @@ if ! printf '%s\n' "$serve_out" | grep -q "parse: tree"; then
     echo "ERROR: serve-bench --listen no longer runs the parse microbench"
     exit 1
 fi
-for field in '"transport": "socket"' '"wire_p50_us"' '"throughput_rps"' '"lazy_speedup"'; do
+# the hit-rate line only prints when cache lookups actually happened —
+# its absence means the cache tier silently fell out of the hot path
+if ! printf '%s\n' "$serve_out" | grep -q "cache: hit-rate"; then
+    echo "ERROR: serve-bench --cache-rows no longer reports the cache hit-rate"
+    exit 1
+fi
+for field in '"transport": "socket"' '"wire_p50_us"' '"throughput_rps"' \
+    '"lazy_speedup"' '"cache_hit_rate"' '"coalesced_rows"' '"oob_ids"'; do
     if ! grep -q "$field" "$serve_json"; then
         echo "ERROR: serve-bench socket JSON report lost $field"
         exit 1
     fi
 done
-rm -f "$serve_json"
 
 echo "== search determinism under --release (workers=8 vs serial) =="
 # Bit-identity of the parallel engine is a release-mode property too —
