@@ -16,11 +16,17 @@
 //!      the full tree parser over the deterministic request corpus,
 //!      with and without a realistic cold `ctx` payload — the
 //!      EXPERIMENTS.md §SF numbers.
+//!   5. failover drill: the worker-crash scenario (EXPERIMENTS.md §SH)
+//!      — one worker dies mid-run, survivors absorb its shard via
+//!      replica promotion; reports availability, post-crash
+//!      availability, and the balanced loss ledger.
 //!
 //! Run: `cargo bench --bench serving` (AUTORAC_BENCH_FAST=1 shrinks the
 //! request counts for smoke runs).
 
-use autorac::coordinator::loadgen::{self, Arrival, LoadGenConfig};
+use autorac::coordinator::loadgen::{
+    self, Arrival, CrashInjector, LoadGenConfig, Scenario, ScenarioSpec,
+};
 use autorac::coordinator::{
     AdmissionPolicy, BatcherConfig, Coordinator, CoordinatorConfig,
     MetricsSnapshot, MockEngine, Policy, ServingStore,
@@ -211,6 +217,107 @@ fn main() -> autorac::Result<()> {
 
     // -- 4. wire-parse microbench: lazy scanner vs tree parser -----------
     parse_bench(n.min(512))?;
+
+    // -- 5. failover drill: one worker dies mid-run ----------------------
+    failover_bench(n)?;
+    Ok(())
+}
+
+/// Worker-crash scenario: the same closed-loop stack as experiment 1,
+/// but worker 1's engine is armed to unwind after a few batches. The
+/// survivors absorb its shard (replica promotion), the dead worker's
+/// queue is booked `failed`, and the run must stay available — the
+/// EXPERIMENTS.md §SH drill at bench scale.
+fn failover_bench(n_requests: usize) -> autorac::Result<()> {
+    let prof = profile("criteo")?;
+    let map = ShardMap::build(
+        &prof.cards,
+        prof.zipf_alpha,
+        WORKERS,
+        ShardPolicy::HotReplicated,
+    );
+    let store = Arc::new(ShardedStore::random(&prof, D_EMB, SEED, map));
+    let (nd, nf) = (prof.n_dense, prof.n_sparse());
+    let mut spec = ScenarioSpec::new(Scenario::WorkerCrash);
+    spec.crash_worker = 1;
+    // fuse roughly a quarter into the victim's expected batch stream
+    spec.crash_after_batches =
+        Some((n_requests / (WORKERS * BATCH) / 4).max(1));
+    let inj = Arc::new(
+        CrashInjector::new(&spec).expect("worker-crash spec arms an injector"),
+    );
+    let coord = Coordinator::start_with(
+        CoordinatorConfig {
+            n_workers: WORKERS,
+            policy: Policy::ShardAffinity,
+            admission: AdmissionPolicy::RejectNew,
+            batcher: BatcherConfig {
+                max_batch: BATCH,
+                max_wait: Duration::ZERO,
+            },
+            ..Default::default()
+        },
+        ServingStore::Sharded(store),
+        move |i| {
+            let mut e = MockEngine::new(BATCH, nd, nf, D_EMB);
+            e.delay = EXEC;
+            Ok(inj.arm(i, Box::new(e)))
+        },
+    )?;
+    let out = loadgen::run_scenario(
+        &coord,
+        &prof,
+        &LoadGenConfig {
+            n_requests,
+            arrival: Arrival::ClosedLoop { concurrency: 64 },
+            seed: SEED,
+            coverage: COVERAGE,
+            oov_frac: 0.0,
+        },
+        &spec,
+    )?;
+    // the guard books losses before reply senders drop, but give the
+    // dying thread a bounded grace period to finish its drain
+    let t0 = std::time::Instant::now();
+    let snap = loop {
+        let s = coord.metrics.snapshot();
+        if s.ledger_ok() || t0.elapsed() > Duration::from_secs(2) {
+            break s;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    };
+    coord.shutdown();
+    let accepted = snap.requests - snap.rejected;
+    let avail = if accepted == 0 {
+        1.0
+    } else {
+        snap.responses as f64 / accepted as f64
+    };
+    let post_avail = if out.post_crash_sent == 0 {
+        avail
+    } else {
+        out.post_crash_completed as f64 / out.post_crash_sent as f64
+    };
+    println!(
+        "\nfailover drill (worker-crash scenario, worker {} armed, {} requests):",
+        spec.crash_worker, n_requests
+    );
+    println!(
+        "  availability {:.2}% | post-crash {:.2}% ({}/{}) | failed {} | \
+         live workers {}/{} | ledger {}",
+        avail * 100.0,
+        post_avail * 100.0,
+        out.post_crash_completed,
+        out.post_crash_sent,
+        snap.failed,
+        snap.live_workers(),
+        WORKERS,
+        if snap.ledger_ok() { "balanced" } else { "UNBALANCED" },
+    );
+    println!(
+        "(the dead worker's queue is booked `failed`, survivors absorb its \
+         shard via replica promotion; methodology in EXPERIMENTS.md §SH)"
+    );
     Ok(())
 }
 

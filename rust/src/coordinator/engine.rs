@@ -300,10 +300,127 @@ impl InferenceEngine for MockEngine {
     }
 }
 
+/// Failure-injection wrapper: serves exactly like `inner` until its
+/// trigger fires, then unwinds the worker thread — the same way a real
+/// engine fault (device reset, OOM kill, watchdog abort) presents to
+/// the coordinator: a panic mid-`infer`, not a polite `Err`. The
+/// `worker-crash` scenario (`loadgen::CrashInjector`) and the failover
+/// tests build on it.
+///
+/// The unwind uses [`std::panic::resume_unwind`] rather than `panic!`:
+/// it raises the same unwinding the guards must survive, but skips the
+/// global panic hook, so injected crashes do not spray backtraces over
+/// test and bench output.
+pub struct CrashAfter {
+    inner: Box<dyn InferenceEngine>,
+    /// crash when this many batches have been served (deterministic)
+    after_batches: Option<usize>,
+    /// crash at the first batch past this instant (wall-clock)
+    deadline: Option<std::time::Instant>,
+    batches: usize,
+}
+
+impl CrashAfter {
+    /// Serve exactly `n` batches, then crash on the next one (`n = 0`
+    /// crashes on the first call).
+    pub fn after_batches(inner: Box<dyn InferenceEngine>, n: usize) -> CrashAfter {
+        CrashAfter {
+            inner,
+            after_batches: Some(n),
+            deadline: None,
+            batches: 0,
+        }
+    }
+
+    /// Serve normally until `deadline`, then crash on the next batch.
+    pub fn at_deadline(
+        inner: Box<dyn InferenceEngine>,
+        deadline: std::time::Instant,
+    ) -> CrashAfter {
+        CrashAfter {
+            inner,
+            after_batches: None,
+            deadline: Some(deadline),
+            batches: 0,
+        }
+    }
+
+    fn check_trigger(&self) {
+        let tripped = self
+            .after_batches
+            .is_some_and(|n| self.batches >= n)
+            || self.deadline.is_some_and(|d| std::time::Instant::now() >= d);
+        if tripped {
+            std::panic::resume_unwind(Box::new(
+                "injected worker crash".to_string(),
+            ));
+        }
+    }
+}
+
+impl InferenceEngine for CrashAfter {
+    fn infer_batch(
+        &mut self,
+        dense: &[f32],
+        sparse: &[f32],
+        batch: usize,
+    ) -> crate::Result<Vec<f32>> {
+        self.check_trigger();
+        self.batches += 1;
+        self.inner.infer_batch(dense, sparse, batch)
+    }
+
+    fn infer_batch_into(
+        &mut self,
+        dense: &[f32],
+        sparse: &[f32],
+        batch: usize,
+        out: &mut Vec<f32>,
+    ) -> crate::Result<()> {
+        self.check_trigger();
+        self.batches += 1;
+        self.inner.infer_batch_into(dense, sparse, batch, out)
+    }
+
+    fn compiled_batch(&self) -> usize {
+        self.inner.compiled_batch()
+    }
+
+    fn n_dense(&self) -> usize {
+        self.inner.n_dense()
+    }
+
+    fn n_sparse(&self) -> usize {
+        self.inner.n_sparse()
+    }
+
+    fn d_emb(&self) -> usize {
+        self.inner.d_emb()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::nas::genome::autorac_best;
+
+    #[test]
+    fn crash_after_serves_then_unwinds() {
+        let inner = Box::new(MockEngine::new(8, 2, 3, 4));
+        let mut e = CrashAfter::after_batches(inner, 2);
+        let dense = vec![0.5f32; 2];
+        let sparse = vec![0.1f32; 3 * 4];
+        // two clean batches, bit-identical to the bare mock
+        let mut bare = MockEngine::new(8, 2, 3, 4);
+        let want = bare.infer_batch(&dense, &sparse, 1).unwrap();
+        assert_eq!(e.infer_batch(&dense, &sparse, 1).unwrap(), want);
+        assert_eq!(e.infer_batch(&dense, &sparse, 1).unwrap(), want);
+        // the third unwinds
+        let crashed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || e.infer_batch(&dense, &sparse, 1),
+        ));
+        assert!(crashed.is_err(), "trigger must unwind, not return");
+    }
 
     #[test]
     fn pim_engine_serves_valid_probabilities() {

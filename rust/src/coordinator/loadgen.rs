@@ -23,6 +23,8 @@
 //! byte-identical schedule no matter how it is delivered, pinned by the
 //! schedule-determinism regression in `rust/tests/coordinator_e2e.rs`.
 
+use super::engine::{CrashAfter, InferenceEngine};
+use super::metrics::Metrics;
 use super::net::{NetClient, WireResponse};
 use super::server::{Admission, Coordinator, Request};
 use crate::data::{Generator, Profile};
@@ -204,6 +206,269 @@ pub fn build_schedule(
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// Failure-scenario matrix (S31/S32)
+// ---------------------------------------------------------------------------
+
+/// Named traffic/failure shapes for `serve-bench --scenario` (§SH of
+/// EXPERIMENTS.md). Every scenario is a deterministic transform of the
+/// base schedule plus — for [`Scenario::WorkerCrash`] — a fault armed
+/// in one worker's engine; the load generator itself never randomises
+/// beyond the seeded base stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// the base schedule, untransformed
+    Steady,
+    /// middle third of the run arrives `surge`× faster (open loop)
+    FlashCrowd,
+    /// middle third hammers the first `storm_rows` rows of every table
+    HotKeyStorm,
+    /// steady offered load while `crash_worker` dies mid-run
+    WorkerCrash,
+    /// sinusoidal rate swing across the run (open loop)
+    Diurnal,
+}
+
+impl Scenario {
+    pub fn parse(s: &str) -> crate::Result<Scenario> {
+        Ok(match s {
+            "steady" => Scenario::Steady,
+            "flash-crowd" => Scenario::FlashCrowd,
+            "hot-key-storm" => Scenario::HotKeyStorm,
+            "worker-crash" => Scenario::WorkerCrash,
+            "diurnal" => Scenario::Diurnal,
+            other => crate::bail!(
+                "unknown scenario {other:?} \
+                 (steady|flash-crowd|hot-key-storm|worker-crash|diurnal)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Steady => "steady",
+            Scenario::FlashCrowd => "flash-crowd",
+            Scenario::HotKeyStorm => "hot-key-storm",
+            Scenario::WorkerCrash => "worker-crash",
+            Scenario::Diurnal => "diurnal",
+        }
+    }
+}
+
+/// Tunables for one scenario run. [`ScenarioSpec::new`] carries the
+/// defaults the CLI exposes; every field is plain data so a spec clones
+/// cheaply into engine-factory closures.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub scenario: Scenario,
+    /// flash-crowd rate multiplier over the middle third
+    pub surge: f64,
+    /// hot-key-storm: ids collapse to `id % storm_rows.min(card)`
+    pub storm_rows: usize,
+    /// worker-crash: which worker dies
+    pub crash_worker: usize,
+    /// worker-crash: wall-clock fuse, used when `crash_after_batches`
+    /// is `None`
+    pub crash_after: Duration,
+    /// worker-crash: deterministic fuse — die after serving this many
+    /// batches. Wins over the wall-clock fuse; what the tests and the
+    /// verify smoke use, since a quick run can outrace any deadline.
+    pub crash_after_batches: Option<usize>,
+}
+
+impl ScenarioSpec {
+    pub fn new(scenario: Scenario) -> ScenarioSpec {
+        ScenarioSpec {
+            scenario,
+            surge: 8.0,
+            storm_rows: 4,
+            crash_worker: 1,
+            crash_after: Duration::from_millis(60),
+            crash_after_batches: None,
+        }
+    }
+}
+
+/// Rewrite open-loop send times by transforming per-request gaps and
+/// re-accumulating — times stay monotone whatever `f` returns. Gaps are
+/// integer-valued nanoseconds, so the identity transform is bit-exact.
+fn reshape_gaps(sched: &mut [ScheduledRequest], f: impl Fn(usize, f64) -> f64) {
+    let mut prev = 0u64;
+    let mut acc = 0f64;
+    for (k, sr) in sched.iter_mut().enumerate() {
+        let gap = sr.at_ns.saturating_sub(prev) as f64;
+        prev = sr.at_ns;
+        acc += f(k, gap).max(0.0);
+        sr.at_ns = acc as u64;
+    }
+}
+
+/// The base schedule with the scenario's transform applied.
+/// [`Scenario::Steady`] and [`Scenario::WorkerCrash`] stay bit-identical
+/// to [`build_schedule`] — a crash perturbs the SERVER, never the
+/// offered load — pinned by tests below.
+pub fn build_scenario_schedule(
+    profile: &Profile,
+    cfg: &LoadGenConfig,
+    spec: &ScenarioSpec,
+) -> crate::Result<Vec<ScheduledRequest>> {
+    let mut sched = build_schedule(profile, cfg)?;
+    let n = sched.len();
+    let (a, b) = (n / 3, 2 * n / 3);
+    match spec.scenario {
+        Scenario::Steady | Scenario::WorkerCrash => {}
+        Scenario::FlashCrowd => {
+            let surge = spec.surge.max(1.0);
+            reshape_gaps(&mut sched, |k, g| {
+                if (a..b).contains(&k) {
+                    g / surge
+                } else {
+                    g
+                }
+            });
+        }
+        Scenario::Diurnal => {
+            let nf = n.max(1) as f64;
+            reshape_gaps(&mut sched, |k, g| {
+                let phase = 2.0 * std::f64::consts::PI * k as f64 / nf;
+                g / (1.0 + 0.75 * phase.sin())
+            });
+        }
+        Scenario::HotKeyStorm => {
+            for sr in &mut sched[a..b] {
+                for (f, id) in sr.fields.iter().zip(sr.ids.iter_mut()) {
+                    // negative ids are the OOV sentinel — leave them
+                    if *id >= 0 {
+                        let card = profile.cards[*f as usize];
+                        let rows = spec.storm_rows.clamp(1, card.max(1));
+                        *id %= rows as i32;
+                    }
+                }
+            }
+        }
+    }
+    Ok(sched)
+}
+
+/// Arms one worker's engine with a [`CrashAfter`] fuse; every other
+/// worker's engine passes through untouched. Construct once per run —
+/// the wall-clock deadline anchors at injector construction (≈ bench
+/// start), not at each worker's own spawn time.
+pub struct CrashInjector {
+    worker: usize,
+    after_batches: Option<usize>,
+    deadline: Instant,
+}
+
+impl CrashInjector {
+    /// `None` for scenarios without a fault.
+    pub fn new(spec: &ScenarioSpec) -> Option<CrashInjector> {
+        if spec.scenario != Scenario::WorkerCrash {
+            return None;
+        }
+        Some(CrashInjector {
+            worker: spec.crash_worker,
+            after_batches: spec.crash_after_batches,
+            deadline: Instant::now() + spec.crash_after,
+        })
+    }
+
+    /// Wrap worker `i`'s engine — identity for every worker but the
+    /// victim. Call from inside the coordinator's `make_engine` factory.
+    pub fn arm(
+        &self,
+        i: usize,
+        engine: Box<dyn InferenceEngine>,
+    ) -> Box<dyn InferenceEngine> {
+        if i != self.worker {
+            return engine;
+        }
+        match self.after_batches {
+            Some(nb) => Box::new(CrashAfter::after_batches(engine, nb)),
+            None => Box::new(CrashAfter::at_deadline(engine, self.deadline)),
+        }
+    }
+}
+
+/// Splits a run's accepts/completions into pre- and post-crash
+/// populations.
+///
+/// The crash is detected *from the ledger*: the first accept-time poll
+/// where [`Metrics::failed_count`] has moved past its run-start
+/// baseline marks every later accept as post-crash, and once tripped it
+/// stays tripped. That works for both fuse kinds (deadline and
+/// batch-count) without the probe knowing the trigger. Requests
+/// accepted BEFORE the trip but answered after it count toward neither
+/// side — they were offered to a fleet believed healthy.
+pub struct ScenarioProbe {
+    failed_at_start: u64,
+    tripped: bool,
+    /// schedule index -> accepted after the crash was observed
+    post: Vec<bool>,
+    pub post_crash_sent: usize,
+    pub post_crash_completed: usize,
+}
+
+impl ScenarioProbe {
+    pub fn new(metrics: &Metrics, n: usize) -> ScenarioProbe {
+        ScenarioProbe {
+            failed_at_start: metrics.failed_count(),
+            tripped: false,
+            post: vec![false; n],
+            post_crash_sent: 0,
+            post_crash_completed: 0,
+        }
+    }
+
+    fn on_accepted(&mut self, k: u64, metrics: &Metrics) {
+        if !self.tripped && metrics.failed_count() > self.failed_at_start {
+            self.tripped = true;
+        }
+        if self.tripped {
+            if let Some(p) = self.post.get_mut(k as usize) {
+                if !*p {
+                    *p = true;
+                    self.post_crash_sent += 1;
+                }
+            }
+        }
+    }
+
+    fn on_response(&mut self, id: u64) {
+        if self.post.get(id as usize).copied().unwrap_or(false) {
+            self.post_crash_completed += 1;
+        }
+    }
+}
+
+/// A [`run_scenario`] result: the plain report plus the post-crash
+/// availability split (both zero when no fault fired).
+#[derive(Clone, Debug, Default)]
+pub struct ScenarioOutcome {
+    pub report: LoadReport,
+    pub post_crash_sent: usize,
+    pub post_crash_completed: usize,
+}
+
+/// Drive one full scenario in-process: shaped schedule, probed replay.
+/// Fault injection happens at coordinator construction (see
+/// [`CrashInjector::arm`]); this function only shapes and measures.
+pub fn run_scenario(
+    coord: &Coordinator,
+    profile: &Profile,
+    cfg: &LoadGenConfig,
+    spec: &ScenarioSpec,
+) -> crate::Result<ScenarioOutcome> {
+    let schedule = build_scenario_schedule(profile, cfg, spec)?;
+    let mut probe = ScenarioProbe::new(&coord.metrics, schedule.len());
+    let report = run_schedule_probed(coord, cfg, schedule, Some(&mut probe))?;
+    Ok(ScenarioOutcome {
+        report,
+        post_crash_sent: probe.post_crash_sent,
+        post_crash_completed: probe.post_crash_completed,
+    })
+}
+
 /// The exact request lines a socket run sends, for parse benchmarking
 /// and differential tests. `with_ctx` appends a deterministic cold
 /// `ctx` payload (session hex, AB labels, timestamp, user agent) that
@@ -274,6 +539,17 @@ pub fn run_schedule(
     cfg: &LoadGenConfig,
     schedule: Vec<ScheduledRequest>,
 ) -> crate::Result<LoadReport> {
+    run_schedule_probed(coord, cfg, schedule, None)
+}
+
+/// [`run_schedule`] with an optional [`ScenarioProbe`] observing every
+/// accept and completion (the hooks cost nothing when `None`).
+fn run_schedule_probed(
+    coord: &Coordinator,
+    cfg: &LoadGenConfig,
+    schedule: Vec<ScheduledRequest>,
+    mut probe: Option<&mut ScenarioProbe>,
+) -> crate::Result<LoadReport> {
     let (tx, rx) = mpsc::channel();
     let mut rep = LoadReport::default();
 
@@ -283,13 +559,24 @@ pub fn run_schedule(
             for sr in schedule {
                 wait_until(t0, sr.at_ns);
                 rep.sent += 1;
+                let k = sr.k;
                 match coord.submit(sr.into_request(&tx))? {
-                    Admission::Enqueued(_) => rep.accepted += 1,
+                    Admission::Enqueued(_) => {
+                        rep.accepted += 1;
+                        if let Some(p) = probe.as_deref_mut() {
+                            p.on_accepted(k, &coord.metrics);
+                        }
+                    }
                     Admission::Rejected => rep.rejected += 1,
                 }
             }
             drop(tx);
-            rep.completed = rx.iter().count();
+            for r in rx.iter() {
+                rep.completed += 1;
+                if let Some(p) = probe.as_deref_mut() {
+                    p.on_response(r.id);
+                }
+            }
             rep.lost = rep.accepted - rep.completed;
         }
         Arrival::ClosedLoop { concurrency } => {
@@ -311,17 +598,24 @@ pub fn run_schedule(
             let start = coord.metrics.snapshot();
             let mut forgiven = start.shed + start.failed;
             while rep.sent < n || outstanding > 0 {
-                for _ in rx.try_iter() {
+                for r in rx.try_iter() {
                     rep.completed += 1;
                     outstanding = outstanding.saturating_sub(1);
+                    if let Some(p) = probe.as_deref_mut() {
+                        p.on_response(r.id);
+                    }
                 }
                 while rep.sent < n && outstanding < window {
                     let sr = it.next().expect("schedule holds n entries");
                     rep.sent += 1;
+                    let k = sr.k;
                     match coord.submit(sr.into_request(&tx))? {
                         Admission::Enqueued(_) => {
                             rep.accepted += 1;
                             outstanding += 1;
+                            if let Some(p) = probe.as_deref_mut() {
+                                p.on_accepted(k, &coord.metrics);
+                            }
                         }
                         Admission::Rejected => rep.rejected += 1,
                     }
@@ -330,9 +624,12 @@ pub fn run_schedule(
                     continue; // whole window rejected; refill
                 }
                 match rx.recv_timeout(Duration::from_millis(300)) {
-                    Ok(_) => {
+                    Ok(r) => {
                         rep.completed += 1;
                         outstanding -= 1;
+                        if let Some(p) = probe.as_deref_mut() {
+                            p.on_response(r.id);
+                        }
                     }
                     Err(_) => {
                         let snap = coord.metrics.snapshot();
@@ -348,7 +645,12 @@ pub fn run_schedule(
             // Every accepted request still holds a reply sender until a
             // worker answers or drops it, so this drain terminates and
             // catches any straggler that raced the ghost accounting.
-            rep.completed += rx.iter().count();
+            for r in rx.iter() {
+                rep.completed += 1;
+                if let Some(p) = probe.as_deref_mut() {
+                    p.on_response(r.id);
+                }
+            }
             rep.lost = rep.accepted - rep.completed;
         }
     }
@@ -707,5 +1009,193 @@ mod tests {
                 assert_eq!(got.unwrap(), sr.to_wire());
             }
         }
+    }
+
+    #[test]
+    fn scenario_parse_round_trips() {
+        for s in [
+            Scenario::Steady,
+            Scenario::FlashCrowd,
+            Scenario::HotKeyStorm,
+            Scenario::WorkerCrash,
+            Scenario::Diurnal,
+        ] {
+            assert_eq!(Scenario::parse(s.name()).unwrap(), s);
+        }
+        assert!(Scenario::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn steady_and_worker_crash_schedules_match_base() {
+        let p = profile("kdd").unwrap();
+        let cfg = LoadGenConfig {
+            n_requests: 60,
+            arrival: Arrival::OpenLoop { rps: 20_000.0 },
+            seed: 23,
+            coverage: 0.8,
+            oov_frac: 0.1,
+        };
+        let base = build_schedule(&p, &cfg).unwrap();
+        for sc in [Scenario::Steady, Scenario::WorkerCrash] {
+            let got =
+                build_scenario_schedule(&p, &cfg, &ScenarioSpec::new(sc))
+                    .unwrap();
+            assert_eq!(got, base, "{} must not reshape the load", sc.name());
+        }
+    }
+
+    #[test]
+    fn flash_crowd_compresses_middle_third_gaps() {
+        let p = profile("kdd").unwrap();
+        let cfg = LoadGenConfig {
+            n_requests: 90,
+            arrival: Arrival::OpenLoop { rps: 10_000.0 },
+            seed: 29,
+            coverage: 1.0,
+            oov_frac: 0.0,
+        };
+        let base = build_schedule(&p, &cfg).unwrap();
+        let spec = ScenarioSpec::new(Scenario::FlashCrowd);
+        let surged = build_scenario_schedule(&p, &cfg, &spec).unwrap();
+        let (n, a, b) = (base.len(), base.len() / 3, 2 * base.len() / 3);
+        assert!(surged.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
+        // content untouched — only send times move
+        for (s, o) in surged.iter().zip(&base) {
+            assert_eq!((&s.dense, &s.fields, &s.ids), (&o.dense, &o.fields, &o.ids));
+        }
+        // first third untouched (integer gaps re-accumulate exactly)
+        for k in 0..a {
+            assert_eq!(surged[k].at_ns, base[k].at_ns);
+        }
+        // middle-third span shrinks by ~surge (±1ns rounding per gap)
+        let span = |s: &[ScheduledRequest]| s[b - 1].at_ns - s[a - 1].at_ns;
+        assert!(
+            span(&surged) <= span(&base) / spec.surge as u64 + (b - a) as u64,
+            "middle span {} vs base {}",
+            span(&surged),
+            span(&base)
+        );
+        // whole run finishes earlier
+        assert!(surged[n - 1].at_ns < base[n - 1].at_ns);
+    }
+
+    #[test]
+    fn hot_key_storm_remaps_only_the_middle_third() {
+        let p = profile("kdd").unwrap();
+        let cfg = LoadGenConfig {
+            n_requests: 60,
+            arrival: Arrival::ClosedLoop { concurrency: 8 },
+            seed: 31,
+            coverage: 1.0,
+            oov_frac: 0.2,
+        };
+        let base = build_schedule(&p, &cfg).unwrap();
+        let spec = ScenarioSpec::new(Scenario::HotKeyStorm);
+        let storm = build_scenario_schedule(&p, &cfg, &spec).unwrap();
+        let (a, b) = (base.len() / 3, 2 * base.len() / 3);
+        for (k, (s, o)) in storm.iter().zip(&base).enumerate() {
+            assert_eq!(s.fields, o.fields);
+            assert_eq!(s.dense, o.dense);
+            assert_eq!(s.at_ns, o.at_ns);
+            if !(a..b).contains(&k) {
+                assert_eq!(s.ids, o.ids, "outside the storm ids are untouched");
+                continue;
+            }
+            for (&f, (&sid, &oid)) in
+                s.fields.iter().zip(s.ids.iter().zip(&o.ids))
+            {
+                if oid < 0 {
+                    assert_eq!(sid, oid, "OOV sentinels survive the remap");
+                } else {
+                    let rows = spec.storm_rows.min(p.cards[f as usize]);
+                    assert!(
+                        (0..rows as i32).contains(&sid),
+                        "storm id {sid} outside [0,{rows})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_schedule_is_deterministic_and_monotone() {
+        let p = profile("kdd").unwrap();
+        let cfg = LoadGenConfig {
+            n_requests: 80,
+            arrival: Arrival::OpenLoop { rps: 10_000.0 },
+            seed: 37,
+            coverage: 1.0,
+            oov_frac: 0.0,
+        };
+        let spec = ScenarioSpec::new(Scenario::Diurnal);
+        let x = build_scenario_schedule(&p, &cfg, &spec).unwrap();
+        let y = build_scenario_schedule(&p, &cfg, &spec).unwrap();
+        assert_eq!(x, y);
+        assert!(x.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
+        let base = build_schedule(&p, &cfg).unwrap();
+        assert_ne!(
+            x.iter().map(|sr| sr.at_ns).collect::<Vec<_>>(),
+            base.iter().map(|sr| sr.at_ns).collect::<Vec<_>>(),
+            "diurnal must actually move the send times"
+        );
+    }
+
+    #[test]
+    fn run_scenario_survives_an_armed_worker_crash() {
+        let mut spec = ScenarioSpec::new(Scenario::WorkerCrash);
+        spec.crash_worker = 0;
+        spec.crash_after_batches = Some(1);
+        let inj = Arc::new(CrashInjector::new(&spec).expect("crash scenario"));
+        assert!(
+            CrashInjector::new(&ScenarioSpec::new(Scenario::Steady)).is_none(),
+            "steady arms nothing"
+        );
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                n_workers: 2,
+                ..Default::default()
+            },
+            Arc::new(EmbeddingStore::random(&profile("kdd").unwrap(), 8, 3)),
+            move |i| {
+                let e: Box<dyn InferenceEngine> =
+                    Box::new(MockEngine::new(16, 3, 10, 8));
+                Ok(inj.arm(i, e))
+            },
+        )
+        .unwrap();
+        let cfg = LoadGenConfig {
+            n_requests: 200,
+            arrival: Arrival::ClosedLoop { concurrency: 16 },
+            seed: 41,
+            coverage: 1.0,
+            oov_frac: 0.0,
+        };
+        let out =
+            run_scenario(&c, &profile("kdd").unwrap(), &cfg, &spec).unwrap();
+        assert_eq!(out.report.sent, 200);
+        assert_eq!(out.report.completed, out.report.accepted - out.report.lost);
+        assert!(out.post_crash_completed <= out.post_crash_sent);
+        // the ledger must balance once the dead worker's guard has
+        // booked its losses — poll briefly, then pin the invariants
+        let t0 = Instant::now();
+        loop {
+            let snap = c.metrics.snapshot();
+            if snap.failed > 0 && snap.ledger_ok() {
+                assert_eq!(snap.live_workers(), 1);
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "ledger never balanced: req {} resp {} rej {} shed {} failed {}",
+                snap.requests,
+                snap.responses,
+                snap.rejected,
+                snap.shed,
+                snap.failed
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(c.n_live(), 1);
+        c.shutdown();
     }
 }

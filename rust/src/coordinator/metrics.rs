@@ -7,7 +7,7 @@
 
 use crate::embeddings::hotcache::GatherStats;
 use crate::util::stats::LogHistogram;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -46,6 +46,9 @@ pub struct Metrics {
     started: Mutex<Instant>,
     /// per-worker queue-depth gauges (registered by the coordinator)
     depths: Mutex<Vec<Arc<AtomicUsize>>>,
+    /// per-worker liveness flags (flipped by the router or the worker's
+    /// lifecycle guard when a worker dies)
+    alive: Mutex<Vec<Arc<AtomicBool>>>,
 }
 
 #[derive(Clone, Debug)]
@@ -80,6 +83,8 @@ pub struct MetricsSnapshot {
     pub elapsed_s: f64,
     /// instantaneous queue depth per worker at snapshot time
     pub worker_depths: Vec<usize>,
+    /// per-worker liveness at snapshot time (parallel to `worker_depths`)
+    pub workers_alive: Vec<bool>,
 }
 
 impl MetricsSnapshot {
@@ -105,6 +110,18 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Workers still accepting requests at snapshot time.
+    pub fn live_workers(&self) -> usize {
+        self.workers_alive.iter().filter(|&&a| a).count()
+    }
+
+    /// The conservation ledger, as a checkable predicate: every request
+    /// is answered, rejected, shed, or failed — nothing vanishes, even
+    /// across a worker crash.
+    pub fn ledger_ok(&self) -> bool {
+        self.requests == self.responses + self.rejected + self.shed + self.failed
+    }
+
     /// Fraction of arriving requests turned away or shed.
     pub fn shed_rate(&self) -> f64 {
         if self.requests == 0 {
@@ -127,6 +144,7 @@ impl Metrics {
             inner: Mutex::new(Inner::default()),
             started: Mutex::new(Instant::now()),
             depths: Mutex::new(Vec::new()),
+            alive: Mutex::new(Vec::new()),
         }
     }
 
@@ -141,6 +159,19 @@ impl Metrics {
     /// per worker at coordinator startup, in worker order.
     pub fn register_worker_depth(&self, depth: Arc<AtomicUsize>) {
         self.depths.lock().unwrap().push(depth);
+    }
+
+    /// Expose worker `i`'s liveness flag in snapshots. Called once per
+    /// worker at coordinator startup, in worker order.
+    pub fn register_worker_alive(&self, alive: Arc<AtomicBool>) {
+        self.alive.lock().unwrap().push(alive);
+    }
+
+    /// Lightweight read of the failed counter (one lock, no histogram
+    /// work) — the scenario probe polls this per accepted request to
+    /// classify sends as pre- or post-crash.
+    pub fn failed_count(&self) -> u64 {
+        self.inner.lock().unwrap().failed
     }
 
     pub fn on_request(&self) {
@@ -201,6 +232,13 @@ impl Metrics {
             .iter()
             .map(|d| d.load(Ordering::Relaxed))
             .collect();
+        let workers_alive = self
+            .alive
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|a| a.load(Ordering::Acquire))
+            .collect();
         MetricsSnapshot {
             requests: m.requests,
             responses: m.responses,
@@ -227,6 +265,7 @@ impl Metrics {
             exec_p50_us: m.exec.quantile_ns(0.5) as f64 / 1e3,
             elapsed_s: elapsed,
             worker_depths,
+            workers_alive,
         }
     }
 }
@@ -314,5 +353,29 @@ mod tests {
         m.register_worker_depth(d1.clone());
         d1.store(7, Ordering::Relaxed);
         assert_eq!(m.snapshot().worker_depths, vec![0, 7]);
+    }
+
+    #[test]
+    fn liveness_flags_and_ledger_report() {
+        let m = Metrics::new();
+        let a0 = Arc::new(AtomicBool::new(true));
+        let a1 = Arc::new(AtomicBool::new(true));
+        m.register_worker_alive(a0.clone());
+        m.register_worker_alive(a1.clone());
+        for _ in 0..5 {
+            m.on_request();
+        }
+        m.on_response(1_000);
+        m.on_rejected();
+        m.on_shed(1);
+        m.on_failed(2);
+        a1.store(false, Ordering::Release);
+        let s = m.snapshot();
+        assert_eq!(s.workers_alive, vec![true, false]);
+        assert_eq!(s.live_workers(), 1);
+        assert!(s.ledger_ok(), "1 + 1 + 1 + 2 must balance 5");
+        assert_eq!(m.failed_count(), 2);
+        m.on_request();
+        assert!(!m.snapshot().ledger_ok());
     }
 }

@@ -26,11 +26,14 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{BatcherConfig, collect_batch};
-pub use engine::{InferenceEngine, MockEngine, PimEngine, PjrtEngine};
-pub use loadgen::{Arrival, LoadGenConfig, LoadReport, ScheduledRequest, WireStats};
+pub use engine::{CrashAfter, InferenceEngine, MockEngine, PimEngine, PjrtEngine};
+pub use loadgen::{
+    run_scenario, Arrival, CrashInjector, LoadGenConfig, LoadReport, Scenario,
+    ScenarioOutcome, ScenarioSpec, ScheduledRequest, WireStats,
+};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use net::{NetClient, NetServer, NetServerConfig, WireResponse};
-pub use router::{Policy, Router};
+pub use router::{Policy, Router, WorkerSlot};
 pub use server::{
     Admission, AdmissionPolicy, Coordinator, CoordinatorConfig, Request,
     Response, ServingStore,

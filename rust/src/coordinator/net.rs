@@ -22,7 +22,10 @@
 //! count a response *before* attempting the reply send, and a frame
 //! that never parsed never becomes a request. A client disconnecting
 //! mid-flight therefore costs nothing but a failed write on a closed
-//! reply channel.
+//! reply channel. Worker failure is equally invisible at this layer:
+//! the router reroutes around a dead worker (DESIGN.md §7.11), its
+//! queued requests are booked `failed` and their reply senders closed,
+//! so the pump keeps draining and the connection stays up.
 
 use super::server::{Admission, Coordinator, Request, Response};
 use crate::coordinator::metrics::MetricsSnapshot;
@@ -369,8 +372,11 @@ fn handle_conn(
         match coord.submit(req) {
             Ok(Admission::Enqueued(_)) => {}
             Ok(Admission::Rejected) => send_error(&out, Some(id), "rejected"),
+            // `submit` errs only when NO live worker remains (shutdown
+            // or total fleet loss) — a single worker crash is rerouted
+            // inside the coordinator and never surfaces here.
             Err(_) => {
-                send_error(&out, Some(id), "server shutting down");
+                send_error(&out, Some(id), "no live worker");
                 break;
             }
         }

@@ -8,11 +8,19 @@
 //! Conservation — every accepted request lands on exactly one queue —
 //! is property-tested, and queues are bounded: `route_bounded` rejects
 //! a request when the chosen queue is at capacity (admission control).
+//!
+//! Failure model (S31): each worker's sender lives in a [`WorkerSlot`]
+//! shared with that worker's lifecycle guard. A send that finds the
+//! queue closed marks the worker dead and the route loop re-picks among
+//! the remaining live workers — a single dead worker never bubbles a
+//! false "all queues closed" error out of `Coordinator::submit`, and
+//! every picking policy skips non-alive workers (a dead worker's frozen
+//! depth gauge would otherwise make it look attractively idle forever).
 
 use crate::embeddings::ShardMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
@@ -39,16 +47,66 @@ impl Policy {
 
 /// Why a request was not enqueued.
 pub enum RouteRejection<T> {
-    /// every worker queue is closed (shutdown) — request returned
+    /// no live worker remains (all dead or shut down) — request returned
     Closed(T),
     /// the chosen queue is at capacity — request returned (admission
     /// control; the caller decides whether to count it as rejected)
     Overloaded(T),
 }
 
+/// One worker's routing endpoint: its queue sender, depth gauge, and
+/// liveness flag, shared between the router (which sends) and the
+/// worker's lifecycle guard (which closes on death or shutdown).
+///
+/// The sender lives behind a mutex and every send happens UNDER that
+/// lock; [`WorkerSlot::close`] takes the sender under the same lock.
+/// Because the slot holds the ONLY sender for the queue, after `close`
+/// returns no request can ever land on it again — the dying worker's
+/// drain of its receiver is therefore complete and deterministic, with
+/// no check-then-send window for a racing submitter to lose a request
+/// into (the ledger-conservation property under crashes hinges on this).
+pub struct WorkerSlot<T> {
+    tx: Mutex<Option<Sender<T>>>,
+    depth: Arc<AtomicUsize>,
+    alive: Arc<AtomicBool>,
+}
+
+impl<T> WorkerSlot<T> {
+    fn new(tx: Sender<T>) -> WorkerSlot<T> {
+        WorkerSlot {
+            tx: Mutex::new(Some(tx)),
+            depth: Arc::new(AtomicUsize::new(0)),
+            alive: Arc::new(AtomicBool::new(true)),
+        }
+    }
+
+    /// Whether this worker still accepts requests.
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Acquire)
+    }
+
+    /// Mark the worker dead and close its queue (idempotent). The alive
+    /// flag flips first so pickers stop choosing this worker, then the
+    /// sender is taken under the send lock — the barrier after which the
+    /// queue's contents are final.
+    pub fn close(&self) {
+        self.alive.store(false, Ordering::Release);
+        drop(self.tx.lock().unwrap().take());
+    }
+
+    /// The queue-depth gauge (the worker decrements it at dequeue).
+    pub fn depth_handle(&self) -> Arc<AtomicUsize> {
+        self.depth.clone()
+    }
+
+    /// The liveness flag, for metrics registration.
+    pub fn alive_handle(&self) -> Arc<AtomicBool> {
+        self.alive.clone()
+    }
+}
+
 pub struct Router<T> {
-    queues: Vec<Sender<T>>,
-    depths: Vec<Arc<AtomicUsize>>,
+    slots: Vec<Arc<WorkerSlot<T>>>,
     policy: Policy,
     next: AtomicUsize,
     /// table→shard ownership (ShardAffinity scoring); worker `i` serves
@@ -58,12 +116,12 @@ pub struct Router<T> {
 
 impl<T> Router<T> {
     pub fn new(queues: Vec<Sender<T>>, policy: Policy) -> Router<T> {
-        let depths = (0..queues.len())
-            .map(|_| Arc::new(AtomicUsize::new(0)))
+        let slots = queues
+            .into_iter()
+            .map(|tx| Arc::new(WorkerSlot::new(tx)))
             .collect();
         Router {
-            queues,
-            depths,
+            slots,
             policy,
             next: AtomicUsize::new(0),
             shard_map: None,
@@ -77,45 +135,74 @@ impl<T> Router<T> {
     }
 
     pub fn n_workers(&self) -> usize {
-        self.queues.len()
+        self.slots.len()
+    }
+
+    /// Workers still accepting requests.
+    pub fn n_alive(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_alive()).count()
+    }
+
+    /// Worker `i`'s slot — the coordinator hands a clone to that
+    /// worker's lifecycle guard so death closes the queue atomically.
+    pub fn slot_handle(&self, i: usize) -> Arc<WorkerSlot<T>> {
+        self.slots[i].clone()
     }
 
     /// Depth handle for worker `i` — the worker decrements it when it
     /// takes a request off its queue.
     pub fn depth_handle(&self, i: usize) -> Arc<AtomicUsize> {
-        self.depths[i].clone()
+        self.slots[i].depth_handle()
     }
 
     /// Current queue depth of worker `i`.
     pub fn depth(&self, i: usize) -> usize {
-        self.depths[i].load(Ordering::Relaxed)
+        self.slots[i].depth.load(Ordering::Relaxed)
     }
 
-    /// Pick a worker for a request touching `fields` (table ids; empty
-    /// = unknown/all, which makes ShardAffinity a pure depth choice).
-    fn pick(&self, fields: &[u32]) -> usize {
+    /// Close every slot (coordinator shutdown / init-failure unwind).
+    /// Since slots are shared with worker guards, dropping the router
+    /// alone no longer closes any queue — shutdown MUST call this or
+    /// the workers never see end-of-stream.
+    pub fn close_all(&self) {
+        for s in &self.slots {
+            s.close();
+        }
+    }
+
+    /// Pick a live worker for a request touching `fields` (table ids;
+    /// empty = unknown/all, which makes ShardAffinity a pure depth
+    /// choice). `None` when no live worker remains.
+    fn pick(&self, fields: &[u32]) -> Option<usize> {
         match self.policy {
             Policy::RoundRobin => {
-                self.next.fetch_add(1, Ordering::Relaxed) % self.queues.len()
+                let n = self.slots.len();
+                let start = self.next.fetch_add(1, Ordering::Relaxed);
+                (0..n)
+                    .map(|i| (start + i) % n)
+                    .find(|&w| self.slots[w].is_alive())
             }
             Policy::LeastQueued => self.least_queued(),
             Policy::ShardAffinity => match &self.shard_map {
                 None => self.least_queued(),
                 Some(map) => {
-                    let mut best = 0usize;
+                    let mut best = None;
                     let mut best_frac = -1.0f64;
                     let mut best_depth = usize::MAX;
-                    for w in 0..self.queues.len() {
+                    for w in 0..self.slots.len() {
+                        if !self.slots[w].is_alive() {
+                            continue;
+                        }
                         let frac =
                             map.local_fraction(w % map.n_shards, fields);
-                        let depth = self.depths[w].load(Ordering::Relaxed);
+                        let depth = self.slots[w].depth.load(Ordering::Relaxed);
                         // higher locality wins; exact ties go to the
                         // shallower queue, then the lower worker id
                         if frac > best_frac + 1e-12
                             || ((frac - best_frac).abs() <= 1e-12
                                 && depth < best_depth)
                         {
-                            best = w;
+                            best = Some(w);
                             best_frac = frac;
                             best_depth = depth;
                         }
@@ -126,17 +213,17 @@ impl<T> Router<T> {
         }
     }
 
-    fn least_queued(&self) -> usize {
-        self.depths
+    fn least_queued(&self) -> Option<usize> {
+        self.slots
             .iter()
             .enumerate()
-            .min_by_key(|(_, d)| d.load(Ordering::Relaxed))
+            .filter(|(_, s)| s.is_alive())
+            .min_by_key(|(i, s)| (s.depth.load(Ordering::Relaxed), *i))
             .map(|(i, _)| i)
-            .unwrap_or(0)
     }
 
-    /// Route one request; returns the chosen worker or Err(req) if every
-    /// queue is closed.
+    /// Route one request; returns the chosen worker or Err(req) if no
+    /// live worker remains.
     pub fn route(&self, req: T) -> Result<usize, T> {
         match self.route_bounded(&[], usize::MAX, req) {
             Ok(w) => Ok(w),
@@ -148,47 +235,81 @@ impl<T> Router<T> {
 
     /// Route a request touching `fields`, with a per-worker queue bound:
     /// if the chosen worker's queue already holds `cap` requests the
-    /// request is rejected (returned in `Overloaded`).
+    /// request is rejected (returned in `Overloaded`). A closed queue is
+    /// NOT a rejection: the worker is marked dead and the request
+    /// re-picks among the survivors, erroring only when none remain.
     pub fn route_bounded(
         &self,
         fields: &[u32],
         cap: usize,
-        req: T,
+        mut req: T,
     ) -> Result<usize, RouteRejection<T>> {
-        let w = self.pick(fields);
-        self.dispatch(w, cap, req)
+        loop {
+            let Some(w) = self.pick(fields) else {
+                return Err(RouteRejection::Closed(req));
+            };
+            match self.dispatch(w, cap, req) {
+                Err(RouteRejection::Closed(r)) => {
+                    // the picked worker died between the alive check and
+                    // the send — mark it and retry with the survivors
+                    // (each iteration retires one worker, so this
+                    // terminates after at most n_workers re-picks)
+                    self.slots[w].close();
+                    req = r;
+                }
+                other => return other,
+            }
+        }
     }
 
     /// Like [`Router::route_bounded`] but reads the field list out of
     /// the request itself, so callers holding an owned request don't
-    /// have to clone the slice to satisfy the borrow checker.
+    /// have to clone the slice to satisfy the borrow checker. `Fn` (not
+    /// `FnOnce`): the reroute loop re-reads the fields on every re-pick.
     pub fn route_bounded_by<F>(
         &self,
         cap: usize,
-        req: T,
+        mut req: T,
         fields_of: F,
     ) -> Result<usize, RouteRejection<T>>
     where
-        F: FnOnce(&T) -> &[u32],
+        F: Fn(&T) -> &[u32],
     {
-        let w = self.pick(fields_of(&req));
-        self.dispatch(w, cap, req)
+        loop {
+            let Some(w) = self.pick(fields_of(&req)) else {
+                return Err(RouteRejection::Closed(req));
+            };
+            match self.dispatch(w, cap, req) {
+                Err(RouteRejection::Closed(r)) => {
+                    self.slots[w].close();
+                    req = r;
+                }
+                other => return other,
+            }
+        }
     }
 
-    /// Enqueue on worker `w` iff a slot is free. The slot is reserved
-    /// with an atomic increment BEFORE the send (rolled back on
-    /// rejection/closure), so `cap` is a hard bound even with many
-    /// concurrent submitters — a check-then-send would let N racing
-    /// producers each observe `cap - 1` and all enqueue.
+    /// Enqueue on worker `w` iff its slot is open and a queue slot is
+    /// free. The depth slot is reserved with an atomic increment BEFORE
+    /// the send (rolled back on rejection/closure), so `cap` is a hard
+    /// bound even with many concurrent submitters — a check-then-send
+    /// would let N racing producers each observe `cap - 1` and all
+    /// enqueue. The send itself happens under the slot's sender lock,
+    /// serializing against [`WorkerSlot::close`] (see the slot docs).
     fn dispatch(&self, w: usize, cap: usize, req: T) -> Result<usize, RouteRejection<T>> {
-        if self.depths[w].fetch_add(1, Ordering::Relaxed) >= cap {
-            self.depths[w].fetch_sub(1, Ordering::Relaxed);
+        let slot = &self.slots[w];
+        let guard = slot.tx.lock().unwrap();
+        let Some(tx) = guard.as_ref() else {
+            return Err(RouteRejection::Closed(req));
+        };
+        if slot.depth.fetch_add(1, Ordering::Relaxed) >= cap {
+            slot.depth.fetch_sub(1, Ordering::Relaxed);
             return Err(RouteRejection::Overloaded(req));
         }
-        match self.queues[w].send(req) {
+        match tx.send(req) {
             Ok(()) => Ok(w),
             Err(e) => {
-                self.depths[w].fetch_sub(1, Ordering::Relaxed);
+                slot.depth.fetch_sub(1, Ordering::Relaxed);
                 Err(RouteRejection::Closed(e.0))
             }
         }
@@ -254,6 +375,76 @@ mod tests {
         drop(rx);
         let r = Router::new(vec![tx], Policy::RoundRobin);
         assert_eq!(r.route(5).unwrap_err(), 5);
+        // the failed send marked the only worker dead
+        assert_eq!(r.n_alive(), 0);
+    }
+
+    #[test]
+    fn closed_queue_reroutes_to_live_workers() {
+        // worker 1's receiver dies; every request must still land on a
+        // live worker, with no error surfaced and nothing lost
+        let (txs, mut rxs): (Vec<_>, Vec<_>) =
+            (0..3).map(|_| mpsc::channel::<u32>()).unzip();
+        drop(rxs.remove(1)); // rxs now holds workers 0 and 2
+        let r = Router::new(txs, Policy::RoundRobin);
+        for i in 0..30 {
+            let w = r.route(i).unwrap();
+            assert_ne!(w, 1, "request {i} routed to the dead worker");
+        }
+        assert_eq!(r.n_alive(), 2);
+        let total: usize = rxs.iter().map(|rx| rx.try_iter().count()).sum();
+        assert_eq!(total, 30, "reroute must conserve requests");
+    }
+
+    #[test]
+    fn dead_worker_receives_zero_new_routes() {
+        // A killed worker's depth gauge freezes at 0 — without the alive
+        // check, LeastQueued and ShardAffinity would keep picking it
+        // forever. Pin: zero new routes land on a closed slot.
+        let map = Arc::new(ShardMap::build(
+            &[10, 10, 10, 10],
+            1.2,
+            2,
+            ShardPolicy::RoundRobinTables,
+        ));
+        for policy in [Policy::RoundRobin, Policy::LeastQueued, Policy::ShardAffinity] {
+            let (txs, rxs): (Vec<_>, Vec<_>) =
+                (0..2).map(|_| mpsc::channel::<u32>()).unzip();
+            let r = match policy {
+                Policy::ShardAffinity => {
+                    Router::new(txs, policy).with_shards(map.clone())
+                }
+                _ => Router::new(txs, policy),
+            };
+            r.slot_handle(0).close();
+            assert_eq!(r.n_alive(), 1);
+            for i in 0..20 {
+                // shard 0 owns tables {0,2}: under affinity these
+                // requests WANT dead worker 0, and must not get it
+                assert_eq!(r.route_bounded(&[0, 2], usize::MAX, i).unwrap(), 1);
+            }
+            assert_eq!(rxs[0].try_iter().count(), 0, "{policy:?}");
+            assert_eq!(rxs[1].try_iter().count(), 20, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn close_all_ends_every_queue() {
+        let (txs, rxs): (Vec<_>, Vec<_>) =
+            (0..3).map(|_| mpsc::channel::<u32>()).unzip();
+        let r = Router::new(txs, Policy::RoundRobin);
+        r.route(1).unwrap();
+        r.close_all();
+        assert_eq!(r.n_alive(), 0);
+        assert!(r.route(2).is_err());
+        // queued work is still readable, then the channel reports closed
+        assert_eq!(rxs.iter().map(|rx| rx.try_iter().count()).sum::<usize>(), 1);
+        for rx in &rxs {
+            assert!(matches!(
+                rx.try_recv(),
+                Err(mpsc::TryRecvError::Disconnected)
+            ));
+        }
     }
 
     #[test]
@@ -266,6 +457,8 @@ mod tests {
             Err(RouteRejection::Overloaded(req)) => assert_eq!(req, 3),
             _ => panic!("expected Overloaded"),
         }
+        // overload is admission control, not death
+        assert_eq!(r.n_alive(), 1);
         assert_eq!(rx.try_iter().count(), 2);
     }
 

@@ -22,13 +22,14 @@
 use super::batcher::{collect_batch, BatcherConfig};
 use super::engine::InferenceEngine;
 use super::metrics::Metrics;
-use super::router::{Policy, RouteRejection, Router};
+use super::router::{Policy, RouteRejection, Router, WorkerSlot};
 use crate::embeddings::{
-    BatchGatherer, EmbeddingStore, GatherStats, HotRowCache, ShardedStore,
+    BatchGatherer, EmbeddingStore, GatherStats, HotRowCache, ShardMap,
+    ShardedStore,
 };
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -148,6 +149,47 @@ pub enum ServingStore {
     Cached(Arc<ShardedStore>, Arc<HotRowCache>),
 }
 
+/// Shared failover state for the sharded serving paths (S32): the live
+/// ownership view every worker gathers through, plus the per-worker
+/// liveness flags promotion is re-derived from. On worker death the
+/// dying worker's guard calls [`ShardView::repromote`], which rebuilds
+/// the view from the ORIGINAL map and the CURRENT liveness flags — a
+/// pure function, so concurrent deaths compose in any order and the
+/// last writer always publishes the correct cumulative view.
+struct ShardView {
+    /// the original placement (promotion always derives from this)
+    base: ShardMap,
+    /// the view workers currently gather through (swapped on death)
+    view: RwLock<Arc<ShardMap>>,
+    /// every worker's liveness flag, in worker order
+    alive: Vec<Arc<AtomicBool>>,
+}
+
+impl ShardView {
+    fn new(base: ShardMap, alive: Vec<Arc<AtomicBool>>) -> ShardView {
+        let view = RwLock::new(Arc::new(base.clone()));
+        ShardView { base, view, alive }
+    }
+
+    fn current(&self) -> Arc<ShardMap> {
+        self.view.read().unwrap().clone()
+    }
+
+    /// Re-derive the view: a shard is dead only when EVERY worker
+    /// serving it (worker `w` serves shard `w % n_shards`) is dead.
+    fn repromote(&self) {
+        let n_shards = self.base.n_shards;
+        let mut shard_live = vec![false; n_shards];
+        for (w, a) in self.alive.iter().enumerate() {
+            if a.load(Ordering::Acquire) {
+                shard_live[w % n_shards] = true;
+            }
+        }
+        let dead: Vec<bool> = shard_live.iter().map(|&l| !l).collect();
+        *self.view.write().unwrap() = Arc::new(self.base.promote(&dead));
+    }
+}
+
 pub struct Coordinator {
     router: Router<Request>,
     workers: Vec<JoinHandle<()>>,
@@ -210,42 +252,90 @@ impl Coordinator {
             }
         }
         let make_engine = Arc::new(make_engine);
+        // every worker's liveness flag, registered for snapshots and
+        // shared with the shard view so promotion can see the full set
+        let all_alive: Vec<Arc<AtomicBool>> = (0..cfg.n_workers)
+            .map(|i| router.slot_handle(i).alive_handle())
+            .collect();
+        for a in &all_alive {
+            metrics.register_worker_alive(a.clone());
+        }
+        let shard_view = match &store {
+            ServingStore::Shared(_) => None,
+            ServingStore::Sharded(s) | ServingStore::Cached(s, _) => Some(
+                Arc::new(ShardView::new(s.map.clone(), all_alive.clone())),
+            ),
+        };
         let mut workers = Vec::new();
         let (ready_tx, ready_rx) = mpsc::channel();
         for (i, rx) in rxs.into_iter().enumerate() {
             let store = store.clone();
             let metrics = metrics.clone();
             let bcfg = cfg.batcher;
-            let depth = router.depth_handle(i);
-            metrics.register_worker_depth(depth.clone());
+            let slot = router.slot_handle(i);
+            metrics.register_worker_depth(slot.depth_handle());
             let make_engine = make_engine.clone();
             let ready = ready_tx.clone();
+            let view = shard_view.clone();
             let shed_after = (cfg.admission == AdmissionPolicy::ShedStale)
                 .then_some(cfg.shed_after);
             workers.push(std::thread::spawn(move || {
                 match make_engine(i) {
                     Ok(engine) => {
                         let _ = ready.send(Ok(()));
-                        worker_loop(WorkerCtx {
+                        // The guard owns the queue's end of life: on ANY
+                        // exit — clean shutdown or panic — its Drop
+                        // closes the slot, promotes the shard view,
+                        // drains the queue, and books the leftovers as
+                        // failed. Ledger conservation under crashes
+                        // lives here.
+                        let guard = WorkerGuard {
+                            slot,
                             rx,
-                            engine,
-                            store,
+                            metrics: metrics.clone(),
+                            view,
                             worker: i,
-                            metrics,
-                            bcfg,
-                            depth,
-                            shed_after,
-                        });
+                        };
+                        worker_loop(
+                            &guard,
+                            WorkerCtx {
+                                engine,
+                                store,
+                                worker: i,
+                                metrics,
+                                bcfg,
+                                shed_after,
+                            },
+                        );
                     }
                     Err(e) => {
+                        // never served: close the slot so routing skips
+                        // this worker while start_with unwinds
+                        slot.close();
                         let _ = ready.send(Err(e));
                     }
                 }
             }));
         }
         drop(ready_tx);
+        let mut init_err = None;
         for r in ready_rx.iter().take(cfg.n_workers) {
-            r.map_err(|e| crate::err!("worker engine init failed: {e:#}"))?;
+            if let Err(e) = r {
+                init_err = Some(e);
+                break;
+            }
+        }
+        if let Some(e) = init_err {
+            // Unwind without leaking threads: the slots are shared with
+            // the worker guards, so dropping the router alone no longer
+            // closes any queue — close them all explicitly, then join
+            // the workers that did spawn (their loops see end-of-stream
+            // and exit through their guards).
+            router.close_all();
+            for w in workers {
+                let _ = w.join();
+            }
+            return Err(crate::err!("worker engine init failed: {e:#}"));
         }
         metrics.reset_clock(); // engine compile time is not serving time
         Ok(Coordinator {
@@ -264,9 +354,12 @@ impl Coordinator {
         // ShedStale additionally trims stale requests at dequeue time,
         // it does not repeal the bound the operator configured.
         // Ledger discipline: `on_request` fires BEFORE routing (so no
-        // snapshot can ever see a response outrun its request), and a
-        // closed-queue arrival is booked as rejected — it was turned
-        // away at the door — keeping
+        // snapshot can ever see a response outrun its request). A dead
+        // worker is the router's problem — it re-picks among the
+        // survivors — so `Closed` here means NO live worker remains;
+        // that request is booked `failed` (an infrastructure loss, not
+        // an admission decision — `rejected` stays an admission-control-
+        // only signal), keeping
         // `requests == responses + rejected + shed + failed` exact.
         self.metrics.on_request();
         match self
@@ -279,8 +372,8 @@ impl Coordinator {
                 Ok(Admission::Rejected)
             }
             Err(RouteRejection::Closed(_req)) => {
-                self.metrics.on_rejected();
-                crate::bail!("all worker queues closed")
+                self.metrics.on_failed(1);
+                crate::bail!("no live worker remains")
             }
         }
     }
@@ -292,9 +385,16 @@ impl Coordinator {
             .collect()
     }
 
-    /// Close intake and join workers (drains in-flight batches).
+    /// Workers still accepting requests.
+    pub fn n_live(&self) -> usize {
+        self.router.n_alive()
+    }
+
+    /// Close intake and join workers (drains in-flight batches). The
+    /// slots are shared with the worker guards, so the queues must be
+    /// closed explicitly — dropping the router would not end them.
     pub fn shutdown(self) {
-        drop(self.router);
+        self.router.close_all();
         for w in self.workers {
             let _ = w.join();
         }
@@ -302,15 +402,82 @@ impl Coordinator {
 }
 
 struct WorkerCtx {
-    rx: Receiver<Request>,
     engine: Box<dyn InferenceEngine>,
     store: ServingStore,
     worker: usize,
     metrics: Arc<Metrics>,
     bcfg: BatcherConfig,
-    depth: Arc<std::sync::atomic::AtomicUsize>,
     /// Some(limit) ⇒ shed requests that waited longer than `limit`
     shed_after: Option<Duration>,
+}
+
+/// Sentinel owning one worker's queue end of life. Its `Drop` runs on
+/// EVERY exit from `worker_loop` — clean shutdown or panic — and:
+///
+/// 1. closes the slot (alive flips, then the only sender is taken under
+///    the send lock, so nothing can land on the queue afterwards);
+/// 2. promotes the shard view, re-pointing survivors' cross-shard
+///    gathers at live replicas of this worker's tables;
+/// 3. drains the queue — every request still buffered will never be
+///    served, so each is booked `failed` and its reply sender closes
+///    (clients observe a closed channel, not a hang).
+///
+/// Step 1 before step 3 is what makes the drain complete: the slot held
+/// the ONLY sender, so post-close the buffered set is final and the
+/// ledger stays exact under any crash interleaving.
+struct WorkerGuard {
+    slot: Arc<WorkerSlot<Request>>,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+    view: Option<Arc<ShardView>>,
+    worker: usize,
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        self.slot.close();
+        if let Some(v) = &self.view {
+            v.repromote();
+        }
+        // Book the losses BEFORE dropping the reply senders: a client
+        // draining its reply channel unblocks the moment the last
+        // sender drops, and must find the ledger already balanced.
+        let mut drained: Vec<Request> = Vec::new();
+        while let Ok(r) = self.rx.try_recv() {
+            drained.push(r);
+        }
+        if !drained.is_empty() {
+            depth_release(&self.slot.depth_handle(), drained.len());
+            self.metrics.on_failed(drained.len());
+        }
+        // the Vec (and with it every queued reply sender, which closes
+        // unanswered) drops at end of scope, after the books are square
+        let drained = drained.len();
+        if std::thread::panicking() {
+            crate::error!(
+                "worker {} died; {} queued request(s) booked failed",
+                self.worker,
+                drained
+            );
+        }
+    }
+}
+
+/// Covers the batch between dequeue and outcome booking: if the worker
+/// panics mid-flight (gather or engine), `Drop` books the batch as
+/// failed. The normal paths zero `n` once the batch is booked through
+/// `on_response`/`on_failed`, making this a no-op.
+struct InflightGuard<'a> {
+    metrics: &'a Metrics,
+    n: usize,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        if self.n > 0 {
+            self.metrics.on_failed(self.n);
+        }
+    }
 }
 
 /// Saturating queue-depth decrement. The gauge is shared by concurrent
@@ -329,17 +496,17 @@ pub(crate) fn depth_release(depth: &std::sync::atomic::AtomicUsize, n: usize) {
     });
 }
 
-fn worker_loop(ctx: WorkerCtx) {
+fn worker_loop(guard: &WorkerGuard, ctx: WorkerCtx) {
     let WorkerCtx {
-        rx,
         mut engine,
         store,
         worker,
         metrics,
         bcfg,
-        depth,
         shed_after,
     } = ctx;
+    let rx = &guard.rx;
+    let depth = guard.slot.depth_handle();
     let shard = match &store {
         ServingStore::Shared(_) => 0,
         ServingStore::Sharded(s) | ServingStore::Cached(s, _) => {
@@ -366,7 +533,7 @@ fn worker_loop(ctx: WorkerCtx) {
     let mut dense: Vec<f32> = Vec::with_capacity(cap * nd);
     let mut sparse: Vec<f32> = Vec::with_capacity(cap * ns * d_emb);
     let mut probs: Vec<f32> = Vec::with_capacity(cap);
-    while let Some(mut batch) = collect_batch(&rx, &bcfg) {
+    while let Some(mut batch) = collect_batch(rx, &bcfg) {
         depth_release(&depth, batch.len());
         // Load shedding: a request that sat in the queue past its
         // budget is dropped here (its reply sender closes unanswered) —
@@ -383,6 +550,12 @@ fn worker_loop(ctx: WorkerCtx) {
                 continue;
             }
         }
+        // from here to the outcome booking, a panic loses the batch —
+        // cover it so the crash books `failed` instead of leaking
+        let mut inflight = InflightGuard {
+            metrics: &metrics,
+            n: batch.len(),
+        };
         let t_exec = Instant::now();
         let queue_ns = batch
             .iter()
@@ -412,26 +585,39 @@ fn worker_loop(ctx: WorkerCtx) {
                 }
                 gs
             }
-            ServingStore::Sharded(s) => gatherer.as_mut().unwrap().gather_batch(
-                s,
-                None,
-                shard,
-                batch.iter().map(|r| (r.fields.as_slice(), r.ids.as_slice())),
-                &mut sparse,
-            ),
-            ServingStore::Cached(s, c) => gatherer.as_mut().unwrap().gather_batch(
-                s,
-                Some(&**c),
-                shard,
-                batch.iter().map(|r| (r.fields.as_slice(), r.ids.as_slice())),
-                &mut sparse,
-            ),
+            // sharded paths gather through the CURRENT ownership view —
+            // after a worker death this is the promoted map, so
+            // cross-shard fetches target live replicas (bit-identical
+            // rows; see `ShardMap::promote`)
+            ServingStore::Sharded(s) => {
+                let map = guard.view.as_ref().unwrap().current();
+                gatherer.as_mut().unwrap().gather_batch_with(
+                    &map,
+                    s,
+                    None,
+                    shard,
+                    batch.iter().map(|r| (r.fields.as_slice(), r.ids.as_slice())),
+                    &mut sparse,
+                )
+            }
+            ServingStore::Cached(s, c) => {
+                let map = guard.view.as_ref().unwrap().current();
+                gatherer.as_mut().unwrap().gather_batch_with(
+                    &map,
+                    s,
+                    Some(&**c),
+                    shard,
+                    batch.iter().map(|r| (r.fields.as_slice(), r.ids.as_slice())),
+                    &mut sparse,
+                )
+            }
         };
         metrics.on_gather(&gs);
         match engine.infer_batch_into(&dense, &sparse, batch.len(), &mut probs) {
             Ok(()) => {
                 let exec_ns = t_exec.elapsed().as_nanos() as u64;
                 metrics.on_batch(batch.len(), queue_ns, exec_ns);
+                inflight.n = 0; // booked below as responses
                 for (r, &p) in batch.into_iter().zip(&probs) {
                     let e2e = r.enqueued.elapsed().as_nanos() as u64;
                     metrics.on_response(e2e);
@@ -446,6 +632,7 @@ fn worker_loop(ctx: WorkerCtx) {
                 crate::error!("worker inference failed: {e:#}");
                 // drop the batch; senders observe a closed reply channel
                 metrics.on_failed(batch.len());
+                inflight.n = 0; // booked as failed just above
             }
         }
     }
@@ -597,6 +784,88 @@ mod tests {
         assert_eq!(snap.failed, n / 2, "failed batches must be counted");
         c.shutdown();
         crate::util::logger::set_level(crate::util::logger::Level::Info);
+    }
+
+    #[test]
+    fn worker_crash_books_losses_and_reroutes() {
+        use crate::coordinator::engine::CrashAfter;
+        crate::util::logger::set_level(crate::util::logger::Level::Error);
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                n_workers: 2,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait: Duration::from_micros(10),
+                },
+                ..Default::default()
+            },
+            store(),
+            |i| {
+                let e: Box<dyn InferenceEngine> =
+                    Box::new(MockEngine::new(4, 13, 26, 16));
+                Ok(if i == 0 {
+                    // worker 0 serves one batch, then dies mid-infer
+                    Box::new(CrashAfter::after_batches(e, 1))
+                } else {
+                    e
+                })
+            },
+        )
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let n = 300u64;
+        for id in 0..n {
+            c.submit(Request::full(id, vec![0.1; 13], vec![1; 26], tx.clone()))
+                .expect("a live worker remains; submit must never error");
+        }
+        drop(tx);
+        let got = rx.iter().count() as u64;
+        // the dying worker's drain is asynchronous — poll until the
+        // ledger balances, which implies the crash was fully booked
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let snap = c.metrics.snapshot();
+            if snap.responses + snap.failed == n {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "ledger never balanced: {snap:?}"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.requests, n);
+        assert!(snap.failed > 0, "crash losses must be booked failed");
+        assert_eq!(snap.rejected, 0, "a crash is not an admission decision");
+        assert_eq!(snap.responses, got);
+        assert!(snap.ledger_ok(), "conservation across the crash: {snap:?}");
+        assert_eq!(snap.live_workers(), 1);
+        assert_eq!(c.n_live(), 1);
+        c.shutdown();
+        crate::util::logger::set_level(crate::util::logger::Level::Info);
+    }
+
+    #[test]
+    fn init_error_unwinds_and_joins_spawned_workers() {
+        // worker 2's engine fails to build: the error must surface AND
+        // the two healthy workers must be joined. Without close_all on
+        // the unwind path their queues (shared with the worker guards)
+        // would never end and this test would hang forever on join.
+        let r = Coordinator::start(
+            CoordinatorConfig {
+                n_workers: 3,
+                ..Default::default()
+            },
+            store(),
+            |i| {
+                if i == 2 {
+                    crate::bail!("injected init failure");
+                }
+                Ok(Box::new(MockEngine::new(32, 13, 26, 16)))
+            },
+        );
+        assert!(r.is_err());
     }
 
     #[test]

@@ -375,6 +375,28 @@ impl BatchGatherer {
     where
         I: IntoIterator<Item = (&'a [u32], &'a [i32])>,
     {
+        self.gather_batch_with(&store.map, store, cache, local, requests, out)
+    }
+
+    /// [`BatchGatherer::gather_batch`] through an explicit ownership
+    /// view — the failover path (see
+    /// [`ShardMap::promote`](super::sharding::ShardMap::promote)):
+    /// after a worker death the survivors' coalesced gathers route
+    /// cross-shard fetches by the promoted map. Output bytes are
+    /// view-independent (replicas are byte-identical); only the
+    /// local/remote accounting and fetch targets move.
+    pub fn gather_batch_with<'a, I>(
+        &mut self,
+        map: &super::sharding::ShardMap,
+        store: &ShardedStore,
+        cache: Option<&HotRowCache>,
+        local: usize,
+        requests: I,
+        out: &mut Vec<f32>,
+    ) -> GatherStats
+    where
+        I: IntoIterator<Item = (&'a [u32], &'a [i32])>,
+    {
         // new epoch invalidates every stamp at once; on u32 wrap, clear
         // the stamps for real so an ancient stamp can never alias
         self.epoch = self.epoch.wrapping_add(1);
@@ -420,12 +442,12 @@ impl BatchGatherer {
                 let row = match row {
                     Some(r) => r,
                     None => {
-                        let serve = if store.map.owns(local, j) {
+                        let serve = if map.owns(local, j) {
                             st.local += 1;
                             local
                         } else {
                             st.remote += 1;
-                            store.map.primary(j)
+                            map.primary(j)
                         };
                         store.shards[serve]
                             .row(j, id)

@@ -210,6 +210,47 @@ impl ShardMap {
             .sum()
     }
 
+    /// Re-derive the ownership view after shard failures (S32): each
+    /// table's owner list is filtered to the surviving shards —
+    /// promoting `HotReplicated` replicas, which are byte-identical to
+    /// the lost copy by construction, so gathers through the promoted
+    /// map stay bit-identical to the monolithic store (pinned by
+    /// `rust/tests/failover_prop.rs`). A table whose EVERY owner died
+    /// keeps its original owners: the rows are still resident in
+    /// process memory (shards are data, workers are compute), so the
+    /// data-resident fallback keeps them readable cross-shard instead
+    /// of poisoning `gather_from`'s owner-must-hold-the-table
+    /// invariant. Promotion is a pure function of the ORIGINAL map and
+    /// the CURRENT dead set, so repeated deaths compose in any order.
+    pub fn promote(&self, dead: &[bool]) -> ShardMap {
+        assert_eq!(
+            dead.len(),
+            self.n_shards,
+            "dead set must cover every shard"
+        );
+        let owners = self
+            .owners
+            .iter()
+            .map(|os| {
+                let live: Vec<u32> = os
+                    .iter()
+                    .copied()
+                    .filter(|&s| !dead[s as usize])
+                    .collect();
+                if live.is_empty() {
+                    os.clone()
+                } else {
+                    live
+                }
+            })
+            .collect();
+        ShardMap {
+            n_shards: self.n_shards,
+            policy: self.policy,
+            owners,
+        }
+    }
+
     /// Fraction of `fields` that `shard` can serve locally (1.0 when
     /// `fields` is empty — nothing needs to travel).
     pub fn local_fraction(&self, shard: usize, fields: &[u32]) -> f64 {
@@ -399,6 +440,23 @@ impl ShardedStore {
         ids: &[i32],
         out: &mut Vec<f32>,
     ) -> (usize, usize, usize) {
+        self.gather_from_with(&self.map, local, fields, ids, out)
+    }
+
+    /// [`ShardedStore::gather_from`] through an explicit ownership view
+    /// — the failover path: after a worker dies, survivors gather
+    /// through the [`ShardMap::promote`]d map so cross-shard fetches
+    /// target live replicas instead of the dead shard. Values are
+    /// placement-independent (replicas are byte-identical), so any view
+    /// whose owners hold their tables yields the same bytes.
+    pub fn gather_from_with(
+        &self,
+        map: &ShardMap,
+        local: usize,
+        fields: &[u32],
+        ids: &[i32],
+        out: &mut Vec<f32>,
+    ) -> (usize, usize, usize) {
         debug_assert_eq!(fields.len(), ids.len());
         let nf = self.n_fields();
         let d = self.d_emb;
@@ -414,12 +472,12 @@ impl ShardedStore {
             // or past-card ids resolve to row 0, bit-identically
             let (id, was_oob) = resolve_id(ids[k], self.cards[j]);
             n_oob += was_oob as usize;
-            let serve = if self.map.owns(local, j) {
+            let serve = if map.owns(local, j) {
                 n_local += 1;
                 local
             } else {
                 n_remote += 1;
-                self.map.primary(j)
+                map.primary(j)
             };
             let row = self.shards[serve]
                 .row(j, id)
@@ -520,6 +578,57 @@ mod tests {
             ShardMap::build_cached(&p.cards, p.zipf_alpha, 4, ShardPolicy::HotReplicated, &[]);
         for j in 0..zero.n_tables() {
             assert_eq!(zero.owners(j), plain.owners(j));
+        }
+    }
+
+    #[test]
+    fn promote_filters_dead_owners_and_keeps_orphans_readable() {
+        let p = profile("criteo").unwrap();
+        let m = ShardMap::for_profile(&p, 4, ShardPolicy::HotReplicated);
+        // shard 2 dies: replicated tables lose exactly that owner,
+        // sole-owner tables of shard 2 keep it (data-resident fallback)
+        let promoted = m.promote(&[false, false, true, false]);
+        for j in 0..m.n_tables() {
+            let before = m.owners(j);
+            let after = promoted.owners(j);
+            assert!(!after.is_empty(), "table {j} lost all owners");
+            if before == [2] {
+                assert_eq!(after, before, "orphan table {j} must stay readable");
+            } else {
+                assert!(!after.contains(&2), "table {j} still lists the dead shard");
+                assert!(
+                    after.iter().all(|s| before.contains(s)),
+                    "promotion must never invent owners"
+                );
+            }
+            // the owner-holds-the-table invariant survives either way
+            for &s in after {
+                assert!(m.owns(s as usize, j));
+            }
+        }
+        // no deaths ⇒ identity
+        let same = m.promote(&[false; 4]);
+        for j in 0..m.n_tables() {
+            assert_eq!(same.owners(j), m.owners(j));
+        }
+    }
+
+    #[test]
+    fn gather_with_promoted_map_is_bit_identical() {
+        let p = profile("kdd").unwrap();
+        let store = EmbeddingStore::random(&p, 8, 11);
+        let m = ShardMap::for_profile(&p, 3, ShardPolicy::HotReplicated);
+        let sharded = ShardedStore::build(&store, m);
+        let promoted = sharded.map.promote(&[false, true, false]);
+        let nf = p.n_sparse();
+        let fields: Vec<u32> = (0..nf as u32).collect();
+        let ids: Vec<i32> = (0..nf as i32).map(|i| i % 7).collect();
+        let mut mono = Vec::new();
+        store.gather(&ids, 1, &mut mono);
+        for local in [0, 2] {
+            let mut out = Vec::new();
+            sharded.gather_from_with(&promoted, local, &fields, &ids, &mut out);
+            assert_eq!(out, mono, "promoted gather diverged (local {local})");
         }
     }
 

@@ -14,7 +14,10 @@
 //!   table2 | table3 | fig2 | fig5 | fig6   regenerate paper artifacts
 //!   artifacts   list artifact registry
 
-use autorac::coordinator::loadgen::{self, Arrival, LoadGenConfig, LoadReport};
+use autorac::coordinator::loadgen::{
+    self, Arrival, CrashInjector, LoadGenConfig, LoadReport, Scenario,
+    ScenarioOutcome, ScenarioSpec,
+};
 use autorac::coordinator::net::{NetServer, NetServerConfig};
 use autorac::coordinator::{
     AdmissionPolicy, BatcherConfig, Coordinator, CoordinatorConfig,
@@ -124,6 +127,11 @@ fn print_help() {
                       self-bench unless --hold keeps serving until killed)\n\
                       --connect ADDR (drive an external server; client stats only)\n\
                       --conns N (loadgen connections, default 4) --quick (CI-sized run)\n\
+                      --scenario steady|flash-crowd|hot-key-storm|worker-crash|diurnal\n\
+                      (failure/traffic matrix, in-process only; SLO verdict in report)\n\
+                      --crash-worker K --crash-after-ms T --crash-after-batches N (0=use T)\n\
+                      --surge F (flash-crowd multiplier) --storm-rows N (hot-key set)\n\
+                      --slo-p99-ms B (p99 budget for the SLO verdict, default 250)\n\
          xbar-bench: --k N --n N (weight shape) --quick (short CI timings)\n\
                       --threads N (tile-parallel kernel threads; 0 = all cores)\n\
                       --json PATH (machine-readable report, e.g. BENCH_xbar.json)\n\
@@ -433,6 +441,10 @@ struct ServeBenchSetup {
     cache_rows: usize,
     /// fraction of ids the loadgen replaces with the `-1` OOV sentinel
     oov_frac: f64,
+    /// traffic/failure scenario this run replays (S31)
+    spec: ScenarioSpec,
+    /// p99 budget the scenario SLO verdict is judged against, µs
+    slo_p99_us: f64,
 }
 
 /// Build the sharded store + coordinator for one serve-bench run
@@ -477,6 +489,9 @@ fn serve_bench_coordinator(
     let genome = autorac_best(&s.dataset);
     let seed = s.seed;
     let threads = s.threads;
+    // worker-crash scenario: the victim's engine gets a CrashAfter fuse
+    // (deadline anchored here, ≈ coordinator start); None otherwise
+    let inj = CrashInjector::new(&s.spec);
     Coordinator::start_with(
         CoordinatorConfig {
             n_workers: s.workers,
@@ -490,17 +505,23 @@ fn serve_bench_coordinator(
             },
         },
         serving,
-        move |_| match engine {
-            ServeEngine::Mock => {
-                let mut e = MockEngine::new(batch, nd, nf, d_emb);
-                e.delay = delay;
-                Ok(Box::new(e) as Box<dyn autorac::coordinator::InferenceEngine>)
-            }
-            ServeEngine::Pim => {
-                let e = PimEngine::new(&genome, batch, nd, nf, d_emb, seed)?
-                    .with_threads(threads);
-                Ok(Box::new(e) as Box<dyn autorac::coordinator::InferenceEngine>)
-            }
+        move |i| {
+            let e: Box<dyn autorac::coordinator::InferenceEngine> = match engine
+            {
+                ServeEngine::Mock => {
+                    let mut e = MockEngine::new(batch, nd, nf, d_emb);
+                    e.delay = delay;
+                    Box::new(e)
+                }
+                ServeEngine::Pim => Box::new(
+                    PimEngine::new(&genome, batch, nd, nf, d_emb, seed)?
+                        .with_threads(threads),
+                ),
+            };
+            Ok(match &inj {
+                Some(inj) => inj.arm(i, e),
+                None => e,
+            })
         },
     )
 }
@@ -518,13 +539,26 @@ fn serve_bench_loadcfg(s: &ServeBenchSetup) -> LoadGenConfig {
 fn serve_bench_run(
     s: &ServeBenchSetup,
     policy: Policy,
-) -> autorac::Result<(MetricsSnapshot, LoadReport)> {
+) -> autorac::Result<(MetricsSnapshot, ScenarioOutcome)> {
     let prof = profile(&s.dataset)?;
     let coord = serve_bench_coordinator(s, policy)?;
-    let rep = loadgen::run(&coord, &prof, &serve_bench_loadcfg(s))?;
-    let snap = coord.metrics.snapshot();
+    let out =
+        loadgen::run_scenario(&coord, &prof, &serve_bench_loadcfg(s), &s.spec)?;
+    // A dying worker's guard books its losses in the same instant it
+    // releases the last reply sender, but give the ledger a bounded
+    // beat anyway so the SLO verdict never races a straggling Drop.
+    let t0 = Instant::now();
+    let snap = loop {
+        let snap = coord.metrics.snapshot();
+        if snap.ledger_ok()
+            || t0.elapsed() > std::time::Duration::from_secs(2)
+        {
+            break snap;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    };
     coord.shutdown();
-    Ok((snap, rep))
+    Ok((snap, out))
 }
 
 /// ns/request for the tree and lazy parsers over the deterministic wire
@@ -586,6 +620,33 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
         (0.0..=1.0).contains(&oov_frac),
         "--oov-frac must be in [0, 1], got {oov_frac}"
     );
+    // Failure-scenario matrix (S31). All knobs are consumed
+    // unconditionally so finish() passes whatever scenario runs.
+    let scenario = Scenario::parse(&args.str_or("scenario", "steady"))?;
+    let mut spec = ScenarioSpec::new(scenario);
+    spec.surge = args.f64_or("surge", spec.surge)?;
+    spec.storm_rows = args.usize_or("storm-rows", spec.storm_rows)?;
+    spec.crash_worker = args.usize_or("crash-worker", spec.crash_worker)?;
+    spec.crash_after = std::time::Duration::from_millis(
+        args.u64_or("crash-after-ms", 60)?,
+    );
+    spec.crash_after_batches = match args.usize_or("crash-after-batches", 0)? {
+        0 => None, // 0 = use the wall-clock fuse
+        n => Some(n),
+    };
+    let slo_p99_us = args.f64_or("slo-p99-ms", 250.0)? * 1e3;
+    if scenario == Scenario::WorkerCrash {
+        autorac::ensure!(
+            spec.crash_worker < workers,
+            "--crash-worker {} out of range (workers {})",
+            spec.crash_worker,
+            workers
+        );
+        autorac::ensure!(
+            workers >= 2,
+            "worker-crash needs >= 2 workers to have a survivor"
+        );
+    }
     let json_path = args.get("json").map(str::to_string);
     // Socket-mode flags (S28) — consumed unconditionally so finish()
     // passes whether or not a transport was picked.
@@ -619,10 +680,19 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
         threads,
         cache_rows,
         oov_frac,
+        spec,
+        slo_p99_us,
     };
     args.finish()?;
     if listen.is_some() && connect.is_some() {
         autorac::bail!("--listen and --connect are mutually exclusive");
+    }
+    if (listen.is_some() || connect.is_some()) && scenario != Scenario::Steady {
+        autorac::bail!(
+            "--scenario {} needs the in-process driver \
+             (drop --listen/--connect)",
+            scenario.name()
+        );
     }
 
     // Client-only mode: drive an external server over TCP and report
@@ -733,17 +803,34 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
         return Ok(());
     }
 
-    let (snap, rep) = serve_bench_run(&setup, policy)?;
+    let (snap, out) = serve_bench_run(&setup, policy)?;
+    let rep = out.report.clone();
     print_serve_bench(&snap, &rep);
+    print_scenario_slo(&setup, &snap, &out);
     if let Some(path) = json_path {
-        let report =
-            Json::from_pairs(serve_bench_report(&setup, policy, &snap, &rep));
+        let (avail, post_avail, slo_ok) = scenario_slo(&setup, &snap, &out);
+        let mut pairs = serve_bench_report(&setup, policy, &snap, &rep);
+        pairs.extend(vec![
+            ("availability", Json::Num(avail)),
+            ("post_crash_sent", Json::Num(out.post_crash_sent as f64)),
+            (
+                "post_crash_completed",
+                Json::Num(out.post_crash_completed as f64),
+            ),
+            ("post_crash_availability", Json::Num(post_avail)),
+            ("slo_ok", Json::Bool(slo_ok)),
+        ]);
+        let report = Json::from_pairs(pairs);
         report.write_file(std::path::Path::new(&path))?;
         println!("wrote {path}");
     }
 
+    // Baseline reruns only make sense against the steady shape — a
+    // scenario run's comparison target is its own SLO line above.
+    let steady = setup.spec.scenario == Scenario::Steady;
+
     // Same traffic under round-robin — the cross-shard-gather baseline.
-    if policy != Policy::RoundRobin {
+    if steady && policy != Policy::RoundRobin {
         let (base, _) = serve_bench_run(&setup, Policy::RoundRobin)?;
         println!(
             "baseline round-robin: cross-shard {} rows ({:.1}%) | \
@@ -778,7 +865,7 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
     // tier exists for (EXPERIMENTS.md §SG). Identical schedule by
     // construction: the loadgen is deterministic by seed and the cache
     // never changes what is gathered, only where it is read from.
-    if setup.cache_rows > 0 {
+    if steady && setup.cache_rows > 0 {
         let off = ServeBenchSetup {
             cache_rows: 0,
             ..setup.clone()
@@ -853,7 +940,59 @@ fn serve_bench_report(
         ("cache_evictions", Json::Num(snap.cache_evictions as f64)),
         ("coalesced_rows", Json::Num(snap.coalesced_rows as f64)),
         ("oob_ids", Json::Num(snap.oob_ids as f64)),
+        ("scenario", Json::Str(setup.spec.scenario.name().into())),
+        ("ledger_ok", Json::Bool(snap.ledger_ok())),
+        ("live_workers", Json::Num(snap.live_workers() as f64)),
+        ("slo_p99_budget_us", Json::Num(setup.slo_p99_us)),
     ]
+}
+
+/// Availability split + SLO verdict for one in-process scenario run.
+/// The availability gate judges post-crash traffic when the probe
+/// classified any (requests offered AFTER the crash was observable);
+/// otherwise it falls back to overall availability.
+fn scenario_slo(
+    setup: &ServeBenchSetup,
+    snap: &MetricsSnapshot,
+    out: &ScenarioOutcome,
+) -> (f64, f64, bool) {
+    let avail = if out.report.accepted == 0 {
+        1.0
+    } else {
+        out.report.completed as f64 / out.report.accepted as f64
+    };
+    let post_avail = if out.post_crash_sent == 0 {
+        avail
+    } else {
+        out.post_crash_completed as f64 / out.post_crash_sent as f64
+    };
+    let slo_ok = snap.e2e_p99_us <= setup.slo_p99_us
+        && snap.ledger_ok()
+        && post_avail >= 0.99;
+    (avail, post_avail, slo_ok)
+}
+
+fn print_scenario_slo(
+    setup: &ServeBenchSetup,
+    snap: &MetricsSnapshot,
+    out: &ScenarioOutcome,
+) {
+    let (avail, post_avail, slo_ok) = scenario_slo(setup, snap, out);
+    println!(
+        "  scenario {}: availability {:.2}% | post-crash {:.2}% ({}/{}) | \
+         ledger {} | live workers {} | p99 {:.0} µs vs budget {:.0} µs | \
+         SLO {}",
+        setup.spec.scenario.name(),
+        avail * 100.0,
+        post_avail * 100.0,
+        out.post_crash_completed,
+        out.post_crash_sent,
+        if snap.ledger_ok() { "balanced" } else { "IMBALANCED" },
+        snap.live_workers(),
+        snap.e2e_p99_us,
+        setup.slo_p99_us,
+        if slo_ok { "PASS" } else { "FAIL" }
+    );
 }
 
 /// Resolve `host:port` to a socket address (first resolution wins).

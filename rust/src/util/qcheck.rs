@@ -127,6 +127,19 @@ macro_rules! prop_assert_eq {
             ));
         }
     }};
+    ($a:expr, $b:expr, $($fmt:tt)+) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{}: {} != {} ({:?} vs {:?})",
+                format!($($fmt)+),
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
 }
 
 /// Default base seed ("AUTORAC" on a phone keypad, more or less).

@@ -6,8 +6,9 @@
 use autorac::coordinator::loadgen::{self, Arrival, LoadGenConfig};
 use autorac::coordinator::{
     Admission, AdmissionPolicy, BatcherConfig, Coordinator,
-    CoordinatorConfig, MockEngine, NetClient, NetServer, NetServerConfig,
-    PjrtEngine, Policy, Request, ServingStore, WireResponse,
+    CoordinatorConfig, CrashAfter, InferenceEngine, MockEngine, NetClient,
+    NetServer, NetServerConfig, PjrtEngine, Policy, Request, ServingStore,
+    WireResponse,
 };
 use autorac::data::{profile, Generator, DEFAULT_SEED};
 use autorac::embeddings::{EmbeddingStore, ShardMap, ShardPolicy, ShardedStore};
@@ -415,6 +416,102 @@ fn socket_e2e_conservation_with_hostile_clients() {
         "shutdown blocked on a stalled connection"
     );
     drop(stall);
+}
+
+/// One worker dies mid-run over real sockets: no client sees a spurious
+/// total-outage error, the dead worker's queued requests are booked
+/// `failed`, the ledger balances, and a client connecting AFTER the
+/// crash gets every request answered by the survivors.
+#[test]
+fn socket_worker_crash_conserves_ledger_and_stays_available() {
+    let coord = Coordinator::start_with(
+        CoordinatorConfig {
+            n_workers: 4,
+            policy: Policy::ShardAffinity,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(50),
+            },
+            ..Default::default()
+        },
+        ServingStore::Sharded(sharded_store(4)),
+        |i| {
+            let e: Box<dyn InferenceEngine> =
+                Box::new(MockEngine::new(8, 13, 26, 16));
+            Ok(if i == 1 {
+                // dies while unloading its second batch
+                Box::new(CrashAfter::after_batches(e, 1))
+                    as Box<dyn InferenceEngine>
+            } else {
+                e
+            })
+        },
+    )
+    .unwrap();
+    let srv =
+        NetServer::start("127.0.0.1:0", coord, NetServerConfig::default()).unwrap();
+    let addr = srv.local_addr();
+
+    // Hammer with a fire-and-forget client. Requests that die with the
+    // worker produce no response line at all, so a blocking
+    // request/response loop would hang — split the stream and count
+    // whatever comes back until the server closes the connection.
+    let n = 200u64;
+    let c = NetClient::connect(&addr).unwrap();
+    let (mut ctx, mut crx) = c.split();
+    let reader = std::thread::spawn(move || {
+        let mut got = 0u64;
+        loop {
+            match crx.recv() {
+                Ok(Some(WireResponse::Ok { .. })) => got += 1,
+                Ok(Some(WireResponse::Error { msg, .. })) => {
+                    panic!("spurious error surfaced to the client: {msg}")
+                }
+                Ok(None) | Err(_) => break,
+            }
+        }
+        got
+    });
+    for k in 0..n {
+        ctx.send_line(&wire_request(k).to_line()).unwrap();
+    }
+    ctx.finish();
+    let got = reader.join().unwrap();
+    assert!(got > 0, "survivors answered nothing");
+
+    // Every parsed frame was booked at submit; completions plus the
+    // crash losses must cover them exactly, with the crash visible.
+    let t0 = Instant::now();
+    let snap = loop {
+        let s = srv.metrics();
+        if s.requests == n
+            && s.responses + s.rejected + s.shed + s.failed == s.requests
+        {
+            break s;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "ledger never balanced: {s:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert!(snap.failed > 0, "the armed crash never fired");
+    assert_eq!(snap.rejected, 0, "crash losses must not book as rejected");
+    assert_eq!(snap.responses, got);
+    assert_eq!(snap.live_workers(), 3, "exactly one worker died");
+
+    // post-crash availability: a fresh client gets 100% answers from
+    // the promoted survivors
+    let mut c2 = NetClient::connect(&addr).unwrap();
+    for k in 0..40u64 {
+        match c2.request(&wire_request(10_000 + k)).unwrap() {
+            WireResponse::Ok { id, .. } => assert_eq!(id, 10_000 + k),
+            WireResponse::Error { msg, .. } => {
+                panic!("post-crash request failed: {msg}")
+            }
+        }
+    }
+    srv.shutdown();
 }
 
 /// Seed-determinism survives the transport: the same seed produces the

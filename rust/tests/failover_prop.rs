@@ -1,0 +1,267 @@
+//! Property tests for worker-failure survival (ISSUE 8): replica
+//! promotion (`ShardMap::promote`) keeps every table owned and every
+//! gather bit-identical to the monolithic answer, with or without the
+//! hot-row cache in front, and the router's dead-worker skip conserves
+//! requests under arbitrary kill sets.
+
+use autorac::coordinator::router::{Router, RouteRejection};
+use autorac::coordinator::Policy;
+use autorac::data::{profile, ALL_PROFILES};
+use autorac::embeddings::{
+    BatchGatherer, HotCacheConfig, HotRowCache, ShardMap, ShardPolicy,
+    ShardedStore,
+};
+use autorac::util::qcheck::{qcheck, Gen};
+use autorac::{prop_assert, prop_assert_eq};
+use std::sync::mpsc;
+
+const POLICIES: [ShardPolicy; 3] = [
+    ShardPolicy::RoundRobinTables,
+    ShardPolicy::CapacityBalanced,
+    ShardPolicy::HotReplicated,
+];
+
+fn random_cards(g: &mut Gen) -> Vec<usize> {
+    let nt = g.usize(1, 24);
+    (0..nt).map(|_| g.usize(1, 1200)).collect()
+}
+
+/// A dead set over `n` shards that always leaves at least one survivor.
+fn random_dead(g: &mut Gen, n: usize) -> Vec<bool> {
+    let mut dead: Vec<bool> = (0..n).map(|_| g.usize(0, 2) == 0).collect();
+    let survivor = g.usize(0, n - 1);
+    dead[survivor] = false;
+    dead
+}
+
+/// Random per-record `(fields, ids)` batch with OOV sentinels mixed in.
+fn random_batch(
+    g: &mut Gen,
+    cards: &[usize],
+    n_records: usize,
+) -> Vec<(Vec<u32>, Vec<i32>)> {
+    let nf = cards.len();
+    (0..n_records)
+        .map(|_| {
+            let keep = g.usize(1, nf);
+            let mut fields: Vec<u32> = (0..nf as u32).collect();
+            g.rng().shuffle(&mut fields);
+            fields.truncate(keep);
+            fields.sort_unstable();
+            let ids: Vec<i32> = fields
+                .iter()
+                .map(|&f| {
+                    let c = cards[f as usize];
+                    match g.usize(0, 7) {
+                        0 => -1,
+                        1 => c as i32, // exactly card → OOV row
+                        _ => g.usize(0, c - 1) as i32,
+                    }
+                })
+                .collect();
+            (fields, ids)
+        })
+        .collect()
+}
+
+#[test]
+fn promote_preserves_ownership_invariants() {
+    qcheck(60, |g| {
+        let cards = random_cards(g);
+        let alpha = g.f64(1.05, 1.5);
+        let n_shards = g.usize(1, 8);
+        let policy = *g.choose(&POLICIES);
+        let m = ShardMap::build(&cards, alpha, n_shards, policy);
+        let dead: Vec<bool> = (0..n_shards).map(|_| g.usize(0, 2) == 0).collect();
+        let m2 = m.promote(&dead);
+        prop_assert_eq!(m2.n_shards, m.n_shards);
+        prop_assert_eq!(m2.n_tables(), m.n_tables());
+        for j in 0..m.n_tables() {
+            let before = m.owners(j);
+            let after = m2.owners(j);
+            prop_assert!(!after.is_empty(), "table {j} lost all owners");
+            prop_assert!(
+                after.windows(2).all(|w| w[0] < w[1]),
+                "owners not sorted/unique for table {j}"
+            );
+            prop_assert!(
+                after.iter().all(|s| before.contains(s)),
+                "promotion invented an owner for table {j}"
+            );
+            let live: Vec<u32> = before
+                .iter()
+                .copied()
+                .filter(|&s| !dead[s as usize])
+                .collect();
+            if live.is_empty() {
+                // every owner died: data-resident fallback keeps the
+                // original owners so the table stays addressable
+                prop_assert_eq!(after, before, "fallback for table {j}");
+            } else {
+                prop_assert_eq!(after, &live[..], "live filter for table {j}");
+            }
+        }
+        // no deaths → promotion is the identity
+        let id = m.promote(&vec![false; n_shards]);
+        for j in 0..m.n_tables() {
+            prop_assert_eq!(id.owners(j), m.owners(j));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn promoted_gathers_are_bit_identical_per_record() {
+    qcheck(16, |g| {
+        let name = *g.choose(&ALL_PROFILES);
+        let p = profile(name).unwrap();
+        let d_emb = *g.choose(&[4usize, 8]);
+        let seed = g.u64(0, 1 << 40);
+        let n_shards = g.usize(2, 5);
+        let policy = *g.choose(&POLICIES);
+        let map = ShardMap::for_profile(&p, n_shards, policy);
+        let store = ShardedStore::random(&p, d_emb, seed, map);
+        let dead = random_dead(g, n_shards);
+        let promoted = store.map.promote(&dead);
+        let live: Vec<usize> =
+            (0..n_shards).filter(|&s| !dead[s]).collect();
+        let local = live[g.usize(0, live.len() - 1)];
+        let batch = random_batch(g, &p.cards, g.usize(2, 10));
+
+        let mut want = Vec::new();
+        let mut got = Vec::new();
+        let (mut w_req, mut w_oob) = (0usize, 0usize);
+        let (mut g_req, mut g_oob) = (0usize, 0usize);
+        for (fields, ids) in &batch {
+            let (l, r, o) = store.gather_from(local, fields, ids, &mut want);
+            w_req += l + r;
+            w_oob += o;
+            let (l2, r2, o2) =
+                store.gather_from_with(&promoted, local, fields, ids, &mut got);
+            g_req += l2 + r2;
+            g_oob += o2;
+        }
+        prop_assert!(
+            got == want,
+            "promoted gather diverges ({name}, {policy:?}, dead {dead:?})"
+        );
+        prop_assert_eq!(g_req, w_req, "row counts must match");
+        prop_assert_eq!(g_oob, w_oob, "OOV counts must match");
+        Ok(())
+    });
+}
+
+#[test]
+fn promoted_batch_gathers_are_bit_identical_with_any_cache() {
+    qcheck(10, |g| {
+        let name = *g.choose(&ALL_PROFILES);
+        let p = profile(name).unwrap();
+        let seed = g.u64(0, 1 << 40);
+        let n_shards = g.usize(2, 4);
+        let policy = *g.choose(&POLICIES);
+        let map = ShardMap::for_profile(&p, n_shards, policy);
+        let store = ShardedStore::random(&p, 8, seed, map);
+        let dead = random_dead(g, n_shards);
+        let promoted = store.map.promote(&dead);
+        let live: Vec<usize> =
+            (0..n_shards).filter(|&s| !dead[s]).collect();
+        let local = live[g.usize(0, live.len() - 1)];
+        let batch = random_batch(g, &p.cards, g.usize(2, 10));
+
+        // reference: per-record gathers through the ORIGINAL map
+        let mut want = Vec::new();
+        for (fields, ids) in &batch {
+            store.gather_from(local, fields, ids, &mut want);
+        }
+
+        let caches = [
+            None,
+            Some(HotRowCache::new(
+                &store,
+                p.zipf_alpha,
+                HotCacheConfig {
+                    capacity: g.usize(1, 128),
+                    prefetch: true,
+                },
+            )),
+        ];
+        for cache in &caches {
+            let mut gatherer = BatchGatherer::new(&store.cards);
+            let mut got = Vec::new();
+            let st = gatherer.gather_batch_with(
+                &promoted,
+                &store,
+                cache.as_ref(),
+                local,
+                batch.iter().map(|(f, i)| (f.as_slice(), i.as_slice())),
+                &mut got,
+            );
+            prop_assert!(
+                got == want,
+                "promoted batch gather diverges \
+                 ({name}, {policy:?}, dead {dead:?}, cache {})",
+                cache.is_some()
+            );
+            prop_assert!(st.balanced(), "unbalanced ledger: {st:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn routing_skips_dead_workers_and_conserves() {
+    qcheck(40, |g| {
+        let workers = g.usize(2, 6);
+        let n_dead = g.usize(1, workers - 1);
+        let policy = *g.choose(&[
+            Policy::RoundRobin,
+            Policy::LeastQueued,
+            Policy::ShardAffinity, // no map attached → least-queued
+        ]);
+        let (txs, rxs): (Vec<_>, Vec<_>) =
+            (0..workers).map(|_| mpsc::channel::<usize>()).unzip();
+        let r = Router::new(txs, policy);
+        let mut rxs: Vec<Option<mpsc::Receiver<usize>>> =
+            rxs.into_iter().map(Some).collect();
+        let mut dead = vec![false; workers];
+        for _ in 0..n_dead {
+            let mut k = g.usize(0, workers - 1);
+            while dead[k] {
+                k = (k + 1) % workers;
+            }
+            dead[k] = true;
+            if g.usize(0, 1) == 0 {
+                // crash style: receiver vanishes, router learns on send
+                rxs[k] = None;
+            } else {
+                // guard style: the slot is closed up front
+                r.slot_handle(k).close();
+            }
+        }
+        let n = g.usize(workers, 80);
+        for i in 0..n {
+            match r.route_bounded(&[], usize::MAX, i) {
+                Ok(w) => prop_assert!(
+                    !dead[w],
+                    "request {i} landed on dead worker {w} ({policy:?})"
+                ),
+                Err(RouteRejection::Closed(_)) => {
+                    prop_assert!(false, "false total-outage with survivors")
+                }
+                Err(RouteRejection::Overloaded(_)) => {
+                    prop_assert!(false, "unbounded route overloaded")
+                }
+            }
+        }
+        // ≥ workers routes guarantee every crash-style death was
+        // discovered, so the router's live count is exact by now
+        prop_assert_eq!(r.n_alive(), workers - n_dead);
+        let total: usize = rxs
+            .iter()
+            .flatten()
+            .map(|rx| rx.try_iter().count())
+            .sum();
+        prop_assert_eq!(total, n, "reroute must conserve requests");
+        Ok(())
+    });
+}

@@ -22,7 +22,7 @@ echo "== tier 1.5: property/differential suites under --release =="
 # The qcheck suites draw hundreds of randomized cases; running them
 # optimized both speeds CI and exercises the release float paths the
 # benches measure.
-cargo test -q --release --test sharding_prop --test sim_differential --test coordinator_e2e --test hotcache_prop
+cargo test -q --release --test sharding_prop --test sim_differential --test coordinator_e2e --test hotcache_prop --test failover_prop
 cargo test -q --release --lib mapping::cost
 
 echo "== wire suites under --release: lazy/tree differential + malformed-input =="
@@ -64,6 +64,35 @@ for field in '"transport": "socket"' '"wire_p50_us"' '"throughput_rps"' \
         exit 1
     fi
 done
+
+echo "== serve-bench failover smoke: worker-crash scenario, 4 workers =="
+# Kill worker 1 two batches in (deterministic fuse — a wall-clock fuse
+# can lose the race on a fast CI box) and hold the run to the §SH SLO:
+# post-crash availability >= 99%, exact ledger, p99 under budget. The
+# coordinator must reroute around the corpse — a single "no live
+# worker" / "all worker queues closed" line means the old poison bug
+# is back. Fail closed on the verdict line AND the JSON fields.
+crash_json=$(mktemp /tmp/serve_crash.XXXXXX.json)
+crash_out=$(cargo run --quiet --release --bin autorac -- serve-bench \
+    --quick --workers 4 --scenario worker-crash --crash-worker 1 \
+    --crash-after-batches 2 --slo-p99-ms 500 --json "$crash_json")
+printf '%s\n' "$crash_out"
+if printf '%s\n' "$crash_out" | grep -Eq "no live worker|all worker queues closed"; then
+    echo "ERROR: a single worker crash surfaced a total-outage error"
+    exit 1
+fi
+if ! printf '%s\n' "$crash_out" | grep -q "SLO PASS"; then
+    echo "ERROR: worker-crash scenario missed its SLO (or the verdict line vanished)"
+    exit 1
+fi
+for field in '"scenario": "worker-crash"' '"ledger_ok": true' \
+    '"slo_ok": true' '"post_crash_availability"' '"live_workers"'; do
+    if ! grep -q "$field" "$crash_json"; then
+        echo "ERROR: worker-crash JSON report lost $field"
+        exit 1
+    fi
+done
+rm -f "$crash_json"
 
 echo "== search determinism under --release (workers=8 vs serial) =="
 # Bit-identity of the parallel engine is a release-mode property too —
