@@ -399,6 +399,93 @@ impl InferenceEngine for CrashAfter {
     }
 }
 
+/// Gray-failure injection wrapper: the slow twin of [`CrashAfter`].
+/// Serves bit-identically to `inner` forever — same outputs, same
+/// accessors — but once `after_batches` batches have been served, every
+/// subsequent batch is delayed by `delay` plus a seeded jitter drawn
+/// from `[0, jitter)`. The worker never dies and never errors; it just
+/// straggles, which is exactly the failure the S33 tail-tolerance layer
+/// (hedging, quarantine, brownout) must absorb. The `slow-worker`
+/// scenario (`loadgen::SlowInjector`) builds on it.
+pub struct SlowAfter {
+    inner: Box<dyn InferenceEngine>,
+    /// slow down once this many batches have been served
+    after_batches: usize,
+    delay: std::time::Duration,
+    jitter: std::time::Duration,
+    rng: crate::util::rng::Rng,
+    batches: usize,
+}
+
+impl SlowAfter {
+    /// Serve `n` batches at full speed, then add `delay` (+ jitter in
+    /// `[0, jitter)`, drawn from `seed`) to every batch after.
+    pub fn new(
+        inner: Box<dyn InferenceEngine>,
+        n: usize,
+        delay: std::time::Duration,
+        jitter: std::time::Duration,
+        seed: u64,
+    ) -> SlowAfter {
+        SlowAfter {
+            inner,
+            after_batches: n,
+            delay,
+            jitter,
+            rng: crate::util::rng::Rng::new(seed),
+            batches: 0,
+        }
+    }
+
+    fn straggle(&mut self) {
+        if self.batches >= self.after_batches {
+            let j = self.jitter.as_nanos() as u64;
+            let extra = if j == 0 { 0 } else { self.rng.below(j) };
+            std::thread::sleep(self.delay + std::time::Duration::from_nanos(extra));
+        }
+        self.batches += 1;
+    }
+}
+
+impl InferenceEngine for SlowAfter {
+    fn infer_batch(
+        &mut self,
+        dense: &[f32],
+        sparse: &[f32],
+        batch: usize,
+    ) -> crate::Result<Vec<f32>> {
+        self.straggle();
+        self.inner.infer_batch(dense, sparse, batch)
+    }
+
+    fn infer_batch_into(
+        &mut self,
+        dense: &[f32],
+        sparse: &[f32],
+        batch: usize,
+        out: &mut Vec<f32>,
+    ) -> crate::Result<()> {
+        self.straggle();
+        self.inner.infer_batch_into(dense, sparse, batch, out)
+    }
+
+    fn compiled_batch(&self) -> usize {
+        self.inner.compiled_batch()
+    }
+
+    fn n_dense(&self) -> usize {
+        self.inner.n_dense()
+    }
+
+    fn n_sparse(&self) -> usize {
+        self.inner.n_sparse()
+    }
+
+    fn d_emb(&self) -> usize {
+        self.inner.d_emb()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -420,6 +507,32 @@ mod tests {
             || e.infer_batch(&dense, &sparse, 1),
         ));
         assert!(crashed.is_err(), "trigger must unwind, not return");
+    }
+
+    #[test]
+    fn slow_after_straggles_but_stays_bit_identical() {
+        let inner = Box::new(MockEngine::new(8, 2, 3, 4));
+        let mut e = SlowAfter::new(
+            inner,
+            1,
+            std::time::Duration::from_millis(5),
+            std::time::Duration::ZERO,
+            7,
+        );
+        let dense = vec![0.5f32; 2];
+        let sparse = vec![0.1f32; 3 * 4];
+        let mut bare = MockEngine::new(8, 2, 3, 4);
+        let want = bare.infer_batch(&dense, &sparse, 1).unwrap();
+        // batch 1: full speed, identical output
+        let t = std::time::Instant::now();
+        assert_eq!(e.infer_batch(&dense, &sparse, 1).unwrap(), want);
+        assert!(t.elapsed() < std::time::Duration::from_millis(5));
+        // batch 2: straggles, output STILL identical — gray, not wrong
+        let t = std::time::Instant::now();
+        assert_eq!(e.infer_batch(&dense, &sparse, 1).unwrap(), want);
+        assert!(t.elapsed() >= std::time::Duration::from_millis(5));
+        assert_eq!((e.n_dense(), e.n_sparse(), e.d_emb()), (2, 3, 4));
+        assert_eq!(e.compiled_batch(), 8);
     }
 
     #[test]

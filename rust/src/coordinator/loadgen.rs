@@ -23,7 +23,7 @@
 //! byte-identical schedule no matter how it is delivered, pinned by the
 //! schedule-determinism regression in `rust/tests/coordinator_e2e.rs`.
 
-use super::engine::{CrashAfter, InferenceEngine};
+use super::engine::{CrashAfter, InferenceEngine, SlowAfter};
 use super::metrics::Metrics;
 use super::net::{NetClient, WireResponse};
 use super::server::{Admission, Coordinator, Request};
@@ -58,6 +58,12 @@ pub struct LoadGenConfig {
     /// (the hostile traffic shape of real CTR logs; 0.0 = none, and the
     /// schedule stays bit-identical to the pre-OOV generator)
     pub oov_frac: f64,
+    /// per-request end-to-end deadline budget in microseconds (S33);
+    /// 0 — the default — sends no deadline at all, keeping schedules
+    /// and wire lines bit-identical to the pre-deadline generator. The
+    /// value is a constant, not an RNG draw, so turning it on never
+    /// perturbs the seeded content stream.
+    pub deadline_us: u64,
 }
 
 impl Default for LoadGenConfig {
@@ -68,6 +74,7 @@ impl Default for LoadGenConfig {
             seed: 7,
             coverage: 1.0,
             oov_frac: 0.0,
+            deadline_us: 0,
         }
     }
 }
@@ -80,8 +87,12 @@ pub struct LoadReport {
     pub rejected: usize,
     /// responses received by the load generator
     pub completed: usize,
+    /// answered with a structured `deadline_exceeded` reply (S33) —
+    /// neither completed nor lost: the client heard back, just not with
+    /// a score
+    pub expired: usize,
     /// accepted but never answered (shed by the worker or dropped by an
-    /// engine failure) — always `accepted - completed`
+    /// engine failure) — always `accepted - completed - expired`
     pub lost: usize,
 }
 
@@ -108,6 +119,8 @@ pub struct ScheduledRequest {
     /// table ids touched, strictly ascending
     pub fields: Vec<u32>,
     pub ids: Vec<i32>,
+    /// end-to-end deadline budget in microseconds; 0 = none (S33)
+    pub deadline_us: u64,
 }
 
 impl ScheduledRequest {
@@ -118,11 +131,15 @@ impl ScheduledRequest {
             dense: self.dense.clone(),
             tables: self.fields.clone(),
             ids: self.ids.clone(),
+            deadline_us: (self.deadline_us > 0).then_some(self.deadline_us),
         }
     }
 
     fn into_request(self, tx: &mpsc::Sender<super::server::Response>) -> Request {
+        let deadline =
+            (self.deadline_us > 0).then(|| Duration::from_micros(self.deadline_us));
         Request::partial(self.k, self.dense, self.fields, self.ids, tx.clone())
+            .with_deadline(deadline)
     }
 }
 
@@ -201,6 +218,7 @@ pub fn build_schedule(
             dense,
             fields,
             ids,
+            deadline_us: cfg.deadline_us,
         });
     }
     Ok(out)
@@ -227,6 +245,13 @@ pub enum Scenario {
     WorkerCrash,
     /// sinusoidal rate swing across the run (open loop)
     Diurnal,
+    /// steady offered load while `slow_worker` goes gray mid-run (S33):
+    /// correct answers, tens of ms late — the shape hedged dispatch and
+    /// quarantine exist for. The schedule itself is untransformed.
+    SlowWorker,
+    /// flash-crowd surge PLUS a gray worker: sustained deadline
+    /// pressure, the shape the brownout controller exists for (S33)
+    Brownout,
 }
 
 impl Scenario {
@@ -237,9 +262,12 @@ impl Scenario {
             "hot-key-storm" => Scenario::HotKeyStorm,
             "worker-crash" => Scenario::WorkerCrash,
             "diurnal" => Scenario::Diurnal,
+            "slow-worker" => Scenario::SlowWorker,
+            "brownout" => Scenario::Brownout,
             other => crate::bail!(
                 "unknown scenario {other:?} \
-                 (steady|flash-crowd|hot-key-storm|worker-crash|diurnal)"
+                 (steady|flash-crowd|hot-key-storm|worker-crash|diurnal\
+                 |slow-worker|brownout)"
             ),
         })
     }
@@ -251,6 +279,8 @@ impl Scenario {
             Scenario::HotKeyStorm => "hot-key-storm",
             Scenario::WorkerCrash => "worker-crash",
             Scenario::Diurnal => "diurnal",
+            Scenario::SlowWorker => "slow-worker",
+            Scenario::Brownout => "brownout",
         }
     }
 }
@@ -274,6 +304,15 @@ pub struct ScenarioSpec {
     /// batches. Wins over the wall-clock fuse; what the tests and the
     /// verify smoke use, since a quick run can outrace any deadline.
     pub crash_after_batches: Option<usize>,
+    /// slow-worker/brownout: which worker goes gray
+    pub slow_worker: usize,
+    /// slow-worker/brownout: batches served at full speed before the
+    /// straggling starts (deterministic fuse, like `crash_after_batches`)
+    pub slow_after_batches: usize,
+    /// slow-worker/brownout: fixed extra latency per straggling batch
+    pub slow_delay: Duration,
+    /// slow-worker/brownout: seeded jitter added on top of `slow_delay`
+    pub slow_jitter: Duration,
 }
 
 impl ScenarioSpec {
@@ -285,6 +324,10 @@ impl ScenarioSpec {
             crash_worker: 1,
             crash_after: Duration::from_millis(60),
             crash_after_batches: None,
+            slow_worker: 0,
+            slow_after_batches: 2,
+            slow_delay: Duration::from_millis(20),
+            slow_jitter: Duration::from_millis(2),
         }
     }
 }
@@ -316,8 +359,10 @@ pub fn build_scenario_schedule(
     let n = sched.len();
     let (a, b) = (n / 3, 2 * n / 3);
     match spec.scenario {
-        Scenario::Steady | Scenario::WorkerCrash => {}
-        Scenario::FlashCrowd => {
+        // fault scenarios perturb the SERVER (engine wrappers), never
+        // the offered load — their schedules stay bit-identical to base
+        Scenario::Steady | Scenario::WorkerCrash | Scenario::SlowWorker => {}
+        Scenario::FlashCrowd | Scenario::Brownout => {
             let surge = spec.surge.max(1.0);
             reshape_gaps(&mut sched, |k, g| {
                 if (a..b).contains(&k) {
@@ -387,6 +432,56 @@ impl CrashInjector {
             Some(nb) => Box::new(CrashAfter::after_batches(engine, nb)),
             None => Box::new(CrashAfter::at_deadline(engine, self.deadline)),
         }
+    }
+}
+
+/// Arms one worker's engine with a [`SlowAfter`] gray fault (S33):
+/// bit-identical outputs, tens of milliseconds late. The engine-wrapper
+/// twin of [`CrashInjector`], for the scenarios where the worker is
+/// SLOW rather than DEAD — the failure mode breakers built on liveness
+/// flags cannot see.
+pub struct SlowInjector {
+    worker: usize,
+    after_batches: usize,
+    delay: Duration,
+    jitter: Duration,
+}
+
+impl SlowInjector {
+    /// `None` for scenarios without a gray fault.
+    pub fn new(spec: &ScenarioSpec) -> Option<SlowInjector> {
+        if !matches!(
+            spec.scenario,
+            Scenario::SlowWorker | Scenario::Brownout
+        ) {
+            return None;
+        }
+        Some(SlowInjector {
+            worker: spec.slow_worker,
+            after_batches: spec.slow_after_batches,
+            delay: spec.slow_delay,
+            jitter: spec.slow_jitter,
+        })
+    }
+
+    /// Wrap worker `i`'s engine — identity for every worker but the
+    /// victim. Call from inside the coordinator's `make_engine` factory.
+    pub fn arm(
+        &self,
+        i: usize,
+        engine: Box<dyn InferenceEngine>,
+    ) -> Box<dyn InferenceEngine> {
+        if i != self.worker {
+            return engine;
+        }
+        Box::new(SlowAfter::new(
+            engine,
+            self.after_batches,
+            self.delay,
+            self.jitter,
+            // fixed seed: the jitter stream is deterministic per run
+            0x510_u64 ^ i as u64,
+        ))
     }
 }
 
@@ -567,17 +662,24 @@ fn run_schedule_probed(
                             p.on_accepted(k, &coord.metrics);
                         }
                     }
-                    Admission::Rejected => rep.rejected += 1,
+                    // deadline-infeasible is a rejection leg on the
+                    // server ledger; the client mirrors that
+                    Admission::Rejected
+                    | Admission::DeadlineInfeasible => rep.rejected += 1,
                 }
             }
             drop(tx);
             for r in rx.iter() {
-                rep.completed += 1;
-                if let Some(p) = probe.as_deref_mut() {
-                    p.on_response(r.id);
+                if r.err.is_some() {
+                    rep.expired += 1;
+                } else {
+                    rep.completed += 1;
+                    if let Some(p) = probe.as_deref_mut() {
+                        p.on_response(r.id);
+                    }
                 }
             }
-            rep.lost = rep.accepted - rep.completed;
+            rep.lost = rep.accepted - rep.completed - rep.expired;
         }
         Arrival::ClosedLoop { concurrency } => {
             let n = schedule.len();
@@ -599,10 +701,14 @@ fn run_schedule_probed(
             let mut forgiven = start.shed + start.failed;
             while rep.sent < n || outstanding > 0 {
                 for r in rx.try_iter() {
-                    rep.completed += 1;
                     outstanding = outstanding.saturating_sub(1);
-                    if let Some(p) = probe.as_deref_mut() {
-                        p.on_response(r.id);
+                    if r.err.is_some() {
+                        rep.expired += 1;
+                    } else {
+                        rep.completed += 1;
+                        if let Some(p) = probe.as_deref_mut() {
+                            p.on_response(r.id);
+                        }
                     }
                 }
                 while rep.sent < n && outstanding < window {
@@ -617,7 +723,10 @@ fn run_schedule_probed(
                                 p.on_accepted(k, &coord.metrics);
                             }
                         }
-                        Admission::Rejected => rep.rejected += 1,
+                        Admission::Rejected
+                        | Admission::DeadlineInfeasible => {
+                            rep.rejected += 1
+                        }
                     }
                 }
                 if outstanding == 0 {
@@ -625,10 +734,14 @@ fn run_schedule_probed(
                 }
                 match rx.recv_timeout(Duration::from_millis(300)) {
                     Ok(r) => {
-                        rep.completed += 1;
                         outstanding -= 1;
-                        if let Some(p) = probe.as_deref_mut() {
-                            p.on_response(r.id);
+                        if r.err.is_some() {
+                            rep.expired += 1;
+                        } else {
+                            rep.completed += 1;
+                            if let Some(p) = probe.as_deref_mut() {
+                                p.on_response(r.id);
+                            }
                         }
                     }
                     Err(_) => {
@@ -646,12 +759,16 @@ fn run_schedule_probed(
             // worker answers or drops it, so this drain terminates and
             // catches any straggler that raced the ghost accounting.
             for r in rx.iter() {
-                rep.completed += 1;
-                if let Some(p) = probe.as_deref_mut() {
-                    p.on_response(r.id);
+                if r.err.is_some() {
+                    rep.expired += 1;
+                } else {
+                    rep.completed += 1;
+                    if let Some(p) = probe.as_deref_mut() {
+                        p.on_response(r.id);
+                    }
                 }
             }
-            rep.lost = rep.accepted - rep.completed;
+            rep.lost = rep.accepted - rep.completed - rep.expired;
         }
     }
     Ok(rep)
@@ -665,6 +782,7 @@ struct ConnReport {
     sent: usize,
     rejected: usize,
     completed: usize,
+    expired: usize,
     lat_us: Vec<f64>,
 }
 
@@ -694,6 +812,7 @@ fn drive_conn(
         std::thread::spawn(move || {
             let mut completed = 0usize;
             let mut rejected = 0usize;
+            let mut expired = 0usize;
             let mut lat_us: Vec<f64> = Vec::new();
             loop {
                 match rx.recv() {
@@ -705,17 +824,24 @@ fn drive_conn(
                         completed += 1;
                         release_slot(&outstanding);
                     }
-                    Ok(Some(WireResponse::Error { id, .. })) => {
+                    Ok(Some(WireResponse::Error { id, msg })) => {
                         if let Some(id) = id {
                             inflight.lock().unwrap().remove(&id);
                         }
-                        rejected += 1;
+                        // the wire collapses infeasible-at-admission and
+                        // expired-at-dequeue into one structured error;
+                        // the server's ledger keeps them distinct
+                        if msg == "deadline_exceeded" {
+                            expired += 1;
+                        } else {
+                            rejected += 1;
+                        }
                         release_slot(&outstanding);
                     }
                     Ok(None) | Err(_) => break,
                 }
             }
-            (completed, rejected, lat_us)
+            (completed, rejected, expired, lat_us)
         })
     };
 
@@ -746,13 +872,14 @@ fn drive_conn(
         sent += 1;
     }
     tx.finish();
-    let (completed, rejected, lat_us) = recv
+    let (completed, rejected, expired, lat_us) = recv
         .join()
         .map_err(|_| crate::err!("socket receiver thread panicked"))?;
     Ok(ConnReport {
         sent,
         rejected,
         completed,
+        expired,
         lat_us,
     })
 }
@@ -808,12 +935,15 @@ pub fn run_socket(
         rep.sent += c.sent;
         rep.rejected += c.rejected;
         rep.completed += c.completed;
+        rep.expired += c.expired;
         for l in c.lat_us {
             q.push(l);
         }
     }
     rep.accepted = rep.sent - rep.rejected;
-    rep.lost = rep.accepted.saturating_sub(rep.completed);
+    rep.lost = rep
+        .accepted
+        .saturating_sub(rep.completed + rep.expired);
     let elapsed = t0.elapsed().as_secs_f64();
     let stats = WireStats {
         wire_p50_us: if q.len() == 0 { 0.0 } else { q.median() },
@@ -857,6 +987,7 @@ mod tests {
                 seed: 11,
                 coverage: 1.0,
                 oov_frac: 0.0,
+                deadline_us: 0,
             },
         )
         .unwrap();
@@ -879,6 +1010,7 @@ mod tests {
                 seed: 5,
                 coverage: 0.5,
                 oov_frac: 0.0,
+                deadline_us: 0,
             },
         )
         .unwrap();
@@ -918,6 +1050,7 @@ mod tests {
                 seed: 13,
                 coverage: 0.6,
                 oov_frac: 0.0,
+                deadline_us: 0,
             };
             let a = build_schedule(&p, &cfg).unwrap();
             let b = build_schedule(&p, &cfg).unwrap();
@@ -943,6 +1076,7 @@ mod tests {
             seed: 17,
             coverage: 1.0,
             oov_frac: 0.0,
+            deadline_us: 0,
         };
         let clean = build_schedule(&p, &base).unwrap();
         assert!(
@@ -981,6 +1115,7 @@ mod tests {
             seed: 3,
             coverage: 1.0,
             oov_frac: 0.0,
+            deadline_us: 0,
         };
         let sched = build_schedule(&p, &cfg).unwrap();
         assert!(sched.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
@@ -997,6 +1132,7 @@ mod tests {
             seed: 21,
             coverage: 0.7,
             oov_frac: 0.0,
+            deadline_us: 0,
         };
         let sched = build_schedule(&p, &cfg).unwrap();
         for with_ctx in [false, true] {
@@ -1019,6 +1155,8 @@ mod tests {
             Scenario::HotKeyStorm,
             Scenario::WorkerCrash,
             Scenario::Diurnal,
+            Scenario::SlowWorker,
+            Scenario::Brownout,
         ] {
             assert_eq!(Scenario::parse(s.name()).unwrap(), s);
         }
@@ -1034,9 +1172,14 @@ mod tests {
             seed: 23,
             coverage: 0.8,
             oov_frac: 0.1,
+            deadline_us: 0,
         };
         let base = build_schedule(&p, &cfg).unwrap();
-        for sc in [Scenario::Steady, Scenario::WorkerCrash] {
+        for sc in [
+            Scenario::Steady,
+            Scenario::WorkerCrash,
+            Scenario::SlowWorker,
+        ] {
             let got =
                 build_scenario_schedule(&p, &cfg, &ScenarioSpec::new(sc))
                     .unwrap();
@@ -1053,6 +1196,7 @@ mod tests {
             seed: 29,
             coverage: 1.0,
             oov_frac: 0.0,
+            deadline_us: 0,
         };
         let base = build_schedule(&p, &cfg).unwrap();
         let spec = ScenarioSpec::new(Scenario::FlashCrowd);
@@ -1088,6 +1232,7 @@ mod tests {
             seed: 31,
             coverage: 1.0,
             oov_frac: 0.2,
+            deadline_us: 0,
         };
         let base = build_schedule(&p, &cfg).unwrap();
         let spec = ScenarioSpec::new(Scenario::HotKeyStorm);
@@ -1126,6 +1271,7 @@ mod tests {
             seed: 37,
             coverage: 1.0,
             oov_frac: 0.0,
+            deadline_us: 0,
         };
         let spec = ScenarioSpec::new(Scenario::Diurnal);
         let x = build_scenario_schedule(&p, &cfg, &spec).unwrap();
@@ -1169,6 +1315,7 @@ mod tests {
             seed: 41,
             coverage: 1.0,
             oov_frac: 0.0,
+            deadline_us: 0,
         };
         let out =
             run_scenario(&c, &profile("kdd").unwrap(), &cfg, &spec).unwrap();
@@ -1196,6 +1343,133 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
         }
         assert_eq!(c.n_live(), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn slow_worker_scenario_hedges_and_balances_the_ledger() {
+        use crate::coordinator::batcher::BatcherConfig;
+        use crate::coordinator::router::Policy;
+        use crate::coordinator::tail::TailConfig;
+        let mut spec = ScenarioSpec::new(Scenario::SlowWorker);
+        spec.slow_worker = 0;
+        spec.slow_after_batches = 1;
+        spec.slow_delay = Duration::from_millis(10);
+        spec.slow_jitter = Duration::from_millis(1);
+        let inj = Arc::new(SlowInjector::new(&spec).expect("slow scenario"));
+        assert!(
+            SlowInjector::new(&ScenarioSpec::new(Scenario::Steady)).is_none(),
+            "steady arms nothing"
+        );
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                n_workers: 2,
+                policy: Policy::LeastQueued,
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    ..Default::default()
+                },
+                tail: Some(TailConfig {
+                    hedge_after: Duration::from_millis(2),
+                    hedge_budget: 1.0,
+                    tick: Duration::from_millis(1),
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+            Arc::new(EmbeddingStore::random(&profile("kdd").unwrap(), 8, 3)),
+            move |i| {
+                let e: Box<dyn InferenceEngine> =
+                    Box::new(MockEngine::new(16, 3, 10, 8));
+                Ok(inj.arm(i, e))
+            },
+        )
+        .unwrap();
+        let cfg = LoadGenConfig {
+            n_requests: 80,
+            arrival: Arrival::ClosedLoop { concurrency: 8 },
+            seed: 43,
+            coverage: 1.0,
+            oov_frac: 0.0,
+            deadline_us: 0,
+        };
+        let rep = run(&c, &profile("kdd").unwrap(), &cfg).unwrap();
+        assert_eq!(rep.sent, 80);
+        assert_eq!(
+            rep.completed + rep.expired + rep.lost,
+            rep.accepted,
+            "client accounting must close"
+        );
+        let snap = c.metrics.snapshot();
+        // the gray worker serves every request 10ms late; with a 2ms
+        // hedge trigger and a 1ms governor tick at least one aged entry
+        // must have been hedged (5× timing margin against CI jitter)
+        assert!(snap.hedges > 0, "no hedge fired against a 10ms straggler");
+        assert!(
+            snap.ledger_ok(),
+            "ledger: req {} resp {} rej {} shed {} failed {} expired {}",
+            snap.requests,
+            snap.responses,
+            snap.rejected,
+            snap.shed,
+            snap.failed,
+            snap.expired
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn expired_deadlines_are_counted_not_lost() {
+        use crate::coordinator::batcher::BatcherConfig;
+        // every batch stalls 8ms; a 3ms deadline means queued requests
+        // expire at dequeue and must come back as structured errors,
+        // not vanish into `lost`
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                n_workers: 1,
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            Arc::new(EmbeddingStore::random(&profile("kdd").unwrap(), 8, 3)),
+            |_| {
+                Ok(Box::new(SlowAfter::new(
+                    Box::new(MockEngine::new(16, 3, 10, 8)),
+                    0,
+                    Duration::from_millis(8),
+                    Duration::ZERO,
+                    7,
+                )))
+            },
+        )
+        .unwrap();
+        let cfg = LoadGenConfig {
+            n_requests: 30,
+            arrival: Arrival::ClosedLoop { concurrency: 8 },
+            seed: 47,
+            coverage: 1.0,
+            oov_frac: 0.0,
+            deadline_us: 3_000,
+        };
+        let rep = run(&c, &profile("kdd").unwrap(), &cfg).unwrap();
+        assert_eq!(rep.sent, 30);
+        assert!(rep.expired > 0, "queued requests must blow a 3ms deadline");
+        assert_eq!(rep.lost, 0, "expired requests answer; they are not lost");
+        assert_eq!(rep.completed + rep.expired + rep.rejected, rep.sent);
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.expired, rep.expired as u64);
+        assert!(
+            snap.ledger_ok(),
+            "ledger: req {} resp {} rej {} shed {} failed {} expired {}",
+            snap.requests,
+            snap.responses,
+            snap.rejected,
+            snap.shed,
+            snap.failed,
+            snap.expired
+        );
         c.shutdown();
     }
 }

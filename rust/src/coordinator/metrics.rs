@@ -23,6 +23,24 @@ struct Inner {
     shed: u64,
     /// requests lost to engine failures (whole batch dropped)
     failed: u64,
+    /// deadline propagation (S33): requests dropped at dequeue because
+    /// their end-to-end deadline had already passed
+    expired: u64,
+    /// of `rejected`, those turned away because no worker could meet
+    /// the request's deadline budget (depth × EWMA admission check)
+    deadline_rejected: u64,
+    /// hedged dispatch (S33): duplicate copies issued / copies that
+    /// won their gate / copies that lost it (non-ledger — the winner
+    /// books the terminal leg)
+    hedges: u64,
+    hedges_won: u64,
+    hedge_suppressed: u64,
+    /// brownout (S33): responses served in cache-only degraded mode,
+    /// rows skipped (zero-filled) by degraded gathers, and distinct
+    /// brownout entries
+    degraded_responses: u64,
+    degraded_rows: u64,
+    brownout_entries: u64,
     /// sharded gather accounting (rows served locally vs fetched from
     /// a peer shard)
     local_rows: u64,
@@ -60,6 +78,19 @@ pub struct MetricsSnapshot {
     pub shed: u64,
     /// requests dropped because the engine failed their batch
     pub failed: u64,
+    /// requests dropped at dequeue with their deadline already blown
+    pub expired: u64,
+    /// of `rejected`, those refused by the deadline admission check
+    pub deadline_rejected: u64,
+    /// hedge copies issued / won / suppressed (S33)
+    pub hedges: u64,
+    pub hedges_won: u64,
+    pub hedge_suppressed: u64,
+    /// brownout accounting: degraded-mode responses, zero-filled rows,
+    /// and distinct brownout entries
+    pub degraded_responses: u64,
+    pub degraded_rows: u64,
+    pub brownout_entries: u64,
     /// embedding rows gathered on the worker's own shard
     pub local_rows: u64,
     /// embedding rows fetched cross-shard
@@ -116,10 +147,21 @@ impl MetricsSnapshot {
     }
 
     /// The conservation ledger, as a checkable predicate: every request
-    /// is answered, rejected, shed, or failed — nothing vanishes, even
-    /// across a worker crash.
+    /// is answered, rejected, shed, failed, or expired — nothing
+    /// vanishes, even across a worker crash or a hedged duplicate (the
+    /// gate admits exactly one terminal booking per request).
     pub fn ledger_ok(&self) -> bool {
-        self.requests == self.responses + self.rejected + self.shed + self.failed
+        self.requests
+            == self.responses + self.rejected + self.shed + self.failed + self.expired
+    }
+
+    /// Fraction of accepted-and-answered traffic that was hedged.
+    pub fn hedge_rate(&self) -> f64 {
+        if self.responses == 0 {
+            0.0
+        } else {
+            self.hedges as f64 / self.responses as f64
+        }
     }
 
     /// Fraction of arriving requests turned away or shed.
@@ -190,6 +232,55 @@ impl Metrics {
         self.inner.lock().unwrap().failed += n as u64;
     }
 
+    /// Book `n` requests dropped at dequeue with their deadline blown.
+    pub fn on_expired(&self, n: usize) {
+        self.inner.lock().unwrap().expired += n as u64;
+    }
+
+    /// Deadline admission refusal: a `rejected` ledger leg, with the
+    /// deadline sub-cause counted alongside.
+    pub fn on_deadline_rejected(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.rejected += 1;
+        m.deadline_rejected += 1;
+    }
+
+    /// One hedge copy issued (non-ledger: the copy is not a request).
+    pub fn on_hedge(&self) {
+        self.inner.lock().unwrap().hedges += 1;
+    }
+
+    /// A hedge copy won its gate and produced the response.
+    pub fn on_hedge_won(&self) {
+        self.inner.lock().unwrap().hedges_won += 1;
+    }
+
+    /// A duplicate copy lost its gate and was dropped unbooked.
+    pub fn on_hedge_suppressed(&self) {
+        self.inner.lock().unwrap().hedge_suppressed += 1;
+    }
+
+    /// One brownout batch: `n` responses served cache/local-only, with
+    /// `rows` remote rows skipped (zero-filled).
+    pub fn on_degraded(&self, n: usize, rows: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.degraded_responses += n as u64;
+        m.degraded_rows += rows as u64;
+    }
+
+    /// The brownout controller flipped from clear to active.
+    pub fn on_brownout_entry(&self) {
+        self.inner.lock().unwrap().brownout_entries += 1;
+    }
+
+    /// One-lock read of the brownout pressure inputs: `(requests,
+    /// expired + shed + rejected)` — the governor diffs successive
+    /// reads to estimate the windowed bad-outcome fraction.
+    pub fn pressure_counts(&self) -> (u64, u64) {
+        let m = self.inner.lock().unwrap();
+        (m.requests, m.expired + m.shed + m.rejected)
+    }
+
     /// Record one batch's gather ledger: locality, cache outcomes,
     /// coalesced duplicates, and OOV resolutions — one lock for all six.
     pub fn on_gather(&self, gs: &GatherStats) {
@@ -246,6 +337,14 @@ impl Metrics {
             rejected: m.rejected,
             shed: m.shed,
             failed: m.failed,
+            expired: m.expired,
+            deadline_rejected: m.deadline_rejected,
+            hedges: m.hedges,
+            hedges_won: m.hedges_won,
+            hedge_suppressed: m.hedge_suppressed,
+            degraded_responses: m.degraded_responses,
+            degraded_rows: m.degraded_rows,
+            brownout_entries: m.brownout_entries,
             local_rows: m.local_rows,
             remote_rows: m.remote_rows,
             oob_ids: m.oob_ids,
@@ -342,6 +441,39 @@ mod tests {
         assert_eq!(s.coalesced_rows, 25);
         assert_eq!(s.oob_ids, 3);
         assert!((s.cache_hit_rate() - 80.0 / 95.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extended_ledger_and_tail_counters() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.on_request();
+        }
+        for _ in 0..5 {
+            m.on_response(1_000);
+        }
+        m.on_rejected();
+        m.on_deadline_rejected();
+        m.on_shed(1);
+        m.on_failed(1);
+        m.on_expired(1);
+        m.on_hedge();
+        m.on_hedge_won();
+        m.on_hedge_suppressed();
+        m.on_degraded(3, 12);
+        m.on_brownout_entry();
+        let s = m.snapshot();
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.rejected, 2, "deadline refusal is a rejected leg");
+        assert_eq!(s.deadline_rejected, 1);
+        assert!(s.ledger_ok(), "5 + 2 + 1 + 1 + 1 must balance 10: {s:?}");
+        assert_eq!((s.hedges, s.hedges_won, s.hedge_suppressed), (1, 1, 1));
+        assert!((s.hedge_rate() - 0.2).abs() < 1e-12);
+        assert_eq!((s.degraded_responses, s.degraded_rows), (3, 12));
+        assert_eq!(s.brownout_entries, 1);
+        assert_eq!(m.pressure_counts(), (10, 4));
+        m.on_expired(1);
+        assert!(!m.snapshot().ledger_ok(), "expired is a ledger leg");
     }
 
     #[test]

@@ -24,12 +24,15 @@ pub mod metrics;
 pub mod net;
 pub mod router;
 pub mod server;
+pub mod tail;
 
 pub use batcher::{BatcherConfig, collect_batch};
-pub use engine::{CrashAfter, InferenceEngine, MockEngine, PimEngine, PjrtEngine};
+pub use engine::{
+    CrashAfter, InferenceEngine, MockEngine, PimEngine, PjrtEngine, SlowAfter,
+};
 pub use loadgen::{
     run_scenario, Arrival, CrashInjector, LoadGenConfig, LoadReport, Scenario,
-    ScenarioOutcome, ScenarioSpec, ScheduledRequest, WireStats,
+    ScenarioOutcome, ScenarioSpec, ScheduledRequest, SlowInjector, WireStats,
 };
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use net::{NetClient, NetServer, NetServerConfig, WireResponse};
@@ -37,4 +40,7 @@ pub use router::{Policy, Router, WorkerSlot};
 pub use server::{
     Admission, AdmissionPolicy, Coordinator, CoordinatorConfig, Request,
     Response, ServingStore,
+};
+pub use tail::{
+    BreakerState, FleetHealth, HedgeBudget, HedgeGate, HedgeTag, TailConfig,
 };

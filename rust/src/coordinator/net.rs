@@ -76,6 +76,9 @@ pub struct NetStats {
     pub lazy_frames: AtomicU64,
     /// frames that fell back to the tree parser
     pub tree_frames: AtomicU64,
+    /// connections evicted by the idle clock (no bytes for
+    /// `idle_timeout`) — distinct from client EOF and server stop
+    pub conns_idle_closed: AtomicU64,
 }
 
 /// A running TCP front end over a [`Coordinator`].
@@ -202,6 +205,8 @@ enum Frame {
     Eof,
     TooLong,
     Stop,
+    /// evicted by the idle clock (counted in `NetStats.conns_idle_closed`)
+    Idle,
 }
 
 /// Accumulate one `\n`-terminated line into `buf` (newline excluded),
@@ -231,7 +236,7 @@ fn read_frame(
                     ) =>
                 {
                     if last_data.elapsed() > idle {
-                        return Frame::Stop;
+                        return Frame::Idle;
                     }
                     continue;
                 }
@@ -286,8 +291,17 @@ fn response_line(r: &Response) -> String {
     let mut s = String::with_capacity(48);
     s.push_str("{\"id\":");
     s.push_str(&r.id.to_string());
-    s.push_str(",\"prob\":");
-    json_lazy::write_f32(&mut s, r.prob);
+    // a structured error (deadline miss) replaces the probability — the
+    // client keyed on `"error"` treats it like any other error line,
+    // but with the request id attached and the latency still measured
+    if let Some(err) = r.err {
+        s.push_str(",\"error\":\"");
+        s.push_str(err);
+        s.push('"');
+    } else {
+        s.push_str(",\"prob\":");
+        json_lazy::write_f32(&mut s, r.prob);
+    }
     s.push_str(",\"e2e_us\":");
     s.push_str(&(r.e2e_ns / 1000).to_string());
     s.push_str("}\n");
@@ -334,6 +348,10 @@ fn handle_conn(
         buf.clear();
         match read_frame(&mut r, &mut buf, cfg.max_frame, &stop, cfg.idle_timeout) {
             Frame::Eof | Frame::Stop => break,
+            Frame::Idle => {
+                stats.conns_idle_closed.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
             Frame::TooLong => {
                 send_error(&out, None, "frame exceeds size limit");
                 break;
@@ -368,10 +386,21 @@ fn handle_conn(
         };
         stats.frames_ok.fetch_add(1, Ordering::Relaxed);
         let id = w.id;
-        let req = Request::partial(w.id, w.dense, w.tables, w.ids, tx.clone());
+        // deadline propagation (S33): the wire budget rides the request
+        // into admission, dequeue, and the reply — absent field ⇒ None
+        // ⇒ every deadline check is skipped (bit-identical default)
+        let deadline = w.deadline_us.map(Duration::from_micros);
+        let req = Request::partial(w.id, w.dense, w.tables, w.ids, tx.clone())
+            .with_deadline(deadline);
         match coord.submit(req) {
             Ok(Admission::Enqueued(_)) => {}
             Ok(Admission::Rejected) => send_error(&out, Some(id), "rejected"),
+            // refused at admission: no worker can meet the budget — the
+            // client hears the same structured error an in-queue expiry
+            // produces, just earlier and cheaper
+            Ok(Admission::DeadlineInfeasible) => {
+                send_error(&out, Some(id), "deadline_exceeded")
+            }
             // `submit` errs only when NO live worker remains (shutdown
             // or total fleet loss) — a single worker crash is rerouted
             // inside the coordinator and never surfaces here.
@@ -551,6 +580,7 @@ mod tests {
             dense: vec![0.25; 3],
             tables: (0..10).collect(),
             ids: vec![1; 10],
+            deadline_us: None,
         }
     }
 
@@ -606,6 +636,7 @@ mod tests {
             id: 9,
             prob: 0.625,
             e2e_ns: 12_345,
+            err: None,
         });
         assert_eq!(line, "{\"id\":9,\"prob\":0.625,\"e2e_us\":12}\n");
         match parse_response_line(&line).unwrap() {
@@ -615,5 +646,56 @@ mod tests {
             }
             other => panic!("unexpected: {other:?}"),
         }
+    }
+
+    #[test]
+    fn expired_response_line_is_a_structured_error() {
+        let line = response_line(&Response::expired(7, 42_000));
+        assert_eq!(
+            line,
+            "{\"id\":7,\"error\":\"deadline_exceeded\",\"e2e_us\":42}\n"
+        );
+        match parse_response_line(&line).unwrap() {
+            WireResponse::Error { id, msg } => {
+                assert_eq!(id, Some(7));
+                assert_eq!(msg, "deadline_exceeded");
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn idle_connection_is_evicted_and_counted() {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                n_workers: 1,
+                ..Default::default()
+            },
+            Arc::new(EmbeddingStore::random(&profile("kdd").unwrap(), 8, 3)),
+            |_| Ok(Box::new(MockEngine::new(16, 3, 10, 8))),
+        )
+        .unwrap();
+        let srv = NetServer::start(
+            "127.0.0.1:0",
+            coord,
+            NetServerConfig {
+                idle_timeout: Duration::from_millis(80),
+                read_poll: Duration::from_millis(10),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut c = NetClient::connect(&srv.local_addr()).unwrap();
+        // say nothing: the idle clock — not EOF, not shutdown — must
+        // evict this connection and book it in conns_idle_closed
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while srv.stats.conns_idle_closed.load(Ordering::Relaxed) == 0 {
+            assert!(Instant::now() < deadline, "idle eviction never fired");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(srv.stats.conns_idle_closed.load(Ordering::Relaxed), 1);
+        // the server closed the socket: the client reads EOF
+        assert!(matches!(c.recv(), Ok(None) | Err(_)));
+        srv.shutdown();
     }
 }

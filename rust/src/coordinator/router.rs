@@ -17,6 +17,7 @@
 //! every picking policy skips non-alive workers (a dead worker's frozen
 //! depth gauge would otherwise make it look attractively idle forever).
 
+use super::tail::{BreakerState, FleetHealth};
 use crate::embeddings::ShardMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
@@ -112,6 +113,9 @@ pub struct Router<T> {
     /// table→shard ownership (ShardAffinity scoring); worker `i` serves
     /// shard `i % map.n_shards`
     shard_map: Option<Arc<ShardMap>>,
+    /// breaker states + probe tickets (S33). `None` — the default —
+    /// keeps every pick bit-identical to the health-blind router.
+    health: Option<Arc<FleetHealth>>,
 }
 
 impl<T> Router<T> {
@@ -125,12 +129,21 @@ impl<T> Router<T> {
             policy,
             next: AtomicUsize::new(0),
             shard_map: None,
+            health: None,
         }
     }
 
     /// Attach the shard map ShardAffinity scores against.
     pub fn with_shards(mut self, map: Arc<ShardMap>) -> Router<T> {
         self.shard_map = Some(map);
+        self
+    }
+
+    /// Attach fleet-health breakers (S33): `LeastQueued` and
+    /// `ShardAffinity` then rank probation workers after healthy ones
+    /// and route nothing to a quarantined worker except trickle probes.
+    pub fn with_health(mut self, health: Arc<FleetHealth>) -> Router<T> {
+        self.health = Some(health);
         self
     }
 
@@ -170,10 +183,51 @@ impl<T> Router<T> {
         }
     }
 
+    /// Worker `w`'s breaker rank: 0 healthy, 1 probation, 2
+    /// quarantined. Always 0 without attached health, so the health-
+    /// blind orderings below collapse to the original depth-only ones.
+    fn rank(&self, w: usize) -> u8 {
+        self.health.as_ref().map_or(0, |h| h.rank(w))
+    }
+
+    /// Trickle probe (S33): while a quarantined-but-alive worker
+    /// exists, every `probe_interval`-th pick is diverted to one
+    /// (rotating) so it sees just enough traffic to prove recovery —
+    /// `FleetHealth::record` promotes it to probation on the first
+    /// fast sample.
+    fn probe_pick(&self, h: &FleetHealth) -> Option<usize> {
+        let quarantined = || {
+            (0..self.slots.len()).filter(|&w| {
+                self.slots[w].is_alive()
+                    && h.state(w) == BreakerState::Quarantined
+            })
+        };
+        let n = quarantined().count();
+        if n == 0 {
+            return None;
+        }
+        let t = h.probe_ticket();
+        let every = h.probe_interval();
+        if t % every == 0 {
+            quarantined().nth(((t / every) % n as u64) as usize)
+        } else {
+            None
+        }
+    }
+
     /// Pick a live worker for a request touching `fields` (table ids;
     /// empty = unknown/all, which makes ShardAffinity a pure depth
-    /// choice). `None` when no live worker remains.
+    /// choice). `None` when no live worker remains. With health
+    /// attached, quarantined workers get no normal traffic (probes
+    /// only) and probation workers rank after healthy ones — unless
+    /// every live worker is quarantined, in which case traffic flows
+    /// anyway (degraded beats dead).
     fn pick(&self, fields: &[u32]) -> Option<usize> {
+        if let Some(h) = &self.health {
+            if let Some(w) = self.probe_pick(h) {
+                return Some(w);
+            }
+        }
         match self.policy {
             Policy::RoundRobin => {
                 let n = self.slots.len();
@@ -187,33 +241,53 @@ impl<T> Router<T> {
                 None => self.least_queued(),
                 Some(map) => {
                     let mut best = None;
+                    let mut best_rank = u8::MAX;
                     let mut best_frac = -1.0f64;
                     let mut best_depth = usize::MAX;
                     for w in 0..self.slots.len() {
-                        if !self.slots[w].is_alive() {
+                        if !self.slots[w].is_alive() || self.rank(w) >= 2 {
                             continue;
                         }
+                        let rank = self.rank(w);
                         let frac =
                             map.local_fraction(w % map.n_shards, fields);
                         let depth = self.slots[w].depth.load(Ordering::Relaxed);
-                        // higher locality wins; exact ties go to the
-                        // shallower queue, then the lower worker id
-                        if frac > best_frac + 1e-12
-                            || ((frac - best_frac).abs() <= 1e-12
-                                && depth < best_depth)
+                        // breaker rank dominates, then higher locality;
+                        // exact ties go to the shallower queue, then
+                        // the lower worker id
+                        if rank < best_rank
+                            || (rank == best_rank
+                                && (frac > best_frac + 1e-12
+                                    || ((frac - best_frac).abs() <= 1e-12
+                                        && depth < best_depth)))
                         {
                             best = Some(w);
+                            best_rank = rank;
                             best_frac = frac;
                             best_depth = depth;
                         }
                     }
-                    best
+                    best.or_else(|| self.any_alive())
                 }
             },
         }
     }
 
     fn least_queued(&self) -> Option<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| s.is_alive() && self.rank(*i) < 2)
+            .min_by_key(|(i, s)| {
+                (self.rank(*i), s.depth.load(Ordering::Relaxed), *i)
+            })
+            .map(|(i, _)| i)
+            .or_else(|| self.any_alive())
+    }
+
+    /// Rank-blind fallback: the shallowest live queue, quarantined or
+    /// not. Reached only when every live worker is quarantined.
+    fn any_alive(&self) -> Option<usize> {
         self.slots
             .iter()
             .enumerate()
@@ -286,6 +360,57 @@ impl<T> Router<T> {
                 }
                 other => return other,
             }
+        }
+    }
+
+    /// Cheapest feasible completion estimate (S33 deadline admission):
+    /// `min` over alive, non-quarantined workers of `(depth + 1) ×`
+    /// that worker's service-time EWMA, in ns. `None` without attached
+    /// health or before any worker has a sample — nothing to judge
+    /// against, so admission stays open.
+    pub fn eta_ns(&self) -> Option<u64> {
+        let h = self.health.as_ref()?;
+        let mut best: Option<u64> = None;
+        for (w, s) in self.slots.iter().enumerate() {
+            if !s.is_alive() || h.state(w) == BreakerState::Quarantined {
+                continue;
+            }
+            let Some(e) = h.ewma_ns(w) else { continue };
+            let eta = (s.depth.load(Ordering::Relaxed) as u64 + 1)
+                .saturating_mul(e as u64);
+            best = Some(best.map_or(eta, |b| b.min(eta)));
+        }
+        best
+    }
+
+    /// One-shot hedge dispatch (S33): enqueue `req` on the best-ranked
+    /// live worker other than `exclude` (breaker rank, then depth, then
+    /// id). No re-pick loop and no ledger entry on failure — a hedge
+    /// that cannot be placed simply never existed; the primary copy
+    /// still answers. Returns the request on any failure so the caller
+    /// can drop it deliberately.
+    pub fn route_hedge(
+        &self,
+        exclude: usize,
+        cap: usize,
+        req: T,
+    ) -> Result<usize, T> {
+        let pick = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| {
+                *i != exclude && s.is_alive() && self.rank(*i) < 2
+            })
+            .min_by_key(|(i, s)| {
+                (self.rank(*i), s.depth.load(Ordering::Relaxed), *i)
+            })
+            .map(|(i, _)| i);
+        let Some(w) = pick else { return Err(req) };
+        match self.dispatch(w, cap, req) {
+            Ok(w) => Ok(w),
+            Err(RouteRejection::Closed(r))
+            | Err(RouteRejection::Overloaded(r)) => Err(r),
         }
     }
 
@@ -480,6 +605,138 @@ mod tests {
         // depth 1, worker 1 has depth 1 → lower id after depth tie…
         // drain nothing; both depth 1 → worker 0
         assert_eq!(r.route_bounded(&[0, 1], usize::MAX, 3u32).unwrap(), 0);
+    }
+
+    fn health(workers: usize, probe_interval: u64) -> Arc<FleetHealth> {
+        use crate::coordinator::tail::TailConfig;
+        Arc::new(FleetHealth::new(
+            workers,
+            &TailConfig {
+                strikes: 1,
+                probe_interval,
+                ..TailConfig::default()
+            },
+        ))
+    }
+
+    /// Drive worker `w` into quarantine: one fast peer sample as the
+    /// baseline, then two slow strikes (strikes = 1 per demotion).
+    fn quarantine(h: &FleetHealth, w: usize, peer: usize) {
+        h.record(peer, 1_000_000);
+        h.record(w, 100_000_000);
+        h.record(w, 100_000_000);
+        assert_eq!(h.state(w), BreakerState::Quarantined);
+    }
+
+    #[test]
+    fn quarantined_worker_gets_zero_normal_routes() {
+        // probe_interval = u64::MAX: the probe path never fires, so a
+        // quarantined worker must see literally zero traffic — even
+        // when affinity scoring WANTS it — until a probe succeeds.
+        let map = Arc::new(ShardMap::build(
+            &[10, 10, 10, 10],
+            1.2,
+            2,
+            ShardPolicy::RoundRobinTables,
+        ));
+        for policy in [Policy::LeastQueued, Policy::ShardAffinity] {
+            let (txs, rxs): (Vec<_>, Vec<_>) =
+                (0..2).map(|_| mpsc::channel::<u32>()).unzip();
+            let h = health(2, u64::MAX);
+            let r = match policy {
+                Policy::ShardAffinity => {
+                    Router::new(txs, policy).with_shards(map.clone())
+                }
+                _ => Router::new(txs, policy),
+            }
+            .with_health(h.clone());
+            quarantine(&h, 0, 1);
+            for i in 0..20 {
+                // shard 0 owns tables {0,2}: affinity wants worker 0
+                assert_eq!(r.route_bounded(&[0, 2], usize::MAX, i).unwrap(), 1);
+            }
+            assert_eq!(rxs[0].try_iter().count(), 0, "{policy:?}");
+            assert_eq!(rxs[1].try_iter().count(), 20, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn trickle_probe_reaches_the_quarantined_worker() {
+        let (txs, rxs): (Vec<_>, Vec<_>) =
+            (0..2).map(|_| mpsc::channel::<u32>()).unzip();
+        let h = health(2, 4);
+        let r = Router::new(txs, Policy::LeastQueued).with_health(h.clone());
+        quarantine(&h, 0, 1);
+        for i in 0..8 {
+            r.route_bounded(&[], usize::MAX, i).unwrap();
+        }
+        // tickets 0..8 with interval 4 → exactly tickets 0 and 4 probe
+        assert_eq!(rxs[0].try_iter().count(), 2, "trickle probes");
+        assert_eq!(rxs[1].try_iter().count(), 6);
+        // a fast probe sample lifts quarantine; normal ranking resumes
+        h.record(0, 1_000_000);
+        assert_eq!(h.state(0), BreakerState::Probation);
+    }
+
+    #[test]
+    fn all_quarantined_still_serves() {
+        // degraded beats dead: with every live worker quarantined the
+        // fallback routes anyway instead of surfacing Closed
+        let (txs, rxs): (Vec<_>, Vec<_>) =
+            (0..2).map(|_| mpsc::channel::<u32>()).unzip();
+        let h = health(2, u64::MAX);
+        let r = Router::new(txs, Policy::LeastQueued).with_health(h.clone());
+        // quarantine BOTH: w0 seeds the baseline, w1 strikes out
+        // against it, then w0 strikes out against w1's inflated EWMA
+        h.record(0, 1_000_000);
+        h.record(1, 100_000_000);
+        h.record(1, 100_000_000);
+        h.record(0, 1_000_000_000);
+        h.record(0, 1_000_000_000);
+        assert_eq!(h.state(0), BreakerState::Quarantined);
+        assert_eq!(h.state(1), BreakerState::Quarantined);
+        for i in 0..6 {
+            r.route_bounded(&[], usize::MAX, i).unwrap();
+        }
+        let total: usize = rxs.iter().map(|rx| rx.try_iter().count()).sum();
+        assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn route_hedge_avoids_excluded_and_quarantined() {
+        let (txs, rxs): (Vec<_>, Vec<_>) =
+            (0..3).map(|_| mpsc::channel::<u32>()).unzip();
+        let h = health(3, u64::MAX);
+        let r = Router::new(txs, Policy::LeastQueued).with_health(h.clone());
+        quarantine(&h, 2, 0);
+        // exclude the primary (0); worker 2 is quarantined → worker 1
+        assert_eq!(r.route_hedge(0, usize::MAX, 7).unwrap(), 1);
+        assert_eq!(rxs[1].try_iter().count(), 1);
+        // no eligible peer: worker 1 dead, 2 quarantined → Err, and the
+        // request comes back to be dropped deliberately
+        r.slot_handle(1).close();
+        assert_eq!(r.route_hedge(0, usize::MAX, 8).unwrap_err(), 8);
+        assert_eq!(rxs[0].try_iter().count(), 0);
+        assert_eq!(rxs[2].try_iter().count(), 0);
+    }
+
+    #[test]
+    fn eta_estimates_from_health_ewma() {
+        let (txs, _rxs): (Vec<_>, Vec<_>) =
+            (0..2).map(|_| mpsc::channel::<u32>()).unzip();
+        let h = health(2, u64::MAX);
+        let r = Router::new(txs, Policy::LeastQueued).with_health(h.clone());
+        assert_eq!(r.eta_ns(), None, "no samples yet → admission open");
+        h.record(0, 2_000_000);
+        h.record(1, 1_000_000);
+        // empty queues: min (depth 0 + 1) × ewma = 1ms (worker 1)
+        assert_eq!(r.eta_ns(), Some(1_000_000));
+        // routing 3 least-queued: w0, w1, w0 → depths (2, 1), so the
+        // min eta is worker 1's (1+1) × 1ms = 2ms (w0: (2+1) × 2ms)
+        r.route_bounded(&[], usize::MAX, 1).unwrap();
+        r.route_bounded(&[], usize::MAX, 2).unwrap();
+        r.route_bounded(&[], usize::MAX, 3).unwrap();
+        assert_eq!(r.eta_ns(), Some(2_000_000));
     }
 
     #[test]

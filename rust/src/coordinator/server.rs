@@ -23,13 +23,15 @@ use super::batcher::{collect_batch, BatcherConfig};
 use super::engine::InferenceEngine;
 use super::metrics::Metrics;
 use super::router::{Policy, RouteRejection, Router, WorkerSlot};
+use super::tail::{FleetHealth, HedgeBudget, HedgeGate, HedgeTag, TailConfig};
 use crate::embeddings::{
     BatchGatherer, EmbeddingStore, GatherStats, HotRowCache, ShardMap,
     ShardedStore,
 };
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -45,6 +47,12 @@ pub struct Request {
     pub fields: Vec<u32>,
     pub ids: Vec<i32>,
     pub enqueued: Instant,
+    /// end-to-end budget measured from `enqueued` (S33); `None` — the
+    /// default — disables every deadline check for this request
+    pub deadline: Option<Duration>,
+    /// terminal-outcome claim shared with any hedge copy (S33);
+    /// attached by `submit` when tail tolerance is configured
+    pub tag: Option<HedgeTag>,
     pub reply: Sender<Response>,
 }
 
@@ -58,6 +66,8 @@ impl Request {
             fields,
             ids,
             enqueued: Instant::now(),
+            deadline: None,
+            tag: None,
             reply,
         }
     }
@@ -77,8 +87,16 @@ impl Request {
             fields,
             ids,
             enqueued: Instant::now(),
+            deadline: None,
+            tag: None,
             reply,
         }
+    }
+
+    /// Attach an end-to-end deadline budget (builder style).
+    pub fn with_deadline(mut self, deadline: Option<Duration>) -> Request {
+        self.deadline = deadline;
+        self
     }
 }
 
@@ -87,6 +105,27 @@ pub struct Response {
     pub id: u64,
     pub prob: f32,
     pub e2e_ns: u64,
+    /// structured error (`"deadline_exceeded"`); `None` for a served
+    /// response — `prob` is meaningless when this is `Some`
+    pub err: Option<&'static str>,
+}
+
+impl Response {
+    /// A deadline-miss reply: the client paid for a deadline and gets
+    /// told it was missed, rather than a silently closed channel.
+    pub fn expired(id: u64, e2e_ns: u64) -> Response {
+        Response {
+            id,
+            prob: 0.0,
+            e2e_ns,
+            err: Some("deadline_exceeded"),
+        }
+    }
+
+    /// Whether this is a served (non-error) response.
+    pub fn is_ok(&self) -> bool {
+        self.err.is_none()
+    }
 }
 
 /// What happens when queues are full.
@@ -109,6 +148,11 @@ pub enum Admission {
     Enqueued(usize),
     /// turned away by admission control (counted in `metrics.rejected`)
     Rejected,
+    /// turned away because no worker can plausibly meet the request's
+    /// deadline budget (queue depth × EWMA service time exceeds it) —
+    /// a `rejected` ledger leg with the `deadline_rejected` sub-cause,
+    /// surfaced separately so the wire can answer `deadline_exceeded`
+    DeadlineInfeasible,
 }
 
 #[derive(Clone, Debug)]
@@ -121,6 +165,12 @@ pub struct CoordinatorConfig {
     pub admission: AdmissionPolicy,
     /// ShedStale: max tolerated queue wait before a request is dropped
     pub shed_after: Duration,
+    /// Gray-failure tail tolerance (S33): deadline admission, hedged
+    /// dispatch, breaker-aware routing, and brownout. `None` — the
+    /// default — keeps the coordinator bit-identical to the pre-tail
+    /// stack (per-request deadlines carried on the wire still expire
+    /// at dequeue; everything else is off).
+    pub tail: Option<TailConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -132,6 +182,7 @@ impl Default for CoordinatorConfig {
             queue_cap: usize::MAX,
             admission: AdmissionPolicy::RejectNew,
             shed_after: Duration::from_millis(50),
+            tail: None,
         }
     }
 }
@@ -190,11 +241,138 @@ impl ShardView {
     }
 }
 
+/// One logical request's entry in the governor's hedge registry (S33):
+/// enough cloned content to re-enqueue a duplicate, the shared claim
+/// gate, and the primary worker to hedge away from. Entries are pruned
+/// lazily once their gate is claimed.
+struct Pending {
+    id: u64,
+    dense: Vec<f32>,
+    fields: Vec<u32>,
+    ids: Vec<i32>,
+    /// the ORIGINAL submit clock — the hedge copy inherits it so e2e
+    /// latency and deadline expiry stay truthful for the logical request
+    enqueued: Instant,
+    deadline: Option<Duration>,
+    reply: Sender<Response>,
+    gate: Arc<HedgeGate>,
+    /// where the primary copy went (the hedge must go elsewhere)
+    worker: usize,
+    hedged: bool,
+}
+
+impl Pending {
+    /// Build the duplicate copy for hedged dispatch.
+    fn hedge_request(&self) -> Request {
+        Request {
+            id: self.id,
+            dense: self.dense.clone(),
+            fields: self.fields.clone(),
+            ids: self.ids.clone(),
+            enqueued: self.enqueued,
+            deadline: self.deadline,
+            tag: Some(HedgeTag {
+                gate: self.gate.clone(),
+                is_hedge: true,
+            }),
+            reply: self.reply.clone(),
+        }
+    }
+}
+
+/// Live tail-tolerance state owned by the coordinator (S33).
+struct TailState {
+    pending: Arc<Mutex<VecDeque<Pending>>>,
+    accepted: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    governor: Option<JoinHandle<()>>,
+}
+
+/// Everything the governor thread needs. It wakes every `cfg.tick`,
+/// prunes claimed pending entries, hedges aged unclaimed ones onto the
+/// healthiest other worker (budget permitting), and runs the brownout
+/// pressure controller.
+struct Governor {
+    router: Arc<Router<Request>>,
+    pending: Arc<Mutex<VecDeque<Pending>>>,
+    metrics: Arc<Metrics>,
+    budget: HedgeBudget,
+    accepted: Arc<AtomicU64>,
+    brownout: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
+    cfg: TailConfig,
+    queue_cap: usize,
+}
+
+fn governor_loop(g: Governor) {
+    // brownout pressure window: diffs of (requests, expired+shed+
+    // rejected), accumulated until enough traffic to judge
+    let mut last = g.metrics.pressure_counts();
+    let (mut win_req, mut win_bad) = (0u64, 0u64);
+    while !g.stop.load(Ordering::Acquire) {
+        std::thread::sleep(g.cfg.tick);
+        // --- hedge scan ---
+        let mut hedges: Vec<(usize, Request)> = Vec::new();
+        {
+            let mut q = g.pending.lock().unwrap();
+            // prune settled requests from the front (their reply-sender
+            // clones drop here, which is what lets client-side drains
+            // that wait for all senders observe end-of-stream)
+            while q.front().is_some_and(|p| p.gate.is_claimed()) {
+                q.pop_front();
+            }
+            for p in q.iter_mut() {
+                if p.gate.is_claimed() || p.hedged {
+                    continue;
+                }
+                // submit order ≈ enqueue-time order: everything behind
+                // the first young entry is younger still
+                if p.enqueued.elapsed() < g.cfg.hedge_after {
+                    break;
+                }
+                if !g.budget.try_take(g.accepted.load(Ordering::Relaxed)) {
+                    break;
+                }
+                p.hedged = true;
+                hedges.push((p.worker, p.hedge_request()));
+            }
+        }
+        for (primary, req) in hedges {
+            // NOT a ledger event: the hedge is a copy, not a request.
+            // A failed placement is dropped on the floor — the primary
+            // copy still owns the request's outcome.
+            if g.router.route_hedge(primary, g.queue_cap, req).is_ok() {
+                g.metrics.on_hedge();
+            }
+        }
+        // --- brownout pressure controller ---
+        let now = g.metrics.pressure_counts();
+        win_req += now.0 - last.0;
+        win_bad += now.1 - last.1;
+        last = now;
+        if win_req >= 16 {
+            let pressure = win_bad as f64 / win_req as f64;
+            let active = g.brownout.load(Ordering::Acquire);
+            if !active && pressure >= g.cfg.brownout_enter {
+                g.brownout.store(true, Ordering::Release);
+                g.metrics.on_brownout_entry();
+            } else if active && pressure <= g.cfg.brownout_exit {
+                g.brownout.store(false, Ordering::Release);
+            }
+            (win_req, win_bad) = (0, 0);
+        }
+    }
+    // the deque (and every remaining reply-sender clone) drops with the
+    // governor's TailState owner, after workers have fully drained
+}
+
 pub struct Coordinator {
-    router: Router<Request>,
+    router: Arc<Router<Request>>,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     queue_cap: usize,
+    tail: Option<TailState>,
+    health: Option<Arc<FleetHealth>>,
 }
 
 impl Coordinator {
@@ -239,6 +417,17 @@ impl Coordinator {
             rxs.push(rx);
         }
         let mut router = Router::new(txs, cfg.policy);
+        // tail tolerance (S33): breaker states steer routing, workers
+        // record service-time samples, and the brownout flag switches
+        // gathers to cache/local-only under sustained pressure
+        let health = cfg
+            .tail
+            .as_ref()
+            .map(|tc| Arc::new(FleetHealth::new(cfg.n_workers, tc)));
+        if let Some(h) = &health {
+            router = router.with_health(h.clone());
+        }
+        let brownout = cfg.tail.as_ref().map(|_| Arc::new(AtomicBool::new(false)));
         match &store {
             ServingStore::Shared(_) => {}
             ServingStore::Sharded(s) => {
@@ -279,6 +468,8 @@ impl Coordinator {
             let view = shard_view.clone();
             let shed_after = (cfg.admission == AdmissionPolicy::ShedStale)
                 .then_some(cfg.shed_after);
+            let health = health.clone();
+            let brownout = brownout.clone();
             workers.push(std::thread::spawn(move || {
                 match make_engine(i) {
                     Ok(engine) => {
@@ -305,6 +496,8 @@ impl Coordinator {
                                 metrics,
                                 bcfg,
                                 shed_after,
+                                health,
+                                brownout,
                             },
                         );
                     }
@@ -338,18 +531,44 @@ impl Coordinator {
             return Err(crate::err!("worker engine init failed: {e:#}"));
         }
         metrics.reset_clock(); // engine compile time is not serving time
+        let router = Arc::new(router);
+        let tail = cfg.tail.as_ref().map(|tc| {
+            let pending = Arc::new(Mutex::new(VecDeque::new()));
+            let accepted = Arc::new(AtomicU64::new(0));
+            let stop = Arc::new(AtomicBool::new(false));
+            let gov = Governor {
+                router: router.clone(),
+                pending: pending.clone(),
+                metrics: metrics.clone(),
+                budget: HedgeBudget::new(tc.hedge_budget),
+                accepted: accepted.clone(),
+                brownout: brownout.clone().unwrap(),
+                stop: stop.clone(),
+                cfg: tc.clone(),
+                queue_cap: cfg.queue_cap,
+            };
+            let governor = Some(std::thread::spawn(move || governor_loop(gov)));
+            TailState {
+                pending,
+                accepted,
+                stop,
+                governor,
+            }
+        });
         Ok(Coordinator {
             router,
             workers,
             metrics,
             queue_cap: cfg.queue_cap,
+            tail,
+            health,
         })
     }
 
     /// Submit one request; an accepted request's reply arrives on
     /// `req.reply`, a rejected one never produces a response (its reply
     /// sender is dropped here).
-    pub fn submit(&self, req: Request) -> crate::Result<Admission> {
+    pub fn submit(&self, mut req: Request) -> crate::Result<Admission> {
         // `queue_cap` is a hard memory bound under BOTH policies —
         // ShedStale additionally trims stale requests at dequeue time,
         // it does not repeal the bound the operator configured.
@@ -360,13 +579,60 @@ impl Coordinator {
         // that request is booked `failed` (an infrastructure loss, not
         // an admission decision — `rejected` stays an admission-control-
         // only signal), keeping
-        // `requests == responses + rejected + shed + failed` exact.
+        // `requests == responses + rejected + shed + failed + expired`
+        // exact.
         self.metrics.on_request();
+        // deadline admission (S33): refuse a request no worker can
+        // plausibly meet — cheaper for everyone than queueing work that
+        // is doomed to expire at dequeue. Conservative on cold fleets:
+        // no EWMA sample yet ⇒ admit.
+        let pend = if let Some(t) = &self.tail {
+            if let Some(d) = req.deadline {
+                if let Some(eta) = self.router.eta_ns() {
+                    let left = d.saturating_sub(req.enqueued.elapsed());
+                    if Duration::from_nanos(eta) > left {
+                        self.metrics.on_deadline_rejected();
+                        return Ok(Admission::DeadlineInfeasible);
+                    }
+                }
+            }
+            // arm the hedge machinery: the gate is shared between the
+            // primary copy (via the tag) and the governor's registry
+            let gate = Arc::new(HedgeGate::new());
+            req.tag = Some(HedgeTag {
+                gate: gate.clone(),
+                is_hedge: false,
+            });
+            Some((
+                t,
+                Pending {
+                    id: req.id,
+                    dense: req.dense.clone(),
+                    fields: req.fields.clone(),
+                    ids: req.ids.clone(),
+                    enqueued: req.enqueued,
+                    deadline: req.deadline,
+                    reply: req.reply.clone(),
+                    gate,
+                    worker: 0,
+                    hedged: false,
+                },
+            ))
+        } else {
+            None
+        };
         match self
             .router
             .route_bounded_by(self.queue_cap, req, |r| r.fields.as_slice())
         {
-            Ok(w) => Ok(Admission::Enqueued(w)),
+            Ok(w) => {
+                if let Some((t, mut p)) = pend {
+                    p.worker = w;
+                    t.accepted.fetch_add(1, Ordering::Relaxed);
+                    t.pending.lock().unwrap().push_back(p);
+                }
+                Ok(Admission::Enqueued(w))
+            }
             Err(RouteRejection::Overloaded(_req)) => {
                 self.metrics.on_rejected();
                 Ok(Admission::Rejected)
@@ -376,6 +642,11 @@ impl Coordinator {
                 crate::bail!("no live worker remains")
             }
         }
+    }
+
+    /// Fleet breaker states (tail tolerance only; `None` otherwise).
+    pub fn health(&self) -> Option<&Arc<FleetHealth>> {
+        self.health.as_ref()
     }
 
     /// Instantaneous queue depth of each worker.
@@ -393,10 +664,37 @@ impl Coordinator {
     /// Close intake and join workers (drains in-flight batches). The
     /// slots are shared with the worker guards, so the queues must be
     /// closed explicitly — dropping the router would not end them.
-    pub fn shutdown(self) {
+    pub fn shutdown(mut self) {
+        // stop the governor FIRST: no new hedges land on queues that are
+        // about to close, and the pending registry (holding reply-sender
+        // clones) drops before clients could block on a drain
+        if let Some(t) = &mut self.tail {
+            t.stop.store(true, Ordering::Release);
+            if let Some(g) = t.governor.take() {
+                let _ = g.join();
+            }
+            t.pending.lock().unwrap().clear();
+        }
         self.router.close_all();
         for w in self.workers {
             let _ = w.join();
+        }
+    }
+}
+
+/// Claim a request's terminal outcome. Returns `true` for exactly one
+/// caller per logical request (the ledger writer); with no tag — tail
+/// tolerance off — every caller wins, preserving the pre-tail behavior.
+/// Losing hedge copies book the non-ledger `hedge_suppressed` counter.
+fn claim_terminal(tag: &Option<HedgeTag>, metrics: &Metrics) -> bool {
+    match tag {
+        None => true,
+        Some(t) => {
+            let won = t.gate.claim();
+            if !won {
+                metrics.on_hedge_suppressed();
+            }
+            won
         }
     }
 }
@@ -409,6 +707,11 @@ struct WorkerCtx {
     bcfg: BatcherConfig,
     /// Some(limit) ⇒ shed requests that waited longer than `limit`
     shed_after: Option<Duration>,
+    /// tail tolerance (S33): per-worker service-time samples feed the
+    /// fleet breaker; `None` when tail tolerance is off
+    health: Option<Arc<FleetHealth>>,
+    /// brownout flag (S33): when set, gathers skip cross-shard fetches
+    brownout: Option<Arc<AtomicBool>>,
 }
 
 /// Sentinel owning one worker's queue end of life. Its `Drop` runs on
@@ -442,13 +745,21 @@ impl Drop for WorkerGuard {
         // Book the losses BEFORE dropping the reply senders: a client
         // draining its reply channel unblocks the moment the last
         // sender drops, and must find the ledger already balanced.
+        // Claim-aware (S33): a drained hedge copy whose twin already
+        // answered is NOT a loss — only claim winners book `failed`.
         let mut drained: Vec<Request> = Vec::new();
         while let Ok(r) = self.rx.try_recv() {
             drained.push(r);
         }
         if !drained.is_empty() {
             depth_release(&self.slot.depth_handle(), drained.len());
-            self.metrics.on_failed(drained.len());
+            let lost = drained
+                .iter()
+                .filter(|r| claim_terminal(&r.tag, &self.metrics))
+                .count();
+            if lost > 0 {
+                self.metrics.on_failed(lost);
+            }
         }
         // the Vec (and with it every queued reply sender, which closes
         // unanswered) drops at end of scope, after the books are square
@@ -466,16 +777,35 @@ impl Drop for WorkerGuard {
 /// Covers the batch between dequeue and outcome booking: if the worker
 /// panics mid-flight (gather or engine), `Drop` books the batch as
 /// failed. The normal paths zero `n` once the batch is booked through
-/// `on_response`/`on_failed`, making this a no-op.
+/// `on_response`/`on_failed`, making this a no-op. Claim-aware (S33):
+/// `gates` holds the batch's hedge gates (empty when tail tolerance is
+/// off) so a panicking worker never books a loss for a request whose
+/// twin copy already answered.
 struct InflightGuard<'a> {
     metrics: &'a Metrics,
     n: usize,
+    gates: Vec<Arc<HedgeGate>>,
 }
 
 impl Drop for InflightGuard<'_> {
     fn drop(&mut self) {
-        if self.n > 0 {
+        if self.n == 0 {
+            return;
+        }
+        if self.gates.is_empty() {
             self.metrics.on_failed(self.n);
+            return;
+        }
+        let mut lost = 0usize;
+        for g in &self.gates {
+            if g.claim() {
+                lost += 1;
+            } else {
+                self.metrics.on_hedge_suppressed();
+            }
+        }
+        if lost > 0 {
+            self.metrics.on_failed(lost);
         }
     }
 }
@@ -504,6 +834,8 @@ fn worker_loop(guard: &WorkerGuard, ctx: WorkerCtx) {
         metrics,
         bcfg,
         shed_after,
+        health,
+        brownout,
     } = ctx;
     let rx = &guard.rx;
     let depth = guard.slot.depth_handle();
@@ -535,14 +867,49 @@ fn worker_loop(guard: &WorkerGuard, ctx: WorkerCtx) {
     let mut probs: Vec<f32> = Vec::with_capacity(cap);
     while let Some(mut batch) = collect_batch(rx, &bcfg) {
         depth_release(&depth, batch.len());
+        // Deadline expiry (S33): a request whose end-to-end budget has
+        // already elapsed is NEVER executed — the client gets a
+        // structured `deadline_exceeded` reply and the ledger books
+        // `expired`. The deadline rides the request itself, so this
+        // works with tail tolerance off too; claim-aware so an expired
+        // hedge copy whose twin already answered books nothing.
+        {
+            let mut expired = 0usize;
+            batch.retain(|r| {
+                let over =
+                    r.deadline.is_some_and(|d| r.enqueued.elapsed() > d);
+                if !over {
+                    return true;
+                }
+                if claim_terminal(&r.tag, &metrics) {
+                    expired += 1;
+                    let e2e = r.enqueued.elapsed().as_nanos() as u64;
+                    let _ = r.reply.send(Response::expired(r.id, e2e));
+                }
+                false
+            });
+            if expired > 0 {
+                metrics.on_expired(expired);
+            }
+            if batch.is_empty() {
+                continue;
+            }
+        }
         // Load shedding: a request that sat in the queue past its
         // budget is dropped here (its reply sender closes unanswered) —
         // under overload this keeps served latency bounded instead of
         // letting the queue wait grow without limit.
         if let Some(limit) = shed_after {
-            let before = batch.len();
-            batch.retain(|r| r.enqueued.elapsed() <= limit);
-            let shed = before - batch.len();
+            let mut shed = 0usize;
+            batch.retain(|r| {
+                if r.enqueued.elapsed() <= limit {
+                    return true;
+                }
+                if claim_terminal(&r.tag, &metrics) {
+                    shed += 1;
+                }
+                false
+            });
             if shed > 0 {
                 metrics.on_shed(shed);
             }
@@ -555,6 +922,10 @@ fn worker_loop(guard: &WorkerGuard, ctx: WorkerCtx) {
         let mut inflight = InflightGuard {
             metrics: &metrics,
             n: batch.len(),
+            gates: batch
+                .iter()
+                .filter_map(|r| r.tag.as_ref().map(|t| t.gate.clone()))
+                .collect(),
         };
         let t_exec = Instant::now();
         let queue_ns = batch
@@ -572,6 +943,14 @@ fn worker_loop(guard: &WorkerGuard, ctx: WorkerCtx) {
             dense.extend_from_slice(&r.dense[..take]);
             dense.resize(dense.len() + (nd - take), 0.0);
         }
+        // Brownout (S33): under sustained deadline pressure the
+        // governor sets this flag and gathers skip cross-shard fetches
+        // (remote-owned rows are zero-filled and counted `degraded`) —
+        // a degraded answer now beats a perfect answer too late. The
+        // monolithic path has no remote leg, so brownout is a no-op.
+        let degrade = brownout
+            .as_ref()
+            .is_some_and(|b| b.load(Ordering::Acquire));
         // sparse side: the sharded/cached paths gather the WHOLE batch
         // through the coalescer (duplicate rows fetched once); the
         // monolithic path stays per-record
@@ -591,47 +970,78 @@ fn worker_loop(guard: &WorkerGuard, ctx: WorkerCtx) {
             // rows; see `ShardMap::promote`)
             ServingStore::Sharded(s) => {
                 let map = guard.view.as_ref().unwrap().current();
-                gatherer.as_mut().unwrap().gather_batch_with(
+                gatherer.as_mut().unwrap().gather_batch_mode(
                     &map,
                     s,
                     None,
                     shard,
                     batch.iter().map(|r| (r.fields.as_slice(), r.ids.as_slice())),
                     &mut sparse,
+                    degrade,
                 )
             }
             ServingStore::Cached(s, c) => {
                 let map = guard.view.as_ref().unwrap().current();
-                gatherer.as_mut().unwrap().gather_batch_with(
+                gatherer.as_mut().unwrap().gather_batch_mode(
                     &map,
                     s,
                     Some(&**c),
                     shard,
                     batch.iter().map(|r| (r.fields.as_slice(), r.ids.as_slice())),
                     &mut sparse,
+                    degrade,
                 )
             }
         };
         metrics.on_gather(&gs);
+        if gs.degraded > 0 {
+            // batch-level attribution: the coalescer doesn't track
+            // which request owned a skipped row, so every response in
+            // a batch that zero-filled anything counts as degraded
+            metrics.on_degraded(batch.len(), gs.degraded);
+        }
         match engine.infer_batch_into(&dense, &sparse, batch.len(), &mut probs) {
             Ok(()) => {
                 let exec_ns = t_exec.elapsed().as_nanos() as u64;
                 metrics.on_batch(batch.len(), queue_ns, exec_ns);
-                inflight.n = 0; // booked below as responses
+                // per-request service-time sample feeds the breaker —
+                // this is where a gray (slow-but-correct) worker shows
+                // up, batches later, as Probation/Quarantined
+                if let Some(h) = &health {
+                    h.record(worker, exec_ns / batch.len().max(1) as u64);
+                }
+                inflight.n = 0; // every outcome below books itself
                 for (r, &p) in batch.into_iter().zip(&probs) {
+                    // exactly-one-response: only the claim winner
+                    // replies; a losing copy is silently discarded
+                    if !claim_terminal(&r.tag, &metrics) {
+                        continue;
+                    }
+                    if r.tag.as_ref().is_some_and(|t| t.is_hedge) {
+                        metrics.on_hedge_won();
+                    }
                     let e2e = r.enqueued.elapsed().as_nanos() as u64;
                     metrics.on_response(e2e);
                     let _ = r.reply.send(Response {
                         id: r.id,
                         prob: p,
                         e2e_ns: e2e,
+                        err: None,
                     });
                 }
             }
             Err(e) => {
                 crate::error!("worker inference failed: {e:#}");
-                // drop the batch; senders observe a closed reply channel
-                metrics.on_failed(batch.len());
+                // drop the batch; claim winners book `failed`, losing
+                // hedge copies book nothing (their twin owns the
+                // outcome); senders observe a closed reply channel
+                let lost = batch
+                    .iter()
+                    .filter(|r| claim_terminal(&r.tag, &metrics))
+                    .count();
+                if lost > 0 {
+                    metrics.on_failed(lost);
+                }
                 inflight.n = 0; // booked as failed just above
             }
         }
@@ -921,6 +1331,9 @@ mod tests {
             {
                 Admission::Enqueued(_) => accepted += 1,
                 Admission::Rejected => rejected += 1,
+                Admission::DeadlineInfeasible => {
+                    unreachable!("no deadline was set")
+                }
             }
         }
         assert!(rejected > 0, "cap 8 must reject part of a 64-burst");
@@ -970,6 +1383,120 @@ mod tests {
         depth.store(3, Ordering::Relaxed);
         depth_release(&depth, 10);
         assert_eq!(depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn deadline_expiry_replies_structured_and_books_expired() {
+        // Deadline checks need no TailConfig: the budget rides the
+        // request. Gate the engine so everything goes stale in-queue,
+        // then release — expired requests get a structured reply
+        // instead of a silently closed channel, and the extended
+        // ledger (`… + expired`) stays exact.
+        let gate = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let gate2 = gate.clone();
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                n_workers: 1,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait: Duration::ZERO,
+                },
+                ..Default::default()
+            },
+            store(),
+            move |_| {
+                let mut e = MockEngine::new(4, 13, 26, 16);
+                e.gate = Some(gate2.clone());
+                Ok(Box::new(e))
+            },
+        )
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let n = 16u64;
+        for id in 0..n {
+            let r = Request::full(id, vec![0.0; 13], vec![0; 26], tx.clone())
+                .with_deadline(Some(Duration::from_millis(20)));
+            assert!(matches!(c.submit(r).unwrap(), Admission::Enqueued(_)));
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        gate.store(true, Ordering::Relaxed);
+        drop(tx);
+        // every accepted request is answered: served or told "expired"
+        let replies: Vec<Response> = rx.iter().collect();
+        assert_eq!(replies.len() as u64, n, "one reply per request");
+        let served = replies.iter().filter(|r| r.is_ok()).count() as u64;
+        let expired = replies
+            .iter()
+            .filter(|r| r.err == Some("deadline_exceeded"))
+            .count() as u64;
+        assert_eq!(served + expired, n);
+        assert!(expired > 0, "a 20ms budget must expire under a 50ms stall");
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.requests, n);
+        assert_eq!(snap.responses, served);
+        assert_eq!(snap.expired, expired);
+        assert!(snap.ledger_ok(), "extended conservation: {snap:?}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn hedged_dispatch_answers_exactly_once_under_a_gray_worker() {
+        use crate::coordinator::engine::SlowAfter;
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                n_workers: 2,
+                policy: Policy::LeastQueued,
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_wait: Duration::from_micros(10),
+                },
+                tail: Some(TailConfig {
+                    hedge_after: Duration::from_millis(2),
+                    hedge_budget: 1.0, // hedge freely in this test
+                    tick: Duration::from_millis(1),
+                    ..TailConfig::default()
+                }),
+                ..Default::default()
+            },
+            store(),
+            |i| {
+                let e: Box<dyn InferenceEngine> =
+                    Box::new(MockEngine::new(1, 13, 26, 16));
+                Ok(if i == 0 {
+                    // worker 0 is gray from the start: correct answers,
+                    // 20ms late, every batch
+                    Box::new(SlowAfter::new(
+                        e,
+                        0,
+                        Duration::from_millis(20),
+                        Duration::ZERO,
+                        7,
+                    ))
+                } else {
+                    e
+                })
+            },
+        )
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let n = 40u64;
+        for id in 0..n {
+            c.submit(Request::full(id, vec![0.1; 13], vec![1; 26], tx.clone()))
+                .unwrap();
+        }
+        drop(tx);
+        // exactly one response per logical request — sorted ids must be
+        // 0..n with no duplicate and no hole, despite duplicate copies
+        // racing on two workers
+        let mut got: Vec<u64> = rx.iter().map(|r| r.id).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..n).collect::<Vec<_>>());
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.requests, n);
+        assert_eq!(snap.responses, n);
+        assert!(snap.hedges > 0, "a 20ms straggler must trigger hedges");
+        assert!(snap.ledger_ok(), "hedging must not bend the ledger");
+        c.shutdown();
     }
 
     #[test]

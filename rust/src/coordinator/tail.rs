@@ -1,0 +1,424 @@
+//! Gray-failure tail tolerance (S33): the shared state machines behind
+//! deadline admission, hedged dispatch, slow-worker quarantine, and
+//! brownout degradation.
+//!
+//! A *gray* failure is a worker that is alive yet slow — a straggling
+//! PIM bank, a saturated queue, a degraded shard. Fail-stop crashes are
+//! handled by the S31/S32 machinery (slot closure + replica promotion);
+//! this module bounds how long a request can be held hostage by a
+//! worker that never dies:
+//!
+//! * [`HedgeGate`] — one atomic claim per logical request. The primary
+//!   copy and its hedge race; the FIRST terminal outcome (response,
+//!   shed, expiry, failure, drain) claims the gate and books the
+//!   ledger, the loser books only the non-ledger `hedge_suppressed`
+//!   counter. This is the duplicate-suppression argument: a swap on an
+//!   `AtomicBool` admits exactly one winner under any interleaving, so
+//!   no request is ever answered twice and the extended conservation
+//!   ledger (`requests == responses + rejected + shed + failed +
+//!   expired`) stays exact under hedging.
+//! * [`FleetHealth`] — per-worker EWMA of service time feeding a
+//!   three-state breaker (healthy → probation → quarantined). Each
+//!   worker writes only its own atomics (its serving thread is the
+//!   sole recorder), routers read all of them.
+//! * [`HedgeBudget`] — a token budget capping hedges at
+//!   `max(1, accepted × hedge_budget)`, so a uniformly sick fleet
+//!   cannot melt down from retry amplification.
+//!
+//! Everything here is inert unless [`CoordinatorConfig::tail`] is set
+//! (`None` by default ⇒ bit-identical pre-existing behavior).
+//!
+//! [`CoordinatorConfig::tail`]: super::server::CoordinatorConfig
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Tail-tolerance knobs, attached via `CoordinatorConfig::tail`.
+#[derive(Clone, Debug)]
+pub struct TailConfig {
+    /// hedge a request still unanswered after this queue age
+    pub hedge_after: Duration,
+    /// hedges issued ≤ `max(1, accepted × hedge_budget)`
+    pub hedge_budget: f64,
+    /// governor cadence (hedge scan + brownout pressure evaluation)
+    pub tick: Duration,
+    /// a service-time sample is "slow" when it exceeds
+    /// `slow_factor ×` the best *peer* EWMA
+    pub slow_factor: f64,
+    /// consecutive slow samples per breaker demotion (and consecutive
+    /// fast samples to graduate probation)
+    pub strikes: u32,
+    /// with a quarantined worker present, every `probe_interval`-th
+    /// pick is diverted to it as trickle probe traffic
+    pub probe_interval: u64,
+    /// enter brownout when windowed bad-outcome pressure ≥ this
+    pub brownout_enter: f64,
+    /// exit brownout when windowed pressure ≤ this (hysteresis)
+    pub brownout_exit: f64,
+}
+
+impl Default for TailConfig {
+    fn default() -> TailConfig {
+        TailConfig {
+            hedge_after: Duration::from_millis(5),
+            hedge_budget: 0.1,
+            tick: Duration::from_millis(1),
+            slow_factor: 4.0,
+            strikes: 3,
+            probe_interval: 64,
+            brownout_enter: 0.2,
+            brownout_exit: 0.05,
+        }
+    }
+}
+
+/// One logical request's terminal-outcome claim. `claim` is a single
+/// atomic swap: exactly one caller ever sees `true`, under any thread
+/// interleaving — the winner books the ledger and replies, every loser
+/// stands down.
+#[derive(Default)]
+pub struct HedgeGate {
+    claimed: AtomicBool,
+}
+
+impl HedgeGate {
+    pub fn new() -> HedgeGate {
+        HedgeGate::default()
+    }
+
+    /// Try to claim the terminal outcome; `true` for exactly one caller.
+    pub fn claim(&self) -> bool {
+        !self.claimed.swap(true, Ordering::AcqRel)
+    }
+
+    /// Non-consuming read (the governor prunes claimed pending entries).
+    pub fn is_claimed(&self) -> bool {
+        self.claimed.load(Ordering::Acquire)
+    }
+}
+
+/// The claim handle carried by each enqueued copy of a request, plus
+/// which copy this is (the hedge books `hedges_won` when it wins).
+#[derive(Clone)]
+pub struct HedgeTag {
+    pub gate: Arc<HedgeGate>,
+    pub is_hedge: bool,
+}
+
+/// Hedge token budget: `try_take` admits the k-th hedge only while
+/// `k ≤ max(1, accepted × frac)` — a CAS loop, so concurrent takers
+/// never overshoot the cap.
+pub struct HedgeBudget {
+    frac: f64,
+    issued: AtomicU64,
+}
+
+impl HedgeBudget {
+    pub fn new(frac: f64) -> HedgeBudget {
+        HedgeBudget {
+            frac: frac.max(0.0),
+            issued: AtomicU64::new(0),
+        }
+    }
+
+    /// Take one hedge token against the current accepted count.
+    pub fn try_take(&self, accepted: u64) -> bool {
+        let cap = ((accepted as f64 * self.frac) as u64).max(1);
+        self.issued
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |i| {
+                (i < cap).then_some(i + 1)
+            })
+            .is_ok()
+    }
+
+    /// Hedges issued so far.
+    pub fn issued(&self) -> u64 {
+        self.issued.load(Ordering::Relaxed)
+    }
+}
+
+/// Breaker state of one worker. The routing rank is the discriminant:
+/// healthy workers are preferred, probation workers rank after them,
+/// quarantined workers receive no normal traffic at all (only trickle
+/// probes reach them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Healthy,
+    Probation,
+    Quarantined,
+}
+
+impl BreakerState {
+    fn from_u8(v: u8) -> BreakerState {
+        match v {
+            0 => BreakerState::Healthy,
+            1 => BreakerState::Probation,
+            _ => BreakerState::Quarantined,
+        }
+    }
+
+    /// Routing rank: lower is preferred.
+    pub fn rank(self) -> u8 {
+        self as u8
+    }
+}
+
+/// One worker's health cell. The owning worker's serving thread is the
+/// only writer (per-batch `record`); routers and the admission check
+/// read concurrently.
+struct WorkerHealth {
+    /// EWMA of per-request service time, ns, as f64 bits; 0.0 = no
+    /// samples yet
+    ewma_ns: AtomicU64,
+    /// `BreakerState` discriminant
+    state: AtomicU8,
+    slow_strikes: AtomicU32,
+    fast_strikes: AtomicU32,
+}
+
+impl WorkerHealth {
+    fn new() -> WorkerHealth {
+        WorkerHealth {
+            ewma_ns: AtomicU64::new(0.0f64.to_bits()),
+            state: AtomicU8::new(BreakerState::Healthy as u8),
+            slow_strikes: AtomicU32::new(0),
+            fast_strikes: AtomicU32::new(0),
+        }
+    }
+}
+
+/// Router-side fleet health: per-worker service-time EWMAs and breaker
+/// states, plus the probe ticket counter the router's trickle-probe
+/// diversion draws from.
+///
+/// State machine (k = `strikes`):
+///
+/// ```text
+///            k slow samples          k slow samples
+///  Healthy ────────────────► Probation ─────────────► Quarantined
+///     ▲                          │  ▲                      │
+///     └──── k fast samples ──────┘  └── 1 fast (probe) ────┘
+/// ```
+///
+/// "Slow" is *relative*: a sample is slow when it exceeds
+/// `slow_factor ×` the minimum EWMA among the OTHER workers — a
+/// straggler is never judged against its own inflated history, and a
+/// uniformly loaded fleet (everyone equally slow) quarantines no one.
+pub struct FleetHealth {
+    workers: Vec<WorkerHealth>,
+    slow_factor: f64,
+    strikes: u32,
+    probe_interval: u64,
+    probes: AtomicU64,
+}
+
+impl FleetHealth {
+    pub fn new(n_workers: usize, cfg: &TailConfig) -> FleetHealth {
+        FleetHealth {
+            workers: (0..n_workers).map(|_| WorkerHealth::new()).collect(),
+            slow_factor: cfg.slow_factor.max(1.0),
+            strikes: cfg.strikes.max(1),
+            probe_interval: cfg.probe_interval.max(1),
+            probes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn state(&self, w: usize) -> BreakerState {
+        BreakerState::from_u8(self.workers[w].state.load(Ordering::Acquire))
+    }
+
+    /// Routing rank of worker `w` (lower preferred; 2 = quarantined).
+    pub fn rank(&self, w: usize) -> u8 {
+        self.workers[w].state.load(Ordering::Acquire)
+    }
+
+    /// Worker `w`'s service-time EWMA in ns (`None` before any sample).
+    pub fn ewma_ns(&self, w: usize) -> Option<f64> {
+        let e = f64::from_bits(self.workers[w].ewma_ns.load(Ordering::Relaxed));
+        (e > 0.0).then_some(e)
+    }
+
+    /// Record one per-request service-time sample for worker `w` and
+    /// run the breaker transition. Called from worker `w`'s serving
+    /// thread only (single writer per cell).
+    pub fn record(&self, w: usize, sample_ns: u64) {
+        let h = &self.workers[w];
+        let s = sample_ns as f64;
+        // EWMA update first, so the admission ETA always reflects the
+        // newest sample (decay 0.8 — a few batches of history)
+        let old = f64::from_bits(h.ewma_ns.load(Ordering::Relaxed));
+        let blended = if old > 0.0 { 0.8 * old + 0.2 * s } else { s };
+        h.ewma_ns.store(blended.to_bits(), Ordering::Relaxed);
+        // best PEER ewma: the judgment baseline excludes this worker
+        let mut best: Option<f64> = None;
+        for (i, o) in self.workers.iter().enumerate() {
+            if i == w {
+                continue;
+            }
+            let e = f64::from_bits(o.ewma_ns.load(Ordering::Relaxed));
+            if e > 0.0 {
+                best = Some(best.map_or(e, |b: f64| b.min(e)));
+            }
+        }
+        // solo workers (or an all-cold fleet) have no one to be slower
+        // than — no breaker movement until a peer has samples
+        let Some(best) = best else { return };
+        if s > self.slow_factor * best {
+            h.fast_strikes.store(0, Ordering::Relaxed);
+            let k = h.slow_strikes.fetch_add(1, Ordering::Relaxed) + 1;
+            if k >= self.strikes {
+                h.slow_strikes.store(0, Ordering::Relaxed);
+                let next = match self.state(w) {
+                    BreakerState::Healthy => BreakerState::Probation,
+                    _ => BreakerState::Quarantined,
+                };
+                h.state.store(next as u8, Ordering::Release);
+            }
+        } else {
+            h.slow_strikes.store(0, Ordering::Relaxed);
+            match self.state(w) {
+                BreakerState::Quarantined => {
+                    // probe success: rejoin at probation, and forget the
+                    // inflated history so the admission ETA recovers too
+                    h.ewma_ns.store(s.to_bits(), Ordering::Relaxed);
+                    h.fast_strikes.store(0, Ordering::Relaxed);
+                    h.state
+                        .store(BreakerState::Probation as u8, Ordering::Release);
+                }
+                BreakerState::Probation => {
+                    let k = h.fast_strikes.fetch_add(1, Ordering::Relaxed) + 1;
+                    if k >= self.strikes {
+                        h.fast_strikes.store(0, Ordering::Relaxed);
+                        h.state
+                            .store(BreakerState::Healthy as u8, Ordering::Release);
+                    }
+                }
+                BreakerState::Healthy => {}
+            }
+        }
+    }
+
+    /// Draw one probe ticket (the router diverts a pick to a
+    /// quarantined worker when `ticket % probe_interval == 0`).
+    pub fn probe_ticket(&self) -> u64 {
+        self.probes.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn probe_interval(&self) -> u64 {
+        self.probe_interval
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_admits_exactly_one_claim() {
+        let g = HedgeGate::new();
+        assert!(!g.is_claimed());
+        assert!(g.claim());
+        assert!(g.is_claimed());
+        assert!(!g.claim());
+        assert!(!g.claim());
+    }
+
+    #[test]
+    fn gate_admits_exactly_one_claim_under_threads() {
+        for _ in 0..50 {
+            let g = Arc::new(HedgeGate::new());
+            let wins: Vec<_> = (0..4)
+                .map(|_| {
+                    let g = g.clone();
+                    std::thread::spawn(move || g.claim())
+                })
+                .collect();
+            let n: usize =
+                wins.into_iter().filter(|h| h.join().unwrap()).count();
+            assert_eq!(n, 1, "exactly one thread may win the claim");
+        }
+    }
+
+    #[test]
+    fn budget_caps_hedges_at_the_accepted_fraction() {
+        let b = HedgeBudget::new(0.1);
+        // max(1, 100 × 0.1) = 10 tokens
+        let taken = (0..50).filter(|_| b.try_take(100)).count();
+        assert_eq!(taken, 10);
+        assert_eq!(b.issued(), 10);
+        // the floor: even with nothing accepted yet, one hedge may go
+        let b = HedgeBudget::new(0.1);
+        assert!(b.try_take(0));
+        assert!(!b.try_take(0));
+    }
+
+    fn cfg(strikes: u32) -> TailConfig {
+        TailConfig {
+            strikes,
+            slow_factor: 4.0,
+            ..TailConfig::default()
+        }
+    }
+
+    #[test]
+    fn breaker_demotes_promotes_and_recovers() {
+        let h = FleetHealth::new(2, &cfg(2));
+        // seed worker 1 as the fast peer baseline: 1ms per request
+        h.record(1, 1_000_000);
+        assert_eq!(h.state(1), BreakerState::Healthy);
+        // worker 0 turns slow: 10ms ≫ 4 × 1ms. Two strikes → probation,
+        // two more → quarantined.
+        h.record(0, 10_000_000);
+        assert_eq!(h.state(0), BreakerState::Healthy, "one strike is noise");
+        h.record(0, 10_000_000);
+        assert_eq!(h.state(0), BreakerState::Probation);
+        h.record(0, 10_000_000);
+        h.record(0, 10_000_000);
+        assert_eq!(h.state(0), BreakerState::Quarantined);
+        // one fast probe sample rejoins at probation, EWMA reset
+        h.record(0, 1_000_000);
+        assert_eq!(h.state(0), BreakerState::Probation);
+        assert!(h.ewma_ns(0).unwrap() < 2_000_000.0, "history forgotten");
+        // two consecutive fast samples graduate back to healthy
+        h.record(0, 1_000_000);
+        h.record(0, 1_000_000);
+        assert_eq!(h.state(0), BreakerState::Healthy);
+    }
+
+    #[test]
+    fn a_fast_sample_resets_the_slow_streak() {
+        let h = FleetHealth::new(2, &cfg(2));
+        h.record(1, 1_000_000);
+        h.record(0, 10_000_000); // strike 1
+        h.record(0, 1_000_000); // streak broken
+        h.record(0, 10_000_000); // strike 1 again
+        assert_eq!(h.state(0), BreakerState::Healthy);
+    }
+
+    #[test]
+    fn a_solo_worker_is_never_quarantined() {
+        let h = FleetHealth::new(1, &cfg(1));
+        for _ in 0..10 {
+            h.record(0, u64::MAX / 2);
+        }
+        assert_eq!(h.state(0), BreakerState::Healthy, "no peer, no judgment");
+    }
+
+    #[test]
+    fn a_uniformly_slow_fleet_quarantines_no_one() {
+        let h = FleetHealth::new(3, &cfg(1));
+        for _ in 0..20 {
+            for w in 0..3 {
+                h.record(w, 50_000_000);
+            }
+        }
+        for w in 0..3 {
+            assert_eq!(h.state(w), BreakerState::Healthy, "worker {w}");
+        }
+    }
+}

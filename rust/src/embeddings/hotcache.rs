@@ -291,9 +291,10 @@ impl HotRowCache {
 }
 
 /// Per-batch gather ledger. Every requested row is served exactly once:
-/// `requested == cache_hits + local + remote + coalesced`, and with a
-/// cache attached `cache_misses == local + remote` (the misses are
-/// precisely the rows that fell through to the shards).
+/// `requested == cache_hits + local + remote + coalesced + degraded`,
+/// and with a cache attached `cache_misses == local + remote +
+/// degraded` (the misses are precisely the rows that fell through to
+/// the shards — or, in brownout, were zero-filled instead).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct GatherStats {
     /// valid `(field, id)` pairs requested (pre-dedup)
@@ -310,14 +311,20 @@ pub struct GatherStats {
     pub coalesced: usize,
     /// out-of-range ids resolved to row 0, counted per occurrence
     pub oob: usize,
+    /// brownout (S33): cross-shard rows skipped in degraded mode and
+    /// served as zeros, counted per occurrence (0 outside brownout)
+    pub degraded: usize,
 }
 
 impl GatherStats {
-    /// The conservation invariant above, as a checkable predicate.
+    /// The conservation invariant above, as a checkable predicate
+    /// (degraded rows are a served-as-zero leg, so they extend both
+    /// sides the same way remote rows would).
     pub fn balanced(&self) -> bool {
-        self.requested == self.cache_hits + self.local + self.remote + self.coalesced
+        self.requested
+            == self.cache_hits + self.local + self.remote + self.coalesced + self.degraded
             && (self.cache_hits + self.cache_misses == 0
-                || self.cache_misses == self.local + self.remote)
+                || self.cache_misses == self.local + self.remote + self.degraded)
     }
 }
 
@@ -397,6 +404,31 @@ impl BatchGatherer {
     where
         I: IntoIterator<Item = (&'a [u32], &'a [i32])>,
     {
+        self.gather_batch_mode(map, store, cache, local, requests, out, false)
+    }
+
+    /// [`BatchGatherer::gather_batch_with`] with an explicit brownout
+    /// switch (S33). `degraded = true` skips every cross-shard fetch:
+    /// cache hits and locally-owned rows are served bit-identically to
+    /// the normal path, but a row whose owner is a remote shard is left
+    /// zero-filled and counted in [`GatherStats::degraded`] (per
+    /// occurrence — degraded rows are not staged for coalescing, so
+    /// duplicates count too). `degraded = false` is exactly
+    /// `gather_batch_with`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gather_batch_mode<'a, I>(
+        &mut self,
+        map: &super::sharding::ShardMap,
+        store: &ShardedStore,
+        cache: Option<&HotRowCache>,
+        local: usize,
+        requests: I,
+        out: &mut Vec<f32>,
+        degraded: bool,
+    ) -> GatherStats
+    where
+        I: IntoIterator<Item = (&'a [u32], &'a [i32])>,
+    {
         // new epoch invalidates every stamp at once; on u32 wrap, clear
         // the stamps for real so an ancient stamp can never alias
         self.epoch = self.epoch.wrapping_add(1);
@@ -441,15 +473,25 @@ impl BatchGatherer {
                 }
                 let row = match row {
                     Some(r) => r,
+                    None if map.owns(local, j) => {
+                        st.local += 1;
+                        store.shards[local]
+                            .row(j, id)
+                            .expect("shard map owner must hold the table")
+                    }
+                    None if degraded => {
+                        // brownout: the owner is a remote shard — skip
+                        // the fetch, leave the zero fill, and do NOT
+                        // stage the row (a zero must never be scattered
+                        // as if it were the real thing after pressure
+                        // clears mid-batch... and duplicates of a
+                        // skipped row are skipped rows too)
+                        st.degraded += 1;
+                        continue;
+                    }
                     None => {
-                        let serve = if map.owns(local, j) {
-                            st.local += 1;
-                            local
-                        } else {
-                            st.remote += 1;
-                            map.primary(j)
-                        };
-                        store.shards[serve]
+                        st.remote += 1;
+                        store.shards[map.primary(j)]
                             .row(j, id)
                             .expect("shard map owner must hold the table")
                     }
@@ -605,6 +647,76 @@ mod tests {
         assert_eq!(st.requested, wl + wr);
         assert!(st.coalesced > 0, "repeated ids must coalesce");
         assert!(st.balanced(), "{st:?}");
+    }
+
+    #[test]
+    fn degraded_gather_serves_local_rows_and_zeros_remote() {
+        let s = sharded("kdd", 3);
+        let nf = s.n_fields();
+        let d = s.d_emb;
+        let local = 1;
+        let fields: Vec<u32> = (0..nf as u32).collect();
+        let recs: Vec<Vec<i32>> = (0..4)
+            .map(|b| (0..nf).map(|j| ((j + b) % 3) as i32).collect())
+            .collect();
+        let mut g = BatchGatherer::new(&s.cards);
+        let mut normal = Vec::new();
+        let st_n = g.gather_batch(
+            &s,
+            None,
+            local,
+            recs.iter().map(|ids| (fields.as_slice(), ids.as_slice())),
+            &mut normal,
+        );
+        let mut g = BatchGatherer::new(&s.cards);
+        let mut got = Vec::new();
+        let st_d = g.gather_batch_mode(
+            &s.map,
+            &s,
+            None,
+            local,
+            recs.iter().map(|ids| (fields.as_slice(), ids.as_slice())),
+            &mut got,
+            true,
+        );
+        // locally-owned tables are served bit-identically; every
+        // remote-owned slot is a zero fill
+        for b in 0..recs.len() {
+            for j in 0..nf {
+                let at = b * nf * d + j * d;
+                if s.map.owns(local, j) {
+                    assert_eq!(
+                        &got[at..at + d],
+                        &normal[at..at + d],
+                        "local table {j} must be exact in brownout"
+                    );
+                } else {
+                    assert!(
+                        got[at..at + d].iter().all(|&x| x == 0.0),
+                        "remote table {j} must be zero-filled"
+                    );
+                }
+            }
+        }
+        assert_eq!(st_d.remote, 0, "brownout fetches nothing cross-shard");
+        assert!(st_d.degraded > 0);
+        assert_eq!(st_d.requested, st_n.requested);
+        assert_eq!(st_d.local, st_n.local, "local service is unchanged");
+        assert!(st_d.balanced(), "{st_d:?}");
+        // degraded = false is exactly the normal path
+        let mut g = BatchGatherer::new(&s.cards);
+        let mut again = Vec::new();
+        let st = g.gather_batch_mode(
+            &s.map,
+            &s,
+            None,
+            local,
+            recs.iter().map(|ids| (fields.as_slice(), ids.as_slice())),
+            &mut again,
+            false,
+        );
+        assert_eq!(again, normal);
+        assert_eq!(st, st_n);
     }
 
     #[test]

@@ -16,13 +16,13 @@
 
 use autorac::coordinator::loadgen::{
     self, Arrival, CrashInjector, LoadGenConfig, LoadReport, Scenario,
-    ScenarioOutcome, ScenarioSpec,
+    ScenarioOutcome, ScenarioSpec, SlowInjector,
 };
 use autorac::coordinator::net::{NetServer, NetServerConfig};
 use autorac::coordinator::{
     AdmissionPolicy, BatcherConfig, Coordinator, CoordinatorConfig,
     MetricsSnapshot, MockEngine, PimEngine, PjrtEngine, Policy, Request,
-    ServingStore,
+    ServingStore, TailConfig,
 };
 use autorac::util::json_lazy;
 use autorac::data::{make_batch, profile, Generator, Splits, DEFAULT_SEED};
@@ -127,11 +127,18 @@ fn print_help() {
                       self-bench unless --hold keeps serving until killed)\n\
                       --connect ADDR (drive an external server; client stats only)\n\
                       --conns N (loadgen connections, default 4) --quick (CI-sized run)\n\
-                      --scenario steady|flash-crowd|hot-key-storm|worker-crash|diurnal\n\
+                      --scenario steady|flash-crowd|hot-key-storm|worker-crash|diurnal|slow-worker|brownout\n\
                       (failure/traffic matrix, in-process only; SLO verdict in report)\n\
                       --crash-worker K --crash-after-ms T --crash-after-batches N (0=use T)\n\
                       --surge F (flash-crowd multiplier) --storm-rows N (hot-key set)\n\
                       --slo-p99-ms B (p99 budget for the SLO verdict, default 250)\n\
+                      --slow-worker K --slow-after-batches N --slow-ms T --slow-jitter-ms J\n\
+                      (gray straggler for slow-worker/brownout: correct but T ms late)\n\
+                      --deadline-us D (per-request deadline on the wire; 0 = none)\n\
+                      --hedge (arm the tail stack outside gray scenarios)\n\
+                      --hedge-after-ms T --hedge-budget F (hedge trigger age / max\n\
+                      hedge fraction; slow-worker+brownout arm the stack themselves\n\
+                      and rerun unhedged for the p99 comparison)\n\
          xbar-bench: --k N --n N (weight shape) --quick (short CI timings)\n\
                       --threads N (tile-parallel kernel threads; 0 = all cores)\n\
                       --json PATH (machine-readable report, e.g. BENCH_xbar.json)\n\
@@ -445,6 +452,11 @@ struct ServeBenchSetup {
     spec: ScenarioSpec,
     /// p99 budget the scenario SLO verdict is judged against, µs
     slo_p99_us: f64,
+    /// per-request deadline the loadgen stamps on the wire, µs (0 = none)
+    deadline_us: u64,
+    /// gray-failure tail tolerance (S33): `Some` arms deadline
+    /// admission, hedged dispatch, quarantine routing, and brownout
+    tail: Option<TailConfig>,
 }
 
 /// Build the sharded store + coordinator for one serve-bench run
@@ -490,8 +502,11 @@ fn serve_bench_coordinator(
     let seed = s.seed;
     let threads = s.threads;
     // worker-crash scenario: the victim's engine gets a CrashAfter fuse
-    // (deadline anchored here, ≈ coordinator start); None otherwise
+    // (deadline anchored here, ≈ coordinator start); slow-worker and
+    // brownout scenarios a SlowAfter gray fault; None otherwise
     let inj = CrashInjector::new(&s.spec);
+    let slow = SlowInjector::new(&s.spec);
+    let tail = s.tail.clone();
     Coordinator::start_with(
         CoordinatorConfig {
             n_workers: s.workers,
@@ -503,6 +518,7 @@ fn serve_bench_coordinator(
                 max_batch: batch,
                 max_wait: std::time::Duration::ZERO,
             },
+            tail,
         },
         serving,
         move |i| {
@@ -518,8 +534,12 @@ fn serve_bench_coordinator(
                         .with_threads(threads),
                 ),
             };
-            Ok(match &inj {
+            let e = match &inj {
                 Some(inj) => inj.arm(i, e),
+                None => e,
+            };
+            Ok(match &slow {
+                Some(slow) => slow.arm(i, e),
                 None => e,
             })
         },
@@ -533,6 +553,7 @@ fn serve_bench_loadcfg(s: &ServeBenchSetup) -> LoadGenConfig {
         seed: s.seed,
         coverage: s.coverage,
         oov_frac: s.oov_frac,
+        deadline_us: s.deadline_us,
     }
 }
 
@@ -634,6 +655,32 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
         0 => None, // 0 = use the wall-clock fuse
         n => Some(n),
     };
+    // Gray-failure knobs (S33) — likewise consumed unconditionally.
+    spec.slow_worker = args.usize_or("slow-worker", spec.slow_worker)?;
+    spec.slow_after_batches =
+        args.usize_or("slow-after-batches", spec.slow_after_batches)?;
+    spec.slow_delay =
+        std::time::Duration::from_millis(args.u64_or("slow-ms", 20)?);
+    spec.slow_jitter =
+        std::time::Duration::from_millis(args.u64_or("slow-jitter-ms", 2)?);
+    let deadline_us = args.u64_or("deadline-us", 0)?;
+    let hedge_after = std::time::Duration::from_millis(
+        args.u64_or("hedge-after-ms", 5)?,
+    );
+    let hedge_budget = args.f64_or("hedge-budget", 0.1)?;
+    autorac::ensure!(
+        (0.0..=1.0).contains(&hedge_budget),
+        "--hedge-budget must be in [0, 1], got {hedge_budget}"
+    );
+    // the tail stack arms automatically for the gray-failure scenarios;
+    // --hedge opts any other shape in (defaults stay bit-identical off)
+    let tail_on = args.flag("hedge")
+        || matches!(scenario, Scenario::SlowWorker | Scenario::Brownout);
+    let tail = tail_on.then(|| TailConfig {
+        hedge_after,
+        hedge_budget,
+        ..Default::default()
+    });
     let slo_p99_us = args.f64_or("slo-p99-ms", 250.0)? * 1e3;
     if scenario == Scenario::WorkerCrash {
         autorac::ensure!(
@@ -645,6 +692,19 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
         autorac::ensure!(
             workers >= 2,
             "worker-crash needs >= 2 workers to have a survivor"
+        );
+    }
+    if matches!(scenario, Scenario::SlowWorker | Scenario::Brownout) {
+        autorac::ensure!(
+            spec.slow_worker < workers,
+            "--slow-worker {} out of range (workers {})",
+            spec.slow_worker,
+            workers
+        );
+        autorac::ensure!(
+            workers >= 2,
+            "{} needs >= 2 workers so hedges have somewhere to go",
+            scenario.name()
         );
     }
     let json_path = args.get("json").map(str::to_string);
@@ -682,6 +742,8 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
         oov_frac,
         spec,
         slo_p99_us,
+        deadline_us,
+        tail,
     };
     args.finish()?;
     if listen.is_some() && connect.is_some() {
@@ -710,6 +772,7 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
         if let Some(path) = json_path {
             let report = Json::from_pairs(vec![
                 ("bench", Json::Str("serving".into())),
+                ("schema_version", Json::Num(2.0)),
                 ("transport", Json::Str("socket-client".into())),
                 ("dataset", Json::Str(setup.dataset.clone())),
                 ("conns", Json::Num(conns as f64)),
@@ -718,6 +781,7 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
                 ("accepted", Json::Num(rep.accepted as f64)),
                 ("rejected", Json::Num(rep.rejected as f64)),
                 ("completed", Json::Num(rep.completed as f64)),
+                ("expired", Json::Num(rep.expired as f64)),
                 ("wire_p50_us", Json::Num(wire.wire_p50_us)),
                 ("wire_p99_us", Json::Num(wire.wire_p99_us)),
                 ("client_rps", Json::Num(wire.client_rps)),
@@ -792,6 +856,7 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
                 ("frames_bad", ld(&stats.frames_bad)),
                 ("lazy_frames", ld(&stats.lazy_frames)),
                 ("tree_frames", ld(&stats.tree_frames)),
+                ("conns_idle_closed", ld(&stats.conns_idle_closed)),
                 ("tree_parse_ns", Json::Num(tree_ns)),
                 ("lazy_parse_ns", Json::Num(lazy_ns)),
                 ("lazy_speedup", Json::Num(speedup)),
@@ -807,6 +872,48 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
     let rep = out.report.clone();
     print_serve_bench(&snap, &rep);
     print_scenario_slo(&setup, &snap, &out);
+    // Gray-failure twin run (S33): replay the byte-identical schedule
+    // with the tail stack off, so the hedged-vs-unhedged p99 comparison
+    // isolates what hedging + quarantine buy against the same straggler.
+    let tail_cmp = if matches!(
+        setup.spec.scenario,
+        Scenario::SlowWorker | Scenario::Brownout
+    ) && setup.tail.is_some()
+    {
+        let off = ServeBenchSetup {
+            tail: None,
+            ..setup.clone()
+        };
+        let (base, _) = serve_bench_run(&off, policy)?;
+        // The straggler's injected delay dwarfs normal service time, so
+        // a real hedging win clears the 0.9 factor with a wide margin;
+        // brownout is judged on the ledger alone (it trades fidelity
+        // for latency, so a p99 win is the mechanism, not the verdict).
+        let p99_win = snap.e2e_p99_us < base.e2e_p99_us * 0.9;
+        let verdict = match setup.spec.scenario {
+            Scenario::SlowWorker => {
+                snap.ledger_ok() && snap.hedges > 0 && p99_win
+            }
+            _ => snap.ledger_ok(),
+        };
+        println!(
+            "  tail SLO: hedges {} ({} won, rate {:.1}%) | expired {} | \
+             deadline_rejected {} | degraded_responses {} | p99 hedged \
+             {:.0} µs vs unhedged {:.0} µs | verdict {}",
+            snap.hedges,
+            snap.hedges_won,
+            snap.hedge_rate() * 100.0,
+            snap.expired,
+            snap.deadline_rejected,
+            snap.degraded_responses,
+            snap.e2e_p99_us,
+            base.e2e_p99_us,
+            if verdict { "PASS" } else { "FAIL" }
+        );
+        Some((base.e2e_p99_us, verdict))
+    } else {
+        None
+    };
     if let Some(path) = json_path {
         let (avail, post_avail, slo_ok) = scenario_slo(&setup, &snap, &out);
         let mut pairs = serve_bench_report(&setup, policy, &snap, &rep);
@@ -820,6 +927,12 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
             ("post_crash_availability", Json::Num(post_avail)),
             ("slo_ok", Json::Bool(slo_ok)),
         ]);
+        if let Some((unhedged_p99, verdict)) = tail_cmp {
+            pairs.extend(vec![
+                ("unhedged_p99_us", Json::Num(unhedged_p99)),
+                ("tail_slo_ok", Json::Bool(verdict)),
+            ]);
+        }
         let report = Json::from_pairs(pairs);
         report.write_file(std::path::Path::new(&path))?;
         println!("wrote {path}");
@@ -906,6 +1019,9 @@ fn serve_bench_report(
 ) -> Vec<(&'static str, Json)> {
     vec![
         ("bench", Json::Str("serving".into())),
+        // bumped whenever a field is added/renamed so downstream readers
+        // can fail fast instead of silently missing columns
+        ("schema_version", Json::Num(2.0)),
         (
             "engine",
             Json::Str(match setup.engine {
@@ -931,6 +1047,14 @@ fn serve_bench_report(
         ("rejected", Json::Num(snap.rejected as f64)),
         ("shed", Json::Num(snap.shed as f64)),
         ("failed", Json::Num(snap.failed as f64)),
+        ("expired", Json::Num(snap.expired as f64)),
+        ("deadline_rejected", Json::Num(snap.deadline_rejected as f64)),
+        ("hedges", Json::Num(snap.hedges as f64)),
+        ("hedges_won", Json::Num(snap.hedges_won as f64)),
+        ("hedge_rate", Json::Num(snap.hedge_rate())),
+        ("degraded_responses", Json::Num(snap.degraded_responses as f64)),
+        ("degraded_rows", Json::Num(snap.degraded_rows as f64)),
+        ("brownout_entries", Json::Num(snap.brownout_entries as f64)),
         ("local_rows", Json::Num(snap.local_rows as f64)),
         ("remote_rows", Json::Num(snap.remote_rows as f64)),
         ("cache_rows", Json::Num(setup.cache_rows as f64)),
@@ -1023,12 +1147,13 @@ fn print_wire_stats(
 fn print_serve_bench(snap: &MetricsSnapshot, rep: &LoadReport) {
     println!(
         "  sent {} | accepted {} | rejected {} | shed {} | failed {} | \
-         lost {} | shed-rate {:.1}%",
+         expired {} | lost {} | shed-rate {:.1}%",
         rep.sent,
         rep.accepted,
         rep.rejected,
         snap.shed,
         snap.failed,
+        snap.expired,
         rep.lost,
         snap.shed_rate() * 100.0
     );

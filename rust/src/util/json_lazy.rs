@@ -50,6 +50,11 @@ pub struct WireRequest {
     pub tables: Vec<u32>,
     /// one embedding row id per entry of `tables`
     pub ids: Vec<i32>,
+    /// optional end-to-end deadline budget in microseconds (S33);
+    /// absent on the wire ⇒ `None` ⇒ every deadline check downstream is
+    /// skipped. Present-but-invalid (null, string, negative, fractional)
+    /// is a parse error on both paths.
+    pub deadline_us: Option<u64>,
 }
 
 /// Which parser produced a result — surfaced so tests and server
@@ -118,7 +123,15 @@ impl WireRequest {
             .map(|v| v.as_f64().and_then(f64_to_i32))
             .collect::<Option<_>>()
             .ok_or_else(|| crate::err!("non-i32 in `ids`"))?;
-        Ok(WireRequest { id, dense, tables, ids })
+        let deadline_us = match j.get("deadline_us") {
+            None => None,
+            Some(v) => Some(
+                v.as_f64().and_then(f64_to_u64).ok_or_else(|| {
+                    crate::err!("missing/invalid number field `deadline_us`")
+                })?,
+            ),
+        };
+        Ok(WireRequest { id, dense, tables, ids, deadline_us })
     }
 
     /// Shape sanity, applied after BOTH parse paths.
@@ -177,7 +190,14 @@ impl WireRequest {
             }
             s.push_str(&v.to_string());
         }
-        s.push_str("]}\n");
+        s.push(']');
+        // emitted only when set: a deadline-free request line is
+        // byte-identical to the pre-deadline wire format
+        if let Some(d) = self.deadline_us {
+            s.push_str(",\"deadline_us\":");
+            s.push_str(&d.to_string());
+        }
+        s.push_str("}\n");
         s
     }
 }
@@ -254,6 +274,10 @@ pub fn lazy_scan(bytes: &[u8]) -> Scan {
     let mut dense: Option<Vec<f32>> = None;
     let mut tables: Option<Vec<u32>> = None;
     let mut ids: Option<Vec<i32>> = None;
+    // optional hot field: captured when present (the tree path would
+    // see it, so skipping it as cold would make the paths disagree),
+    // but never required for Scan::Done
+    let mut deadline_us: Option<u64> = None;
 
     c.skip_ws();
     if c.peek() == Some(b'}') {
@@ -307,6 +331,16 @@ pub fn lazy_scan(bytes: &[u8]) -> Scan {
                     }
                     Err(why) => Err(why),
                 },
+                b"deadline_us" if deadline_us.is_none() => match c.number() {
+                    Ok(x) => match f64_to_u64(x) {
+                        Some(v) => {
+                            deadline_us = Some(v);
+                            Ok(())
+                        }
+                        None => Err("`deadline_us` is not a u64"),
+                    },
+                    Err(why) => Err(why),
+                },
                 _ => c.skip_value(0),
             };
             if let Err(why) = outcome {
@@ -329,7 +363,7 @@ pub fn lazy_scan(bytes: &[u8]) -> Scan {
     }
     match (id, dense, tables, ids) {
         (Some(id), Some(dense), Some(tables), Some(ids)) => {
-            Scan::Done(WireRequest { id, dense, tables, ids })
+            Scan::Done(WireRequest { id, dense, tables, ids, deadline_us })
         }
         // missing hot field: let the tree path own the error message
         _ => Scan::Fallback("missing hot field"),
@@ -539,6 +573,7 @@ mod tests {
             dense: vec![0.5, -1.25, 3.0],
             tables: vec![0, 3, 9],
             ids: vec![12, -4, 7],
+            deadline_us: None,
         }
     }
 
@@ -619,6 +654,30 @@ mod tests {
             "]".repeat(json::MAX_DEPTH + 4)
         );
         assert!(parse_request(deep.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn deadline_rides_the_wire_only_when_set() {
+        // absent ⇒ the line is byte-identical to the pre-deadline format
+        let line = req().to_line();
+        assert!(!line.contains("deadline_us"));
+        let mut r = req();
+        r.deadline_us = Some(2_500);
+        let line = r.to_line();
+        assert!(line.contains(",\"deadline_us\":2500}"));
+        let (got, path) = parse_request_traced(line.trim_end().as_bytes());
+        assert_eq!(path, ParsePath::Lazy, "deadline must stay on the lazy path");
+        assert_eq!(got.unwrap(), r);
+        assert_eq!(parse_request_tree(line.trim_end().as_bytes()).unwrap(), r);
+        // present-but-invalid is an error on BOTH paths, not a silent None
+        for bad in [
+            r#"{"id":1,"dense":[1],"tables":[0],"ids":[2],"deadline_us":null}"#,
+            r#"{"id":1,"dense":[1],"tables":[0],"ids":[2],"deadline_us":-5}"#,
+            r#"{"id":1,"dense":[1],"tables":[0],"ids":[2],"deadline_us":1.5}"#,
+        ] {
+            assert!(parse_request(bad.as_bytes()).is_err(), "{bad}");
+            assert!(parse_request_tree(bad.as_bytes()).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -132,6 +132,7 @@ fn shard_affinity_conserves_requests() {
         match adm {
             Admission::Enqueued(w) => assert!(w < 4, "worker {w}"),
             Admission::Rejected => panic!("unbounded queue rejected"),
+            Admission::DeadlineInfeasible => panic!("no deadline was set"),
         }
     }
     drop(tx);
@@ -186,6 +187,7 @@ fn reject_policy_counts_add_up_under_overload() {
         {
             Admission::Enqueued(_) => accepted += 1,
             Admission::Rejected => rejected += 1,
+            Admission::DeadlineInfeasible => panic!("no deadline was set"),
         }
     }
     assert!(rejected > 0, "200-burst into cap-6 queues must reject");
@@ -327,6 +329,7 @@ fn wire_request(id: u64) -> WireRequest {
         dense: vec![0.1; 13],
         tables: (0..26).collect(),
         ids: vec![1; 26],
+        deadline_us: None,
     }
 }
 

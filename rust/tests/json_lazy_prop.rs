@@ -19,6 +19,7 @@ fn same_request(a: &WireRequest, b: &WireRequest) -> bool {
     a.id == b.id
         && a.tables == b.tables
         && a.ids == b.ids
+        && a.deadline_us == b.deadline_us
         && a.dense.len() == b.dense.len()
         && a.dense
             .iter()
@@ -312,7 +313,14 @@ fn encoder_round_trips_bit_exactly_on_the_lazy_path() {
             .collect();
         // ids stay <= 2^53: the wire narrows through f64 on both paths,
         // so only f64-exact integers can round-trip
-        let req = WireRequest { id: g.u64(0, 1 << 53), dense, tables, ids };
+        let deadline_us = (g.usize(0, 3) == 0).then(|| g.u64(0, 1 << 53));
+        let req = WireRequest {
+            id: g.u64(0, 1 << 53),
+            dense,
+            tables,
+            ids,
+            deadline_us,
+        };
         let line = req.to_line();
         let (parsed, path) = parse_request_traced(line.trim_end().as_bytes());
         let parsed = parsed.map_err(|e| format!("round trip failed: {e}"))?;
@@ -336,6 +344,7 @@ fn nonfinite_floats_encode_to_null_and_reject_on_both_paths() {
             dense: vec![bad],
             tables: vec![0],
             ids: vec![0],
+            deadline_us: None,
         };
         let line = req.to_line();
         check_differential(line.trim_end().as_bytes()).unwrap();

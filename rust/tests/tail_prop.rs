@@ -1,0 +1,398 @@
+//! Property suite for gray-failure tail tolerance (ISSUE 9): hedged
+//! dispatch answers every request exactly once under any race, the
+//! extended conservation ledger (`requests == responses + rejected +
+//! shed + failed + expired`) stays exact under mixed outcomes, the
+//! deadline knob never perturbs the deterministic schedule, quarantined
+//! workers receive nothing but trickle probes until one succeeds, and
+//! brownout gathers zero-fill exactly the cross-shard rows.
+
+use autorac::coordinator::loadgen::{
+    self, build_schedule, Arrival, LoadGenConfig,
+};
+use autorac::coordinator::router::Router;
+use autorac::coordinator::{
+    Admission, BatcherConfig, BreakerState, Coordinator, CoordinatorConfig,
+    FleetHealth, HedgeGate, InferenceEngine, MockEngine, Policy, Request,
+    SlowAfter, TailConfig,
+};
+use autorac::data::{profile, Profile, ALL_PROFILES};
+use autorac::embeddings::{BatchGatherer, EmbeddingStore, ShardMap, ShardPolicy, ShardedStore};
+use autorac::util::qcheck::{qcheck, Gen};
+use autorac::{prop_assert, prop_assert_eq};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+fn tail(hedge_after_ms: u64, budget: f64) -> TailConfig {
+    TailConfig {
+        hedge_after: Duration::from_millis(hedge_after_ms),
+        hedge_budget: budget,
+        tick: Duration::from_millis(1),
+        ..TailConfig::default()
+    }
+}
+
+/// One straggling worker (gray: correct but `delay_ms` late), one fast
+/// peer, single-request batches so per-request hedging is observable.
+fn gray_pair(delay_ms: u64, cfg: CoordinatorConfig) -> Coordinator {
+    Coordinator::start(
+        cfg,
+        Arc::new(EmbeddingStore::random(&profile("criteo").unwrap(), 16, 3)),
+        move |i| {
+            let e: Box<dyn InferenceEngine> =
+                Box::new(MockEngine::new(32, 13, 26, 16));
+            Ok(if i == 0 {
+                Box::new(SlowAfter::new(
+                    e,
+                    0,
+                    Duration::from_millis(delay_ms),
+                    Duration::ZERO,
+                    7,
+                ))
+            } else {
+                e
+            })
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn hedge_gate_admits_exactly_one_winner_under_contention() {
+    qcheck(30, |g| {
+        let racers = g.usize(2, 8);
+        let gate = Arc::new(HedgeGate::new());
+        let wins: Vec<_> = (0..racers)
+            .map(|_| {
+                let gate = gate.clone();
+                std::thread::spawn(move || gate.claim())
+            })
+            .collect();
+        let won = wins.into_iter().filter(|h| h.join().unwrap()).count();
+        prop_assert_eq!(won, 1, "{racers} racers, exactly one claim");
+        prop_assert!(gate.is_claimed());
+        Ok(())
+    });
+}
+
+#[test]
+fn hedged_duplicates_answer_every_request_exactly_once() {
+    qcheck(3, |g| {
+        let n = g.usize(20, 50) as u64;
+        let delay_ms = g.u64(8, 16);
+        let c = gray_pair(
+            delay_ms,
+            CoordinatorConfig {
+                n_workers: 2,
+                policy: Policy::LeastQueued,
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_wait: Duration::from_micros(10),
+                },
+                tail: Some(tail(2, 1.0)),
+                ..Default::default()
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        for id in 0..n {
+            let adm = c
+                .submit(Request::full(id, vec![0.1; 13], vec![1; 26], tx.clone()))
+                .unwrap();
+            prop_assert!(matches!(adm, Admission::Enqueued(_)));
+        }
+        drop(tx);
+        // the drain ends only when every reply-sender clone is gone —
+        // including the hedge copies and the governor's pending registry
+        // — so reaching it at all is part of the property
+        let mut got: Vec<u64> = rx.iter().map(|r| r.id).collect();
+        got.sort_unstable();
+        prop_assert_eq!(
+            got,
+            (0..n).collect::<Vec<u64>>(),
+            "every id exactly once (n {n}, straggler {delay_ms}ms)"
+        );
+        let snap = c.metrics.snapshot();
+        prop_assert!(
+            snap.hedges > 0,
+            "a {delay_ms}ms straggler vs a 2ms trigger must hedge"
+        );
+        prop_assert!(
+            snap.ledger_ok(),
+            "ledger under hedging: req {} resp {} rej {} shed {} failed {} \
+             expired {}",
+            snap.requests,
+            snap.responses,
+            snap.rejected,
+            snap.shed,
+            snap.failed,
+            snap.expired
+        );
+        c.shutdown();
+        Ok(())
+    });
+}
+
+#[test]
+fn extended_ledger_is_exact_under_mixed_outcomes() {
+    qcheck(4, |g| {
+        // random cocktail: maybe deadlines (expiry + infeasible
+        // rejections), maybe a tight queue cap (admission rejections),
+        // always a straggler (hedges + quarantine churn)
+        let deadline_us = if g.usize(0, 1) == 0 { 0 } else { g.u64(1_000, 3_000) };
+        let queue_cap = if g.usize(0, 1) == 0 {
+            usize::MAX
+        } else {
+            g.usize(4, 8)
+        };
+        let delay_ms = g.u64(4, 8);
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                n_workers: 2,
+                policy: Policy::LeastQueued,
+                queue_cap,
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_wait: Duration::from_micros(10),
+                },
+                tail: Some(tail(2, 0.5)),
+                ..Default::default()
+            },
+            Arc::new(EmbeddingStore::random(&profile("kdd").unwrap(), 8, 3)),
+            move |i| {
+                let e: Box<dyn InferenceEngine> =
+                    Box::new(MockEngine::new(16, 3, 10, 8));
+                Ok(if i == 0 {
+                    Box::new(SlowAfter::new(
+                        e,
+                        0,
+                        Duration::from_millis(delay_ms),
+                        Duration::ZERO,
+                        11,
+                    ))
+                } else {
+                    e
+                })
+            },
+        )
+        .unwrap();
+        let cfg = LoadGenConfig {
+            n_requests: 60,
+            arrival: Arrival::ClosedLoop { concurrency: 12 },
+            seed: g.u64(0, 1 << 40),
+            coverage: 1.0,
+            oov_frac: 0.0,
+            deadline_us,
+        };
+        let rep = loadgen::run(&c, &profile("kdd").unwrap(), &cfg).unwrap();
+        prop_assert_eq!(rep.sent, 60);
+        prop_assert_eq!(
+            rep.accepted,
+            rep.completed + rep.expired + rep.lost,
+            "client accounting (deadline {deadline_us}µs cap {queue_cap})"
+        );
+        prop_assert_eq!(rep.lost, 0, "every accepted request must answer");
+        let snap = c.metrics.snapshot();
+        prop_assert_eq!(
+            snap.requests,
+            snap.responses + snap.rejected + snap.shed + snap.failed
+                + snap.expired,
+            "extended conservation ledger, exactly"
+        );
+        prop_assert!(snap.ledger_ok());
+        c.shutdown();
+        Ok(())
+    });
+}
+
+#[test]
+fn deadline_knob_never_perturbs_the_schedule() {
+    qcheck(20, |g| {
+        let p = profile(*g.choose(&ALL_PROFILES)).unwrap();
+        let base = LoadGenConfig {
+            n_requests: g.usize(5, 30),
+            arrival: if g.usize(0, 1) == 0 {
+                Arrival::OpenLoop {
+                    rps: g.f64(1_000.0, 50_000.0),
+                }
+            } else {
+                Arrival::ClosedLoop {
+                    concurrency: g.usize(1, 16),
+                }
+            },
+            seed: g.u64(0, 1 << 40),
+            coverage: g.f64(0.3, 1.0),
+            oov_frac: 0.0,
+            deadline_us: 0,
+        };
+        let d = g.u64(1, 1 << 33);
+        let with = LoadGenConfig {
+            deadline_us: d,
+            ..base.clone()
+        };
+        let a = build_schedule(&p, &base).unwrap();
+        let b = build_schedule(&p, &with).unwrap();
+        prop_assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            // content and timing are bit-identical — the deadline is a
+            // pure annotation, never an RNG draw
+            prop_assert_eq!(x.k, y.k);
+            prop_assert_eq!(x.at_ns, y.at_ns);
+            prop_assert!(x.dense == y.dense && x.fields == y.fields && x.ids == y.ids);
+            prop_assert_eq!(x.deadline_us, 0u64);
+            prop_assert_eq!(y.deadline_us, d);
+            // and off the wire entirely when unset
+            let line = x.to_wire().to_line();
+            prop_assert!(
+                !line.contains("deadline_us"),
+                "deadline 0 must not appear on the wire: {line}"
+            );
+            prop_assert!(y.to_wire().to_line().contains("\"deadline_us\":"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quarantine_blocks_normal_traffic_until_a_probe_succeeds() {
+    qcheck(15, |g| {
+        let workers = g.usize(2, 5);
+        let victim = g.usize(0, workers - 1);
+        let policy = *g.choose(&[Policy::LeastQueued, Policy::ShardAffinity]);
+        // probe_interval MAX ⇒ only ticket 0 is a probe: exactly one
+        // request may reach the quarantined worker, however many flow
+        let h = Arc::new(FleetHealth::new(
+            workers,
+            &TailConfig {
+                strikes: 1,
+                probe_interval: u64::MAX,
+                ..TailConfig::default()
+            },
+        ));
+        let (txs, rxs): (Vec<_>, Vec<_>) =
+            (0..workers).map(|_| mpsc::channel::<usize>()).unzip();
+        let r = Router::new(txs, policy).with_health(h.clone());
+        for w in 0..workers {
+            if w != victim {
+                h.record(w, 1_000_000); // 1ms peer baseline
+            }
+        }
+        h.record(victim, 40_000_000); // strike → probation
+        h.record(victim, 40_000_000); // strike → quarantined
+        prop_assert_eq!(h.state(victim), BreakerState::Quarantined);
+        let n = g.usize(10, 60);
+        for i in 0..n {
+            prop_assert!(r.route_bounded(&[], usize::MAX, i).is_ok());
+        }
+        let to_victim = rxs[victim].try_iter().count();
+        prop_assert_eq!(
+            to_victim,
+            1,
+            "only the single trickle probe may reach quarantine \
+             ({workers} workers, victim {victim}, {policy:?})"
+        );
+        let elsewhere: usize = rxs
+            .iter()
+            .enumerate()
+            .filter(|(w, _)| *w != victim)
+            .map(|(_, rx)| rx.try_iter().count())
+            .sum();
+        prop_assert_eq!(elsewhere, n - 1, "reroute conserves requests");
+        // the probe comes back fast → probation; healthy peers still
+        // outrank it, so it keeps receiving nothing...
+        h.record(victim, 1_000_000);
+        prop_assert_eq!(h.state(victim), BreakerState::Probation);
+        for i in 0..10 {
+            prop_assert!(r.route_bounded(&[], usize::MAX, i).is_ok());
+        }
+        prop_assert_eq!(
+            rxs[victim].try_iter().count(),
+            0,
+            "probation ranks after healthy"
+        );
+        // ...until the healthy peers are gone, and the recovered worker
+        // serves again (it is no longer walled off)
+        for w in 0..workers {
+            if w != victim {
+                r.slot_handle(w).close();
+            }
+        }
+        for i in 0..10 {
+            prop_assert!(r.route_bounded(&[], usize::MAX, i).is_ok());
+        }
+        prop_assert_eq!(rxs[victim].try_iter().count(), 10);
+        Ok(())
+    });
+}
+
+/// Random partial-coverage batch: each request touches a shuffled,
+/// sorted subset of the tables with in-range ids.
+fn random_batch(g: &mut Gen, p: &Profile) -> Vec<(Vec<u32>, Vec<i32>)> {
+    let nf = p.cards.len();
+    (0..g.usize(2, 8))
+        .map(|_| {
+            let keep = g.usize(1, nf);
+            let mut fields: Vec<u32> = (0..nf as u32).collect();
+            g.rng().shuffle(&mut fields);
+            fields.truncate(keep);
+            fields.sort_unstable();
+            let ids: Vec<i32> = fields
+                .iter()
+                .map(|&f| g.usize(0, p.cards[f as usize] - 1) as i32)
+                .collect();
+            (fields, ids)
+        })
+        .collect()
+}
+
+#[test]
+fn degraded_gathers_zero_fill_exactly_the_remote_rows() {
+    const POLICIES: [ShardPolicy; 3] = [
+        ShardPolicy::RoundRobinTables,
+        ShardPolicy::CapacityBalanced,
+        ShardPolicy::HotReplicated,
+    ];
+    qcheck(12, |g| {
+        let p = profile(*g.choose(&ALL_PROFILES)).unwrap();
+        let n_shards = g.usize(2, 4);
+        let policy = *g.choose(&POLICIES);
+        let map = ShardMap::for_profile(&p, n_shards, policy);
+        let store = ShardedStore::random(&p, 8, g.u64(0, 1 << 40), map);
+        let local = g.usize(0, n_shards - 1);
+        let batch = random_batch(g, &p);
+        let reqs =
+            || batch.iter().map(|(f, i)| (f.as_slice(), i.as_slice()));
+        let mut gat = BatchGatherer::new(&store.cards);
+        let mut normal = Vec::new();
+        let st_n =
+            gat.gather_batch_mode(&store.map, &store, None, local, reqs(), &mut normal, false);
+        let mut gat = BatchGatherer::new(&store.cards);
+        let mut degraded = Vec::new();
+        let st_d =
+            gat.gather_batch_mode(&store.map, &store, None, local, reqs(), &mut degraded, true);
+        prop_assert!(st_d.balanced(), "degraded ledger: {st_d:?}");
+        prop_assert_eq!(st_d.remote, 0, "brownout never fetches cross-shard");
+        prop_assert_eq!(st_d.requested, st_n.requested);
+        prop_assert_eq!(st_d.local, st_n.local, "local service unchanged");
+        // every output slot is either bit-identical to the normal
+        // gather or zero-filled, and the zero-filled count is exactly
+        // the degraded leg (random rows are never all-zero)
+        let d = store.d_emb;
+        prop_assert_eq!(normal.len(), degraded.len());
+        let mut zeroed = 0usize;
+        for (nb, db) in normal.chunks(d).zip(degraded.chunks(d)) {
+            if db == nb {
+                continue;
+            }
+            prop_assert!(
+                db.iter().all(|&v| v == 0.0),
+                "a diverging slot must be the zero fill"
+            );
+            zeroed += 1;
+        }
+        prop_assert_eq!(
+            zeroed,
+            st_d.degraded,
+            "zero fills ≠ degraded leg ({policy:?}, local {local})"
+        );
+        Ok(())
+    });
+}

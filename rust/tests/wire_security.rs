@@ -43,6 +43,7 @@ fn valid_request(id: u64) -> WireRequest {
         dense: vec![0.25; 3],
         tables: (0..10).collect(),
         ids: vec![1; 10],
+        deadline_us: None,
     }
 }
 

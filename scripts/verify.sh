@@ -22,7 +22,7 @@ echo "== tier 1.5: property/differential suites under --release =="
 # The qcheck suites draw hundreds of randomized cases; running them
 # optimized both speeds CI and exercises the release float paths the
 # benches measure.
-cargo test -q --release --test sharding_prop --test sim_differential --test coordinator_e2e --test hotcache_prop --test failover_prop
+cargo test -q --release --test sharding_prop --test sim_differential --test coordinator_e2e --test hotcache_prop --test failover_prop --test tail_prop
 cargo test -q --release --lib mapping::cost
 
 echo "== wire suites under --release: lazy/tree differential + malformed-input =="
@@ -57,8 +57,9 @@ if ! printf '%s\n' "$serve_out" | grep -q "cache: hit-rate"; then
     echo "ERROR: serve-bench --cache-rows no longer reports the cache hit-rate"
     exit 1
 fi
-for field in '"transport": "socket"' '"wire_p50_us"' '"throughput_rps"' \
-    '"lazy_speedup"' '"cache_hit_rate"' '"coalesced_rows"' '"oob_ids"'; do
+for field in '"transport": "socket"' '"schema_version"' '"wire_p50_us"' \
+    '"throughput_rps"' '"lazy_speedup"' '"cache_hit_rate"' \
+    '"coalesced_rows"' '"oob_ids"'; do
     if ! grep -q "$field" "$serve_json"; then
         echo "ERROR: serve-bench socket JSON report lost $field"
         exit 1
@@ -93,6 +94,37 @@ for field in '"scenario": "worker-crash"' '"ledger_ok": true' \
     fi
 done
 rm -f "$crash_json"
+
+echo "== serve-bench gray-failure smoke: slow-worker scenario, hedging on =="
+# One worker turns into a 20ms-per-batch straggler (gray: correct but
+# slow) two batches in. The tail machinery must (a) hedge — hedges > 0,
+# (b) keep the extended ledger exact, and (c) beat the unhedged twin
+# run's p99 — all folded into the "verdict PASS" on the tail SLO line.
+# Fail closed on that line, its counters, and the JSON fields: a
+# vanished `hedges`/`expired`/`degraded_responses` counter means the
+# gray-failure telemetry silently fell out of the report.
+gray_json=$(mktemp /tmp/serve_gray.XXXXXX.json)
+gray_out=$(cargo run --quiet --release --bin autorac -- serve-bench \
+    --quick --workers 2 --scenario slow-worker --slow-after-batches 2 \
+    --slo-p99-ms 500 --json "$gray_json")
+printf '%s\n' "$gray_out"
+if ! printf '%s\n' "$gray_out" | grep -q "tail SLO: hedges"; then
+    echo "ERROR: slow-worker scenario no longer prints the tail SLO line"
+    exit 1
+fi
+if ! printf '%s\n' "$gray_out" | grep "tail SLO:" | grep -q "verdict PASS"; then
+    echo "ERROR: slow-worker tail SLO verdict is not PASS (hedging broken or p99 regressed)"
+    exit 1
+fi
+for field in '"scenario": "slow-worker"' '"schema_version"' '"hedges"' \
+    '"expired"' '"degraded_responses"' '"ledger_ok": true' \
+    '"unhedged_p99_us"' '"tail_slo_ok": true'; do
+    if ! grep -q "$field" "$gray_json"; then
+        echo "ERROR: slow-worker JSON report lost $field"
+        exit 1
+    fi
+done
+rm -f "$gray_json"
 
 echo "== search determinism under --release (workers=8 vs serial) =="
 # Bit-identity of the parallel engine is a release-mode property too —
