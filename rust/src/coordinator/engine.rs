@@ -6,9 +6,9 @@
 //! coordinator's scheduling/batching logic be tested hermetically (and
 //! is also used to measure pure coordinator overhead in §Perf).
 
-use crate::mapping::{build_pim_net, NetScratch, PimNet};
+use crate::mapping::{build_pim_net_with, NetScratch, PimNet};
 use crate::nas::Genome;
-use crate::pim::XbarActivity;
+use crate::pim::{FaultCounts, XbarActivity, XbarOptions};
 use crate::runtime::client::Runtime;
 
 /// A batched CTR scorer: dense `[B×nd]` + gathered sparse `[B×Ns×d]` → `[B]`.
@@ -45,6 +45,14 @@ pub trait InferenceEngine {
     fn n_dense(&self) -> usize;
     fn n_sparse(&self) -> usize;
     fn d_emb(&self) -> usize;
+
+    /// Drain the device-fault counters accumulated since the last
+    /// drain (S34: ABFT detections, spare-tile repairs, degraded rows).
+    /// Engines without a device layer report nothing; the serving
+    /// worker calls this once per served batch and feeds the metrics.
+    fn take_fault_counts(&mut self) -> FaultCounts {
+        FaultCounts::default()
+    }
 }
 
 /// PJRT-backed engine for one (dataset, batch) model artifact.
@@ -143,9 +151,33 @@ impl PimEngine {
         d_emb: usize,
         seed: u64,
     ) -> crate::Result<PimEngine> {
+        PimEngine::new_with(
+            genome,
+            batch,
+            n_dense,
+            n_sparse,
+            d_emb,
+            seed,
+            &XbarOptions::default(),
+        )
+    }
+
+    /// [`PimEngine::new`] with device fault-tolerance options (S34):
+    /// spare-tile budget, ABFT gating, and seeded stuck-at injection,
+    /// applied uniformly to every bank.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_with(
+        genome: &Genome,
+        batch: usize,
+        n_dense: usize,
+        n_sparse: usize,
+        d_emb: usize,
+        seed: u64,
+        opts: &XbarOptions,
+    ) -> crate::Result<PimEngine> {
         // no .max(1) clamp: a degenerate geometry should fail loudly at
         // construction (build_pim_net's ensure), not per-batch at serving
-        let net = build_pim_net(genome, n_dense, n_sparse, d_emb, seed)?;
+        let net = build_pim_net_with(genome, n_dense, n_sparse, d_emb, seed, opts)?;
         Ok(PimEngine {
             net,
             scratch: NetScratch::default(),
@@ -164,6 +196,12 @@ impl PimEngine {
     /// Crossbar event counts accumulated by every batch served so far.
     pub fn activity(&self) -> XbarActivity {
         self.scratch.bank.xbar.activity
+    }
+
+    /// The bank stack — introspection for benches and tests (spare
+    /// budget remaining, ground-truth corrupt tiles).
+    pub fn net(&self) -> &PimNet {
+        &self.net
     }
 }
 
@@ -202,8 +240,17 @@ impl InferenceEngine for PimEngine {
             sparse.len(),
             batch * self.net.n_sparse * self.net.d_emb
         );
+        let rows0 = self.scratch.bank.fault.corrupt_rows;
         self.net
             .forward_batch_into(dense, sparse, batch, out, &mut self.scratch);
+        // Degraded-row accounting is per *response row*, not per bank:
+        // if several unrepairable banks each booked this batch's rows,
+        // clamp the delta so one batch never books more rows than it has.
+        let fc = &mut self.scratch.bank.fault;
+        fc.corrupt_rows = rows0 + (fc.corrupt_rows - rows0).min(batch as u64);
+        // advance the device drift fuse by one served batch (the device
+        // twin of CrashAfter/SlowAfter's batch counting)
+        self.net.tick_drift();
         Ok(())
     }
 
@@ -221,6 +268,10 @@ impl InferenceEngine for PimEngine {
 
     fn d_emb(&self) -> usize {
         self.net.d_emb
+    }
+
+    fn take_fault_counts(&mut self) -> FaultCounts {
+        self.scratch.bank.fault.take()
     }
 }
 
@@ -397,6 +448,10 @@ impl InferenceEngine for CrashAfter {
     fn d_emb(&self) -> usize {
         self.inner.d_emb()
     }
+
+    fn take_fault_counts(&mut self) -> FaultCounts {
+        self.inner.take_fault_counts()
+    }
 }
 
 /// Gray-failure injection wrapper: the slow twin of [`CrashAfter`].
@@ -483,6 +538,10 @@ impl InferenceEngine for SlowAfter {
 
     fn d_emb(&self) -> usize {
         self.inner.d_emb()
+    }
+
+    fn take_fault_counts(&mut self) -> FaultCounts {
+        self.inner.take_fault_counts()
     }
 }
 
@@ -597,6 +656,45 @@ mod tests {
         e4.infer_batch_into(&dense, &sparse, b, &mut probs).unwrap();
         assert!(p1.iter().zip(&probs).all(|(a, c)| a.to_bits() == c.to_bits()));
         assert_eq!(e1.activity().read_cycles * 2, e4.activity().read_cycles);
+    }
+
+    #[test]
+    fn pim_engine_drains_fault_counts_and_repairs() {
+        let g = autorac_best("criteo");
+        let opts = XbarOptions {
+            spare_tiles: 2,
+            ..XbarOptions::default()
+        };
+        let mut clean = PimEngine::new(&g, 8, 13, 26, 16, 7).unwrap();
+        let mut e = PimEngine::new_with(&g, 8, 13, 26, 16, 7, &opts).unwrap();
+        assert_eq!(e.take_fault_counts(), FaultCounts::default());
+        let b = 3;
+        let dense: Vec<f32> = (0..b * 13).map(|i| (i as f32 * 0.13).sin()).collect();
+        let sparse: Vec<f32> =
+            (0..b * 26 * 16).map(|i| (i as f32 * 0.07).cos() * 0.05).collect();
+        let want = clean.infer_batch(&dense, &sparse, b).unwrap();
+        // clean device: identical scores, nothing drained
+        let p = e.infer_batch(&dense, &sparse, b).unwrap();
+        assert!(want.iter().zip(&p).all(|(a, c)| a.to_bits() == c.to_bits()));
+        assert_eq!(e.take_fault_counts(), FaultCounts::default());
+        // corrupt a head cell: always excited (offset-binary inputs),
+        // so the next batch detects, repairs, and re-serves exactly
+        e.net.head.xbar.corrupt_bit(0, 0, 0, 0, 9);
+        let p = e.infer_batch(&dense, &sparse, b).unwrap();
+        assert!(want.iter().zip(&p).all(|(a, c)| a.to_bits() == c.to_bits()));
+        let fc = e.take_fault_counts();
+        assert!(fc.tiles_faulty > 0);
+        assert_eq!(fc.tiles_repaired, 1);
+        assert_eq!(fc.corrupt_rows, 0);
+        // drain is a take: a second drain reports nothing
+        assert_eq!(e.take_fault_counts(), FaultCounts::default());
+        // and the wrapper forwards the drain
+        let mut wrapped = CrashAfter::after_batches(
+            Box::new(PimEngine::new_with(&g, 8, 13, 26, 16, 7, &opts).unwrap()),
+            99,
+        );
+        wrapped.infer_batch(&dense, &sparse, b).unwrap();
+        assert_eq!(wrapped.take_fault_counts(), FaultCounts::default());
     }
 
     #[test]

@@ -252,6 +252,11 @@ pub enum Scenario {
     /// flash-crowd surge PLUS a gray worker: sustained deadline
     /// pressure, the shape the brownout controller exists for (S33)
     Brownout,
+    /// steady offered load on PIM engines with seeded stuck-at cell
+    /// faults injected at program time (S34): ABFT checksums detect,
+    /// spare tiles repair, and the verdict demands bit-identical
+    /// scores. The schedule itself is untransformed.
+    CellFault,
 }
 
 impl Scenario {
@@ -264,10 +269,11 @@ impl Scenario {
             "diurnal" => Scenario::Diurnal,
             "slow-worker" => Scenario::SlowWorker,
             "brownout" => Scenario::Brownout,
+            "cell-fault" => Scenario::CellFault,
             other => crate::bail!(
                 "unknown scenario {other:?} \
                  (steady|flash-crowd|hot-key-storm|worker-crash|diurnal\
-                 |slow-worker|brownout)"
+                 |slow-worker|brownout|cell-fault)"
             ),
         })
     }
@@ -281,6 +287,7 @@ impl Scenario {
             Scenario::Diurnal => "diurnal",
             Scenario::SlowWorker => "slow-worker",
             Scenario::Brownout => "brownout",
+            Scenario::CellFault => "cell-fault",
         }
     }
 }
@@ -313,6 +320,13 @@ pub struct ScenarioSpec {
     pub slow_delay: Duration,
     /// slow-worker/brownout: seeded jitter added on top of `slow_delay`
     pub slow_jitter: Duration,
+    /// cell-fault: per-cell stuck-at probability injected at program
+    /// time (0.0 = pristine devices, even under the cell-fault scenario)
+    pub fault_rate: f64,
+    /// cell-fault: root seed for the per-worker/per-bank fault streams
+    pub fault_seed: u64,
+    /// cell-fault: spare tiles reserved per weight bank for repair
+    pub spare_tiles: usize,
 }
 
 impl ScenarioSpec {
@@ -328,6 +342,9 @@ impl ScenarioSpec {
             slow_after_batches: 2,
             slow_delay: Duration::from_millis(20),
             slow_jitter: Duration::from_millis(2),
+            fault_rate: 0.0,
+            fault_seed: 0xFA17,
+            spare_tiles: 4,
         }
     }
 }
@@ -359,9 +376,13 @@ pub fn build_scenario_schedule(
     let n = sched.len();
     let (a, b) = (n / 3, 2 * n / 3);
     match spec.scenario {
-        // fault scenarios perturb the SERVER (engine wrappers), never
-        // the offered load — their schedules stay bit-identical to base
-        Scenario::Steady | Scenario::WorkerCrash | Scenario::SlowWorker => {}
+        // fault scenarios perturb the SERVER (engine wrappers or the
+        // programmed devices), never the offered load — their schedules
+        // stay bit-identical to base
+        Scenario::Steady
+        | Scenario::WorkerCrash
+        | Scenario::SlowWorker
+        | Scenario::CellFault => {}
         Scenario::FlashCrowd | Scenario::Brownout => {
             let surge = spec.surge.max(1.0);
             reshape_gaps(&mut sched, |k, g| {
@@ -1157,6 +1178,7 @@ mod tests {
             Scenario::Diurnal,
             Scenario::SlowWorker,
             Scenario::Brownout,
+            Scenario::CellFault,
         ] {
             assert_eq!(Scenario::parse(s.name()).unwrap(), s);
         }
@@ -1179,6 +1201,7 @@ mod tests {
             Scenario::Steady,
             Scenario::WorkerCrash,
             Scenario::SlowWorker,
+            Scenario::CellFault,
         ] {
             let got =
                 build_scenario_schedule(&p, &cfg, &ScenarioSpec::new(sc))

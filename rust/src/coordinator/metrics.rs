@@ -6,6 +6,7 @@
 //! snapshot shows instantaneous backpressure per worker.
 
 use crate::embeddings::hotcache::GatherStats;
+use crate::pim::FaultCounts;
 use crate::util::stats::LogHistogram;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -54,6 +55,13 @@ struct Inner {
     cache_evictions: u64,
     /// duplicate rows served by the batch coalescer's scatter (S30)
     coalesced_rows: u64,
+    /// device fault tolerance (S34): ABFT detection events (a tile can
+    /// be counted more than once across repair re-runs), spare-tile
+    /// repairs, and responses computed on a degraded (unrepairable)
+    /// bank — non-ledger: a corrupted response is still a response
+    tiles_faulty: u64,
+    tiles_repaired: u64,
+    corrupted_responses: u64,
     e2e: LogHistogram,
     queue: LogHistogram,
     exec: LogHistogram,
@@ -105,6 +113,14 @@ pub struct MetricsSnapshot {
     pub cache_evictions: u64,
     /// duplicate rows the batch coalescer served without a fetch
     pub coalesced_rows: u64,
+    /// ABFT checksum mismatches flagged on the device (S34) — detection
+    /// events, so repair re-runs can count the same tile again
+    pub tiles_faulty: u64,
+    /// corrupted tiles remapped onto spare tiles and reprogrammed
+    pub tiles_repaired: u64,
+    /// responses served from a degraded bank (flagged corruption, no
+    /// spare left to repair it) — non-ledger, parallels `degraded_responses`
+    pub corrupted_responses: u64,
     pub mean_batch: f64,
     pub throughput_rps: f64,
     pub e2e_p50_us: f64,
@@ -299,6 +315,16 @@ impl Metrics {
         self.inner.lock().unwrap().cache_evictions += n;
     }
 
+    /// Book one worker's drained device-fault counters (S34): ABFT
+    /// detections, spare-tile repairs, and rows served degraded — one
+    /// lock for all three.
+    pub fn on_device_faults(&self, fc: &FaultCounts) {
+        let mut m = self.inner.lock().unwrap();
+        m.tiles_faulty += fc.tiles_faulty;
+        m.tiles_repaired += fc.tiles_repaired;
+        m.corrupted_responses += fc.corrupt_rows;
+    }
+
     pub fn on_batch(&self, size: usize, queue_ns: u64, exec_ns: u64) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
@@ -352,6 +378,9 @@ impl Metrics {
             cache_misses: m.cache_misses,
             cache_evictions: m.cache_evictions,
             coalesced_rows: m.coalesced_rows,
+            tiles_faulty: m.tiles_faulty,
+            tiles_repaired: m.tiles_repaired,
+            corrupted_responses: m.corrupted_responses,
             mean_batch: if m.batches == 0 {
                 0.0
             } else {
@@ -474,6 +503,34 @@ mod tests {
         assert_eq!(m.pressure_counts(), (10, 4));
         m.on_expired(1);
         assert!(!m.snapshot().ledger_ok(), "expired is a ledger leg");
+    }
+
+    #[test]
+    fn device_fault_counters_accumulate_off_ledger() {
+        let m = Metrics::new();
+        for _ in 0..4 {
+            m.on_request();
+        }
+        for _ in 0..4 {
+            m.on_response(1_000);
+        }
+        m.on_device_faults(&FaultCounts {
+            tiles_faulty: 3,
+            tiles_repaired: 2,
+            corrupt_rows: 4,
+        });
+        m.on_device_faults(&FaultCounts {
+            tiles_faulty: 1,
+            ..Default::default()
+        });
+        let s = m.snapshot();
+        assert_eq!(s.tiles_faulty, 4);
+        assert_eq!(s.tiles_repaired, 2);
+        assert_eq!(s.corrupted_responses, 4);
+        assert!(
+            s.ledger_ok(),
+            "corrupted responses are still responses — not a ledger leg"
+        );
     }
 
     #[test]

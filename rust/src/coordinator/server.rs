@@ -1004,6 +1004,13 @@ fn worker_loop(guard: &WorkerGuard, ctx: WorkerCtx) {
             Ok(()) => {
                 let exec_ns = t_exec.elapsed().as_nanos() as u64;
                 metrics.on_batch(batch.len(), queue_ns, exec_ns);
+                // drain the engine's device-fault ledger (S34): ABFT
+                // detections, spare repairs, degraded rows — booked
+                // off-ledger, the batch's responses still count below
+                let fc = engine.take_fault_counts();
+                if fc.any() {
+                    metrics.on_device_faults(&fc);
+                }
                 // per-request service-time sample feeds the breaker —
                 // this is where a gray (slow-but-correct) worker shows
                 // up, batches later, as Probation/Quarantined

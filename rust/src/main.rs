@@ -9,6 +9,8 @@
 //!               PimEngine crossbar backend (offline)
 //!   xbar-bench  batched crossbar kernel vs per-vector reference:
 //!               MVMs/s per batch size + in-run bit-identity parity
+//!   fault-bench measured fault-rate→logloss curve vs the analytic
+//!               NoiseModel penalty (EXPERIMENTS §SJ cross-validation)
 //!   eval        rust-side accuracy eval of the served model (Table 2 check)
 //!   datagen     inspect the synthetic dataset generator
 //!   table2 | table3 | fig2 | fig5 | fig6   regenerate paper artifacts
@@ -21,8 +23,8 @@ use autorac::coordinator::loadgen::{
 use autorac::coordinator::net::{NetServer, NetServerConfig};
 use autorac::coordinator::{
     AdmissionPolicy, BatcherConfig, Coordinator, CoordinatorConfig,
-    MetricsSnapshot, MockEngine, PimEngine, PjrtEngine, Policy, Request,
-    ServingStore, TailConfig,
+    InferenceEngine, MetricsSnapshot, MockEngine, PimEngine, PjrtEngine,
+    Policy, Request, ServingStore, TailConfig,
 };
 use autorac::util::json_lazy;
 use autorac::data::{make_batch, profile, Generator, Splits, DEFAULT_SEED};
@@ -30,14 +32,16 @@ use autorac::embeddings::{
     head_rows_per_table, EmbeddingStore, HotCacheConfig, HotRowCache, ShardMap,
     ShardPolicy, ShardedStore,
 };
-use autorac::mapping::{map_genome, MapStyle};
+use autorac::mapping::{
+    build_pim_net, build_pim_net_with, map_genome, MapStyle, NetScratch,
+};
 use autorac::nas::{autorac_best, Genome, ParallelSearch, SearchConfig, Surrogate};
 use autorac::pim::{
-    BatchedXbar, MatI32, PimConfig, ProgrammedXbar, TechParams, XbarActivity,
-    XbarScratch,
+    BatchedXbar, FaultSpec, MatI32, NoiseModel, PimConfig, ProgrammedXbar,
+    TechParams, XbarActivity, XbarOptions, XbarScratch,
 };
 use autorac::util::json::Json;
-use autorac::util::rng::Rng;
+use autorac::util::rng::{seed_from_name, Rng};
 use autorac::runtime::atns::TensorFile;
 use autorac::runtime::client::Runtime;
 use autorac::sim::{simulate, Workload};
@@ -56,6 +60,7 @@ fn main() -> autorac::Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
         Some("xbar-bench") => cmd_xbar_bench(&args),
+        Some("fault-bench") => cmd_fault_bench(&args),
         Some("eval") => cmd_eval(&args),
         Some("datagen") => cmd_datagen(&args),
         Some("table2") => {
@@ -104,7 +109,7 @@ fn main() -> autorac::Result<()> {
 fn print_help() {
     println!(
         "autorac — automated PIM accelerator design for recommender systems\n\
-         usage: autorac <search|search-bench|simulate|serve|serve-bench|xbar-bench|eval|datagen|table2|table3|fig2|fig5|fig6|artifacts> [--opts]\n\
+         usage: autorac <search|search-bench|simulate|serve|serve-bench|xbar-bench|fault-bench|eval|datagen|table2|table3|fig2|fig5|fig6|artifacts> [--opts]\n\
          common: --dataset criteo|avazu|kdd   --artifacts <dir>   --seed N\n\
          search: --generations N --population N --children N --out best.json\n\
                  --workers N (eval threads; 1 = serial) --pareto N (archive cap)\n\
@@ -127,7 +132,7 @@ fn print_help() {
                       self-bench unless --hold keeps serving until killed)\n\
                       --connect ADDR (drive an external server; client stats only)\n\
                       --conns N (loadgen connections, default 4) --quick (CI-sized run)\n\
-                      --scenario steady|flash-crowd|hot-key-storm|worker-crash|diurnal|slow-worker|brownout\n\
+                      --scenario steady|flash-crowd|hot-key-storm|worker-crash|diurnal|slow-worker|brownout|cell-fault\n\
                       (failure/traffic matrix, in-process only; SLO verdict in report)\n\
                       --crash-worker K --crash-after-ms T --crash-after-batches N (0=use T)\n\
                       --surge F (flash-crowd multiplier) --storm-rows N (hot-key set)\n\
@@ -139,12 +144,19 @@ fn print_help() {
                       --hedge-after-ms T --hedge-budget F (hedge trigger age / max\n\
                       hedge fraction; slow-worker+brownout arm the stack themselves\n\
                       and rerun unhedged for the p99 comparison)\n\
+                      --fault-rate F --fault-seed S --spare-tiles N (cell-fault:\n\
+                      stuck-at cells injected at program time, ABFT detection +\n\
+                      spare-tile repair; needs --engine pim)\n\
          xbar-bench: --k N --n N (weight shape) --quick (short CI timings)\n\
                       --threads N (tile-parallel kernel threads; 0 = all cores)\n\
                       --json PATH (machine-readable report, e.g. BENCH_xbar.json)\n\
                       (always runs the parity sweep: batched kernel vs per-vector\n\
                       reference at threads 1 AND N, bit-identical outputs +\n\
                       activity, fail-closed)\n\
+         fault-bench: --batches N --batch B --d-emb N --seed S\n\
+                      --json PATH (measured stuck-at fault-rate -> score\n\
+                      corruption curve, ABFT/repair off, vs the analytic\n\
+                      NoiseModel logloss penalty; EXPERIMENTS §SJ)\n\
          eval:   --n N (test records)"
     );
 }
@@ -506,6 +518,13 @@ fn serve_bench_coordinator(
     // brownout scenarios a SlowAfter gray fault; None otherwise
     let inj = CrashInjector::new(&s.spec);
     let slow = SlowInjector::new(&s.spec);
+    // cell-fault scenario (S34): each worker's PIM banks are programmed
+    // with seeded stuck-at faults drawn from an independent per-worker
+    // substream, plus a spare-tile repair budget. `--fault-rate 0`
+    // keeps the devices pristine (and the outputs bit-identical to a
+    // plain build) while still exercising the ABFT verify path.
+    let fault = (s.spec.scenario == Scenario::CellFault)
+        .then(|| (s.spec.fault_rate, s.spec.fault_seed, s.spec.spare_tiles));
     let tail = s.tail.clone();
     Coordinator::start_with(
         CoordinatorConfig {
@@ -529,10 +548,30 @@ fn serve_bench_coordinator(
                     e.delay = delay;
                     Box::new(e)
                 }
-                ServeEngine::Pim => Box::new(
-                    PimEngine::new(&genome, batch, nd, nf, d_emb, seed)?
-                        .with_threads(threads),
-                ),
+                ServeEngine::Pim => {
+                    let e = match fault {
+                        Some((rate, fseed, spares)) => {
+                            let opts = XbarOptions {
+                                spare_tiles: spares,
+                                fault: Some(FaultSpec::cells(
+                                    rate,
+                                    seed_from_name(
+                                        fseed,
+                                        &format!("worker/{i}"),
+                                    ),
+                                )),
+                                ..XbarOptions::default()
+                            };
+                            PimEngine::new_with(
+                                &genome, batch, nd, nf, d_emb, seed, &opts,
+                            )?
+                        }
+                        None => {
+                            PimEngine::new(&genome, batch, nd, nf, d_emb, seed)?
+                        }
+                    };
+                    Box::new(e.with_threads(threads))
+                }
             };
             let e = match &inj {
                 Some(inj) => inj.arm(i, e),
@@ -663,6 +702,15 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
         std::time::Duration::from_millis(args.u64_or("slow-ms", 20)?);
     spec.slow_jitter =
         std::time::Duration::from_millis(args.u64_or("slow-jitter-ms", 2)?);
+    // Device-fault knobs (S34) — likewise consumed unconditionally.
+    spec.fault_rate = args.f64_or("fault-rate", spec.fault_rate)?;
+    spec.fault_seed = args.u64_or("fault-seed", spec.fault_seed)?;
+    spec.spare_tiles = args.usize_or("spare-tiles", spec.spare_tiles)?;
+    autorac::ensure!(
+        (0.0..=1.0).contains(&spec.fault_rate),
+        "--fault-rate must be in [0, 1], got {}",
+        spec.fault_rate
+    );
     let deadline_us = args.u64_or("deadline-us", 0)?;
     let hedge_after = std::time::Duration::from_millis(
         args.u64_or("hedge-after-ms", 5)?,
@@ -705,6 +753,13 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
             workers >= 2,
             "{} needs >= 2 workers so hedges have somewhere to go",
             scenario.name()
+        );
+    }
+    if scenario == Scenario::CellFault {
+        autorac::ensure!(
+            matches!(engine, ServeEngine::Pim),
+            "cell-fault injects stuck-at faults into BatchedXbar weight \
+             banks — it needs --engine pim"
         );
     }
     let json_path = args.get("json").map(str::to_string);
@@ -914,6 +969,68 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
     } else {
         None
     };
+    // Cell-fault verdict (S34): besides the serving run's ledger and
+    // degraded-row counters, probe repair fidelity directly — a twin
+    // pair of engines (worker 0's exact fault stream vs a pristine
+    // build) scored on identical deterministic inputs must agree to
+    // the bit once spares have absorbed the injected faults.
+    let fault_cmp = if setup.spec.scenario == Scenario::CellFault {
+        let prof = profile(&setup.dataset)?;
+        let genome = autorac_best(&setup.dataset);
+        let (nd, nf) = (prof.n_dense, prof.n_sparse());
+        let opts = XbarOptions {
+            spare_tiles: setup.spec.spare_tiles,
+            fault: Some(FaultSpec::cells(
+                setup.spec.fault_rate,
+                seed_from_name(setup.spec.fault_seed, "worker/0"),
+            )),
+            ..XbarOptions::default()
+        };
+        let mut faulty = PimEngine::new_with(
+            &genome, setup.batch, nd, nf, setup.d_emb, setup.seed, &opts,
+        )?
+        .with_threads(setup.threads);
+        let mut clean =
+            PimEngine::new(&genome, setup.batch, nd, nf, setup.d_emb, setup.seed)?
+                .with_threads(setup.threads);
+        let b = setup.batch.clamp(1, 8);
+        let mut rng = Rng::new(setup.seed ^ 0x5A34);
+        let mut probe_identical = true;
+        for _ in 0..4 {
+            let dense: Vec<f32> =
+                (0..b * nd).map(|_| rng.normal() as f32).collect();
+            let sparse: Vec<f32> = (0..b * nf * setup.d_emb)
+                .map(|_| (rng.normal() * 0.05) as f32)
+                .collect();
+            let pf = faulty.infer_batch(&dense, &sparse, b)?;
+            let pc = clean.infer_batch(&dense, &sparse, b)?;
+            probe_identical &=
+                pf.iter().zip(&pc).all(|(a, c)| a.to_bits() == c.to_bits());
+        }
+        let pfc = faulty.take_fault_counts();
+        let probe_ok = probe_identical && pfc.corrupt_rows == 0;
+        let verdict =
+            snap.ledger_ok() && snap.corrupted_responses == 0 && probe_ok;
+        println!(
+            "  fault SLO: rate {:.2e} seed {:#x} spares {} | tiles faulty {} \
+             repaired {} | corrupted responses {} | repair probe {} (faulty \
+             {} repaired {}) | ledger {} | verdict {}",
+            setup.spec.fault_rate,
+            setup.spec.fault_seed,
+            setup.spec.spare_tiles,
+            snap.tiles_faulty,
+            snap.tiles_repaired,
+            snap.corrupted_responses,
+            if probe_ok { "bit-identical" } else { "DIVERGED" },
+            pfc.tiles_faulty,
+            pfc.tiles_repaired,
+            if snap.ledger_ok() { "balanced" } else { "IMBALANCED" },
+            if verdict { "PASS" } else { "FAIL" }
+        );
+        Some(verdict)
+    } else {
+        None
+    };
     if let Some(path) = json_path {
         let (avail, post_avail, slo_ok) = scenario_slo(&setup, &snap, &out);
         let mut pairs = serve_bench_report(&setup, policy, &snap, &rep);
@@ -931,6 +1048,14 @@ fn cmd_serve_bench(args: &Args) -> autorac::Result<()> {
             pairs.extend(vec![
                 ("unhedged_p99_us", Json::Num(unhedged_p99)),
                 ("tail_slo_ok", Json::Bool(verdict)),
+            ]);
+        }
+        if let Some(verdict) = fault_cmp {
+            pairs.extend(vec![
+                ("fault_rate", Json::Num(setup.spec.fault_rate)),
+                ("fault_seed", Json::Num(setup.spec.fault_seed as f64)),
+                ("spare_tiles", Json::Num(setup.spec.spare_tiles as f64)),
+                ("fault_slo_ok", Json::Bool(verdict)),
             ]);
         }
         let report = Json::from_pairs(pairs);
@@ -1021,7 +1146,7 @@ fn serve_bench_report(
         ("bench", Json::Str("serving".into())),
         // bumped whenever a field is added/renamed so downstream readers
         // can fail fast instead of silently missing columns
-        ("schema_version", Json::Num(2.0)),
+        ("schema_version", Json::Num(3.0)),
         (
             "engine",
             Json::Str(match setup.engine {
@@ -1054,6 +1179,12 @@ fn serve_bench_report(
         ("hedge_rate", Json::Num(snap.hedge_rate())),
         ("degraded_responses", Json::Num(snap.degraded_responses as f64)),
         ("degraded_rows", Json::Num(snap.degraded_rows as f64)),
+        ("tiles_faulty", Json::Num(snap.tiles_faulty as f64)),
+        ("tiles_repaired", Json::Num(snap.tiles_repaired as f64)),
+        (
+            "corrupted_responses",
+            Json::Num(snap.corrupted_responses as f64),
+        ),
         ("brownout_entries", Json::Num(snap.brownout_entries as f64)),
         ("local_rows", Json::Num(snap.local_rows as f64)),
         ("remote_rows", Json::Num(snap.remote_rows as f64)),
@@ -1379,6 +1510,16 @@ fn cmd_xbar_bench(args: &Args) -> autorac::Result<()> {
                         scratch.activity == want_act,
                         "activity mismatch: config {ci} {cfg:?} b={b} threads={t}"
                     );
+                    // ABFT zero-false-positive gate (S34): pristine
+                    // devices must never trip the checksum verify —
+                    // on lossless configs it runs and stays silent,
+                    // on lossy ones it is gated off entirely
+                    autorac::ensure!(
+                        scratch.flagged.is_empty()
+                            && scratch.activity.faulty_tiles == 0,
+                        "ABFT false positive on clean hardware: config \
+                         {ci} {cfg:?} b={b} threads={t}"
+                    );
                 }
             }
         }
@@ -1386,7 +1527,7 @@ fn cmd_xbar_bench(args: &Args) -> autorac::Result<()> {
     println!(
         "parity: OK — {n_feasible} feasible + {} lossy/wide configs × \
          w_bits {{4,8}} × b {{1,3,8}} × threads {{1,{threads}}}, outputs \
-         and activity bit-identical",
+         and activity bit-identical, zero ABFT false positives",
         sweep.len() - n_feasible
     );
 
@@ -1449,6 +1590,42 @@ fn cmd_xbar_bench(args: &Args) -> autorac::Result<()> {
          per-vector path (proxy for the old blocked fallback; target >= 3x)"
     );
 
+    // ---- ABFT overhead: checksum verify on vs off, default config.
+    // The checksum column rides the packed layout, so the cost is one
+    // extra ~chk_planes-wide unit per tile plus the per-tile compare —
+    // the acceptance bar is <= 10% of MVMs/s at b=32.
+    let bx_off = BatchedXbar::program_with(
+        &wq,
+        cfg,
+        &XbarOptions {
+            abft: false,
+            ..XbarOptions::default()
+        },
+    );
+    let b = 32;
+    let xs: Vec<i32> = (0..b * bx.k)
+        .map(|_| rng.below(1 << cfg.x_bits) as i32)
+        .collect();
+    let mut out = vec![0i64; b * bx.n];
+    let mut s_on = XbarScratch::with_threads(1);
+    let mut s_off = XbarScratch::with_threads(1);
+    let on_s = time_per_call(budget, || {
+        bx.mvm_batch(&xs, b, &mut out, &mut s_on);
+        std::hint::black_box(&out);
+    });
+    let off_s = time_per_call(budget, || {
+        bx_off.mvm_batch(&xs, b, &mut out, &mut s_off);
+        std::hint::black_box(&out);
+    });
+    let abft_overhead = on_s / off_s.max(1e-12) - 1.0;
+    println!(
+        "  abft b=32: verify-on {:.0} MVM/s | verify-off {:.0} MVM/s | \
+         overhead {:.1}% (target <= 10%)",
+        b as f64 / on_s,
+        b as f64 / off_s,
+        abft_overhead * 100.0
+    );
+
     if let Some(path) = json_path {
         let report = Json::from_pairs(vec![
             ("bench", Json::Str("xbar".into())),
@@ -1460,7 +1637,109 @@ fn cmd_xbar_bench(args: &Args) -> autorac::Result<()> {
             ("pack_speedup_b32", Json::Num(pack_speedup_b32)),
             ("thread_speedup_b32", Json::Num(thread_speedup_b32)),
             ("rows128_speedup_b32", Json::Num(wide_speedup)),
+            ("abft_overhead", Json::Num(abft_overhead)),
             ("cases", Json::Arr(cases)),
+        ]);
+        report.write_file(std::path::Path::new(&path))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `fault-bench`: the measured fault-rate→score-corruption curve for
+/// the noise-model cross-validation (EXPERIMENTS §SJ). Per rate, a
+/// faulted twin of the clean `PimNet` is built with ABFT and spares
+/// disabled — raw silent corruption, exactly the regime the analytic
+/// `NoiseModel` penalty models — and both nets score identical seeded
+/// batches. The measured penalty is the mean KL(clean ‖ faulty) of the
+/// output Bernoullis (the expected logloss excess of the corrupted
+/// scores under the clean model's distribution, label-free), reported
+/// next to mean |Δp| and the analytic `logloss_penalty` line.
+fn cmd_fault_bench(args: &Args) -> autorac::Result<()> {
+    let dataset = args.str_or("dataset", "criteo");
+    let seed = args.u64_or("seed", 7)?;
+    let fault_seed = args.u64_or("fault-seed", 0xFA17)?;
+    let batches = args.usize_or("batches", 16)?;
+    let b = args.usize_or("batch", 32)?;
+    let d_emb = args.usize_or("d-emb", 16)?;
+    let json_path = args.get("json").map(str::to_string);
+    args.finish()?;
+    let prof = profile(&dataset)?;
+    let g = autorac_best(&dataset);
+    let (nd, ns) = (prof.n_dense, prof.n_sparse());
+    let mut clean = build_pim_net(&g, nd, ns, d_emb, seed)?;
+    let cfg = clean.head.xbar.cfg;
+    let noise = NoiseModel::default();
+    let analytic = noise.logloss_penalty(&cfg);
+    println!(
+        "fault-bench {dataset}: genome {}, {} batches × b={b}, analytic \
+         noise penalty {analytic:.5} (σ_col {:.5}, sensitivity {})",
+        g.name,
+        batches,
+        noise.column_rel_sigma(&cfg),
+        noise.sensitivity
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for rate in [1e-5f64, 1e-4, 1e-3] {
+        let opts = XbarOptions {
+            abft: false,
+            spare_tiles: 0,
+            fault: Some(FaultSpec::cells(
+                rate,
+                seed_from_name(fault_seed, "fault-bench"),
+            )),
+            ..XbarOptions::default()
+        };
+        let mut faulty = build_pim_net_with(&g, nd, ns, d_emb, seed, &opts)?;
+        let corrupt_tiles = faulty.corrupt_tiles();
+        // identical inputs per rate: the stream restarts from the same
+        // seed, so every rate scores the same batches as the clean net
+        let mut rng = Rng::new(seed ^ 0x00FB);
+        let mut sc = NetScratch::with_threads(1);
+        let mut sf = NetScratch::with_threads(1);
+        let (mut kl_sum, mut dp_sum, mut count) = (0.0f64, 0.0f64, 0usize);
+        for _ in 0..batches {
+            let dense: Vec<f32> =
+                (0..b * nd).map(|_| rng.normal() as f32).collect();
+            let sparse: Vec<f32> = (0..b * ns * d_emb)
+                .map(|_| (rng.normal() * 0.05) as f32)
+                .collect();
+            let pc = clean.forward_batch(&dense, &sparse, b, &mut sc);
+            let pf = faulty.forward_batch(&dense, &sparse, b, &mut sf);
+            for (&p, &q) in pc.iter().zip(&pf) {
+                // clamp both ends: a saturated sigmoid (p → 0 or 1)
+                // would otherwise turn the KL terms into 0·ln 0 = NaN
+                let p = f64::from(p).clamp(1e-7, 1.0 - 1e-7);
+                let q = f64::from(q).clamp(1e-7, 1.0 - 1e-7);
+                kl_sum += p * (p / q).ln()
+                    + (1.0 - p) * ((1.0 - p) / (1.0 - q)).ln();
+                dp_sum += (p - q).abs();
+                count += 1;
+            }
+        }
+        let kl = kl_sum / count.max(1) as f64;
+        let dp = dp_sum / count.max(1) as f64;
+        println!(
+            "  rate {rate:.0e}: corrupt tiles {corrupt_tiles} | measured \
+             logloss penalty {kl:.6} | mean |Δp| {dp:.6} | analytic/measured \
+             {:.2}",
+            analytic / kl.max(1e-12)
+        );
+        rows.push(Json::from_pairs(vec![
+            ("rate", Json::Num(rate)),
+            ("corrupt_tiles", Json::Num(corrupt_tiles as f64)),
+            ("measured_penalty", Json::Num(kl)),
+            ("mean_abs_dp", Json::Num(dp)),
+        ]));
+    }
+    if let Some(path) = json_path {
+        let report = Json::from_pairs(vec![
+            ("bench", Json::Str("fault".into())),
+            ("dataset", Json::Str(dataset)),
+            ("batches", Json::Num(batches as f64)),
+            ("batch", Json::Num(b as f64)),
+            ("analytic_penalty", Json::Num(analytic)),
+            ("rates", Json::Arr(rows)),
         ]);
         report.write_file(std::path::Path::new(&path))?;
         println!("wrote {path}");

@@ -18,7 +18,8 @@
 //! batched — pinned in tests).
 
 use crate::nas::genome::{Genome, Interaction};
-use crate::pim::kernel::{BatchedXbar, XbarScratch};
+use crate::pim::fault::FaultCounts;
+use crate::pim::kernel::{BatchedXbar, XbarOptions, XbarScratch};
 use crate::pim::{quant_act_into, quant_sym, MatI32, PimConfig};
 use crate::util::rng::{seed_from_name, Rng};
 
@@ -39,6 +40,9 @@ pub struct PimBank {
 #[derive(Default)]
 pub struct BankScratch {
     pub xbar: XbarScratch,
+    /// detection/repair outcomes accumulated by every pass through this
+    /// scratch (S34); drained up the stack by the serving engine
+    pub fault: FaultCounts,
     x_u: Vec<i32>,
     row_q: Vec<i32>,
     scales: Vec<f32>,
@@ -66,9 +70,26 @@ impl PimBank {
         w_scale: f32,
         cfg: PimConfig,
     ) -> PimBank {
+        PimBank::from_quantized_with(name, wq, w_scale, cfg, &XbarOptions::default())
+    }
+
+    /// [`PimBank::from_quantized`] with fault-tolerance options (S34).
+    /// `opts.label` is overridden with the bank name, so two banks of
+    /// one net draw independent fault substreams from the same spec.
+    pub fn from_quantized_with(
+        name: &str,
+        wq: &MatI32,
+        w_scale: f32,
+        cfg: PimConfig,
+        opts: &XbarOptions,
+    ) -> PimBank {
+        let opts = XbarOptions {
+            label: name.to_string(),
+            ..opts.clone()
+        };
         PimBank {
             name: name.to_string(),
-            xbar: BatchedXbar::program(wq, cfg),
+            xbar: BatchedXbar::program_with(wq, cfg, &opts),
             w_scale,
             k_in: wq.rows,
             n_out: wq.cols,
@@ -87,6 +108,31 @@ impl PimBank {
         base: PimConfig,
         seed: u64,
     ) -> PimBank {
+        PimBank::random_with(
+            name,
+            k_in,
+            n_out,
+            w_bits,
+            base,
+            seed,
+            &XbarOptions::default(),
+        )
+    }
+
+    /// [`PimBank::random`] with fault-tolerance options (S34): same
+    /// weights as `random` for the same `(seed, name)` — injection and
+    /// spares never change what the bank was *programmed* with, only
+    /// what the device *holds*.
+    #[allow(clippy::too_many_arguments)]
+    pub fn random_with(
+        name: &str,
+        k_in: usize,
+        n_out: usize,
+        w_bits: usize,
+        base: PimConfig,
+        seed: u64,
+        opts: &XbarOptions,
+    ) -> PimBank {
         let mut rng = Rng::new(seed_from_name(seed, &format!("pimbank/{name}")));
         let sd = (2.0 / k_in.max(1) as f64).sqrt();
         let wf: Vec<f32> = (0..k_in * n_out)
@@ -98,7 +144,7 @@ impl PimBank {
             cols: n_out,
             data: q,
         };
-        PimBank::from_quantized(name, &wq, w_scale, base.with_wbits(w_bits))
+        PimBank::from_quantized_with(name, &wq, w_scale, base.with_wbits(w_bits), opts)
     }
 
     /// Batched linear: `x` is `[b × k_in]` fp32; appends `[b × n_out]`
@@ -106,8 +152,16 @@ impl PimBank {
     /// each output row is bit-identical to the per-vector
     /// [`crate::pim::crossbar::pim_linear_vec`] reference on the same
     /// programmed weights.
+    ///
+    /// `&mut self` because detection triggers repair: when the ABFT
+    /// check flags tiles, they are reprogrammed onto spare slots and
+    /// the batch re-runs — served scores off a repaired bank are
+    /// bit-identical to fault-free hardware. When no (working) spare is
+    /// left the bank serves flagged-approximate and books the batch's
+    /// rows in `scratch.fault.corrupt_rows` instead of returning silent
+    /// garbage (DESIGN.md §7.13).
     pub fn forward_batch(
-        &self,
+        &mut self,
         x: &[f32],
         b: usize,
         out: &mut Vec<f32>,
@@ -129,8 +183,38 @@ impl PimBank {
         }
         scratch.acc.clear();
         scratch.acc.resize(b * self.n_out, 0);
+        let faulty0 = scratch.xbar.activity.faulty_tiles;
         self.xbar
             .mvm_corrected_batch(&scratch.x_u, b, &mut scratch.acc, &mut scratch.xbar);
+        // S34 repair loop: every flagged tile is remapped onto a spare
+        // and the whole batch re-runs on the repaired bank. Bounded:
+        // each iteration either consumes at least one spare or exits in
+        // degraded mode, so the loop ends within the spare budget.
+        while !scratch.xbar.flagged.is_empty() {
+            let mut repaired = 0u64;
+            for i in 0..scratch.xbar.flagged.len() {
+                let t = scratch.xbar.flagged[i] as usize;
+                if self.xbar.repair_tile(t) {
+                    repaired += 1;
+                }
+            }
+            scratch.fault.tiles_repaired += repaired;
+            if repaired == 0 {
+                // unrepairable: what stands in `acc` ships, flagged
+                scratch.fault.corrupt_rows += b as u64;
+                break;
+            }
+            self.xbar.mvm_corrected_batch(
+                &scratch.x_u,
+                b,
+                &mut scratch.acc,
+                &mut scratch.xbar,
+            );
+        }
+        // detection events, re-runs included (a tile that flags again
+        // after a partial repair pass is a fresh detection)
+        scratch.fault.tiles_faulty +=
+            scratch.xbar.activity.faulty_tiles - faulty0;
         out.reserve(b * self.n_out);
         for j in 0..b {
             let x_scale = scratch.scales[j];
@@ -192,6 +276,22 @@ pub fn build_pim_net(
     d_emb: usize,
     seed: u64,
 ) -> crate::Result<PimNet> {
+    build_pim_net_with(g, n_dense, n_sparse, d_emb, seed, &XbarOptions::default())
+}
+
+/// [`build_pim_net`] with fault-tolerance options applied uniformly to
+/// every bank (S34). Each bank overrides `opts.label` with its own
+/// name, so fault substreams stay per-bank-independent, and the
+/// programmed weights are identical to a fault-free build of the same
+/// seed (injection corrupts the *device*, never the weight draw).
+pub fn build_pim_net_with(
+    g: &Genome,
+    n_dense: usize,
+    n_sparse: usize,
+    d_emb: usize,
+    seed: u64,
+    opts: &XbarOptions,
+) -> crate::Result<PimNet> {
     g.validate()?;
     crate::ensure!(
         n_dense > 0 && d_emb > 0,
@@ -200,13 +300,14 @@ pub fn build_pim_net(
     let mut bottom = Vec::with_capacity(g.blocks.len());
     let mut din = n_dense;
     for (i, blk) in g.blocks.iter().enumerate() {
-        bottom.push(PimBank::random(
+        bottom.push(PimBank::random_with(
             &format!("bottom{i}"),
             din,
             blk.dense_dim,
             blk.dense_wbits,
             g.pim,
             seed,
+            opts,
         ));
         din = blk.dense_dim;
     }
@@ -216,8 +317,9 @@ pub fn build_pim_net(
         .find(|b| b.interaction != Interaction::None)
         .map(|b| b.inter_wbits)
         .unwrap_or(g.final_wbits);
-    let proj = PimBank::random("proj", din, d_emb, inter_bits, g.pim, seed);
-    let head = PimBank::random("head", din + d_emb, 1, g.final_wbits, g.pim, seed);
+    let proj = PimBank::random_with("proj", din, d_emb, inter_bits, g.pim, seed, opts);
+    let head =
+        PimBank::random_with("head", din + d_emb, 1, g.final_wbits, g.pim, seed, opts);
     Ok(PimNet {
         bottom,
         proj,
@@ -234,7 +336,7 @@ impl PimNet {
     /// Rows are independent end to end, so results do not depend on how
     /// requests were batched.
     pub fn forward_batch(
-        &self,
+        &mut self,
         dense: &[f32],
         sparse: &[f32],
         b: usize,
@@ -248,8 +350,10 @@ impl PimNet {
     /// [`PimNet::forward_batch`] into a caller-owned buffer (cleared
     /// first) — the allocation-free variant the serving worker runs:
     /// with a warmed `out` and `scratch`, a pass allocates nothing.
+    /// (`&mut self`: ABFT detection may remap flagged tiles onto
+    /// spares mid-pass — see [`PimBank::forward_batch`].)
     pub fn forward_batch_into(
-        &self,
+        &mut self,
         dense: &[f32],
         sparse: &[f32],
         b: usize,
@@ -261,7 +365,7 @@ impl PimNet {
         // bottom MLP (ReLU after every bank)
         scratch.a.clear();
         scratch.a.extend_from_slice(&dense[..b * self.n_dense]);
-        for bank in &self.bottom {
+        for bank in &mut self.bottom {
             scratch.bx.clear();
             bank.forward_batch(&scratch.a, b, &mut scratch.bx, &mut scratch.bank);
             for v in scratch.bx.iter_mut() {
@@ -304,6 +408,42 @@ impl PimNet {
         out.clear();
         out.extend(scratch.logits.iter().map(|&l| 1.0 / (1.0 + (-l).exp())));
     }
+
+    fn banks(&self) -> impl Iterator<Item = &PimBank> {
+        self.bottom
+            .iter()
+            .chain(std::iter::once(&self.proj))
+            .chain(std::iter::once(&self.head))
+    }
+
+    /// Advance every bank's drift fuse by one served batch; returns
+    /// `true` if any bank's drift wave landed (the device twin of the
+    /// coordinator-level `CrashAfter`/`SlowAfter` arming).
+    pub fn tick_drift(&mut self) -> bool {
+        let mut any = false;
+        for bank in self
+            .bottom
+            .iter_mut()
+            .chain(std::iter::once(&mut self.proj))
+            .chain(std::iter::once(&mut self.head))
+        {
+            any |= bank.xbar.tick_drift();
+        }
+        any
+    }
+
+    /// Spare tile slots still unallocated across every bank.
+    pub fn spares_free(&self) -> usize {
+        self.banks().map(|b| b.xbar.spares_free()).sum()
+    }
+
+    /// Logical tiles currently mapped to (possibly) corrupted content,
+    /// net-wide — ground truth for tests and benches.
+    pub fn corrupt_tiles(&self) -> usize {
+        self.banks()
+            .map(|b| b.xbar.corrupt_logical_tiles().len())
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -325,7 +465,7 @@ mod tests {
             cols: n,
             data: q,
         };
-        let bank = PimBank::from_quantized("t", &wq, w_scale, cfg);
+        let mut bank = PimBank::from_quantized("t", &wq, w_scale, cfg);
         let refx = ProgrammedXbar::program(&wq, cfg);
         let b = 5;
         let x: Vec<f32> = (0..b * k).map(|_| rng.normal() as f32).collect();
@@ -343,7 +483,7 @@ mod tests {
     #[test]
     fn net_probs_are_valid_and_deterministic() {
         let g = autorac_best("criteo");
-        let net = build_pim_net(&g, 13, 26, 16, 42).unwrap();
+        let mut net = build_pim_net(&g, 13, 26, 16, 42).unwrap();
         let b = 4;
         let mut rng = Rng::new(9);
         let dense: Vec<f32> = (0..b * 13).map(|_| rng.normal() as f32).collect();
@@ -363,7 +503,7 @@ mod tests {
         // per-row quantization ⇒ batching is purely a throughput choice
         let g = autorac_best("avazu");
         let (nd, ns, d) = (10, 9, 8);
-        let net = build_pim_net(&g, nd, ns, d, 3).unwrap();
+        let mut net = build_pim_net(&g, nd, ns, d, 3).unwrap();
         let b = 6;
         let mut rng = Rng::new(11);
         let dense: Vec<f32> = (0..b * nd).map(|_| rng.normal() as f32).collect();
@@ -405,5 +545,92 @@ mod tests {
         let g = autorac_best("criteo");
         assert!(build_pim_net(&g, 0, 26, 16, 1).is_err());
         assert!(build_pim_net(&g, 13, 26, 0, 1).is_err());
+    }
+
+    #[test]
+    fn fault_free_options_net_scores_bit_identical_to_plain_build() {
+        use crate::pim::fault::FaultSpec;
+        let g = autorac_best("criteo");
+        let (nd, ns, d) = (13, 26, 16);
+        let mut plain = build_pim_net(&g, nd, ns, d, 42).unwrap();
+        // spares reserved + a rate-0 spec: same weights, same device
+        let opts = XbarOptions {
+            spare_tiles: 2,
+            fault: Some(FaultSpec::cells(0.0, 7)),
+            ..XbarOptions::default()
+        };
+        let mut ft = build_pim_net_with(&g, nd, ns, d, 42, &opts).unwrap();
+        let b = 3;
+        let mut rng = Rng::new(13);
+        let dense: Vec<f32> = (0..b * nd).map(|_| rng.normal() as f32).collect();
+        let sparse: Vec<f32> =
+            (0..b * ns * d).map(|_| (rng.normal() * 0.05) as f32).collect();
+        let mut s1 = NetScratch::default();
+        let p1 = plain.forward_batch(&dense, &sparse, b, &mut s1);
+        let mut s2 = NetScratch::default();
+        let p2 = ft.forward_batch(&dense, &sparse, b, &mut s2);
+        assert!(p1.iter().zip(&p2).all(|(a, c)| a.to_bits() == c.to_bits()));
+        assert!(!s2.bank.fault.any(), "clean device books nothing");
+        assert_eq!(ft.corrupt_tiles(), 0);
+    }
+
+    #[test]
+    fn injected_faults_are_repaired_to_bit_identical_scores() {
+        let g = autorac_best("criteo");
+        let (nd, ns, d) = (13, 26, 16);
+        let mut clean = build_pim_net(&g, nd, ns, d, 42).unwrap();
+        let opts = XbarOptions {
+            spare_tiles: 2,
+            ..XbarOptions::default()
+        };
+        let mut ft = build_pim_net_with(&g, nd, ns, d, 42, &opts).unwrap();
+        // one guaranteed single-cell fault per targeted tile: the head's
+        // input row 9 is offset-binary (zero activation still reads
+        // 0x80), so the head fault is ALWAYS excited and must flag
+        ft.bottom[0].xbar.corrupt_bit(0, 0, 0, 0, 5);
+        ft.head.xbar.corrupt_bit(0, 0, 0, 0, 9);
+        assert_eq!(ft.corrupt_tiles(), 2);
+        let b = 5;
+        let mut rng = Rng::new(14);
+        let dense: Vec<f32> = (0..b * nd).map(|_| rng.normal() as f32).collect();
+        let sparse: Vec<f32> =
+            (0..b * ns * d).map(|_| (rng.normal() * 0.05) as f32).collect();
+        let mut s1 = NetScratch::default();
+        let want = clean.forward_batch(&dense, &sparse, b, &mut s1);
+        let mut s2 = NetScratch::default();
+        let got = ft.forward_batch(&dense, &sparse, b, &mut s2);
+        // the repair loop ran inside the pass: flagged tiles remapped,
+        // batch re-run. Single fault per tile ⇒ flag ⟺ output wrong
+        // (§7.13 iff theorem), so repaired scores are bit-identical.
+        assert!(s2.bank.fault.tiles_faulty > 0, "head fault always excites");
+        assert!(s2.bank.fault.tiles_repaired >= 1);
+        assert_eq!(s2.bank.fault.corrupt_rows, 0, "good spares: no degrade");
+        assert!(want.iter().zip(&got).all(|(a, c)| a.to_bits() == c.to_bits()));
+        // a second pass on the repaired net stays clean and silent
+        let f0 = s2.bank.fault;
+        let again = ft.forward_batch(&dense, &sparse, b, &mut s2);
+        assert!(want.iter().zip(&again).all(|(a, c)| a.to_bits() == c.to_bits()));
+        assert_eq!(s2.bank.fault, f0, "no new detections after repair");
+    }
+
+    #[test]
+    fn unrepairable_bank_degrades_and_books_corrupt_rows() {
+        let g = autorac_best("criteo");
+        let (nd, ns, d) = (13, 26, 16);
+        // zero spares: detection must flag, repair must fail, and the
+        // pass must book degraded rows instead of silent garbage
+        let mut ft = build_pim_net(&g, nd, ns, d, 42).unwrap();
+        ft.head.xbar.corrupt_bit(0, 0, 0, 0, 9);
+        let b = 5;
+        let mut rng = Rng::new(14);
+        let dense: Vec<f32> = (0..b * nd).map(|_| rng.normal() as f32).collect();
+        let sparse: Vec<f32> =
+            (0..b * ns * d).map(|_| (rng.normal() * 0.05) as f32).collect();
+        let mut s2 = NetScratch::default();
+        ft.forward_batch(&dense, &sparse, b, &mut s2);
+        assert!(s2.bank.fault.tiles_faulty > 0, "head fault always excites");
+        assert_eq!(s2.bank.fault.tiles_repaired, 0, "no spares to repair onto");
+        assert_eq!(s2.bank.fault.corrupt_rows, b as u64, "degrade books the batch");
+        assert_eq!(ft.corrupt_tiles(), 1, "the corruption is still there");
     }
 }

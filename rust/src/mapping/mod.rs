@@ -8,6 +8,8 @@ pub mod banks;
 pub mod cost;
 pub mod mapper;
 
-pub use banks::{build_pim_net, BankScratch, NetScratch, PimBank, PimNet};
+pub use banks::{
+    build_pim_net, build_pim_net_with, BankScratch, NetScratch, PimBank, PimNet,
+};
 pub use cost::{cycle_time_ns, matmul_cost, OpCost};
 pub use mapper::{genome_eval_key, map_genome, MapStyle, MappedModel, MappedOp, OpKind};

@@ -68,6 +68,10 @@ pub struct XbarActivity {
     pub cells_written: u64,
     /// row-pulses of programming
     pub write_pulses: u64,
+    /// (tile, batch-row) MVMs whose ABFT checksum disagreed (S34);
+    /// always 0 on clean hardware and on the per-vector reference, so
+    /// the bit-identity `PartialEq` contract is unchanged
+    pub faulty_tiles: u64,
 }
 
 impl XbarActivity {
@@ -77,6 +81,7 @@ impl XbarActivity {
         self.shift_adds += o.shift_adds;
         self.cells_written += o.cells_written;
         self.write_pulses += o.write_pulses;
+        self.faulty_tiles += o.faulty_tiles;
     }
 }
 
@@ -162,6 +167,53 @@ impl ProgrammedXbar {
     /// The cached input-independent offset-correction vector.
     pub fn offset_correction(&self) -> &[i64] {
         &self.offset_corr
+    }
+
+    /// Assert a [`super::fault::FaultMap`]'s stuck cells on the plane
+    /// stacks — the reference-side mirror of the kernel's packed-array
+    /// injection, so fault parity is testable differentially: a faulty
+    /// `BatchedXbar` (pre-repair) must still match a faulty reference
+    /// bit for bit via `mvm_raw`. Site translation: packed block
+    /// `(p·2+s)·cell_bits+wb` is bit `wb` of plane `p` of the
+    /// positive (`s==0`) or negative stack; word·64+bit is the tile
+    /// row. Checksum-column sites and spare-slot tiles have no
+    /// reference counterpart and are skipped. The cached offset
+    /// correction is deliberately left at the pristine calibration
+    /// (same contract as the kernel), so compare via `mvm_raw`, not
+    /// `mvm_corrected`.
+    pub fn apply_faults(&mut self, map: &super::fault::FaultMap) {
+        let cell = self.cfg.cell_bits;
+        let n_tiles = self.k / self.cfg.xbar;
+        for (t, sites) in map.tiles.iter().enumerate().take(n_tiles) {
+            for site in sites {
+                if site.col == super::fault::CHK_COL {
+                    continue;
+                }
+                let block = site.block as usize;
+                let (p, rem) = (block / (2 * cell), block % (2 * cell));
+                let (s, wb) = (rem / cell, rem % cell);
+                let planes = if s == 0 {
+                    &mut self.pos_planes
+                } else {
+                    &mut self.neg_planes
+                };
+                let plane = &mut planes[p];
+                for bit in 0..64usize {
+                    let stuck1 = site.set >> bit & 1 == 1;
+                    let stuck0 = site.clear >> bit & 1 == 1;
+                    if !stuck1 && !stuck0 {
+                        continue;
+                    }
+                    let i = site.word as usize * 64 + bit;
+                    debug_assert!(i < self.cfg.xbar, "pad bit holds no cell");
+                    let r = t * self.cfg.xbar + i;
+                    let col = site.col as usize;
+                    let v = plane.at(r, col);
+                    let nv = if stuck1 { v | (1 << wb) } else { v & !(1 << wb) };
+                    plane.set(r, col, nv);
+                }
+            }
+        }
     }
 
     /// Bit-serial MVM of one offset-binary input vector (values in

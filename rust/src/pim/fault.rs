@@ -1,0 +1,439 @@
+//! Device-fault model for the PIM serving path (S34): seeded,
+//! deterministic stuck-at fault injection over the packed bit-plane
+//! arrays of [`super::kernel::BatchedXbar`].
+//!
+//! Real ReRAM tiles ship with — and accumulate — defective cells:
+//! stuck-at-0 (a device that cannot be SET), stuck-at-1 (cannot be
+//! RESET), and whole column lines lost to an open bitline. The paper's
+//! motivation ("even a 0.2% shift in Log Loss can be critical") is
+//! exactly why a serving stack cannot ignore them: one stuck cell
+//! silently corrupts every score routed through its tile. This module
+//! provides the *injection* half of the tolerance story; detection
+//! (ABFT column checksums) and repair (spare-tile remapping) live in
+//! `pim/kernel.rs` and `mapping/banks.rs` (DESIGN.md §7.13).
+//!
+//! Determinism contract: a [`FaultMap`] is a pure function of
+//! `(FaultSpec, label, FaultGeom)` — per-tile RNG substreams
+//! (`seed_from_name(spec.seed, "fault/{label}") → seed_from_indexed(…,
+//! "tile", t)`) make the drawn sites independent of tile iteration
+//! order and reproducible across runs, hosts, and thread counts, so a
+//! failing seed replays exactly.
+
+use crate::util::rng::{seed_from_indexed, seed_from_name, Rng};
+
+/// Sentinel column id marking a fault site on the tile's ABFT checksum
+/// column (which is stored in a separate packed array from the data
+/// columns — see `pim/kernel.rs`).
+pub const CHK_COL: u32 = u32::MAX;
+
+/// Injection parameters. Rates are *per physical cell*: in the
+/// differential bit-plane mapping every `(row, column, plane, sign,
+/// weight-bit)` position is one device, so `rate` is drawn once per
+/// packed bit. All draws are seeded — two banks with the same spec,
+/// label, and geometry corrupt identically.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    /// per-cell stuck-at probability (manufacturing defects)
+    pub rate: f64,
+    /// fraction of stuck cells that are stuck at 1 (the rest stick at 0)
+    pub stuck1_frac: f64,
+    /// per-(tile, column-line) probability of a stuck-open bitline —
+    /// the whole column reads 0 (checksum column included)
+    pub col_rate: f64,
+    /// fire a second wave of stuck sites after this many MVM batches
+    /// (the device twin of `CrashAfter`/`SlowAfter`); `None` = no drift
+    pub drift_after: Option<u64>,
+    /// per-cell rate of the drift wave
+    pub drift_rate: f64,
+    /// root seed; per-bank and per-tile substreams derive from it
+    pub seed: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> FaultSpec {
+        FaultSpec {
+            rate: 0.0,
+            stuck1_frac: 0.5,
+            col_rate: 0.0,
+            drift_after: None,
+            drift_rate: 0.0,
+            seed: 0xFA17,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Stuck-cell-only spec at `rate` with the default 50/50 polarity.
+    pub fn cells(rate: f64, seed: u64) -> FaultSpec {
+        FaultSpec {
+            rate,
+            seed,
+            ..FaultSpec::default()
+        }
+    }
+}
+
+/// Geometry of the packed arrays the faults land on, as seen by the
+/// kernel: `blocks` is the number of `(plane, sign, weight-bit)` data
+/// blocks, `chk_blocks` the (larger) checksum-plane block count,
+/// `last_mask` the valid-row mask of the final word (tiles whose row
+/// count is not a multiple of 64 have dead bits that hold no cell).
+#[derive(Clone, Copy, Debug)]
+pub struct FaultGeom {
+    pub blocks: usize,
+    pub chk_blocks: usize,
+    pub n_tiles_phys: usize,
+    pub cols: usize,
+    pub n_words: usize,
+    pub last_mask: u64,
+}
+
+impl FaultGeom {
+    fn word_mask(&self, word: usize) -> u64 {
+        if word + 1 == self.n_words {
+            self.last_mask
+        } else {
+            u64::MAX
+        }
+    }
+}
+
+/// One word's worth of stuck cells: bits in `set` are stuck at 1, bits
+/// in `clear` are stuck at 0. `col == CHK_COL` targets the checksum
+/// array; `block` indexes the `(plane, sign, weight-bit)` block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSite {
+    pub block: u32,
+    pub col: u32,
+    pub word: u32,
+    pub set: u64,
+    pub clear: u64,
+}
+
+/// Concrete fault sites for one bank's physical tile array (spare
+/// slots included — a spare can be born bad), plus the drift fuse.
+#[derive(Clone, Debug, Default)]
+pub struct FaultMap {
+    /// programmed stuck sites, grouped by physical tile
+    pub tiles: Vec<Vec<FaultSite>>,
+    /// sites that appear when the drift fuse fires, per physical tile
+    pub drift_tiles: Vec<Vec<FaultSite>>,
+    drift_after: Option<u64>,
+    mvms: u64,
+    drifted: bool,
+}
+
+/// Draw the stuck sites of one tile into `out`. One `FaultSite` per
+/// packed word with at least one stuck cell; polarity per cell.
+fn draw_tile(
+    rng: &mut Rng,
+    rate: f64,
+    stuck1_frac: f64,
+    col_rate: f64,
+    geom: &FaultGeom,
+    out: &mut Vec<FaultSite>,
+) {
+    let mut cells = |blocks: usize, cols: &[u32], out: &mut Vec<FaultSite>| {
+        for block in 0..blocks {
+            for &col in cols {
+                for word in 0..geom.n_words {
+                    let valid = geom.word_mask(word);
+                    let (mut set, mut clear) = (0u64, 0u64);
+                    for bit in 0..64 {
+                        if valid >> bit & 1 == 0 {
+                            continue; // no cell behind a pad bit
+                        }
+                        if rng.chance(rate) {
+                            if rng.chance(stuck1_frac) {
+                                set |= 1 << bit;
+                            } else {
+                                clear |= 1 << bit;
+                            }
+                        }
+                    }
+                    if set | clear != 0 {
+                        out.push(FaultSite {
+                            block: block as u32,
+                            col,
+                            word: word as u32,
+                            set,
+                            clear,
+                        });
+                    }
+                }
+            }
+        }
+    };
+    if rate > 0.0 {
+        let data_cols: Vec<u32> = (0..geom.cols as u32).collect();
+        cells(geom.blocks, &data_cols, out);
+        cells(geom.chk_blocks, &[CHK_COL], out);
+    }
+    if col_rate > 0.0 {
+        // stuck-open bitlines: the whole column reads 0 in every block
+        let mut line = |blocks: usize, col: u32, out: &mut Vec<FaultSite>| {
+            for block in 0..blocks {
+                for word in 0..geom.n_words {
+                    out.push(FaultSite {
+                        block: block as u32,
+                        col,
+                        word: word as u32,
+                        set: 0,
+                        clear: geom.word_mask(word),
+                    });
+                }
+            }
+        };
+        for col in 0..geom.cols as u32 {
+            if rng.chance(col_rate) {
+                line(geom.blocks, col, out);
+            }
+        }
+        if rng.chance(col_rate) {
+            line(geom.chk_blocks, CHK_COL, out);
+        }
+    }
+}
+
+impl FaultMap {
+    /// Build the deterministic site map for one bank. `label` is the
+    /// bank name — two banks with different labels draw independent
+    /// substreams from the same spec seed.
+    pub fn build(spec: &FaultSpec, label: &str, geom: &FaultGeom) -> FaultMap {
+        let bank_seed = seed_from_name(spec.seed, &format!("fault/{label}"));
+        let mut tiles = Vec::with_capacity(geom.n_tiles_phys);
+        let mut drift_tiles = Vec::with_capacity(geom.n_tiles_phys);
+        for t in 0..geom.n_tiles_phys {
+            let mut rng = Rng::new(seed_from_indexed(bank_seed, "tile", t));
+            let mut sites = Vec::new();
+            draw_tile(
+                &mut rng,
+                spec.rate,
+                spec.stuck1_frac,
+                spec.col_rate,
+                geom,
+                &mut sites,
+            );
+            tiles.push(sites);
+            let mut drng = Rng::new(seed_from_indexed(bank_seed, "drift", t));
+            let mut dsites = Vec::new();
+            if spec.drift_after.is_some() {
+                draw_tile(
+                    &mut drng,
+                    spec.drift_rate,
+                    spec.stuck1_frac,
+                    0.0,
+                    geom,
+                    &mut dsites,
+                );
+            }
+            drift_tiles.push(dsites);
+        }
+        FaultMap {
+            tiles,
+            drift_tiles,
+            drift_after: spec.drift_after,
+            mvms: 0,
+            drifted: false,
+        }
+    }
+
+    /// Advance the drift fuse by one MVM batch. Returns `true` exactly
+    /// once — on the batch where the fuse crosses — so the caller
+    /// applies the drift wave a single time.
+    pub fn tick(&mut self) -> bool {
+        self.mvms += 1;
+        if self.drifted {
+            return false;
+        }
+        match self.drift_after {
+            Some(n) if self.mvms >= n => {
+                self.drifted = true;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Whether the drift wave has already been applied.
+    pub fn drifted(&self) -> bool {
+        self.drifted
+    }
+}
+
+/// Detection/repair outcome counters, drained up the stack each serve
+/// batch (bank scratch → engine → coordinator metrics). `corrupt_rows`
+/// counts batch rows served by a bank that detected corruption it
+/// could not repair (flagged-approximate mode) — those responses are
+/// *still responses* on the conservation ledger; the counter is a
+/// quality annotation, not a ledger leg.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultCounts {
+    /// detected (tile, batch-row) MVMs whose checksum disagreed
+    pub tiles_faulty: u64,
+    /// tiles successfully remapped onto a spare
+    pub tiles_repaired: u64,
+    /// batch rows served in flagged-approximate (unrepairable) mode
+    pub corrupt_rows: u64,
+}
+
+impl FaultCounts {
+    /// Fold another drain into this one (plain integer adds).
+    pub fn merge(&mut self, o: &FaultCounts) {
+        self.tiles_faulty += o.tiles_faulty;
+        self.tiles_repaired += o.tiles_repaired;
+        self.corrupt_rows += o.corrupt_rows;
+    }
+
+    /// Drain: return the accumulated counts and reset to zero.
+    pub fn take(&mut self) -> FaultCounts {
+        std::mem::take(self)
+    }
+
+    /// Anything to report?
+    pub fn any(&self) -> bool {
+        *self != FaultCounts::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> FaultGeom {
+        FaultGeom {
+            blocks: 8,
+            chk_blocks: 12,
+            n_tiles_phys: 3,
+            cols: 5,
+            n_words: 2,
+            last_mask: (1u64 << 32) - 1, // 96-row tile: last word half-valid
+        }
+    }
+
+    #[test]
+    fn zero_rate_draws_nothing() {
+        let m = FaultMap::build(&FaultSpec::default(), "b", &geom());
+        assert!(m.tiles.iter().all(|t| t.is_empty()));
+        assert!(m.drift_tiles.iter().all(|t| t.is_empty()));
+    }
+
+    #[test]
+    fn build_is_deterministic_and_label_sensitive() {
+        let spec = FaultSpec::cells(1e-2, 7);
+        let g = geom();
+        let a = FaultMap::build(&spec, "bank0", &g);
+        let b = FaultMap::build(&spec, "bank0", &g);
+        let c = FaultMap::build(&spec, "bank1", &g);
+        assert_eq!(a.tiles, b.tiles);
+        assert_ne!(a.tiles, c.tiles, "labels must draw independent streams");
+        assert!(a.tiles.iter().any(|t| !t.is_empty()), "rate 1e-2 over ~50k cells");
+    }
+
+    #[test]
+    fn sites_respect_the_valid_row_mask() {
+        let spec = FaultSpec {
+            rate: 0.2,
+            col_rate: 0.3,
+            ..FaultSpec::cells(0.2, 11)
+        };
+        let g = geom();
+        let m = FaultMap::build(&spec, "b", &g);
+        for sites in &m.tiles {
+            for s in sites {
+                let valid = g.word_mask(s.word as usize);
+                assert_eq!(s.set & !valid, 0, "stuck-1 on a pad bit");
+                assert_eq!(s.clear & !valid, 0, "stuck-0 on a pad bit");
+                assert_eq!(s.set & s.clear, 0, "a cell cannot stick both ways");
+                let blocks = if s.col == CHK_COL { g.chk_blocks } else { g.blocks };
+                assert!((s.block as usize) < blocks);
+            }
+        }
+    }
+
+    #[test]
+    fn polarity_follows_stuck1_frac() {
+        let all1 = FaultSpec {
+            stuck1_frac: 1.0,
+            ..FaultSpec::cells(0.05, 3)
+        };
+        let m = FaultMap::build(&all1, "b", &geom());
+        assert!(m.tiles.iter().flatten().all(|s| s.clear == 0));
+        let all0 = FaultSpec {
+            stuck1_frac: 0.0,
+            ..FaultSpec::cells(0.05, 3)
+        };
+        let m = FaultMap::build(&all0, "b", &geom());
+        assert!(m.tiles.iter().flatten().all(|s| s.set == 0));
+    }
+
+    #[test]
+    fn column_line_faults_clear_every_block_of_the_column() {
+        let spec = FaultSpec {
+            rate: 0.0,
+            col_rate: 1.0,
+            ..FaultSpec::default()
+        };
+        let g = geom();
+        let m = FaultMap::build(&spec, "b", &g);
+        for sites in &m.tiles {
+            // every data column in every block + the chk column
+            let expect = (g.blocks * g.cols + g.chk_blocks) * g.n_words;
+            assert_eq!(sites.len(), expect);
+            assert!(sites.iter().all(|s| s.set == 0));
+            for s in sites {
+                assert_eq!(s.clear, g.word_mask(s.word as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn drift_fuse_fires_exactly_once() {
+        let spec = FaultSpec {
+            drift_after: Some(3),
+            drift_rate: 0.05,
+            ..FaultSpec::cells(0.0, 5)
+        };
+        let mut m = FaultMap::build(&spec, "b", &geom());
+        assert!(m.drift_tiles.iter().any(|t| !t.is_empty()));
+        assert!(!m.tick());
+        assert!(!m.tick());
+        assert!(m.tick(), "fuse crosses on batch 3");
+        assert!(m.drifted());
+        assert!(!m.tick(), "fires once");
+    }
+
+    #[test]
+    fn no_drift_spec_never_fires() {
+        let mut m = FaultMap::build(&FaultSpec::cells(0.0, 5), "b", &geom());
+        for _ in 0..10 {
+            assert!(!m.tick());
+        }
+    }
+
+    #[test]
+    fn counts_merge_take_any() {
+        let mut a = FaultCounts {
+            tiles_faulty: 2,
+            tiles_repaired: 1,
+            corrupt_rows: 0,
+        };
+        assert!(a.any());
+        a.merge(&FaultCounts {
+            tiles_faulty: 1,
+            tiles_repaired: 0,
+            corrupt_rows: 4,
+        });
+        assert_eq!(
+            a,
+            FaultCounts {
+                tiles_faulty: 3,
+                tiles_repaired: 1,
+                corrupt_rows: 4
+            }
+        );
+        let t = a.take();
+        assert_eq!(t.tiles_faulty, 3);
+        assert!(!a.any());
+    }
+}

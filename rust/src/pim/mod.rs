@@ -5,6 +5,7 @@
 pub mod buffer;
 pub mod config;
 pub mod crossbar;
+pub mod fault;
 pub mod kernel;
 pub mod mbsa;
 pub mod noise;
@@ -18,7 +19,8 @@ pub use crossbar::{
     adc_transfer, quant_act, quant_act_into, quant_sym, MatI32, ProgrammedXbar,
     XbarActivity,
 };
-pub use kernel::{BatchedXbar, XbarScratch};
+pub use fault::{FaultCounts, FaultMap, FaultSpec};
+pub use kernel::{BatchedXbar, XbarOptions, XbarScratch};
 pub use mbsa::Mbsa;
 pub use noise::NoiseModel;
 pub use params::{Component, TechParams};

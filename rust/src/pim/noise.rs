@@ -29,18 +29,22 @@ impl Default for NoiseModel {
 }
 
 impl NoiseModel {
-    /// Effective relative error of one column sum for a PIM config.
+    /// Effective relative error of one column sum for a PIM config:
+    ///
+    ///   σ_col = σ_g · (2^cell − 1) / √rows
     ///
     /// Each of `xbar` cells contributes σ_g per conductance level used;
     /// a cell storing `cell_bits` bits packs 2^cell_bits levels into the
-    /// same conductance window, so per-cell σ scales with (2^cell−1).
-    /// Independent cell errors accumulate as √rows across the column.
-    /// The result is normalized by full scale (rows · max level).
+    /// same conductance window, so per-cell σ scales with (2^cell−1)
+    /// levels. Independent cell errors accumulate as √rows across the
+    /// column while full scale grows linearly in rows, leaving a net
+    /// 1/√rows. (An earlier form wrote this as
+    /// `col / (rows·levels) · levels` — the `levels` pair cancels
+    /// algebraically; the closed form above is the same function, and
+    /// the regression test below pins its values.)
     pub fn column_rel_sigma(&self, cfg: &PimConfig) -> f64 {
         let levels = ((1usize << cfg.cell_bits) - 1) as f64;
-        let per_cell = self.sigma_g * levels;
-        let col = per_cell * (cfg.xbar as f64).sqrt();
-        col / (cfg.xbar as f64 * levels) * (levels).max(1.0)
+        self.sigma_g * levels / (cfg.xbar as f64).sqrt()
     }
 
     /// Expected LogLoss penalty for running a model on this config.
@@ -75,6 +79,30 @@ mod tests {
         let n = NoiseModel::default();
         let p = n.logloss_penalty(&PimConfig::default());
         assert!(p > 0.0 && p < 0.01, "{p}");
+    }
+
+    #[test]
+    fn column_sigma_regression_values_are_pinned() {
+        // σ_g·levels/√rows, exactly what the pre-simplification
+        // expression computed — these three pins would catch any
+        // accidental semantic change to the closed form.
+        let n = NoiseModel::default();
+        let cases = [
+            (64usize, 2usize, 0.0075f64), // default: 0.02·3/8
+            (64, 1, 0.0025),              // single-level cells: 0.02·1/8
+            (16, 2, 0.015),               // small tile: 0.02·3/4
+        ];
+        for (xbar, cell_bits, want) in cases {
+            let got = n.column_rel_sigma(&PimConfig {
+                xbar,
+                cell_bits,
+                ..Default::default()
+            });
+            assert!(
+                (got - want).abs() < 1e-12,
+                "xbar {xbar} cell {cell_bits}: got {got}, want {want}"
+            );
+        }
     }
 
     #[test]

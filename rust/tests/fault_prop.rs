@@ -1,0 +1,483 @@
+//! Device-fault tolerance properties (S34): stuck-at injection, ABFT
+//! checksum detection, and spare-tile repair on the batched crossbar
+//! kernel and the serving engine above it.
+//!
+//! The contract under test, in layers:
+//!   1. Clean hardware: ABFT never fires (zero false positives) and the
+//!      verify path changes no output bit — every feasible config,
+//!      thread count, and batch size; likewise a build with spare slots
+//!      reserved and a rate-0 fault spec installed.
+//!   2. Single cell fault: the checksum flags the tile IF AND ONLY IF
+//!      some output of that batch is wrong (δ_out = ±2^shift·x[j,row]
+//!      on exactly one column — the same term is missing from the tile
+//!      checksum, so one fault can never alias), and one pristine spare
+//!      restores bit-identity.
+//!   3. Random stuck-at faults: every flagged tile is ground-truth
+//!      corrupt (zero false positives under faults, any rate); in the
+//!      single-flip-dominated regime wrong outputs imply a flag; and
+//!      whenever detect→repair→re-run drives the corrupt set empty the
+//!      outputs are bit-identical to a fault-free build. (Completeness
+//!      is NOT asserted for dense multi-fault tiles: two flips in the
+//!      same (block, row) on different columns cancel in the single
+//!      checksum column — a known single-column-ABFT limitation,
+//!      documented in DESIGN.md §7.13.)
+//!   4. Faulted kernel == faulted reference: the packed-plane injection
+//!      and the `ProgrammedXbar` plane-stack injection are the same
+//!      fault model, differentially (pre-repair, ABFT off).
+//!   5. Drift: the fuse fires exactly once after N MVM batches; before
+//!      it the device serves bit-identically and flag-free.
+//!   6. `PimEngine`: drained `FaultCounts` agree with what the scores
+//!      say — zero corrupt rows ⟹ bit-identical serving.
+
+use autorac::coordinator::{InferenceEngine, PimEngine};
+use autorac::nas::autorac_best;
+use autorac::pim::fault::FaultGeom;
+use autorac::pim::{
+    BatchedXbar, FaultMap, FaultSpec, MatI32, PimConfig, ProgrammedXbar,
+    XbarActivity, XbarOptions, XbarScratch,
+};
+use autorac::util::qcheck::qcheck;
+use autorac::util::rng::Rng;
+use autorac::{prop_assert, prop_assert_eq};
+
+/// Batch sizes the properties draw from (serving floor / ragged /
+/// default compiled batch) — same grid as `xbar_kernel.rs`.
+const BATCHES: [usize; 3] = [1, 7, 32];
+
+fn random_mat(rng: &mut Rng, rows: usize, cols: usize, wmax: i32) -> MatI32 {
+    let mut m = MatI32::zeros(rows, cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            m.set(r, c, rng.below((2 * wmax + 1) as u64) as i32 - wmax);
+        }
+    }
+    m
+}
+
+/// Offset-binary inputs, every value in `[lo, 2^x_bits)`.
+fn random_inputs(rng: &mut Rng, cfg: &PimConfig, k: usize, b: usize, lo: u64) -> Vec<i32> {
+    let span = (1u64 << cfg.x_bits) - lo;
+    (0..b * k).map(|_| (lo + rng.below(span)) as i32).collect()
+}
+
+/// The bank-style detect→repair→re-run loop: returns `true` when the
+/// batch converged to a flag-clean pass, `false` when repair ran out of
+/// good spares (degraded mode). Mirrors `PimBank::forward_batch`.
+fn repair_loop(
+    bx: &mut BatchedXbar,
+    xs: &[i32],
+    b: usize,
+    out: &mut [i64],
+    scratch: &mut XbarScratch,
+) -> bool {
+    bx.mvm_batch(xs, b, out, scratch);
+    loop {
+        if scratch.flagged.is_empty() {
+            return true;
+        }
+        let flagged = scratch.flagged.clone();
+        let mut repaired = false;
+        for &t in &flagged {
+            repaired |= bx.repair_tile(t as usize);
+        }
+        if !repaired {
+            return false;
+        }
+        bx.mvm_batch(xs, b, out, scratch);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Zero false positives on clean hardware
+// ---------------------------------------------------------------------------
+
+#[test]
+fn clean_hardware_never_flags_on_any_feasible_config() {
+    // deterministic exhaustive floor: every feasible config × threads
+    // {1, 3} × batch {1, 7, 32}, ABFT on, outputs == reference
+    let mut rng = Rng::new(0xFA17_5EED);
+    for cfg in PimConfig::enumerate_feasible() {
+        let wmax = (1i32 << (cfg.w_bits - 1)) - 1;
+        let wq = random_mat(&mut rng, 2 * cfg.xbar + 3, 9, wmax);
+        let refx = ProgrammedXbar::program(&wq, cfg);
+        let bx = BatchedXbar::program(&wq, cfg);
+        assert!(bx.abft_on(), "{cfg:?}: feasible config must verify");
+        for b in BATCHES {
+            let xs = random_inputs(&mut rng, &cfg, bx.k, b, 0);
+            let mut want = Vec::with_capacity(b * bx.n);
+            let mut want_act = XbarActivity::default();
+            for j in 0..b {
+                want.extend(
+                    refx.mvm_raw(&xs[j * bx.k..(j + 1) * bx.k], &mut want_act),
+                );
+            }
+            for threads in [1usize, 3] {
+                let mut out = vec![0i64; b * bx.n];
+                let mut scratch = XbarScratch::with_threads(threads);
+                bx.mvm_batch(&xs, b, &mut out, &mut scratch);
+                assert_eq!(out, want, "{cfg:?} b={b} threads={threads}");
+                assert_eq!(
+                    scratch.activity, want_act,
+                    "{cfg:?} b={b} threads={threads}"
+                );
+                assert!(
+                    scratch.flagged.is_empty()
+                        && scratch.activity.faulty_tiles == 0,
+                    "ABFT false positive on clean hardware: {cfg:?} b={b} \
+                     threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn clean_builds_with_spares_and_rate_zero_are_bit_identical() {
+    // fault-free path unchanged: spare slots reserved and a rate-0
+    // fault spec installed must not move a single output bit
+    let configs = PimConfig::enumerate_feasible();
+    qcheck(24, |g| {
+        let cfg = *g.choose(&configs);
+        let wmax = (1i32 << (cfg.w_bits - 1)) - 1;
+        let rows = g.usize(1, 2 * cfg.xbar + 5);
+        let cols = g.usize(1, 16);
+        let wq = random_mat(g.rng(), rows, cols, wmax);
+        let plain = BatchedXbar::program(&wq, cfg);
+        let opts = XbarOptions {
+            spare_tiles: g.usize(1, 3),
+            fault: Some(FaultSpec::cells(0.0, g.rng().below(u64::MAX))),
+            ..XbarOptions::default()
+        };
+        let guarded = BatchedXbar::program_with(&wq, cfg, &opts);
+        prop_assert_eq!(guarded.offset_correction(), plain.offset_correction());
+        prop_assert!(guarded.corrupt_logical_tiles().is_empty());
+        let b = *g.choose(&BATCHES);
+        let xs = random_inputs(g.rng(), &cfg, plain.k, b, 0);
+        let threads = if g.bool() { 1 } else { 3 };
+        let mut o1 = vec![0i64; b * plain.n];
+        let mut o2 = vec![0i64; b * plain.n];
+        let mut s1 = XbarScratch::with_threads(threads);
+        let mut s2 = XbarScratch::with_threads(threads);
+        plain.mvm_batch(&xs, b, &mut o1, &mut s1);
+        guarded.mvm_batch(&xs, b, &mut o2, &mut s2);
+        prop_assert_eq!(&o1, &o2);
+        prop_assert_eq!(s1.activity, s2.activity);
+        prop_assert!(s2.flagged.is_empty());
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 2. Single-fault iff: flag ⟺ wrong output
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_cell_fault_flags_iff_an_output_is_wrong() {
+    let configs = PimConfig::enumerate_feasible();
+    qcheck(40, |g| {
+        let cfg = *g.choose(&configs);
+        let wmax = (1i32 << (cfg.w_bits - 1)) - 1;
+        let rows = g.usize(1, 2 * cfg.xbar + 5);
+        let cols = g.usize(1, 12);
+        let wq = random_mat(g.rng(), rows, cols, wmax);
+        let clean = BatchedXbar::program(&wq, cfg);
+        let opts = XbarOptions {
+            spare_tiles: 1,
+            ..XbarOptions::default()
+        };
+        let mut faulty = BatchedXbar::program_with(&wq, cfg, &opts);
+        // one flipped packed bit: a guaranteed single-cell corruption
+        let t = g.usize(0, faulty.tiles() - 1);
+        let blocks = cfg.n_planes() * 2 * cfg.cell_bits;
+        let block = g.usize(0, blocks - 1);
+        let col = g.usize(0, cols - 1);
+        let row = g.usize(0, cfg.xbar - 1);
+        faulty.corrupt_bit(t, block, col, row / 64, row % 64);
+
+        let b = *g.choose(&BATCHES);
+        // lo = 0: unexcited rows (x == 0 in every batch row) are legal
+        // and must produce NEITHER a flag NOR a wrong output
+        let xs = random_inputs(g.rng(), &cfg, clean.k, b, 0);
+        let mut want = vec![0i64; b * clean.n];
+        let mut out = vec![0i64; b * clean.n];
+        let mut sc = XbarScratch::default();
+        let mut sf = XbarScratch::default();
+        clean.mvm_batch(&xs, b, &mut want, &mut sc);
+        faulty.mvm_batch(&xs, b, &mut out, &mut sf);
+        let differs = out != want;
+        prop_assert_eq!(!sf.flagged.is_empty(), differs);
+        if differs {
+            prop_assert_eq!(&sf.flagged, &vec![t as u32]);
+            prop_assert!(sf.activity.faulty_tiles > 0);
+        }
+        // the pristine spare repairs the tile back to bit-identity
+        // whether or not this batch happened to excite the fault
+        prop_assert!(faulty.repair_tile(t));
+        let mut sr = XbarScratch::default();
+        faulty.mvm_batch(&xs, b, &mut out, &mut sr);
+        prop_assert_eq!(&out, &want);
+        prop_assert!(sr.flagged.is_empty());
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 3. Random stuck-at faults: detection coverage + repair fidelity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn random_faults_flag_only_corrupt_tiles_and_repair_restores_bits() {
+    let configs = PimConfig::enumerate_feasible();
+    qcheck(36, |g| {
+        let cfg = *g.choose(&configs);
+        let wmax = (1i32 << (cfg.w_bits - 1)) - 1;
+        let rows = g.usize(cfg.xbar / 2, 2 * cfg.xbar + 5);
+        let cols = g.usize(2, 12);
+        let wq = random_mat(g.rng(), rows, cols, wmax);
+        let clean = BatchedXbar::program(&wq, cfg);
+        let rate = *g.choose(&[1e-5f64, 1e-4, 1e-3]);
+        let opts = XbarOptions {
+            spare_tiles: g.usize(0, 4),
+            fault: Some(FaultSpec::cells(rate, g.rng().below(u64::MAX))),
+            ..XbarOptions::default()
+        };
+        let mut faulty = BatchedXbar::program_with(&wq, cfg, &opts);
+        let corrupt = faulty.corrupt_logical_tiles();
+
+        let b = *g.choose(&BATCHES);
+        let xs = random_inputs(g.rng(), &cfg, clean.k, b, 0);
+        let mut want = vec![0i64; b * clean.n];
+        let mut sc = XbarScratch::default();
+        clean.mvm_batch(&xs, b, &mut want, &mut sc);
+
+        // first pass, pre-repair: flags ⊆ ground-truth corrupt tiles —
+        // zero false positives under faults, at every rate
+        let mut out = vec![0i64; b * clean.n];
+        let mut sf = XbarScratch::default();
+        faulty.mvm_batch(&xs, b, &mut out, &mut sf);
+        for &t in &sf.flagged {
+            prop_assert!(
+                corrupt.contains(&(t as usize)),
+                "flagged tile {} is not ground-truth corrupt",
+                t
+            );
+        }
+        // completeness only in the single-flip-dominated regime: at
+        // 1e-5 a second flip in the same tile is vanishingly rare, so
+        // the single-fault iff theorem applies per tile. (Denser tiles
+        // can alias in the checksum sum — see the module doc.)
+        if rate == 1e-5 && out != want {
+            prop_assert!(
+                !sf.flagged.is_empty(),
+                "wrong outputs escaped detection (rate {})",
+                rate
+            );
+        }
+
+        // detect→repair→re-run: when the corrupt set is driven empty,
+        // every mapped slot is verified-clean and bit-identity is a
+        // structural guarantee, at every rate
+        let converged = repair_loop(&mut faulty, &xs, b, &mut out, &mut sf);
+        if converged {
+            prop_assert!(sf.flagged.is_empty());
+            if faulty.corrupt_logical_tiles().is_empty() {
+                prop_assert_eq!(&out, &want);
+            }
+        } else {
+            // degraded: a flag still raised and no repair succeeded
+            prop_assert!(!sf.flagged.is_empty());
+            prop_assert_eq!(faulty.spares_free(), 0);
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 4. Differential fault parity: packed kernel == plane-stack reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn faulted_kernel_matches_faulted_reference_bit_for_bit() {
+    let configs = PimConfig::enumerate_feasible();
+    qcheck(32, |g| {
+        let cfg = *g.choose(&configs);
+        let wmax = (1i32 << (cfg.w_bits - 1)) - 1;
+        let rows = g.usize(1, 2 * cfg.xbar + 5);
+        let cols = g.usize(1, 12);
+        let wq = random_mat(g.rng(), rows, cols, wmax);
+        let spec = FaultSpec {
+            rate: *g.choose(&[1e-4f64, 1e-3, 5e-3]),
+            col_rate: *g.choose(&[0.0f64, 0.02]),
+            seed: g.rng().below(u64::MAX),
+            ..FaultSpec::default()
+        };
+        // ABFT off: chk_blocks = 0, so the kernel's fault geometry is
+        // reconstructible here and the map it drew is reproducible
+        let opts = XbarOptions {
+            abft: false,
+            fault: Some(spec.clone()),
+            label: "par".to_string(),
+            ..XbarOptions::default()
+        };
+        let bx = BatchedXbar::program_with(&wq, cfg, &opts);
+        let k_pad = rows.div_ceil(cfg.xbar) * cfg.xbar;
+        let rem = cfg.xbar % 64;
+        let geom = FaultGeom {
+            blocks: cfg.n_planes() * 2 * cfg.cell_bits,
+            chk_blocks: 0,
+            n_tiles_phys: k_pad / cfg.xbar,
+            cols,
+            n_words: cfg.xbar.div_ceil(64),
+            last_mask: if rem == 0 { u64::MAX } else { (1u64 << rem) - 1 },
+        };
+        let map = FaultMap::build(&spec, "par", &geom);
+        let mut refx = ProgrammedXbar::program(&wq, cfg);
+        refx.apply_faults(&map);
+
+        let b = *g.choose(&BATCHES);
+        let xs = random_inputs(g.rng(), &cfg, bx.k, b, 0);
+        let mut want = Vec::with_capacity(b * bx.n);
+        let mut want_act = XbarActivity::default();
+        for j in 0..b {
+            want.extend(
+                refx.mvm_raw(&xs[j * bx.k..(j + 1) * bx.k], &mut want_act),
+            );
+        }
+        let mut out = vec![0i64; b * bx.n];
+        let mut scratch = XbarScratch::with_threads(if g.bool() { 1 } else { 3 });
+        bx.mvm_batch(&xs, b, &mut out, &mut scratch);
+        prop_assert_eq!(&out, &want);
+        prop_assert_eq!(scratch.activity, want_act);
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 5. Drift: fuse fires once, pre-fuse service is pristine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn drift_fuse_fires_once_and_corruption_is_flagged() {
+    qcheck(12, |g| {
+        let cfg = PimConfig::default();
+        let wmax = (1i32 << (cfg.w_bits - 1)) - 1;
+        let wq = random_mat(g.rng(), 2 * cfg.xbar + 5, 16, wmax);
+        let clean = BatchedXbar::program(&wq, cfg);
+        let spec = FaultSpec {
+            rate: 0.0,
+            drift_after: Some(2),
+            // sparse wave: single-flip-dominated, so any excited
+            // corruption surfaces as a flag or an output change — the
+            // invisible-cancellation window is negligible here
+            drift_rate: 2e-5,
+            seed: g.rng().below(u64::MAX),
+            ..FaultSpec::default()
+        };
+        let opts = XbarOptions {
+            spare_tiles: 2,
+            fault: Some(spec),
+            ..XbarOptions::default()
+        };
+        let mut faulty = BatchedXbar::program_with(&wq, cfg, &opts);
+        prop_assert!(faulty.corrupt_logical_tiles().is_empty());
+
+        let b = *g.choose(&BATCHES);
+        // lo = 1: every row excited, so a drifted DATA bit in a mapped
+        // slot must change an output (and a drifted CHK bit must
+        // mismatch the recomputed sum)
+        let xs = random_inputs(g.rng(), &cfg, clean.k, b, 1);
+        let mut want = vec![0i64; b * clean.n];
+        let mut sc = XbarScratch::default();
+        clean.mvm_batch(&xs, b, &mut want, &mut sc);
+
+        let mut out = vec![0i64; b * clean.n];
+        let mut sf = XbarScratch::default();
+        // two pristine MVM batches before the fuse crosses
+        for _ in 0..2 {
+            faulty.mvm_batch(&xs, b, &mut out, &mut sf);
+            prop_assert!(sf.flagged.is_empty());
+            prop_assert_eq!(&out, &want);
+            faulty.tick_drift();
+        }
+        // the fuse fired exactly once; further ticks are no-ops
+        prop_assert!(!faulty.tick_drift());
+        let corrupted = !faulty.corrupt_logical_tiles().is_empty();
+        faulty.mvm_batch(&xs, b, &mut out, &mut sf);
+        if corrupted {
+            prop_assert!(
+                !sf.flagged.is_empty() || out != want,
+                "a mapped tile drifted invisibly: no flag, no output change"
+            );
+        } else {
+            // wave missed every mapped slot (or changed no stored bit):
+            // service stays pristine
+            prop_assert!(sf.flagged.is_empty());
+            prop_assert_eq!(&out, &want);
+        }
+        // repair when possible (drift also hits spares; program-verify
+        // burns bad ones — exhaustion degrades, and that is the contract)
+        let converged = repair_loop(&mut faulty, &xs, b, &mut out, &mut sf);
+        if converged && faulty.corrupt_logical_tiles().is_empty() {
+            prop_assert_eq!(&out, &want);
+        }
+        if !converged {
+            prop_assert_eq!(faulty.spares_free(), 0);
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 6. Engine level: drained counts agree with the scores
+// ---------------------------------------------------------------------------
+
+#[test]
+fn engine_fault_counts_agree_with_score_fidelity() {
+    let genome = autorac_best("criteo");
+    let (nd, ns, d) = (13usize, 26usize, 16usize);
+    let batch = 8usize;
+    qcheck(6, |g| {
+        let opts = XbarOptions {
+            spare_tiles: 4,
+            fault: Some(FaultSpec::cells(
+                *g.choose(&[1e-5f64, 1e-4]),
+                g.rng().below(u64::MAX),
+            )),
+            ..XbarOptions::default()
+        };
+        let mut clean = PimEngine::new(&genome, batch, nd, ns, d, 42).unwrap();
+        let mut faulty =
+            PimEngine::new_with(&genome, batch, nd, ns, d, 42, &opts).unwrap();
+        let b = g.usize(1, batch);
+        let dense: Vec<f32> =
+            (0..b * nd).map(|_| g.rng().normal() as f32).collect();
+        let sparse: Vec<f32> = (0..b * ns * d)
+            .map(|_| (g.rng().normal() * 0.05) as f32)
+            .collect();
+        let want = clean.infer_batch(&dense, &sparse, b).unwrap();
+        let got = faulty.infer_batch(&dense, &sparse, b).unwrap();
+        let fc = faulty.take_fault_counts();
+        let identical = want
+            .iter()
+            .zip(&got)
+            .all(|(a, c)| a.to_bits() == c.to_bits());
+        if fc.corrupt_rows == 0 {
+            // everything detected was repaired (or nothing was hit):
+            // serving fidelity must be exact
+            prop_assert!(
+                identical,
+                "no corrupt rows booked but scores diverged \
+                 (faulty {} repaired {})",
+                fc.tiles_faulty,
+                fc.tiles_repaired
+            );
+        } else {
+            // degraded mode is always accompanied by a detection event
+            prop_assert!(fc.tiles_faulty > 0);
+        }
+        // a drained engine books nothing more while no batch is served
+        let fc2 = faulty.take_fault_counts();
+        prop_assert!(!fc2.any());
+        Ok(())
+    });
+}

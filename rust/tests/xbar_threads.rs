@@ -122,7 +122,7 @@ fn net_and_engine_scores_survive_any_thread_count() {
     // scores are a pure function of the inputs, threads notwithstanding
     let g = autorac_best("criteo");
     let (nd, ns, d) = (13usize, 26usize, 16usize);
-    let net = build_pim_net(&g, nd, ns, d, 42).unwrap();
+    let mut net = build_pim_net(&g, nd, ns, d, 42).unwrap();
     let b = 6;
     let mut rng = Rng::new(9);
     let dense: Vec<f32> = (0..b * nd).map(|_| rng.normal() as f32).collect();

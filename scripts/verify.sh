@@ -22,7 +22,7 @@ echo "== tier 1.5: property/differential suites under --release =="
 # The qcheck suites draw hundreds of randomized cases; running them
 # optimized both speeds CI and exercises the release float paths the
 # benches measure.
-cargo test -q --release --test sharding_prop --test sim_differential --test coordinator_e2e --test hotcache_prop --test failover_prop --test tail_prop
+cargo test -q --release --test sharding_prop --test sim_differential --test coordinator_e2e --test hotcache_prop --test failover_prop --test tail_prop --test fault_prop
 cargo test -q --release --lib mapping::cost
 
 echo "== wire suites under --release: lazy/tree differential + malformed-input =="
@@ -155,14 +155,61 @@ echo "== xbar-bench parity smoke: batched kernel vs reference, 4 threads =="
 # The batched crossbar kernel's contract is bit-identity with the
 # per-vector reference (outputs AND activity counts) on every config AND
 # at every thread count. xbar-bench ensure!s it in-run — at threads 1
-# and 4 here — and exits non-zero on any mismatch; fail-closed on the
-# parity line disappearing too.
-xbar_out=$(cargo run --quiet --release --bin autorac -- xbar-bench --quick --threads 4)
+# and 4 here — and exits non-zero on any mismatch (including any ABFT
+# false positive on clean hardware); fail-closed on the parity and
+# ABFT-overhead lines disappearing too. The JSON report is kept at the
+# repo root as the kernel paper-artifact snapshot (ROADMAP: bench
+# trajectory), so regressions in pack/thread speedups and checksum
+# overhead are diffable across PRs.
+xbar_json=BENCH_xbar.json
+xbar_out=$(cargo run --quiet --release --bin autorac -- xbar-bench --quick --threads 4 --json "$xbar_json")
 printf '%s\n' "$xbar_out"
 if ! printf '%s\n' "$xbar_out" | grep -q "parity: OK"; then
     echo "ERROR: xbar-bench did not report kernel parity"
     exit 1
 fi
+if ! printf '%s\n' "$xbar_out" | grep -q "abft b=32:"; then
+    echo "ERROR: xbar-bench no longer measures the ABFT verify overhead"
+    exit 1
+fi
+for field in '"bench": "xbar"' '"pack_speedup_b32"' '"abft_overhead"'; do
+    if ! grep -q "$field" "$xbar_json"; then
+        echo "ERROR: xbar-bench JSON report lost $field"
+        exit 1
+    fi
+done
+
+echo "== serve-bench device-fault smoke: cell-fault scenario, PIM engine =="
+# Program every worker's crossbar banks with seeded stuck-at cells (a
+# per-worker substream each) plus a spare-tile budget, then hold the run
+# to the §SJ fault SLO: exact ledger AND zero corrupted responses AND a
+# twin-engine probe showing repaired scores bit-identical to a
+# fault-free engine. The rate is production-plausible (~a few stuck
+# cells across the whole fleet) so single-cell faults dominate — each
+# one is detected by the ABFT checksum and repaired from a spare, and
+# the verdict must come out PASS. Fail closed on the verdict line AND
+# the JSON fields.
+fault_json=$(mktemp /tmp/serve_fault.XXXXXX.json)
+fault_out=$(cargo run --quiet --release --bin autorac -- serve-bench \
+    --quick --workers 2 --engine pim --scenario cell-fault \
+    --fault-rate 2e-6 --spare-tiles 4 --json "$fault_json")
+printf '%s\n' "$fault_out"
+if ! printf '%s\n' "$fault_out" | grep -q "fault SLO:"; then
+    echo "ERROR: cell-fault scenario no longer prints the fault SLO line"
+    exit 1
+fi
+if ! printf '%s\n' "$fault_out" | grep "fault SLO:" | grep -q "verdict PASS"; then
+    echo "ERROR: cell-fault SLO verdict is not PASS (detection/repair broken or ledger drifted)"
+    exit 1
+fi
+for field in '"scenario": "cell-fault"' '"tiles_faulty"' '"tiles_repaired"' \
+    '"corrupted_responses"' '"ledger_ok": true' '"fault_slo_ok": true'; do
+    if ! grep -q "$field" "$fault_json"; then
+        echo "ERROR: cell-fault JSON report lost $field"
+        exit 1
+    fi
+done
+rm -f "$fault_json"
 
 echo "== hygiene: the blocked i64 kernel fallback must stay deleted =="
 # Every tile geometry now takes the multi-word packed AND+popcount path;
